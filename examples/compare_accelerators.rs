@@ -1,0 +1,50 @@
+//! Fig. 8-style comparison: all four accelerators on several graphs
+//! and problems (MTEPS, DDR4 single channel).
+//!
+//!     cargo run --release --example compare_accelerators [graphs...]
+
+use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::problem::ProblemKind;
+use graphmem::coordinator::Runner;
+use graphmem::report::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let graphs: Vec<String> = if args.is_empty() {
+        vec!["sd".into(), "db".into(), "yt".into(), "wt".into(), "rd".into()]
+    } else {
+        args
+    };
+    let cfg = AcceleratorConfig::all_optimizations();
+    let mut runner = Runner::new();
+
+    for problem in [ProblemKind::Bfs, ProblemKind::PageRank, ProblemKind::Wcc] {
+        let mut t = Table::new(
+            format!("{} MTEPS (DDR4, single channel, all optimizations)", problem.name()),
+            &["graph", "AccuGraph", "ForeGraph", "HitGraph", "ThunderGP", "best"],
+        );
+        for g in &graphs {
+            let mut row = vec![g.clone()];
+            let mut best = ("", 0.0f64);
+            for kind in AcceleratorKind::all() {
+                match runner.run(kind, g, problem, "ddr4", 1, &cfg) {
+                    Ok(r) => {
+                        let mteps = r.mteps();
+                        if mteps > best.1 {
+                            best = (kind.name(), mteps);
+                        }
+                        row.push(format!("{mteps:.1}"));
+                    }
+                    Err(e) => {
+                        eprintln!("skipping {} on {g}: {e}", kind.name());
+                        row.push("-".into());
+                    }
+                }
+            }
+            row.push(best.0.to_string());
+            t.row(row);
+        }
+        println!("{}", t.render());
+    }
+    eprintln!("({} simulations)", runner.cached_runs());
+}

@@ -1,0 +1,133 @@
+//! End-to-end driver: proves all layers compose on a real workload.
+//!
+//! 1. Generates a Graph500 R-MAT workload (the paper's r-series).
+//! 2. Computes golden results through BOTH engines: the pure-Rust
+//!    native engine and the AOT-compiled JAX/Pallas kernel executed
+//!    from Rust via PJRT (L1+L2+runtime) — and cross-checks them.
+//! 3. Runs all four accelerator models (L3) against the cycle-level
+//!    DRAM simulator on BFS and PR, checking that each simulator's
+//!    iteration counts match the corresponding golden propagation
+//!    scheme and reporting the paper's headline metric (MTEPS).
+//!
+//! Run (artifacts required):  make artifacts && \
+//!     cargo run --release --example end_to_end
+//!
+//! The output of this run is recorded in EXPERIMENTS.md §End-to-end.
+
+use graphmem::accel::{build, AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::golden::{run_golden, values_agree, Propagation};
+use graphmem::algo::problem::{GraphProblem, ProblemKind};
+use graphmem::coordinator::runner::dram_spec;
+use graphmem::dram::{ChannelMode, MemorySystem};
+use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
+use graphmem::graph::rmat::{generate, RmatParams};
+use graphmem::report::Table;
+
+fn main() {
+    // ---- 1. Workload: R-MAT scale 11, edge factor 12 (~2k x 24k) ----
+    // sized to the AOT medium bucket so the Pallas path is exercised.
+    let g = generate(RmatParams::graph500(11, 12, 42));
+    println!(
+        "workload: R-MAT scale=11 ef=12  |V|={} |E|={}",
+        g.num_vertices,
+        g.num_edges()
+    );
+
+    // ---- 2. Golden engines: native vs XLA/PJRT ----
+    let mut native = NativeEngine::new();
+    let mut xla = match XlaEngine::from_repo_root() {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let mut engine_table = Table::new(
+        "Golden engines: native (Rust) vs XLA (AOT JAX/Pallas via PJRT)",
+        &["problem", "native iters", "native (s)", "xla iters", "xla (s)", "agree"],
+    );
+    for kind in [ProblemKind::Bfs, ProblemKind::PageRank, ProblemKind::Wcc] {
+        let p = GraphProblem::new(kind, &g);
+        let t0 = std::time::Instant::now();
+        let nres = native.run(&p, &g, 10_000).expect("native");
+        let nt = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let xres = xla.run(&p, &g, 10_000).expect("xla");
+        let xt = t1.elapsed().as_secs_f64();
+        let ok = nres.iterations == xres.iterations
+            && values_agree(kind, &nres.values, &xres.values);
+        engine_table.row(vec![
+            kind.name().into(),
+            nres.iterations.to_string(),
+            format!("{nt:.3}"),
+            xres.iterations.to_string(),
+            format!("{xt:.3}"),
+            if ok { "YES".into() } else { "NO".into() },
+        ]);
+        assert!(ok, "{kind:?}: engines diverge — aborting");
+    }
+    println!("{}", engine_table.render());
+
+    // ---- 3. Accelerator co-simulation (the paper's system) ----
+    let cfg = AcceleratorConfig::all_optimizations();
+    let mut sim_table = Table::new(
+        "Accelerator co-simulation (DDR4-2400, single channel, all optimizations)",
+        &[
+            "accel", "problem", "sim time (s)", "MTEPS", "iters", "golden iters", "B/edge",
+            "util%",
+        ],
+    );
+    for kind in AcceleratorKind::all() {
+        for prob in [ProblemKind::Bfs, ProblemKind::PageRank] {
+            let p = GraphProblem::new(prob, &g);
+            let mut accel = build(kind, &g, &cfg);
+            let mode = if kind.multi_channel() {
+                ChannelMode::Region
+            } else {
+                ChannelMode::InterleaveLine
+            };
+            let mut mem =
+                MemorySystem::with_mode(dram_spec("ddr4", 1).unwrap(), mode);
+            let r = accel.run(&p, &mut mem);
+            // Iteration sanity vs the matching golden propagation.
+            let golden_prop = match kind {
+                AcceleratorKind::AccuGraph | AcceleratorKind::ForeGraph => {
+                    Propagation::Immediate
+                }
+                _ => Propagation::TwoPhase,
+            };
+            let golden = run_golden(&p, &g, golden_prop);
+            let (h, _m, _c) = r.row_mix();
+            let _ = h;
+            sim_table.row(vec![
+                kind.name().into(),
+                prob.name().into(),
+                format!("{:.5}", r.seconds),
+                format!("{:.1}", r.mteps()),
+                r.metrics.iterations.to_string(),
+                golden.iterations.to_string(),
+                format!("{:.2}", r.bytes_per_edge()),
+                format!("{:.1}", 100.0 * r.bus_utilization),
+            ]);
+            // 2-phase models must match golden exactly; immediate models
+            // may differ slightly (edge order), but must not exceed the
+            // 2-phase count.
+            match golden_prop {
+                Propagation::TwoPhase => {
+                    assert_eq!(r.metrics.iterations, golden.iterations, "{kind:?} {prob:?}")
+                }
+                Propagation::Immediate => {
+                    let two = run_golden(&p, &g, Propagation::TwoPhase);
+                    assert!(
+                        r.metrics.iterations <= two.iterations,
+                        "{kind:?} {prob:?}: immediate regressed past 2-phase"
+                    );
+                }
+            }
+        }
+    }
+    println!("{}", sim_table.render());
+    println!("END-TO-END OK — L1 (Pallas kernel) -> L2 (JAX step) -> PJRT runtime");
+    println!("matches the native engine, and all four L3 accelerator simulations");
+    println!("converge with golden-consistent iteration counts.");
+}

@@ -1,0 +1,46 @@
+//! Quickstart: simulate BFS on one accelerator and one graph, print
+//! the paper's metric set.
+//!
+//!     cargo run --release --example quickstart
+
+use graphmem::accel::{Accelerator, AcceleratorConfig, AccuGraph};
+use graphmem::algo::problem::{GraphProblem, ProblemKind};
+use graphmem::dram::{DramSpec, MemorySystem};
+use graphmem::graph::datasets;
+
+fn main() {
+    // 1. A benchmark graph (scaled soc-Slashdot stand-in, Tab. 2).
+    let graph = datasets::dataset("sd").expect("dataset");
+    println!(
+        "graph: sd  |V|={} |E|={} D_avg={:.1}",
+        graph.num_vertices,
+        graph.num_edges(),
+        graph.avg_degree()
+    );
+
+    // 2. A problem bound to the graph (root = max-out-degree vertex).
+    let problem = GraphProblem::new(ProblemKind::Bfs, &graph);
+
+    // 3. An accelerator model with all paper optimizations enabled...
+    let mut accel = AccuGraph::new(&graph, &AcceleratorConfig::all_optimizations());
+
+    // 4. ...co-simulated against DDR4-2400, single channel (Tab. 3).
+    let mut mem = MemorySystem::new(DramSpec::ddr4_2400(1));
+    let report = accel.run(&problem, &mut mem);
+
+    // 5. The paper's metrics.
+    println!("{}", report.summary());
+    let (h, m, c) = report.row_mix();
+    println!(
+        "row buffer: {:.1}% hits, {:.1}% misses, {:.1}% conflicts",
+        100.0 * h,
+        100.0 * m,
+        100.0 * c
+    );
+    println!(
+        "iterations={}  bytes/edge={:.2}  values read/iter={:.0}",
+        report.metrics.iterations,
+        report.bytes_per_edge(),
+        report.values_read_per_iter()
+    );
+}

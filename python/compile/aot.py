@@ -1,0 +1,98 @@
+"""AOT lowering: jax (L2+L1) -> HLO **text** artifacts for the rust
+PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py).
+
+One artifact per (problem x size bucket). Buckets are padded fixed
+shapes; the rust engine picks the smallest bucket that fits a graph
+and pads (``mask = 0`` on padding edges). A ``manifest.txt`` lists the
+artifacts for runtime discovery.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import PROBLEMS, make_step
+
+# (name, padded vertices N, padded edges M). M must be a multiple of
+# the kernel's BLOCK_E (512). Kept deliberately small: the one-hot
+# scatter costs O(N*M) on the interpret path — the XLA engine is the
+# golden-model verifier for small/medium graphs, not the bulk engine
+# (DESIGN.md §2).
+BUCKETS = [
+    ("s", 1024, 8192),
+    ("m", 4096, 32768),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(problem: str, n: int, m: int) -> str:
+    f32 = jnp.float32
+    i32 = jnp.int32
+    shapes = (
+        jax.ShapeDtypeStruct((n,), f32),  # vals
+        jax.ShapeDtypeStruct((m,), i32),  # src
+        jax.ShapeDtypeStruct((m,), i32),  # dst
+        jax.ShapeDtypeStruct((m,), f32),  # w
+        jax.ShapeDtypeStruct((m,), f32),  # mask
+        jax.ShapeDtypeStruct((n,), f32),  # aux (1/out_deg for PR)
+        jax.ShapeDtypeStruct((), f32),  # n_real
+    )
+    # keep_unused=True: the uniform 7-argument ABI must survive even
+    # for problems that ignore w/aux/n_real (the rust runtime always
+    # supplies all seven buffers).
+    lowered = jax.jit(make_step(problem), keep_unused=True).lower(*shapes)
+    return to_hlo_text(lowered)
+
+
+def artifact_name(problem: str, n: int, m: int) -> str:
+    return f"edge_step_{problem}_{n}x{m}.hlo.txt"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--problems", default=",".join(PROBLEMS), help="comma-separated subset"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    problems = [p.strip() for p in args.problems.split(",") if p.strip()]
+    manifest = []
+    for problem in problems:
+        for bucket, n, m in BUCKETS:
+            text = lower_step(problem, n, m)
+            name = artifact_name(problem, n, m)
+            path = os.path.join(args.out, name)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(f"{problem} {bucket} {n} {m} {name}")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("# problem bucket n_pad m_pad file\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

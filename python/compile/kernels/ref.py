@@ -1,0 +1,22 @@
+"""Pure-jnp correctness oracle for the Pallas scatter-reduce kernel.
+
+Uses jax's native indexed-update primitives; the Pallas kernel must
+match these (f32 associativity differences are allowed for `add`,
+hence allclose in the tests).
+"""
+
+import jax.numpy as jnp
+
+from .edge_step import INF
+
+
+def scatter_add_ref(dst, u, mask, num_vertices: int):
+    """Reference scatter-add: sum of masked updates per destination."""
+    return jnp.zeros((num_vertices,), jnp.float32).at[dst].add(u * mask)
+
+
+def scatter_min_ref(dst, u, mask, num_vertices: int):
+    """Reference scatter-min: min of masked updates per destination,
+    INF where no edge lands."""
+    masked = jnp.where(mask > 0.0, u, INF)
+    return jnp.full((num_vertices,), INF, jnp.float32).at[dst].min(masked)

@@ -1,0 +1,94 @@
+"""L2 — one iteration of each graph problem as a fixed-shape, padded
+edge-block computation over the L1 Pallas kernel.
+
+Every step has the same uniform signature so the rust runtime drives
+all problems identically::
+
+    step(vals[N], src[M], dst[M], w[M], mask[M], aux[N], n_real)
+        -> (new_vals[N], changed)
+
+* ``vals``  — padded vertex values (min-problems pad with INF).
+* ``src/dst/w/mask`` — padded edge arrays (``mask = 0`` on padding).
+* ``aux``   — per-vertex auxiliary input: ``1/out_degree`` for PR,
+  unused (zeros) elsewhere.
+* ``n_real`` — the true vertex count as an f32 scalar (PR's ``(1-d)/n``
+  term must use the real ``n``, not the padded bucket size).
+* ``changed`` — f32 scalar, 1.0 if any real vertex value changed
+  (drives the rust-side convergence loop).
+
+The gather (``vals[src]``) and per-problem `combine` run as plain XLA
+ops; the scatter-reduce — the irregular part — is the Pallas kernel.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.edge_step import INF, scatter_add, scatter_min
+
+PR_DAMPING = 0.85
+
+PROBLEMS = ("bfs", "pr", "wcc", "sssp", "spmv")
+
+
+def step(problem: str, vals, src, dst, w, mask, aux, n_real):
+    """Dispatch one iteration of ``problem``. See module docstring."""
+    n = vals.shape[0]
+    if problem == "bfs":
+        u = vals[src] + 1.0
+        acc = scatter_min(dst, u, mask, n)
+        new = jnp.minimum(vals, acc)
+        changed = jnp.any(new < vals)
+    elif problem == "sssp":
+        u = vals[src] + w
+        acc = scatter_min(dst, u, mask, n)
+        new = jnp.minimum(vals, acc)
+        changed = jnp.any(new < vals)
+    elif problem == "wcc":
+        u = vals[src]
+        acc = scatter_min(dst, u, mask, n)
+        new = jnp.minimum(vals, acc)
+        changed = jnp.any(new < vals)
+    elif problem == "pr":
+        u = vals[src] * aux[src]
+        acc = scatter_add(dst, u, mask, n)
+        new = (1.0 - PR_DAMPING) / n_real + PR_DAMPING * acc
+        changed = jnp.array(True)
+    elif problem == "spmv":
+        u = vals[src] * w
+        acc = scatter_add(dst, u, mask, n)
+        new = acc
+        changed = jnp.array(True)
+    else:
+        raise ValueError(f"unknown problem {problem!r}")
+    return new, changed.astype(jnp.float32)
+
+
+def make_step(problem: str):
+    """A jit-able closure for one problem."""
+
+    def f(vals, src, dst, w, mask, aux, n_real):
+        return step(problem, vals, src, dst, w, mask, aux, n_real)
+
+    f.__name__ = f"step_{problem}"
+    return f
+
+
+def init_values(problem: str, n_real: int, n_pad: int, root: int):
+    """Initial padded value vector for a problem (mirrors the rust
+    `GraphProblem::init_values`, plus padding)."""
+    import numpy as np
+
+    if problem in ("bfs", "sssp"):
+        v = np.full(n_pad, INF, np.float32)
+        v[root] = 0.0
+    elif problem == "wcc":
+        v = np.full(n_pad, INF, np.float32)
+        v[:n_real] = np.arange(n_real, dtype=np.float32)
+    elif problem == "pr":
+        v = np.zeros(n_pad, np.float32)
+        v[:n_real] = 1.0 / n_real
+    elif problem == "spmv":
+        v = np.zeros(n_pad, np.float32)
+        v[:n_real] = ((np.arange(n_real) * 2654435761) % 1000).astype(np.float32) / 1000.0
+    else:
+        raise ValueError(problem)
+    return v

@@ -1,0 +1,160 @@
+"""L2 correctness: per-problem iteration steps against straightforward
+numpy loop references, plus fixpoint convergence on small graphs."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels.edge_step import BLOCK_E, INF
+from compile.model import PR_DAMPING, init_values, make_step
+
+
+def pad_edges(src, dst, w):
+    m = len(src)
+    m_pad = ((m + BLOCK_E - 1) // BLOCK_E) * BLOCK_E
+    ps = np.zeros(m_pad, np.int32)
+    pd = np.zeros(m_pad, np.int32)
+    pw = np.zeros(m_pad, np.float32)
+    pm = np.zeros(m_pad, np.float32)
+    ps[:m] = src
+    pd[:m] = dst
+    pw[:m] = w
+    pm[:m] = 1.0
+    return ps, pd, pw, pm
+
+
+def run_step(problem, vals, src, dst, w, aux, n_real):
+    ps, pd, pw, pm = pad_edges(src, dst, w)
+    f = make_step(problem)
+    new, changed = f(
+        jnp.array(vals),
+        jnp.array(ps),
+        jnp.array(pd),
+        jnp.array(pw),
+        jnp.array(pm),
+        jnp.array(aux),
+        jnp.float32(n_real),
+    )
+    return np.asarray(new), float(changed)
+
+
+def toy_graph():
+    # 0 -> 1, 0 -> 2, 1 -> 2, 2 -> 3
+    src = np.array([0, 0, 1, 2], np.int32)
+    dst = np.array([1, 2, 2, 3], np.int32)
+    w = np.array([1.0, 4.0, 1.0, 2.0], np.float32)
+    return src, dst, w, 4
+
+
+def test_bfs_one_step():
+    src, dst, w, n = toy_graph()
+    n_pad = 8
+    vals = init_values("bfs", n, n_pad, root=0)
+    new, changed = run_step("bfs", vals, src, dst, w, np.zeros(n_pad, np.float32), n)
+    assert changed == 1.0
+    assert new[0] == 0.0 and new[1] == 1.0 and new[2] == 1.0
+    assert new[3] == INF  # two hops away, not reached in one step
+
+
+def test_bfs_converges_to_levels():
+    src, dst, w, n = toy_graph()
+    n_pad = 8
+    vals = init_values("bfs", n, n_pad, root=0)
+    aux = np.zeros(n_pad, np.float32)
+    for _ in range(10):
+        vals, changed = run_step("bfs", vals, src, dst, w, aux, n)
+        if changed == 0.0:
+            break
+    np.testing.assert_array_equal(vals[:4], [0.0, 1.0, 1.0, 2.0])
+    assert changed == 0.0
+
+
+def test_sssp_uses_weights():
+    src, dst, w, n = toy_graph()
+    n_pad = 8
+    vals = init_values("sssp", n, n_pad, root=0)
+    aux = np.zeros(n_pad, np.float32)
+    for _ in range(10):
+        vals, changed = run_step("sssp", vals, src, dst, w, aux, n)
+        if changed == 0.0:
+            break
+    # 0->1 = 1, 0->2 = min(4, 1+1) = 2, 0->3 = 2+2 = 4
+    np.testing.assert_allclose(vals[:4], [0.0, 1.0, 2.0, 4.0])
+
+
+def test_wcc_labels_components():
+    # component {0,1} and {2,3}, undirected as two directed edges each
+    src = np.array([0, 1, 2, 3], np.int32)
+    dst = np.array([1, 0, 3, 2], np.int32)
+    w = np.ones(4, np.float32)
+    n, n_pad = 4, 8
+    vals = init_values("wcc", n, n_pad, root=0)
+    aux = np.zeros(n_pad, np.float32)
+    for _ in range(10):
+        vals, changed = run_step("wcc", vals, src, dst, w, aux, n)
+        if changed == 0.0:
+            break
+    np.testing.assert_array_equal(vals[:4], [0.0, 0.0, 2.0, 2.0])
+
+
+def test_pr_matches_manual():
+    src, dst, w, n = toy_graph()
+    n_pad = 8
+    vals = init_values("pr", n, n_pad, root=0)
+    out_deg = np.zeros(n_pad, np.float32)
+    for s in src:
+        out_deg[s] += 1
+    aux = np.where(out_deg > 0, 1.0 / np.maximum(out_deg, 1), 0.0).astype(np.float32)
+    new, _ = run_step("pr", vals, src, dst, w, aux, n)
+    # manual PR iteration
+    expect = np.zeros(n, np.float32)
+    v0 = 1.0 / n
+    for s, d in zip(src, dst):
+        expect[d] += v0 * aux[s]
+    expect = (1 - PR_DAMPING) / n + PR_DAMPING * expect
+    np.testing.assert_allclose(new[:n], expect, rtol=1e-5)
+
+
+def test_spmv_matches_manual():
+    src, dst, w, n = toy_graph()
+    n_pad = 8
+    x = init_values("spmv", n, n_pad, root=0)
+    new, _ = run_step("spmv", x, src, dst, w, np.zeros(n_pad, np.float32), n)
+    expect = np.zeros(n, np.float32)
+    for s, d, ww in zip(src, dst, w):
+        expect[d] += x[s] * ww
+    np.testing.assert_allclose(new[:n], expect, rtol=1e-5)
+
+
+def test_unknown_problem_raises():
+    with pytest.raises(ValueError):
+        make_step("nope")(
+            jnp.zeros(4), jnp.zeros(BLOCK_E, jnp.int32), jnp.zeros(BLOCK_E, jnp.int32),
+            jnp.zeros(BLOCK_E), jnp.zeros(BLOCK_E), jnp.zeros(4), jnp.float32(4),
+        )
+
+
+def test_padding_is_inert():
+    # same graph, one vs four blocks of padding: identical results
+    src, dst, w, n = toy_graph()
+    n_pad = 8
+    aux = np.zeros(n_pad, np.float32)
+    vals = init_values("bfs", n, n_pad, root=0)
+    a, _ = run_step("bfs", vals, src, dst, w, aux, n)
+    # add 3 extra blocks of masked padding
+    m_pad = 4 * BLOCK_E
+    ps = np.zeros(m_pad, np.int32)
+    pd = np.zeros(m_pad, np.int32)
+    pw = np.zeros(m_pad, np.float32)
+    pm = np.zeros(m_pad, np.float32)
+    ps[:4] = src
+    pd[:4] = dst
+    pw[:4] = w
+    pm[:4] = 1.0
+    f = make_step("bfs")
+    b, _ = f(
+        jnp.array(vals), jnp.array(ps), jnp.array(pd), jnp.array(pw),
+        jnp.array(pm), jnp.array(aux), jnp.float32(n),
+    )
+    np.testing.assert_array_equal(a, np.asarray(b))

@@ -1,0 +1,23 @@
+//! Bench: Fig. 11 / Tab. 6 — DDR3/HBM vs DDR4 + bandwidth utilization.
+//!
+//! Regenerates the paper's rows on the scaled workloads and times the
+//! sweep. Scope via GRAPHMEM_SCOPE=quick|standard|full (default
+//! standard).
+
+use graphmem::coordinator::{experiment::bench_scope, run_experiment, Experiment};
+
+fn main() {
+    let scope = bench_scope();
+    eprintln!("bench fig11_tab6_dram (scope {scope:?})");
+    let t0 = std::time::Instant::now();
+    let tables = run_experiment(Experiment::Fig11Tab6Dram, scope).expect("experiment");
+    let dt = t0.elapsed();
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    println!(
+        "bench fig11_tab6_dram: {} table(s) in {:.2}s (scope {scope:?})",
+        tables.len(),
+        dt.as_secs_f64()
+    );
+}

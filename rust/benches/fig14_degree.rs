@@ -1,0 +1,23 @@
+//! Bench: Fig. 14 — MREPS by average degree.
+//!
+//! Regenerates the paper's rows on the scaled workloads and times the
+//! sweep. Scope via GRAPHMEM_SCOPE=quick|standard|full (default
+//! standard).
+
+use graphmem::coordinator::{experiment::bench_scope, run_experiment, Experiment};
+
+fn main() {
+    let scope = bench_scope();
+    eprintln!("bench fig14_degree (scope {scope:?})");
+    let t0 = std::time::Instant::now();
+    let tables = run_experiment(Experiment::Fig14Degree, scope).expect("experiment");
+    let dt = t0.elapsed();
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    println!(
+        "bench fig14_degree: {} table(s) in {:.2}s (scope {scope:?})",
+        tables.len(),
+        dt.as_secs_f64()
+    );
+}

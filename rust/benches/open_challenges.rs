@@ -1,0 +1,142 @@
+//! Bench: the paper's §4.6 open challenges, explored as extensions,
+//! plus DRAM controller design-choice ablations (DESIGN.md §5(3)).
+//!
+//! (b) "investigate schemes to improve utilization of bank-level
+//!     parallelism in modern memories" — bank-group-interleaved
+//!     address mapping vs the Ramulator default.
+//! (c) "enabling the immediate update propagation scheme for
+//!     multi-channel" — AccuGraph/ForeGraph with their data structures
+//!     striped line-interleaved across channels.
+//! Ablation: FR-FCFS vs FCFS scheduling, open- vs closed-page rows.
+
+use graphmem::accel::{build, AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::problem::{GraphProblem, ProblemKind};
+use graphmem::dram::{
+    AddrMap, ChannelMode, DramPolicy, DramSpec, MemorySystem, RowPolicy, SchedPolicy,
+};
+use graphmem::graph::datasets;
+use graphmem::report::Table;
+
+fn run_with(
+    kind: AcceleratorKind,
+    graph: &str,
+    channels: usize,
+    policy: DramPolicy,
+) -> graphmem::sim::SimReport {
+    let g = datasets::dataset(graph).expect("dataset");
+    let p = GraphProblem::new(ProblemKind::Bfs, &g);
+    let mut cfg = AcceleratorConfig::all_optimizations().with_channels(channels);
+    cfg.experimental_multichannel = true;
+    let mode = if kind.multi_channel() {
+        ChannelMode::Region
+    } else {
+        ChannelMode::InterleaveLine
+    };
+    let mut accel = build(kind, &g, &cfg);
+    let mut mem = MemorySystem::with_mode_and_policy(DramSpec::ddr4_2400(channels), mode, policy);
+    accel.run(&p, &mut mem)
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+
+    // ---- open challenge (b): address mapping ----
+    let mut t = Table::new(
+        "Open challenge (b) — bank-group-interleaved mapping vs default (BFS, DDR4 1ch)",
+        &["accel", "graph", "default (s)", "util%", "interleaved (s)", "util%", "speedup"],
+    );
+    for (kind, g) in [
+        (AcceleratorKind::AccuGraph, "sd"),
+        (AcceleratorKind::AccuGraph, "pk"),
+        (AcceleratorKind::HitGraph, "sd"),
+        (AcceleratorKind::ThunderGp, "pk"),
+    ] {
+        let base = run_with(kind, g, 1, DramPolicy::default());
+        let inter = run_with(
+            kind,
+            g,
+            1,
+            DramPolicy {
+                addr_map: AddrMap::BankInterleaved,
+                ..Default::default()
+            },
+        );
+        t.row(vec![
+            kind.name().into(),
+            g.into(),
+            format!("{:.5}", base.seconds),
+            format!("{:.1}", 100.0 * base.bus_utilization),
+            format!("{:.5}", inter.seconds),
+            format!("{:.1}", 100.0 * inter.bus_utilization),
+            format!("{:.2}x", base.seconds / inter.seconds),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- open challenge (c): multi-channel immediate propagation ----
+    let mut t = Table::new(
+        "Open challenge (c) — immediate-propagation systems, striped across channels (BFS)",
+        &["accel", "graph", "1ch (s)", "2ch speedup", "4ch speedup"],
+    );
+    for (kind, g) in [
+        (AcceleratorKind::AccuGraph, "pk"),
+        (AcceleratorKind::AccuGraph, "lj"),
+        (AcceleratorKind::ForeGraph, "pk"),
+        (AcceleratorKind::ForeGraph, "lj"),
+    ] {
+        let base = run_with(kind, g, 1, DramPolicy::default());
+        let two = run_with(kind, g, 2, DramPolicy::default());
+        let four = run_with(kind, g, 4, DramPolicy::default());
+        t.row(vec![
+            kind.name().into(),
+            g.into(),
+            format!("{:.5}", base.seconds),
+            format!("{:.2}x", base.seconds / two.seconds),
+            format!("{:.2}x", base.seconds / four.seconds),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- controller policy ablation ----
+    let mut t = Table::new(
+        "DRAM controller ablation (BFS, DDR4 1ch): scheduling x row policy",
+        &["accel", "graph", "FR-FCFS/open (s)", "FCFS", "closed-page"],
+    );
+    for (kind, g) in [
+        (AcceleratorKind::AccuGraph, "sd"),
+        (AcceleratorKind::HitGraph, "wt"),
+        (AcceleratorKind::ThunderGp, "yt"),
+    ] {
+        let base = run_with(kind, g, 1, DramPolicy::default());
+        let fcfs = run_with(
+            kind,
+            g,
+            1,
+            DramPolicy {
+                sched: SchedPolicy::Fcfs,
+                ..Default::default()
+            },
+        );
+        let closed = run_with(
+            kind,
+            g,
+            1,
+            DramPolicy {
+                row: RowPolicy::ClosedPage,
+                ..Default::default()
+            },
+        );
+        t.row(vec![
+            kind.name().into(),
+            g.into(),
+            format!("{:.5}", base.seconds),
+            format!("{:.2}x", base.seconds / fcfs.seconds),
+            format!("{:.2}x", base.seconds / closed.seconds),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "bench open_challenges: done in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,151 @@
+//! Perf microbenches for the hot paths (EXPERIMENTS.md §Perf):
+//!
+//! * DRAM channel service throughput — sequential / random streams
+//!   (requests per wall-second).
+//! * Phase-driver throughput (merge tree + window + chaining on top of
+//!   the DRAM model).
+//! * End-to-end simulation throughput (HitGraph BFS on a mid-size
+//!   graph, simulated requests per wall-second).
+//! * Golden engines: native vs XLA/PJRT per-iteration latency.
+
+use graphmem::accel::stream::{seq_lines, Phase, StreamClass};
+use graphmem::accel::{build, AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::problem::{GraphProblem, ProblemKind};
+use graphmem::dram::{ChannelMode, DramSpec, MemKind, MemRequest, MemorySystem};
+use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
+use graphmem::graph::rmat::{generate, RmatParams};
+use graphmem::sim::run_phase;
+use graphmem::util::rng::Rng;
+
+fn time<F: FnMut()>(mut f: F) -> f64 {
+    let t0 = std::time::Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+fn bench_dram_channel() {
+    let spec = DramSpec::ddr4_2400(1);
+    const N: u64 = 2_000_000;
+
+    // sequential
+    let mut mem = MemorySystem::new(spec);
+    let dt = time(|| {
+        for i in 0..N {
+            mem.enqueue(
+                MemRequest {
+                    addr: i * 64,
+                    kind: MemKind::Read,
+                    tag: i,
+                },
+                0,
+            );
+            if i % 64 == 63 {
+                while mem.service_one().is_some() {}
+            }
+        }
+        while mem.service_one().is_some() {}
+    });
+    println!(
+        "dram.sequential: {:.2} M req/s ({} requests in {:.3}s)",
+        N as f64 / dt / 1e6,
+        N,
+        dt
+    );
+
+    // random
+    let mut mem = MemorySystem::new(spec);
+    let mut rng = Rng::new(1);
+    let span = spec.channel_bytes / 64;
+    let dt = time(|| {
+        for i in 0..N {
+            mem.enqueue(
+                MemRequest {
+                    addr: rng.next_below(span) * 64,
+                    kind: MemKind::Read,
+                    tag: i,
+                },
+                0,
+            );
+            if i % 64 == 63 {
+                while mem.service_one().is_some() {}
+            }
+        }
+        while mem.service_one().is_some() {}
+    });
+    println!("dram.random:     {:.2} M req/s", N as f64 / dt / 1e6);
+}
+
+fn bench_phase_driver() {
+    let spec = DramSpec::ddr4_2400(1);
+    const LINES: u64 = 1_000_000;
+    let mut mem = MemorySystem::new(spec);
+    let phase = Phase::single(
+        StreamClass::Edges,
+        MemKind::Read,
+        seq_lines(0, LINES * 64),
+        32,
+    );
+    let dt = time(|| {
+        run_phase(&mut mem, &phase, 0);
+    });
+    println!(
+        "driver.seq_phase: {:.2} M req/s ({} lines in {:.3}s)",
+        LINES as f64 / dt / 1e6,
+        LINES,
+        dt
+    );
+}
+
+fn bench_end_to_end_sim() {
+    let g = generate(RmatParams::graph500(14, 16, 7)); // 16k x 262k
+    let p = GraphProblem::new(ProblemKind::Bfs, &g);
+    let cfg = AcceleratorConfig::all_optimizations();
+    let mut accel = build(AcceleratorKind::HitGraph, &g, &cfg);
+    let mut mem = MemorySystem::with_mode(DramSpec::ddr4_2400(1), ChannelMode::Region);
+    let mut report = None;
+    let dt = time(|| {
+        report = Some(accel.run(&p, &mut mem));
+    });
+    let r = report.unwrap();
+    println!(
+        "sim.hitgraph_bfs_r14: {:.2} M req/s wall ({} DRAM requests, sim {:.4}s, wall {:.3}s, slowdown {:.0}x)",
+        r.dram.requests() as f64 / dt / 1e6,
+        r.dram.requests(),
+        r.seconds,
+        dt,
+        dt / r.seconds
+    );
+}
+
+fn bench_engines() {
+    let g = generate(RmatParams::graph500(11, 12, 42));
+    let p = GraphProblem::new(ProblemKind::PageRank, &g);
+    let mut native = NativeEngine::new();
+    let dt_native = time(|| {
+        native.run(&p, &g, 1).unwrap();
+    });
+    println!("engine.native_pr_step: {:.3} ms", dt_native * 1e3);
+    match XlaEngine::from_repo_root() {
+        Ok(mut xla) => {
+            // warm-up compiles the executable
+            xla.run(&p, &g, 1).unwrap();
+            let dt_x = time(|| {
+                xla.run(&p, &g, 1).unwrap();
+            });
+            println!(
+                "engine.xla_pr_step:    {:.3} ms ({:.1}x native; interpret-mode Pallas scatter is O(N*M))",
+                dt_x * 1e3,
+                dt_x / dt_native
+            );
+        }
+        Err(e) => println!("engine.xla: skipped ({e})"),
+    }
+}
+
+fn main() {
+    println!("perf_hotpath — simulator throughput microbenches");
+    bench_dram_channel();
+    bench_phase_driver();
+    bench_end_to_end_sim();
+    bench_engines();
+}

@@ -1,0 +1,23 @@
+//! Bench: Tab. 5 — SSSP/SpMV runtimes on weighted graphs.
+//!
+//! Regenerates the paper's rows on the scaled workloads and times the
+//! sweep. Scope via GRAPHMEM_SCOPE=quick|standard|full (default
+//! standard).
+
+use graphmem::coordinator::{experiment::bench_scope, run_experiment, Experiment};
+
+fn main() {
+    let scope = bench_scope();
+    eprintln!("bench tab5_weighted (scope {scope:?})");
+    let t0 = std::time::Instant::now();
+    let tables = run_experiment(Experiment::Tab5Weighted, scope).expect("experiment");
+    let dt = t0.elapsed();
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    println!(
+        "bench tab5_weighted: {} table(s) in {:.2}s (scope {scope:?})",
+        tables.len(),
+        dt.as_secs_f64()
+    );
+}

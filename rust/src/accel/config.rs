@@ -1,0 +1,198 @@
+//! Accelerator configuration: which system, which optimizations, and
+//! the scaled on-chip capacities (DESIGN.md §6).
+
+use crate::partition::{SCALED_BRAM_VALUES, SCALED_FOREGRAPH_INTERVAL};
+
+/// The four modelled systems.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AcceleratorKind {
+    AccuGraph,
+    ForeGraph,
+    HitGraph,
+    ThunderGp,
+}
+
+impl AcceleratorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AcceleratorKind::AccuGraph => "AccuGraph",
+            AcceleratorKind::ForeGraph => "ForeGraph",
+            AcceleratorKind::HitGraph => "HitGraph",
+            AcceleratorKind::ThunderGp => "ThunderGP",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "accugraph" | "accu" | "ag" => Some(AcceleratorKind::AccuGraph),
+            "foregraph" | "fore" | "fg" => Some(AcceleratorKind::ForeGraph),
+            "hitgraph" | "hit" | "hg" => Some(AcceleratorKind::HitGraph),
+            "thundergp" | "thunder" | "tgp" => Some(AcceleratorKind::ThunderGp),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [AcceleratorKind; 4] {
+        [
+            AcceleratorKind::AccuGraph,
+            AcceleratorKind::ForeGraph,
+            AcceleratorKind::HitGraph,
+            AcceleratorKind::ThunderGp,
+        ]
+    }
+
+    /// Does this system support multi-channel memory (Fig. 12)?
+    pub fn multi_channel(self) -> bool {
+        matches!(self, AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp)
+    }
+
+    /// Does this system support weighted problems (Tab. 5)?
+    pub fn supports_weighted(self) -> bool {
+        matches!(self, AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp)
+    }
+}
+
+/// Every optimization the paper ablates (Fig. 13 / Tab. 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Optimization {
+    /// AccuGraph: skip the value prefetch when the on-chip partition
+    /// is already the to-be-prefetched one (`Pref.`).
+    PrefetchSkipping,
+    /// AccuGraph / HitGraph: skip partitions with no active sources
+    /// (`Skip.`).
+    PartitionSkipping,
+    /// ForeGraph: zip the edge lists of `p` shards (`Shuf.`).
+    EdgeShuffling,
+    /// ForeGraph: skip shards whose source interval is unchanged (`Skip.`).
+    ShardSkipping,
+    /// ForeGraph: rename vertices to constant-stride intervals (`Map.`).
+    StrideMapping,
+    /// HitGraph: sort partition edges by destination (`Sort`).
+    EdgeSorting,
+    /// HitGraph: combine updates to the same destination (`Cmb.`).
+    UpdateCombining,
+    /// HitGraph: bitmap-filter updates from inactive sources (`Filt.`).
+    UpdateFiltering,
+    /// ThunderGP: offline chunk-to-channel scheduling (`Schd.`).
+    ChunkScheduling,
+}
+
+/// Full accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct AcceleratorConfig {
+    /// Enabled optimizations.
+    pub optimizations: Vec<Optimization>,
+    /// On-chip value capacity (AccuGraph / HitGraph / ThunderGP
+    /// interval bound). Scaled stand-in for 1,024,000.
+    pub bram_values: usize,
+    /// ForeGraph interval size (<= 65,536; scaled stand-in for 65,536).
+    pub foregraph_interval: usize,
+    /// Processing elements (ForeGraph PEs; HitGraph/ThunderGP PEs ==
+    /// memory channels).
+    pub num_pes: usize,
+    /// Memory channels the accelerator drives.
+    pub channels: usize,
+    /// Outstanding-request window per phase.
+    pub window: usize,
+    /// Open challenge (c) extension: allow the immediate-propagation
+    /// systems (AccuGraph, ForeGraph) to drive multiple channels by
+    /// striping their data structures line-interleaved across
+    /// channels. Not part of the paper's reproduction (the originals
+    /// are single-channel designs); see EXPERIMENTS.md §Extensions.
+    pub experimental_multichannel: bool,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        AcceleratorConfig {
+            optimizations: Vec::new(),
+            bram_values: SCALED_BRAM_VALUES,
+            foregraph_interval: SCALED_FOREGRAPH_INTERVAL,
+            num_pes: 4,
+            channels: 1,
+            window: 32,
+            experimental_multichannel: false,
+        }
+    }
+}
+
+impl AcceleratorConfig {
+    /// All optimizations on — the configuration of Tab. 4/6/7.
+    pub fn all_optimizations() -> Self {
+        AcceleratorConfig {
+            optimizations: vec![
+                Optimization::PrefetchSkipping,
+                Optimization::PartitionSkipping,
+                Optimization::EdgeShuffling,
+                Optimization::ShardSkipping,
+                Optimization::StrideMapping,
+                Optimization::EdgeSorting,
+                Optimization::UpdateCombining,
+                Optimization::UpdateFiltering,
+                Optimization::ChunkScheduling,
+            ],
+            ..Default::default()
+        }
+    }
+
+    /// No optimizations — the Fig. 13 baseline.
+    pub fn baseline() -> Self {
+        Self::default()
+    }
+
+    pub fn with(mut self, opt: Optimization) -> Self {
+        if !self.optimizations.contains(&opt) {
+            self.optimizations.push(opt);
+        }
+        self
+    }
+
+    pub fn with_channels(mut self, channels: usize) -> Self {
+        self.channels = channels;
+        self
+    }
+
+    pub fn has(&self, opt: Optimization) -> bool {
+        self.optimizations.contains(&opt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(AcceleratorKind::parse("accugraph"), Some(AcceleratorKind::AccuGraph));
+        assert_eq!(AcceleratorKind::parse("TGP"), Some(AcceleratorKind::ThunderGp));
+        assert_eq!(AcceleratorKind::parse("x"), None);
+    }
+
+    #[test]
+    fn capability_matrix_matches_paper() {
+        assert!(!AcceleratorKind::AccuGraph.multi_channel());
+        assert!(!AcceleratorKind::ForeGraph.multi_channel());
+        assert!(AcceleratorKind::HitGraph.multi_channel());
+        assert!(AcceleratorKind::ThunderGp.multi_channel());
+        assert!(!AcceleratorKind::AccuGraph.supports_weighted());
+        assert!(AcceleratorKind::HitGraph.supports_weighted());
+    }
+
+    #[test]
+    fn config_builders() {
+        let c = AcceleratorConfig::baseline().with(Optimization::EdgeSorting);
+        assert!(c.has(Optimization::EdgeSorting));
+        assert!(!c.has(Optimization::UpdateCombining));
+        let all = AcceleratorConfig::all_optimizations();
+        assert!(all.has(Optimization::PartitionSkipping));
+        assert!(all.has(Optimization::ChunkScheduling));
+        let c2 = c.with(Optimization::EdgeSorting);
+        assert_eq!(
+            c2.optimizations
+                .iter()
+                .filter(|&&o| o == Optimization::EdgeSorting)
+                .count(),
+            1
+        );
+    }
+}

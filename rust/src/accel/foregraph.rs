@@ -1,0 +1,444 @@
+//! ForeGraph model (§3.2.2, Fig. 5): edge-centric over
+//! **interval-shard** partitioning with **compressed 32-bit edges**
+//! (two 16-bit interval-local ids), **immediate** update propagation.
+//!
+//! Per iteration, source intervals are prefetched one after another;
+//! for each source interval its shards are processed by additionally
+//! prefetching the destination interval, sequentially reading the
+//! shard's edges (all random vertex accesses hit on-chip caches) and
+//! sequentially writing the destination interval back. `p` PEs work
+//! on their own sets of source intervals and share memory round-robin.
+//!
+//! Optimizations (§4.5): `Shuf.` zips the edge lists of `p` shards
+//! into one padded stream (better PE utilization, more edges read),
+//! `Skip.` skips shards with unchanged source intervals, `Map.`
+//! renames vertices into constant-stride intervals to fight partition
+//! skew.
+
+use super::config::{AcceleratorConfig, Optimization};
+use super::stream::{seq_lines, LineStream, Merge, Phase, StreamClass};
+use super::Accelerator;
+use crate::algo::problem::GraphProblem;
+use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
+use crate::graph::EdgeList;
+use crate::partition::interval_shard::{stride_permutation, IntervalShardPartitioning};
+use crate::sim::driver::run_phase;
+use crate::sim::metrics::{RunMetrics, SimReport};
+
+/// ForeGraph simulator instance.
+pub struct ForeGraph {
+    part: IntervalShardPartitioning,
+    /// Permutation applied to the graph (stride mapping), if any:
+    /// `perm[original] = renamed`.
+    perm: Option<Vec<u32>>,
+    n: usize,
+    m: usize,
+    cfg: AcceleratorConfig,
+    val_base: u64,
+    /// Base address of shard (i, j)'s edge array.
+    shard_base: Vec<Vec<u64>>,
+}
+
+impl ForeGraph {
+    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+        let interval = cfg.foregraph_interval;
+        let (graph, perm) = if cfg.has(Optimization::StrideMapping) {
+            let q = (g.num_vertices + interval - 1) / interval.max(1);
+            let perm = stride_permutation(g.num_vertices, q.max(1));
+            (g.renamed(&perm), Some(perm))
+        } else {
+            (g.clone(), None)
+        };
+        let part = IntervalShardPartitioning::new(&graph, interval);
+        let n = g.num_vertices;
+        let q = part.num_intervals();
+        let mut cursor = (n as u64 * 4 + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
+        let mut shard_base = vec![vec![0u64; q]; q];
+        for i in 0..q {
+            for j in 0..q {
+                shard_base[i][j] = cursor;
+                let bytes = part.shards[i][j].len() as u64 * IntervalShardPartitioning::EDGE_BYTES;
+                cursor += (bytes + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
+            }
+        }
+        ForeGraph {
+            part,
+            perm,
+            n,
+            m: g.num_edges(),
+            cfg: cfg.clone(),
+            val_base: 0,
+            shard_base,
+        }
+    }
+
+    pub fn num_intervals(&self) -> usize {
+        self.part.num_intervals()
+    }
+
+    /// Undo the stride permutation on a value vector (for result
+    /// verification).
+    pub fn unpermute(&self, values: &[f32]) -> Vec<f32> {
+        match &self.perm {
+            None => values.to_vec(),
+            Some(perm) => {
+                let mut out = vec![0f32; values.len()];
+                for (orig, &renamed) in perm.iter().enumerate() {
+                    out[orig] = values[renamed as usize];
+                }
+                out
+            }
+        }
+    }
+}
+
+impl Accelerator for ForeGraph {
+    fn name(&self) -> &'static str {
+        "ForeGraph"
+    }
+
+    fn run(&mut self, p0: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        assert!(
+            !p0.kind.weighted(),
+            "ForeGraph does not support weighted problems (Tab. 1)"
+        );
+        // Rebind the problem onto the renamed vertex space.
+        let root = match &self.perm {
+            Some(perm) => perm[p0.root as usize],
+            None => p0.root,
+        };
+        let p = GraphProblem {
+            kind: p0.kind,
+            root,
+            inv_out_deg: match &self.perm {
+                Some(perm) => {
+                    let mut v = vec![0f32; p0.inv_out_deg.len()];
+                    for (orig, &ren) in perm.iter().enumerate() {
+                        if !p0.inv_out_deg.is_empty() {
+                            v[ren as usize] = p0.inv_out_deg[orig];
+                        }
+                    }
+                    v
+                }
+                None => p0.inv_out_deg.clone(),
+            },
+            num_vertices: p0.num_vertices,
+        };
+
+        let n = self.n;
+        let q = self.part.num_intervals();
+        let pes = self.cfg.num_pes.max(1);
+        let window = self.cfg.window;
+        let shuf = self.cfg.has(Optimization::EdgeShuffling);
+        let skip = self.cfg.has(Optimization::ShardSkipping);
+        let immediate = p.kind.reduces_with_min();
+
+        let mut values = p.init_values();
+        let mut prev_changed_interval = vec![true; q];
+        let mut metrics = RunMetrics::default();
+        let mut cursor = 0u64;
+        let max_iters = p.kind.fixed_iterations().unwrap_or(u32::MAX);
+
+        loop {
+            metrics.iterations += 1;
+            let mut changed_now = vec![false; q];
+            let mut any = false;
+            let snapshot = if immediate { None } else { Some(values.clone()) };
+            let mut acc = if immediate {
+                Vec::new()
+            } else {
+                vec![p.reduce_identity(); n]
+            };
+
+            // PEs process source intervals in rounds of `pes`.
+            let mut round_start = 0usize;
+            while round_start < q {
+                let group: Vec<usize> = (round_start..(round_start + pes).min(q))
+                    .filter(|&i| {
+                        if skip && !prev_changed_interval[i] {
+                            metrics.skipped += q as u64; // skips all of i's shards
+                            false
+                        } else {
+                            true
+                        }
+                    })
+                    .collect();
+                round_start += pes;
+                if group.is_empty() {
+                    continue;
+                }
+
+                // --- Source interval prefetches (one per active PE) ---
+                let mut pre_streams = Vec::new();
+                for &i in &group {
+                    let iv = self.part.intervals[i];
+                    pre_streams.push(LineStream::independent(
+                        StreamClass::Prefetch,
+                        MemKind::Read,
+                        seq_lines(self.val_base + iv.start as u64 * 4, iv.len() as u64 * 4),
+                    ));
+                    metrics.values_read += iv.len() as u64;
+                }
+                let k = pre_streams.len();
+                let pre_phase = Phase {
+                    streams: pre_streams,
+                    merge: Merge::rr(0..k),
+                    window,
+                };
+                cursor = run_phase(mem, &pre_phase, cursor).end_cycle;
+
+                // --- Per destination interval: prefetch, edges, write ---
+                for j in 0..q {
+                    let jv = self.part.intervals[j];
+                    // Which of the group's shards into j are non-empty?
+                    let live: Vec<usize> = group
+                        .iter()
+                        .copied()
+                        .filter(|&i| !self.part.shards[i][j].is_empty())
+                        .collect();
+                    if live.is_empty() {
+                        continue;
+                    }
+                    metrics.processed += live.len() as u64;
+
+                    // Algorithm semantics: process shards' edges.
+                    for &i in &live {
+                        for &ce in &self.part.shards[i][j] {
+                            let (src, dst) = self.part.globalize(i, j, ce);
+                            let sval = match &snapshot {
+                                Some(s) => s[src as usize],
+                                None => values[src as usize],
+                            };
+                            let u = p.combine(src, sval, 1.0);
+                            if immediate {
+                                let old = values[dst as usize];
+                                let new = p.apply(old, u);
+                                if p.changed(old, new) {
+                                    values[dst as usize] = new;
+                                    changed_now[j] = true;
+                                    any = true;
+                                }
+                            } else {
+                                let a = &mut acc[dst as usize];
+                                *a = p.reduce(*a, u);
+                            }
+                        }
+                    }
+
+                    // Edge volume: shuffled -> p * max (null-edge padding);
+                    // unshuffled -> plain sum, streams merged round-robin.
+                    let mut streams = Vec::new();
+                    // dst interval prefetch first
+                    streams.push(LineStream::independent(
+                        StreamClass::Prefetch,
+                        MemKind::Read,
+                        seq_lines(self.val_base + jv.start as u64 * 4, jv.len() as u64 * 4),
+                    ));
+                    metrics.values_read += jv.len() as u64;
+                    let edge_merge;
+                    if shuf {
+                        let max_len = live
+                            .iter()
+                            .map(|&i| self.part.shards[i][j].len())
+                            .max()
+                            .unwrap_or(0);
+                        let padded = (max_len * live.len()) as u64;
+                        metrics.edges_read += padded;
+                        let bytes = padded * IntervalShardPartitioning::EDGE_BYTES;
+                        streams.push(LineStream::independent(
+                            StreamClass::Edges,
+                            MemKind::Read,
+                            seq_lines(self.shard_base[live[0]][j], bytes),
+                        ));
+                        edge_merge = Merge::Leaf(1);
+                    } else {
+                        let mut leaves = Vec::new();
+                        for &i in &live {
+                            let len = self.part.shards[i][j].len() as u64;
+                            metrics.edges_read += len;
+                            leaves.push(Merge::Leaf(streams.len()));
+                            streams.push(LineStream::independent(
+                                StreamClass::Edges,
+                                MemKind::Read,
+                                seq_lines(
+                                    self.shard_base[i][j],
+                                    len * IntervalShardPartitioning::EDGE_BYTES,
+                                ),
+                            ));
+                        }
+                        edge_merge = Merge::RoundRobin(leaves);
+                    }
+                    // Edge streams wait on the dst prefetch? Fig. 5 reads
+                    // edges after the interval prefetch; model via
+                    // priority: prefetch first, then edges.
+                    let phase = Phase {
+                        merge: Merge::Priority(vec![Merge::Leaf(0), edge_merge]),
+                        streams,
+                        window,
+                    };
+                    cursor = run_phase(mem, &phase, cursor).end_cycle;
+
+                    // Destination interval written back sequentially.
+                    let wb = Phase::single(
+                        StreamClass::Writes,
+                        MemKind::Write,
+                        seq_lines(self.val_base + jv.start as u64 * 4, jv.len() as u64 * 4),
+                        window,
+                    );
+                    metrics.values_written += jv.len() as u64;
+                    cursor = run_phase(mem, &wb, cursor).end_cycle;
+                }
+            }
+
+            if !immediate {
+                for v in 0..n {
+                    let new = p.apply(values[v], acc[v]);
+                    if p.changed(values[v], new) {
+                        let j = (v / self.part.intervals[0].len().max(1)).min(q - 1);
+                        changed_now[j] = true;
+                        any = true;
+                    }
+                    values[v] = new;
+                }
+            }
+
+            prev_changed_interval = changed_now;
+            if metrics.iterations >= max_iters {
+                break;
+            }
+            if !any {
+                break;
+            }
+        }
+
+        let dram = mem.stats();
+        SimReport {
+            accelerator: "ForeGraph",
+            problem: p.kind.name(),
+            graph_edges: self.m as u64,
+            cycles: cursor,
+            seconds: cursor as f64 * mem.spec().seconds_per_cycle(),
+            bytes_total: dram.requests() * CACHE_LINE,
+            bus_utilization: mem.utilization(),
+            channels: mem.num_channels(),
+            metrics,
+            dram,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::problem::ProblemKind;
+    use crate::dram::DramSpec;
+    use crate::graph::synthetic::{erdos_renyi, preferential_attachment};
+
+    fn run(g: &EdgeList, kind: ProblemKind, cfg: &AcceleratorConfig) -> SimReport {
+        let p = GraphProblem::new(kind, g);
+        let mut acc = ForeGraph::new(g, cfg);
+        let mut mem = MemorySystem::new(DramSpec::ddr4_2400(1));
+        acc.run(&p, &mut mem)
+    }
+
+    #[test]
+    fn bfs_completes_and_reads_compressed_edges() {
+        let g = erdos_renyi(4000, 24000, 1);
+        let r = run(&g, ProblemKind::Bfs, &AcceleratorConfig::default());
+        assert!(r.metrics.iterations >= 2);
+        assert!(r.metrics.edges_read >= 24000);
+        assert!(r.seconds > 0.0);
+    }
+
+    #[test]
+    fn pr_single_iteration_4_bytes_per_edge_plus_intervals() {
+        let g = erdos_renyi(2000, 40000, 2); // dense: interval overhead amortizes
+        let r = run(&g, ProblemKind::PageRank, &AcceleratorConfig::default());
+        assert_eq!(r.metrics.iterations, 1);
+        assert_eq!(r.metrics.edges_read, 40000);
+        // compressed edges: edge bytes alone are 4/edge; with interval
+        // prefetch/writeback the total stays well under the 8 B/edge of
+        // an uncompressed edge list on dense graphs... but above 4.
+        assert!(r.bytes_per_edge() > 4.0);
+    }
+
+    #[test]
+    fn shard_skipping_reduces_work() {
+        let g = crate::graph::synthetic::grid_2d(70, 70); // n=4900, several intervals
+        let cfg = AcceleratorConfig::default();
+        let base = run(&g, ProblemKind::Bfs, &cfg);
+        let skip = run(
+            &g,
+            ProblemKind::Bfs,
+            &cfg.clone().with(Optimization::ShardSkipping),
+        );
+        assert!(
+            skip.metrics.edges_read < base.metrics.edges_read,
+            "{} !< {}",
+            skip.metrics.edges_read,
+            base.metrics.edges_read
+        );
+        assert!(skip.seconds < base.seconds);
+    }
+
+    #[test]
+    fn edge_shuffling_alone_increases_edges_read() {
+        let g = preferential_attachment(4000, 6, 3); // skewed shards
+        let base = run(&g, ProblemKind::PageRank, &AcceleratorConfig::default());
+        let shuf = run(
+            &g,
+            ProblemKind::PageRank,
+            &AcceleratorConfig::default().with(Optimization::EdgeShuffling),
+        );
+        // Paper: shuffling alone aggravates load imbalance via padding.
+        assert!(
+            shuf.metrics.edges_read > base.metrics.edges_read,
+            "{} !> {}",
+            shuf.metrics.edges_read,
+            base.metrics.edges_read
+        );
+    }
+
+    #[test]
+    fn stride_mapping_tames_shuffling_padding() {
+        let g = preferential_attachment(4000, 6, 4);
+        let shuf = run(
+            &g,
+            ProblemKind::PageRank,
+            &AcceleratorConfig::default().with(Optimization::EdgeShuffling),
+        );
+        let both = run(
+            &g,
+            ProblemKind::PageRank,
+            &AcceleratorConfig::default()
+                .with(Optimization::EdgeShuffling)
+                .with(Optimization::StrideMapping),
+        );
+        assert!(
+            both.metrics.edges_read < shuf.metrics.edges_read,
+            "{} !< {}",
+            both.metrics.edges_read,
+            shuf.metrics.edges_read
+        );
+    }
+
+    #[test]
+    fn unpermute_restores_original_order() {
+        let g = preferential_attachment(1000, 4, 5);
+        let cfg = AcceleratorConfig::default().with(Optimization::StrideMapping);
+        let fg = ForeGraph::new(&g, &cfg);
+        let perm = fg.perm.clone().unwrap();
+        let renamed_vals: Vec<f32> = {
+            // value[renamed] = original index as f32
+            let mut v = vec![0f32; 1000];
+            for (orig, &ren) in perm.iter().enumerate() {
+                v[ren as usize] = orig as f32;
+            }
+            v
+        };
+        let restored = fg.unpermute(&renamed_vals);
+        for (i, &x) in restored.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+    }
+}

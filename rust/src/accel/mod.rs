@@ -1,0 +1,54 @@
+//! Memory-access-pattern models of the four graph processing
+//! accelerators the paper studies (§3.2):
+//!
+//! | Model | Iteration | Partitioning | Binary rep. | Update prop. |
+//! |-------|-----------|--------------|-------------|--------------|
+//! | [`accugraph`] | vertex-centric pull | horizontal | in-CSR | immediate |
+//! | [`foregraph`] | edge-centric | interval-shard | compressed edge list | immediate |
+//! | [`hitgraph`]  | edge-centric | horizontal | sorted edge list | 2-phase |
+//! | [`thundergp`] | edge-centric | vertical | sorted edge list | 2-phase |
+//!
+//! Each model executes the real algorithm semantics (so iteration
+//! counts, convergence, and the skip/filter optimizations are
+//! data-faithful) while emitting the off-chip request streams of
+//! Figs. 4–7 through the [`stream`] vocabulary, co-simulated against
+//! the DRAM model by [`crate::sim::driver`].
+
+pub mod accugraph;
+pub mod config;
+pub mod foregraph;
+pub mod hitgraph;
+pub mod stream;
+pub mod thundergp;
+
+pub use accugraph::AccuGraph;
+pub use config::{AcceleratorConfig, AcceleratorKind, Optimization};
+pub use foregraph::ForeGraph;
+pub use hitgraph::HitGraph;
+pub use thundergp::ThunderGp;
+
+use crate::algo::problem::GraphProblem;
+use crate::dram::MemorySystem;
+use crate::sim::metrics::SimReport;
+
+/// Common interface: run a bound problem against a memory system,
+/// producing the paper's metric set.
+pub trait Accelerator {
+    fn name(&self) -> &'static str;
+    /// Run to convergence (or the problem's fixed iteration count).
+    fn run(&mut self, problem: &GraphProblem, mem: &mut MemorySystem) -> SimReport;
+}
+
+/// Construct any accelerator by kind.
+pub fn build(
+    kind: AcceleratorKind,
+    g: &crate::graph::EdgeList,
+    cfg: &AcceleratorConfig,
+) -> Box<dyn Accelerator> {
+    match kind {
+        AcceleratorKind::AccuGraph => Box::new(AccuGraph::new(g, cfg)),
+        AcceleratorKind::ForeGraph => Box::new(ForeGraph::new(g, cfg)),
+        AcceleratorKind::HitGraph => Box::new(HitGraph::new(g, cfg)),
+        AcceleratorKind::ThunderGp => Box::new(ThunderGp::new(g, cfg)),
+    }
+}

@@ -1,0 +1,226 @@
+//! The simulation vocabulary of the paper's environment (§2.2, §3.2):
+//! request streams with callbacks, round-robin and priority mergers,
+//! and the *cache line* and *filter* memory access abstractions.
+//!
+//! An accelerator phase is a set of [`LineStream`]s — precomputed
+//! cache-line request sequences — wired together by chaining
+//! (stream B's requests are released by completions of stream A:
+//! the paper's "callbacks") and drained through a merge tree that
+//! mirrors the accelerator's on-chip arbiters.
+
+use crate::dram::{MemKind, CACHE_LINE};
+
+/// Identifies what a stream models (used for metric attribution and
+/// debugging; not consumed by the driver).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamClass {
+    /// Vertex value prefetch.
+    Prefetch,
+    /// Vertex value reads.
+    Values,
+    /// CSR pointer reads.
+    Pointers,
+    /// Edge / neighbor reads.
+    Edges,
+    /// Update queue reads or writes.
+    Updates,
+    /// Vertex value write-backs.
+    Writes,
+}
+
+/// A precomputed sequence of cache-line requests.
+#[derive(Clone, Debug)]
+pub struct LineStream {
+    /// 64 B-aligned line addresses, in program order.
+    pub lines: Vec<u64>,
+    pub kind: MemKind,
+    pub class: StreamClass,
+    /// `Some(parent)`: requests are released by the parent stream's
+    /// completions — `fanout[i]` requests become available when the
+    /// parent's `i`-th request completes (the callback mechanism).
+    /// `None`: all requests available at phase start.
+    pub chained_to: Option<usize>,
+    /// Only for chained streams; `fanout.len()` must equal the parent
+    /// stream's `lines.len()` and `sum(fanout) == lines.len()`.
+    pub fanout: Vec<u32>,
+}
+
+impl LineStream {
+    /// Independent (unchained) stream.
+    pub fn independent(class: StreamClass, kind: MemKind, lines: Vec<u64>) -> Self {
+        LineStream {
+            lines,
+            kind,
+            class,
+            chained_to: None,
+            fanout: Vec::new(),
+        }
+    }
+
+    /// Stream whose requests are released by `parent`'s completions.
+    pub fn chained(
+        class: StreamClass,
+        kind: MemKind,
+        lines: Vec<u64>,
+        parent: usize,
+        fanout: Vec<u32>,
+    ) -> Self {
+        debug_assert_eq!(fanout.iter().map(|&f| f as usize).sum::<usize>(), lines.len());
+        LineStream {
+            lines,
+            kind,
+            class,
+            chained_to: Some(parent),
+            fanout,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+}
+
+/// Merge tree: which stream may issue next. Mirrors the accelerators'
+/// arbiters (AccuGraph: values/pointers round-robin under a priority
+/// mux with writes highest; ForeGraph: PEs round-robin; …).
+#[derive(Clone, Debug)]
+pub enum Merge {
+    Leaf(usize),
+    /// Fair rotation among children that have an available request.
+    RoundRobin(Vec<Merge>),
+    /// First child (highest priority) with an available request wins.
+    Priority(Vec<Merge>),
+}
+
+impl Merge {
+    /// Round-robin over plain stream indices.
+    pub fn rr(streams: impl IntoIterator<Item = usize>) -> Merge {
+        Merge::RoundRobin(streams.into_iter().map(Merge::Leaf).collect())
+    }
+
+    /// Priority over plain stream indices (first = highest).
+    pub fn prio(streams: impl IntoIterator<Item = usize>) -> Merge {
+        Merge::Priority(streams.into_iter().map(Merge::Leaf).collect())
+    }
+}
+
+/// One phase of accelerator execution: streams + merge tree + the
+/// outstanding-request window of the PE's memory port.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub streams: Vec<LineStream>,
+    pub merge: Merge,
+    /// Maximum requests in flight.
+    pub window: usize,
+}
+
+impl Phase {
+    /// Single independent sequential stream — the most common phase
+    /// shape (prefetches, write-backs).
+    pub fn single(class: StreamClass, kind: MemKind, lines: Vec<u64>, window: usize) -> Phase {
+        Phase {
+            streams: vec![LineStream::independent(class, kind, lines)],
+            merge: Merge::Leaf(0),
+            window,
+        }
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.streams.iter().map(|s| s.lines.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.streams.iter().all(|s| s.is_empty())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache-line access abstraction (§3.2.1): merge adjacent requests to
+// the same cache line into one.
+// ---------------------------------------------------------------------------
+
+/// Lines covering the byte range `[base, base + bytes)` — a sequential
+/// array scan through the cache-line abstraction.
+pub fn seq_lines(base: u64, bytes: u64) -> Vec<u64> {
+    if bytes == 0 {
+        return Vec::new();
+    }
+    let first = base / CACHE_LINE;
+    let last = (base + bytes - 1) / CACHE_LINE;
+    (first..=last).map(|l| l * CACHE_LINE).collect()
+}
+
+/// Lines for element-indexed accesses `base + idx * elem_bytes`,
+/// merging *adjacent* requests to the same line (the abstraction
+/// merges consecutive duplicates only — a repeated line after other
+/// traffic is requested again).
+pub fn element_lines(base: u64, elem_bytes: u64, indices: impl IntoIterator<Item = u64>) -> Vec<u64> {
+    let mut out: Vec<u64> = Vec::new();
+    for idx in indices {
+        let line = (base + idx * elem_bytes) / CACHE_LINE * CACHE_LINE;
+        if out.last() != Some(&line) {
+            out.push(line);
+        }
+    }
+    out
+}
+
+/// Number of lines a sequential scan of `bytes` bytes touches.
+pub fn lines_for(bytes: u64) -> u64 {
+    crate::util::ceil_div(bytes, CACHE_LINE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_lines_cover_range() {
+        assert_eq!(seq_lines(0, 64), vec![0]);
+        assert_eq!(seq_lines(0, 65), vec![0, 64]);
+        assert_eq!(seq_lines(60, 8), vec![0, 64]); // straddles boundary
+        assert_eq!(seq_lines(128, 0), Vec::<u64>::new());
+        assert_eq!(seq_lines(100, 1), vec![64]);
+    }
+
+    #[test]
+    fn element_lines_merge_adjacent_only() {
+        // 4-byte elements, indices 0,1,2 -> same line merged
+        assert_eq!(element_lines(0, 4, [0, 1, 2]), vec![0]);
+        // revisiting a line after other traffic re-requests it
+        assert_eq!(element_lines(0, 4, [0, 16, 0]), vec![0, 64, 0]);
+        // empty
+        assert_eq!(element_lines(0, 4, []), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn chained_stream_fanout_invariant() {
+        let parent_completions = 3;
+        let s = LineStream::chained(
+            StreamClass::Writes,
+            MemKind::Write,
+            vec![0, 64, 128, 192],
+            0,
+            vec![2, 0, 2],
+        );
+        assert_eq!(s.fanout.len(), parent_completions);
+        assert_eq!(s.fanout.iter().sum::<u32>(), 4);
+    }
+
+    #[test]
+    fn phase_helpers() {
+        let p = Phase::single(StreamClass::Prefetch, MemKind::Read, seq_lines(0, 4096), 16);
+        assert_eq!(p.total_requests(), 64);
+        assert!(!p.is_empty());
+        let empty = Phase::single(StreamClass::Prefetch, MemKind::Read, vec![], 16);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn lines_for_rounding() {
+        assert_eq!(lines_for(0), 0);
+        assert_eq!(lines_for(1), 1);
+        assert_eq!(lines_for(64), 1);
+        assert_eq!(lines_for(65), 2);
+    }
+}

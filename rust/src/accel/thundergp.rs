@@ -1,0 +1,432 @@
+//! ThunderGP model (§3.2.4, Fig. 7): edge-centric over **vertical**
+//! partitioning with a source-**sorted edge list**, **2-phase** update
+//! propagation; `p` memory channels, each holding the *whole* vertex
+//! value set, its chunk of every partition, and an update set
+//! (insights 8 and 9: `n*c + m + n*c` footprint).
+//!
+//! Per iteration, a **scatter-gather** phase runs for each partition
+//! (prefetch the partition's destination values, read the chunk's
+//! edges, load source values semi-sequentially through the duplicate-
+//! filtering vertex value buffer, write the updated values back),
+//! followed by an **apply** phase per partition (read all channels'
+//! updates, combine, write the result to *all* channels).
+//!
+//! Optimization (§4.5): `Schd.` — greedy offline chunk-to-channel
+//! scheduling by predicted execution time.
+
+use super::config::{AcceleratorConfig, Optimization};
+use super::stream::{element_lines, seq_lines, LineStream, Merge, Phase, StreamClass};
+use super::Accelerator;
+use crate::algo::problem::GraphProblem;
+use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
+use crate::graph::edgelist::Edge;
+use crate::graph::EdgeList;
+use crate::partition::vertical::VerticalPartitioning;
+use crate::sim::driver::run_phase;
+use crate::sim::metrics::{RunMetrics, SimReport};
+
+/// ThunderGP simulator instance.
+pub struct ThunderGp {
+    part: VerticalPartitioning,
+    /// chunk -> channel assignment per partition (`Schd.` reorders it).
+    chunk_channel: Vec<Vec<usize>>,
+    n: usize,
+    m: usize,
+    cfg: AcceleratorConfig,
+    /// Channel-local bases: full value copy, per-partition chunk edges,
+    /// per-partition update sets.
+    val_base: u64,
+    edge_base: Vec<Vec<u64>>, // [q][chunk]
+    upd_base: Vec<u64>,       // [q]
+    edge_bytes: u64,
+}
+
+impl ThunderGp {
+    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+        let channels = cfg.channels.max(1);
+        let part = VerticalPartitioning::new(g, cfg.bram_values, channels);
+        let chunk_channel = if cfg.has(Optimization::ChunkScheduling) {
+            part.schedule_chunks()
+        } else {
+            part.chunks
+                .iter()
+                .map(|cs| (0..cs.len()).collect())
+                .collect()
+        };
+        let n = g.num_vertices;
+        let edge_bytes = g.edge_bytes();
+        // Channel-local layout (identical on every channel): value copy,
+        // then chunk edge arrays, then update sets.
+        let val_base = 0u64;
+        let mut cursor = (n as u64 * 4 + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
+        let mut edge_base = Vec::with_capacity(part.num_partitions());
+        for q in 0..part.num_partitions() {
+            let mut per_chunk = Vec::new();
+            for c in 0..part.chunks[q].len() {
+                per_chunk.push(cursor);
+                let bytes = part.chunks[q][c].len() as u64 * edge_bytes;
+                cursor += (bytes + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
+            }
+            edge_base.push(per_chunk);
+        }
+        let mut upd_base = Vec::with_capacity(part.num_partitions());
+        for q in 0..part.num_partitions() {
+            upd_base.push(cursor);
+            let bytes = part.intervals[q].len() as u64 * 4;
+            cursor += (bytes + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
+        }
+        ThunderGp {
+            part,
+            chunk_channel,
+            n,
+            m: g.num_edges(),
+            cfg: cfg.clone(),
+            val_base,
+            edge_base,
+            upd_base,
+            edge_bytes,
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.part.num_partitions()
+    }
+}
+
+impl Accelerator for ThunderGp {
+    fn name(&self) -> &'static str {
+        "ThunderGP"
+    }
+
+    fn run(&mut self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        let _n = self.n;
+        let k = self.part.num_partitions();
+        let channels = self.cfg.channels.max(1).min(mem.num_channels());
+        let window = self.cfg.window;
+
+        let mut values = p.init_values();
+        let mut metrics = RunMetrics::default();
+        let mut cursor = 0u64;
+        let max_iters = p.kind.fixed_iterations().unwrap_or(u32::MAX);
+
+        loop {
+            metrics.iterations += 1;
+            // Per-partition, per-channel partial accumulators (2-phase).
+            // acc[q][c][local_dst]
+            let mut acc: Vec<Vec<Vec<f32>>> = (0..k)
+                .map(|q| {
+                    vec![
+                        vec![p.reduce_identity(); self.part.intervals[q].len()];
+                        channels
+                    ]
+                })
+                .collect();
+
+            // -------- Scatter-gather, one phase per partition ---------
+            for q in 0..k {
+                metrics.processed += 1;
+                let iv = self.part.intervals[q];
+                let mut streams: Vec<LineStream> = Vec::new();
+                let mut pe_trees: Vec<Merge> = Vec::new();
+                for pe in 0..channels.min(self.part.chunks[q].len()) {
+                    // chunk handled by channel `pe` under the schedule
+                    let chunk_idx = self
+                        .chunk_channel[q]
+                        .iter()
+                        .position(|&ch| ch == pe)
+                        .unwrap_or(pe.min(self.part.chunks[q].len() - 1));
+                    let chunk: &[Edge] = &self.part.chunks[q][chunk_idx];
+                    let region = mem.region_base(pe);
+
+                    // Algorithm: accumulate into this channel's partial.
+                    for e in chunk {
+                        let u = p.combine(e.src, values[e.src as usize], e.weight);
+                        let loc = (e.dst - iv.start) as usize;
+                        let a = &mut acc[q][pe][loc];
+                        *a = p.reduce(*a, u);
+                    }
+                    metrics.edges_read += chunk.len() as u64;
+                    metrics.values_read += iv.len() as u64; // dst prefetch
+
+                    let base = streams.len();
+                    // 1) prefetch destination interval values
+                    let pre_lines = seq_lines(
+                        region + self.val_base + iv.start as u64 * 4,
+                        iv.len() as u64 * 4,
+                    );
+                    let npre = pre_lines.len();
+                    streams.push(LineStream::independent(
+                        StreamClass::Prefetch,
+                        MemKind::Read,
+                        pre_lines,
+                    ));
+                    // 2) chunk edges, chained to the prefetch end
+                    let edge_lines = seq_lines(
+                        region + self.edge_base[q][chunk_idx],
+                        chunk.len() as u64 * self.edge_bytes,
+                    );
+                    let nedge = edge_lines.len();
+                    let mut pre_fan = vec![0u32; npre];
+                    if npre > 0 {
+                        *pre_fan.last_mut().unwrap() = nedge as u32;
+                    }
+                    streams.push(if npre == 0 {
+                        LineStream::independent(StreamClass::Edges, MemKind::Read, edge_lines)
+                    } else {
+                        LineStream::chained(StreamClass::Edges, MemKind::Read, edge_lines, base, pre_fan)
+                    });
+                    // 3) source value loads: semi-sequential (sorted by
+                    // src); the vertex value buffer filters duplicates.
+                    let src_lines = element_lines(
+                        region + self.val_base,
+                        4,
+                        chunk.iter().map(|e| e.src as u64),
+                    );
+                    metrics.values_read += src_lines.len() as u64 * (CACHE_LINE / 4);
+                    let nsrc = src_lines.len();
+                    // distribute src-line releases over edge lines
+                    let mut efan = vec![0u32; nedge];
+                    if nedge > 0 {
+                        let edges_per_line = (CACHE_LINE / self.edge_bytes).max(1) as usize;
+                        let mut prev = u64::MAX;
+                        let mut li = 0usize;
+                        for (ei, e) in chunk.iter().enumerate() {
+                            let line = (region + self.val_base + e.src as u64 * 4) / CACHE_LINE
+                                * CACHE_LINE;
+                            if line != prev {
+                                prev = line;
+                                let el = ei / edges_per_line;
+                                efan[el.min(nedge - 1)] += 1;
+                                li += 1;
+                            }
+                        }
+                        debug_assert_eq!(li, nsrc);
+                    }
+                    streams.push(if nedge == 0 {
+                        LineStream::independent(StreamClass::Values, MemKind::Read, src_lines)
+                    } else {
+                        LineStream::chained(
+                            StreamClass::Values,
+                            MemKind::Read,
+                            src_lines,
+                            base + 1,
+                            efan,
+                        )
+                    });
+                    // 4) update write-back: n_q values sequential, after
+                    // edge reading finishes — chain to last src load (or
+                    // edge line when no src loads).
+                    let upd_lines =
+                        seq_lines(region + self.upd_base[q], iv.len() as u64 * 4);
+                    metrics.updates_rw += iv.len() as u64;
+                    let (parent, plen) = if nsrc > 0 {
+                        (base + 2, nsrc)
+                    } else {
+                        (base + 1, nedge)
+                    };
+                    if plen > 0 {
+                        let mut fan = vec![0u32; plen];
+                        *fan.last_mut().unwrap() = upd_lines.len() as u32;
+                        streams.push(LineStream::chained(
+                            StreamClass::Updates,
+                            MemKind::Write,
+                            upd_lines,
+                            parent,
+                            fan,
+                        ));
+                        pe_trees.push(Merge::prio([base + 3, base + 2, base + 1, base]));
+                    } else {
+                        streams.push(LineStream::independent(
+                            StreamClass::Updates,
+                            MemKind::Write,
+                            upd_lines,
+                        ));
+                        pe_trees.push(Merge::prio([base + 3, base]));
+                    }
+                }
+                let phase = Phase {
+                    streams,
+                    merge: Merge::RoundRobin(pe_trees),
+                    window,
+                };
+                cursor = run_phase(mem, &phase, cursor).end_cycle;
+            }
+
+            // ----------------- Apply, one phase per partition ----------
+            let mut changed_now = false;
+            for q in 0..k {
+                let iv = self.part.intervals[q];
+                // combine all channels' partials, apply
+                let mut writes = 0u64;
+                for loc in 0..iv.len() {
+                    let mut a = p.reduce_identity();
+                    for pe in 0..channels {
+                        a = p.reduce(a, acc[q][pe][loc]);
+                    }
+                    let v = iv.start as usize + loc;
+                    let new = if p.kind.reduces_with_min() && a >= p.reduce_identity() {
+                        values[v]
+                    } else {
+                        p.apply(values[v], a)
+                    };
+                    if p.changed(values[v], new) {
+                        changed_now = true;
+                        writes += 1;
+                    }
+                    values[v] = new;
+                }
+                metrics.values_written += writes * channels as u64;
+                metrics.updates_rw += iv.len() as u64 * channels as u64;
+                metrics.values_read += iv.len() as u64 * channels as u64;
+
+                // Streams: read update sets from all channels, write the
+                // combined value back to every channel's copy.
+                let mut streams: Vec<LineStream> = Vec::new();
+                let mut reads = Vec::new();
+                for pe in 0..channels {
+                    let region = mem.region_base(pe);
+                    reads.push(streams.len());
+                    streams.push(LineStream::independent(
+                        StreamClass::Updates,
+                        MemKind::Read,
+                        seq_lines(region + self.upd_base[q], iv.len() as u64 * 4),
+                    ));
+                }
+                let nread = seq_lines(self.upd_base[q], iv.len() as u64 * 4).len();
+                let mut trees: Vec<Merge> = reads.iter().map(|&i| Merge::Leaf(i)).collect();
+                for pe in 0..channels {
+                    let region = mem.region_base(pe);
+                    let wlines = seq_lines(
+                        region + self.val_base + iv.start as u64 * 4,
+                        iv.len() as u64 * 4,
+                    );
+                    // barrier: writes released by the end of this
+                    // channel's update read stream
+                    let mut fan = vec![0u32; nread];
+                    if nread > 0 {
+                        *fan.last_mut().unwrap() = wlines.len() as u32;
+                        let idx = streams.len();
+                        streams.push(LineStream::chained(
+                            StreamClass::Writes,
+                            MemKind::Write,
+                            wlines,
+                            reads[pe],
+                            fan,
+                        ));
+                        trees.push(Merge::Leaf(idx));
+                    }
+                }
+                let phase = Phase {
+                    streams,
+                    merge: Merge::RoundRobin(trees),
+                    window,
+                };
+                cursor = run_phase(mem, &phase, cursor).end_cycle;
+            }
+
+            if metrics.iterations >= max_iters {
+                break;
+            }
+            if !changed_now {
+                break;
+            }
+        }
+
+        let dram = mem.stats();
+        SimReport {
+            accelerator: "ThunderGP",
+            problem: p.kind.name(),
+            graph_edges: self.m as u64,
+            cycles: cursor,
+            seconds: cursor as f64 * mem.spec().seconds_per_cycle(),
+            bytes_total: dram.requests() * CACHE_LINE,
+            bus_utilization: mem.utilization(),
+            channels: mem.num_channels(),
+            metrics,
+            dram,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::golden::{run_golden, Propagation};
+    use crate::algo::problem::ProblemKind;
+    use crate::dram::{ChannelMode, DramSpec};
+    use crate::graph::synthetic::erdos_renyi;
+
+    fn run_ch(g: &EdgeList, kind: ProblemKind, channels: usize, cfg: &AcceleratorConfig) -> SimReport {
+        let p = GraphProblem::new(kind, g);
+        let mut acc = ThunderGp::new(g, &cfg.clone().with_channels(channels));
+        let mut mem =
+            MemorySystem::with_mode(DramSpec::ddr4_2400(channels), ChannelMode::Region);
+        acc.run(&p, &mut mem)
+    }
+
+    #[test]
+    fn bfs_iterations_match_two_phase_golden() {
+        let g = erdos_renyi(3000, 18000, 1);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let golden = run_golden(&p, &g, Propagation::TwoPhase);
+        let r = run_ch(&g, ProblemKind::Bfs, 1, &AcceleratorConfig::default());
+        assert_eq!(r.metrics.iterations, golden.iterations);
+    }
+
+    #[test]
+    fn pr_single_iteration() {
+        let g = erdos_renyi(2000, 16000, 2);
+        let r = run_ch(&g, ProblemKind::PageRank, 1, &AcceleratorConfig::default());
+        assert_eq!(r.metrics.iterations, 1);
+        assert_eq!(r.metrics.edges_read, 16000);
+    }
+
+    #[test]
+    fn multichannel_duplicates_value_traffic() {
+        // insight 8/9: apply reads+writes scale with channel count
+        let g = erdos_renyi(4000, 30000, 3);
+        let r1 = run_ch(&g, ProblemKind::PageRank, 1, &AcceleratorConfig::default());
+        let r4 = run_ch(&g, ProblemKind::PageRank, 4, &AcceleratorConfig::default());
+        assert!(
+            r4.metrics.updates_rw > 2 * r1.metrics.updates_rw,
+            "{} !> 2x {}",
+            r4.metrics.updates_rw,
+            r1.metrics.updates_rw
+        );
+    }
+
+    #[test]
+    fn scaling_is_sublinear() {
+        // insight 8: vertical partitioning scales sub-linearly
+        let g = erdos_renyi(6000, 60000, 4);
+        let r1 = run_ch(&g, ProblemKind::Bfs, 1, &AcceleratorConfig::default());
+        let r4 = run_ch(&g, ProblemKind::Bfs, 4, &AcceleratorConfig::default());
+        let speedup = r1.seconds / r4.seconds;
+        assert!(speedup > 1.2, "4ch should help some: {speedup}");
+        assert!(speedup < 4.0, "but sub-linearly: {speedup}");
+    }
+
+    #[test]
+    fn chunk_scheduling_small_effect() {
+        let g = erdos_renyi(4000, 30000, 5);
+        let base = run_ch(&g, ProblemKind::Bfs, 4, &AcceleratorConfig::default());
+        let sched = run_ch(
+            &g,
+            ProblemKind::Bfs,
+            4,
+            &AcceleratorConfig::default().with(Optimization::ChunkScheduling),
+        );
+        // Fig. 13: "does not make a big difference" — within 25%.
+        let ratio = sched.seconds / base.seconds;
+        assert!(ratio > 0.7 && ratio < 1.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn weighted_sssp_runs() {
+        let g = erdos_renyi(1500, 9000, 6).with_random_weights(7, 8.0);
+        let p = GraphProblem::new(ProblemKind::Sssp, &g);
+        let golden = run_golden(&p, &g, Propagation::TwoPhase);
+        let r = run_ch(&g, ProblemKind::Sssp, 1, &AcceleratorConfig::default());
+        assert_eq!(r.metrics.iterations, golden.iterations);
+    }
+}

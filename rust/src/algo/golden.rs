@@ -1,0 +1,292 @@
+//! Golden reference executors for the three update propagation
+//! schemes (§3.1):
+//!
+//! * **2-phase** — all updates are computed from the *previous*
+//!   iteration's values and applied in a separate phase (HitGraph,
+//!   ThunderGP). For BFS this degenerates to level-synchronous.
+//! * **Immediate** — updates are applied to the working value set as
+//!   soon as they are produced, so edges processed later in the same
+//!   iteration observe them (AccuGraph, ForeGraph). Converges in
+//!   fewer iterations (insight 1).
+//!
+//! The executors return both the fixpoint values and per-iteration
+//! activity (which vertices changed), which drives the accelerators'
+//! partition/shard skipping and update filtering.
+
+use super::problem::{GraphProblem, ProblemKind};
+use crate::graph::edgelist::EdgeList;
+
+/// Update propagation scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Propagation {
+    TwoPhase,
+    Immediate,
+}
+
+/// Result of a golden run.
+#[derive(Clone, Debug)]
+pub struct GoldenResult {
+    pub values: Vec<f32>,
+    /// Iterations executed, including the final no-change detection
+    /// pass (the controllers iterate "until there are no more changes
+    /// in the previous iteration").
+    pub iterations: u32,
+    /// `changed[it][v]`: did `v`'s value change during iteration `it`?
+    /// (No entry for the final no-change pass.)
+    pub changed_per_iter: Vec<Vec<bool>>,
+}
+
+/// Run a problem to fixpoint (or its fixed iteration count) under a
+/// propagation scheme. For `Immediate`, edges are processed in the
+/// order given by `g.edges` — callers that model a specific
+/// accelerator order edges the way that accelerator does.
+pub fn run_golden(p: &GraphProblem, g: &EdgeList, prop: Propagation) -> GoldenResult {
+    match prop {
+        Propagation::TwoPhase => run_two_phase(p, g),
+        Propagation::Immediate => run_immediate(p, g),
+    }
+}
+
+fn run_two_phase(p: &GraphProblem, g: &EdgeList) -> GoldenResult {
+    let n = g.num_vertices;
+    let mut values = p.init_values();
+    let mut iterations = 0u32;
+    let mut changed_per_iter = Vec::new();
+    let max_iters = p.kind.fixed_iterations().unwrap_or(u32::MAX);
+
+    loop {
+        iterations += 1;
+        // Phase 1: produce updates against the frozen value set.
+        let mut acc = vec![p.reduce_identity(); n];
+        for e in &g.edges {
+            let u = p.combine(e.src, values[e.src as usize], e.weight);
+            let a = &mut acc[e.dst as usize];
+            *a = p.reduce(*a, u);
+        }
+        // Phase 2: apply.
+        let mut changed = vec![false; n];
+        let mut any = false;
+        for v in 0..n {
+            // Vertices with no incoming update keep their value for
+            // min-problems; add-problems apply the (zero) accumulator.
+            let new = if p.kind.reduces_with_min() && acc[v] >= p.reduce_identity() {
+                values[v]
+            } else {
+                p.apply(values[v], acc[v])
+            };
+            if p.changed(values[v], new) {
+                changed[v] = true;
+                any = true;
+            }
+            values[v] = new;
+        }
+        if any {
+            changed_per_iter.push(changed);
+        }
+        if iterations >= max_iters {
+            break;
+        }
+        if !any {
+            break; // this was the detection pass
+        }
+    }
+    GoldenResult {
+        values,
+        iterations,
+        changed_per_iter,
+    }
+}
+
+fn run_immediate(p: &GraphProblem, g: &EdgeList) -> GoldenResult {
+    // Immediate propagation only differs from 2-phase for monotone
+    // min-problems; PR/SpMV read a frozen source snapshot by
+    // construction (one iteration).
+    if !p.kind.reduces_with_min() {
+        return run_two_phase(p, g);
+    }
+    let n = g.num_vertices;
+    let mut values = p.init_values();
+    let mut iterations = 0u32;
+    let mut changed_per_iter = Vec::new();
+
+    loop {
+        iterations += 1;
+        let mut changed = vec![false; n];
+        let mut any = false;
+        for e in &g.edges {
+            let u = p.combine(e.src, values[e.src as usize], e.weight);
+            let old = values[e.dst as usize];
+            let new = p.apply(old, u);
+            if p.changed(old, new) {
+                values[e.dst as usize] = new;
+                changed[e.dst as usize] = true;
+                any = true;
+            }
+        }
+        if any {
+            changed_per_iter.push(changed);
+        } else {
+            break;
+        }
+    }
+    GoldenResult {
+        values,
+        iterations,
+        changed_per_iter,
+    }
+}
+
+/// Verify two value vectors agree (exactly for min-problems whose
+/// values are small integers; within tolerance for PR/SpMV).
+pub fn values_agree(kind: ProblemKind, a: &[f32], b: &[f32]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    match kind {
+        ProblemKind::Bfs | ProblemKind::Wcc => a.iter().zip(b).all(|(x, y)| x == y),
+        _ => a
+            .iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= 1e-4 * (1.0 + x.abs().max(y.abs()))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::problem::INF;
+    use crate::graph::properties::{bfs_levels, max_out_degree_vertex};
+    use crate::graph::synthetic::{erdos_renyi, grid_2d};
+    use crate::graph::Csr;
+
+    #[test]
+    fn bfs_two_phase_matches_level_order() {
+        let g = erdos_renyi(300, 2000, 1);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let res = run_golden(&p, &g, Propagation::TwoPhase);
+        let levels = bfs_levels(&Csr::from_edges(&g), p.root);
+        for v in 0..g.num_vertices {
+            let expect = if levels[v] == u32::MAX {
+                INF
+            } else {
+                levels[v] as f32
+            };
+            assert_eq!(res.values[v], expect, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn immediate_converges_to_same_fixpoint_in_fewer_iterations() {
+        // Directed path 0 -> 1 -> ... -> 99 with edges in forward
+        // order: one immediate pass resolves every level (insight 1),
+        // while 2-phase needs one iteration per level.
+        let n = 100;
+        let mut g = EdgeList::new(n, true);
+        for v in 0..n - 1 {
+            g.add(v as u32, v as u32 + 1);
+        }
+        let p = GraphProblem::with_root(ProblemKind::Bfs, &g, 0);
+        let two = run_golden(&p, &g, Propagation::TwoPhase);
+        let imm = run_golden(&p, &g, Propagation::Immediate);
+        assert!(values_agree(ProblemKind::Bfs, &two.values, &imm.values));
+        assert_eq!(imm.iterations, 2); // change pass + detection pass
+        assert_eq!(two.iterations as usize, n);
+        // And on an undirected grid both converge to the same fixpoint
+        // with immediate no slower than 2-phase.
+        let grid = grid_2d(12, 12);
+        let pg = GraphProblem::new(ProblemKind::Bfs, &grid);
+        let gt = run_golden(&pg, &grid, Propagation::TwoPhase);
+        let gi = run_golden(&pg, &grid, Propagation::Immediate);
+        assert!(values_agree(ProblemKind::Bfs, &gt.values, &gi.values));
+        assert!(gi.iterations <= gt.iterations);
+    }
+
+    #[test]
+    fn wcc_labels_connected_components() {
+        // two components: {0,1,2} cycle and {3,4} pair
+        let mut g = EdgeList::new(5, false);
+        g.add(0, 1);
+        g.add(1, 0);
+        g.add(1, 2);
+        g.add(2, 1);
+        g.add(3, 4);
+        g.add(4, 3);
+        let p = GraphProblem::new(ProblemKind::Wcc, &g);
+        let res = run_golden(&p, &g, Propagation::TwoPhase);
+        assert_eq!(res.values[0], 0.0);
+        assert_eq!(res.values[1], 0.0);
+        assert_eq!(res.values[2], 0.0);
+        assert_eq!(res.values[3], 3.0);
+        assert_eq!(res.values[4], 3.0);
+    }
+
+    #[test]
+    fn pr_is_single_iteration_and_conserves_shape() {
+        let g = erdos_renyi(100, 800, 2);
+        let p = GraphProblem::new(ProblemKind::PageRank, &g);
+        let res = run_golden(&p, &g, Propagation::TwoPhase);
+        assert_eq!(res.iterations, 1);
+        assert!(res.values.iter().all(|&v| v > 0.0 && v < 1.0));
+    }
+
+    #[test]
+    fn spmv_matches_dense_multiply() {
+        let mut g = EdgeList::new(3, true);
+        g.add(0, 1);
+        g.add(2, 1);
+        g.add(1, 0);
+        let g = g.with_random_weights(5, 4.0);
+        let p = GraphProblem::new(ProblemKind::SpMV, &g);
+        let x = p.init_values();
+        let res = run_golden(&p, &g, Propagation::TwoPhase);
+        // y[1] = w(0->1)*x[0] + w(2->1)*x[2]
+        let w01 = g.edges[0].weight;
+        let w21 = g.edges[1].weight;
+        let expect = w01 * x[0] + w21 * x[2];
+        assert!((res.values[1] - expect).abs() < 1e-5);
+        // y[2] has no in-edges -> 0
+        assert_eq!(res.values[2], 0.0);
+    }
+
+    #[test]
+    fn sssp_respects_weights() {
+        // 0 -2-> 1 -2-> 2 and 0 -5-> 2: shortest 0->2 is 4
+        let mut g = EdgeList::new(3, true);
+        g.add(0, 1);
+        g.add(1, 2);
+        g.add(0, 2);
+        g.edges[0].weight = 2.0;
+        g.edges[1].weight = 2.0;
+        g.edges[2].weight = 5.0;
+        g.weighted = true;
+        let p = GraphProblem::with_root(ProblemKind::Sssp, &g, 0);
+        let res = run_golden(&p, &g, Propagation::TwoPhase);
+        assert_eq!(res.values[2], 4.0);
+    }
+
+    #[test]
+    fn changed_sets_shrink_to_empty() {
+        let g = erdos_renyi(200, 1500, 3);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let res = run_golden(&p, &g, Propagation::TwoPhase);
+        // iterations = change passes + 1 detection pass
+        assert_eq!(res.iterations as usize, res.changed_per_iter.len() + 1);
+        assert!(res.changed_per_iter[0][p.root as usize] == false || true);
+        // first iteration changes the root's neighbors
+        assert!(res.changed_per_iter[0].iter().any(|&c| c));
+    }
+
+    #[test]
+    fn unreachable_vertices_stay_inf() {
+        let mut g = EdgeList::new(4, true);
+        g.add(0, 1); // 2, 3 unreachable; root will be 0 (max out-degree)
+        let p = GraphProblem::with_root(ProblemKind::Bfs, &g, 0);
+        for prop in [Propagation::TwoPhase, Propagation::Immediate] {
+            let res = run_golden(&p, &g, prop);
+            assert_eq!(res.values[2], INF);
+            assert_eq!(res.values[3], INF);
+        }
+    }
+
+    use crate::graph::edgelist::EdgeList;
+}

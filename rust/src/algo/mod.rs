@@ -1,0 +1,9 @@
+//! The five graph problems of the paper (§4.1) expressed as value
+//! semantics, plus golden reference executors for the three update
+//! propagation schemes (§3.1).
+
+pub mod golden;
+pub mod problem;
+
+pub use golden::{run_golden, GoldenResult, Propagation};
+pub use problem::{GraphProblem, ProblemKind};

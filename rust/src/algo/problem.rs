@@ -1,0 +1,254 @@
+//! Graph problem semantics. Every problem is expressed in
+//! gather-apply form over `f32` values:
+//!
+//! `acc(v)   = reduce_{(u,v,w) in E} combine(value(u), w, out_deg(u))`
+//! `value'(v) = apply(value(v), acc(v))`
+//!
+//! which is exactly the shape the accelerators (and the L1 Pallas
+//! kernel) compute. BFS/WCC/SSSP reduce with `min`; PR/SpMV with `+`.
+
+use crate::graph::edgelist::EdgeList;
+use crate::graph::properties::max_out_degree_vertex;
+use crate::graph::VertexId;
+
+/// "Infinity" for min-problems; finite so it survives f32 artifacts.
+pub const INF: f32 = 1e30;
+
+/// PageRank damping factor.
+pub const PR_DAMPING: f32 = 0.85;
+
+/// Which problem is being solved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ProblemKind {
+    Bfs,
+    PageRank,
+    Wcc,
+    Sssp,
+    SpMV,
+}
+
+impl ProblemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProblemKind::Bfs => "BFS",
+            ProblemKind::PageRank => "PR",
+            ProblemKind::Wcc => "WCC",
+            ProblemKind::Sssp => "SSSP",
+            ProblemKind::SpMV => "SpMV",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "bfs" => Some(ProblemKind::Bfs),
+            "pr" | "pagerank" => Some(ProblemKind::PageRank),
+            "wcc" => Some(ProblemKind::Wcc),
+            "sssp" => Some(ProblemKind::Sssp),
+            "spmv" => Some(ProblemKind::SpMV),
+            _ => None,
+        }
+    }
+
+    /// Whether edge weights are consumed (§4.1: SSSP and SpMV).
+    pub fn weighted(self) -> bool {
+        matches!(self, ProblemKind::Sssp | ProblemKind::SpMV)
+    }
+
+    /// Reduction: `true` = min, `false` = add.
+    pub fn reduces_with_min(self) -> bool {
+        matches!(self, ProblemKind::Bfs | ProblemKind::Wcc | ProblemKind::Sssp)
+    }
+
+    /// Fixed iteration count, if the problem is not run to convergence
+    /// (the paper runs PR for one iteration; SpMV is one pass).
+    pub fn fixed_iterations(self) -> Option<u32> {
+        match self {
+            ProblemKind::PageRank | ProblemKind::SpMV => Some(1),
+            _ => None,
+        }
+    }
+}
+
+/// A problem instance bound to a graph: initial values plus the
+/// combine/apply functions.
+#[derive(Clone, Debug)]
+pub struct GraphProblem {
+    pub kind: ProblemKind,
+    pub root: VertexId,
+    /// `1 / out_degree(u)` per vertex (PR normalization); empty for
+    /// other problems.
+    pub inv_out_deg: Vec<f32>,
+    pub num_vertices: usize,
+}
+
+impl GraphProblem {
+    /// Bind a problem to a graph. The BFS/SSSP root is the max-out-
+    /// degree vertex (deterministic; inside the giant component).
+    pub fn new(kind: ProblemKind, g: &EdgeList) -> Self {
+        let root = max_out_degree_vertex(g);
+        Self::with_root(kind, g, root)
+    }
+
+    pub fn with_root(kind: ProblemKind, g: &EdgeList, root: VertexId) -> Self {
+        let inv_out_deg = if kind == ProblemKind::PageRank {
+            g.out_degrees()
+                .iter()
+                .map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        GraphProblem {
+            kind,
+            root,
+            inv_out_deg,
+            num_vertices: g.num_vertices,
+        }
+    }
+
+    /// Initial vertex values.
+    pub fn init_values(&self) -> Vec<f32> {
+        let n = self.num_vertices;
+        match self.kind {
+            ProblemKind::Bfs | ProblemKind::Sssp => {
+                let mut v = vec![INF; n];
+                if n > 0 {
+                    v[self.root as usize] = 0.0;
+                }
+                v
+            }
+            ProblemKind::Wcc => (0..n).map(|i| i as f32).collect(),
+            ProblemKind::PageRank => vec![1.0 / n.max(1) as f32; n],
+            ProblemKind::SpMV => {
+                // x vector: deterministic pseudo-values in [0,1).
+                (0..n).map(|i| ((i * 2654435761) % 1000) as f32 / 1000.0).collect()
+            }
+        }
+    }
+
+    /// Identity of the reduction.
+    pub fn reduce_identity(&self) -> f32 {
+        if self.kind.reduces_with_min() {
+            INF
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-edge combine: what flows from source `u` (with value
+    /// `val_u`, weight `w`) toward its destination.
+    #[inline]
+    pub fn combine(&self, u: VertexId, val_u: f32, w: f32) -> f32 {
+        match self.kind {
+            ProblemKind::Bfs => val_u + 1.0,
+            ProblemKind::Sssp => val_u + w,
+            ProblemKind::Wcc => val_u,
+            ProblemKind::PageRank => val_u * self.inv_out_deg[u as usize],
+            ProblemKind::SpMV => val_u * w,
+        }
+    }
+
+    /// Reduce two accumulator values.
+    #[inline]
+    pub fn reduce(&self, a: f32, b: f32) -> f32 {
+        if self.kind.reduces_with_min() {
+            a.min(b)
+        } else {
+            a + b
+        }
+    }
+
+    /// Apply: fold the accumulated value into the vertex value.
+    /// Returns the new value.
+    #[inline]
+    pub fn apply(&self, old: f32, acc: f32) -> f32 {
+        match self.kind {
+            ProblemKind::Bfs | ProblemKind::Sssp | ProblemKind::Wcc => old.min(acc),
+            ProblemKind::PageRank => {
+                (1.0 - PR_DAMPING) / self.num_vertices.max(1) as f32 + PR_DAMPING * acc
+            }
+            ProblemKind::SpMV => acc,
+        }
+    }
+
+    /// Do `old -> new` transitions count as a change (activity)?
+    #[inline]
+    pub fn changed(&self, old: f32, new: f32) -> bool {
+        match self.kind {
+            // Monotone min problems: any decrease is a change.
+            ProblemKind::Bfs | ProblemKind::Sssp | ProblemKind::Wcc => new < old,
+            // Single-pass problems always "change" in their one iteration.
+            ProblemKind::PageRank | ProblemKind::SpMV => (new - old).abs() > 1e-12,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic::erdos_renyi;
+
+    fn tiny() -> EdgeList {
+        let mut g = EdgeList::new(3, true);
+        g.add(0, 1);
+        g.add(0, 2);
+        g.add(1, 2);
+        g
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(ProblemKind::parse("bfs"), Some(ProblemKind::Bfs));
+        assert_eq!(ProblemKind::parse("PR"), Some(ProblemKind::PageRank));
+        assert_eq!(ProblemKind::parse("junk"), None);
+    }
+
+    #[test]
+    fn bfs_init_has_root_zero() {
+        let g = tiny();
+        let p = GraphProblem::with_root(ProblemKind::Bfs, &g, 0);
+        let v = p.init_values();
+        assert_eq!(v[0], 0.0);
+        assert_eq!(v[1], INF);
+    }
+
+    #[test]
+    fn wcc_init_is_identity() {
+        let p = GraphProblem::new(ProblemKind::Wcc, &tiny());
+        assert_eq!(p.init_values(), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn pr_combine_normalizes_by_out_degree() {
+        let g = tiny();
+        let p = GraphProblem::new(ProblemKind::PageRank, &g);
+        // vertex 0 has out-degree 2
+        assert!((p.combine(0, 1.0, 1.0) - 0.5).abs() < 1e-6);
+        assert!((p.combine(1, 1.0, 1.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reduce_semantics() {
+        let g = tiny();
+        let min_p = GraphProblem::new(ProblemKind::Bfs, &g);
+        assert_eq!(min_p.reduce(3.0, 1.0), 1.0);
+        let add_p = GraphProblem::new(ProblemKind::SpMV, &g);
+        assert_eq!(add_p.reduce(3.0, 1.0), 4.0);
+    }
+
+    #[test]
+    fn default_root_is_max_degree() {
+        let g = erdos_renyi(100, 500, 1);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let degs = g.out_degrees();
+        assert_eq!(degs[p.root as usize], *degs.iter().max().unwrap());
+    }
+
+    #[test]
+    fn changed_is_monotone_for_min_problems() {
+        let p = GraphProblem::new(ProblemKind::Bfs, &tiny());
+        assert!(p.changed(5.0, 4.0));
+        assert!(!p.changed(4.0, 4.0));
+        assert!(!p.changed(4.0, 5.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment coordination: the registry of every figure and table in
+//! the paper's evaluation, the sweep runner that regenerates them on
+//! the scaled workloads, and the embedded published numbers used for
+//! shape comparison.
+
+pub mod experiment;
+pub mod paper;
+pub mod runner;
+
+pub use experiment::{run_experiment, Experiment, Scope};
+pub use runner::{run_one, Runner};

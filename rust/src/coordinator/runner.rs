@@ -1,0 +1,178 @@
+//! Simulation sweep runner with memoization: several experiments share
+//! the same underlying runs (e.g. Fig. 8's BFS runs feed Figs. 9, 10
+//! and 14), so results are cached per configuration.
+
+use crate::accel::{build, AcceleratorConfig, AcceleratorKind};
+use crate::algo::problem::{GraphProblem, ProblemKind};
+use crate::dram::{ChannelMode, DramSpec, MemorySystem};
+use crate::graph::datasets;
+use crate::sim::metrics::SimReport;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Resolve a DRAM type name ("ddr3" | "ddr4" | "hbm") to a spec.
+pub fn dram_spec(dram: &str, channels: usize) -> Result<DramSpec> {
+    let spec = match dram {
+        "ddr4" => DramSpec::ddr4_2400(channels),
+        "ddr3" => DramSpec::ddr3_2133(channels),
+        "hbm" => DramSpec::hbm_1000(channels),
+        other => return Err(anyhow!("unknown DRAM type {other:?} (ddr3|ddr4|hbm)")),
+    };
+    Ok(spec)
+}
+
+/// Execute one simulation run.
+pub fn run_one(
+    kind: AcceleratorKind,
+    graph: &str,
+    problem: ProblemKind,
+    dram: &str,
+    channels: usize,
+    cfg: &AcceleratorConfig,
+) -> Result<SimReport> {
+    if problem.weighted() && !kind.supports_weighted() {
+        return Err(anyhow!(
+            "{} does not support weighted problems (Tab. 1)",
+            kind.name()
+        ));
+    }
+    if channels > 1 && !kind.multi_channel() && !cfg.experimental_multichannel {
+        return Err(anyhow!(
+            "{} is not enabled for multi-channel operation (Fig. 12); \
+             set experimental_multichannel for the open-challenge-(c) extension",
+            kind.name()
+        ));
+    }
+    let g = if problem.weighted() {
+        datasets::dataset_weighted(graph)
+    } else {
+        datasets::dataset(graph)
+    }
+    .ok_or_else(|| anyhow!("unknown dataset {graph:?}"))?;
+    let spec = dram_spec(dram, channels)?;
+    // HitGraph/ThunderGP place data per channel (region mode); the
+    // single-channel accelerators see one region either way.
+    let mode = if kind.multi_channel() {
+        ChannelMode::Region
+    } else {
+        ChannelMode::InterleaveLine
+    };
+    let p = GraphProblem::new(problem, &g);
+    let cfg = cfg.clone().with_channels(channels);
+    let mut accel = build(kind, &g, &cfg);
+    let mut mem = MemorySystem::with_mode(spec, mode);
+    Ok(accel.run(&p, &mut mem))
+}
+
+/// Memoizing runner.
+#[derive(Default)]
+pub struct Runner {
+    cache: HashMap<String, SimReport>,
+}
+
+impl Runner {
+    pub fn new() -> Runner {
+        Runner::default()
+    }
+
+    fn key(
+        kind: AcceleratorKind,
+        graph: &str,
+        problem: ProblemKind,
+        dram: &str,
+        channels: usize,
+        cfg: &AcceleratorConfig,
+    ) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{:?}|{}|{}|{}",
+            kind.name(),
+            graph,
+            problem.name(),
+            dram,
+            channels,
+            cfg.optimizations,
+            cfg.bram_values,
+            cfg.foregraph_interval,
+            cfg.num_pes,
+        )
+    }
+
+    /// Run (or fetch from cache).
+    pub fn run(
+        &mut self,
+        kind: AcceleratorKind,
+        graph: &str,
+        problem: ProblemKind,
+        dram: &str,
+        channels: usize,
+        cfg: &AcceleratorConfig,
+    ) -> Result<SimReport> {
+        let key = Self::key(kind, graph, problem, dram, channels, cfg);
+        if let Some(hit) = self.cache.get(&key) {
+            return Ok(hit.clone());
+        }
+        let report = run_one(kind, graph, problem, dram, channels, cfg)?;
+        self.cache.insert(key, report.clone());
+        Ok(report)
+    }
+
+    pub fn cached_runs(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_invalid_combinations() {
+        let cfg = AcceleratorConfig::default();
+        assert!(run_one(
+            AcceleratorKind::AccuGraph,
+            "sd",
+            ProblemKind::Sssp,
+            "ddr4",
+            1,
+            &cfg
+        )
+        .is_err());
+        assert!(run_one(
+            AcceleratorKind::ForeGraph,
+            "sd",
+            ProblemKind::Bfs,
+            "ddr4",
+            4,
+            &cfg
+        )
+        .is_err());
+        assert!(
+            run_one(AcceleratorKind::HitGraph, "sd", ProblemKind::Bfs, "dd5", 1, &cfg).is_err()
+        );
+        assert!(
+            run_one(AcceleratorKind::HitGraph, "zz", ProblemKind::Bfs, "ddr4", 1, &cfg).is_err()
+        );
+    }
+
+    #[test]
+    fn runner_caches() {
+        let mut r = Runner::new();
+        let cfg = AcceleratorConfig::all_optimizations();
+        let a = r
+            .run(AcceleratorKind::AccuGraph, "sd", ProblemKind::PageRank, "ddr4", 1, &cfg)
+            .unwrap();
+        assert_eq!(r.cached_runs(), 1);
+        let b = r
+            .run(AcceleratorKind::AccuGraph, "sd", ProblemKind::PageRank, "ddr4", 1, &cfg)
+            .unwrap();
+        assert_eq!(r.cached_runs(), 1);
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn dram_specs_resolve() {
+        assert!(dram_spec("ddr3", 2).is_ok());
+        assert!(dram_spec("hbm", 8).is_ok());
+        assert!(dram_spec("lpddr", 1).is_err());
+    }
+}

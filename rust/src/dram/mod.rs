@@ -1,0 +1,34 @@
+//! Cycle-level DRAM timing simulator — the Ramulator-equivalent
+//! substrate of the paper's simulation environment (§2.2, Fig. 1).
+//!
+//! Scope: everything the paper's evaluation observes —
+//! * DDR3 / DDR4 / HBM standards with the Tab. 3 configurations,
+//! * multi-channel, multi-rank organization, DDR4/HBM bank groups,
+//! * open-page row-buffer policy with FR-FCFS scheduling,
+//! * row hit / miss (empty) / conflict accounting (Fig. 11(b)),
+//! * data-bus occupancy for bandwidth-utilization reporting,
+//! * periodic refresh (tREFI / tRFC).
+//!
+//! The model is *transactional*: commands are not replayed cycle by
+//! cycle; instead each serviced request computes its earliest legal
+//! CAS issue time from the JEDEC-style timing state of its bank, rank
+//! and channel, then updates that state. This is first-order exact for
+//! the constraint set we model and orders of magnitude faster than
+//! per-cycle ticking — see DESIGN.md §5(3).
+
+pub mod address;
+pub mod channel;
+pub mod spec;
+pub mod stats;
+pub mod system;
+
+pub use address::{AddressMapper, DecodedAddr};
+pub use channel::Channel;
+pub use spec::{AddrMap, DramPolicy, DramSpec, DramStandard, RowPolicy, SchedPolicy, SpeedGrade};
+pub use stats::{DramStats, RowOutcome};
+pub use system::{ChannelMode, MemKind, MemRequest, MemorySystem, ReqToken};
+
+/// Cache-line size in bytes. All modelled requests are line-granular
+/// (the paper's "64 bytes are returned for each request which we call
+/// a cache line").
+pub const CACHE_LINE: u64 = 64;

@@ -1,0 +1,388 @@
+//! DRAM standards, speed grades and organization presets (Tab. 3).
+//!
+//! Timing values are expressed in memory-controller clock cycles
+//! (`tCK`). Data rate is 2x the clock (DDR), so a `BL=8` burst over an
+//! 8n-prefetch 64-bit bus occupies `BL/2 = 4` clock cycles and moves 64
+//! bytes — one cache line. HBM moves the same line in `BL=4` over its
+//! 128-bit channel (4n prefetch), i.e. 2 clock cycles.
+
+/// The DRAM standard families used in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DramStandard {
+    Ddr3,
+    Ddr4,
+    Hbm,
+}
+
+/// Row-buffer management policy (ablation axis; the paper's systems
+/// all assume open-page, which is Ramulator's default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RowPolicy {
+    /// Keep the row open after an access (default).
+    #[default]
+    OpenPage,
+    /// Auto-precharge after every access: no row reuse, but no
+    /// conflict penalty either.
+    ClosedPage,
+}
+
+/// Request scheduling policy (ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// First-ready FCFS: row hits bypass older non-hits (default;
+    /// what Ramulator and the paper model).
+    #[default]
+    FrFcfs,
+    /// Strict arrival order.
+    Fcfs,
+}
+
+/// Physical address mapping (ablation axis; open challenge (b) —
+/// "investigate schemes to improve utilization of bank-level
+/// parallelism in modern memories").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AddrMap {
+    /// Ramulator's `RoBaRaCoCh`: a sequential stream walks all the
+    /// columns of one row before switching banks (default).
+    #[default]
+    RowBankColumn,
+    /// Bank bits *below* the column bits: consecutive cache lines
+    /// interleave banks (and bank groups), converting tCCD_L-bound
+    /// sequential streams into tCCD_S-bound ones at the cost of more
+    /// row activations.
+    BankInterleaved,
+}
+
+/// Controller policy bundle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DramPolicy {
+    pub row: RowPolicy,
+    pub sched: SchedPolicy,
+    pub addr_map: AddrMap,
+}
+
+impl DramStandard {
+    pub fn name(self) -> &'static str {
+        match self {
+            DramStandard::Ddr3 => "DDR3",
+            DramStandard::Ddr4 => "DDR4",
+            DramStandard::Hbm => "HBM",
+        }
+    }
+}
+
+/// JEDEC-style timing parameters in clock cycles.
+#[derive(Clone, Copy, Debug)]
+pub struct SpeedGrade {
+    /// Clock period in picoseconds.
+    pub tck_ps: u64,
+    /// CAS (read) latency.
+    pub cl: u64,
+    /// CAS write latency.
+    pub cwl: u64,
+    /// ACT -> internal read/write.
+    pub trcd: u64,
+    /// PRE -> ACT.
+    pub trp: u64,
+    /// ACT -> PRE (row restore).
+    pub tras: u64,
+    /// ACT -> ACT, same bank (= tras + trp).
+    pub trc: u64,
+    /// ACT -> ACT, different bank, same rank (same bank group where groups exist).
+    pub trrd_l: u64,
+    /// ACT -> ACT, different bank group (DDR4/HBM); == trrd_l when no groups.
+    pub trrd_s: u64,
+    /// Four-activate window.
+    pub tfaw: u64,
+    /// CAS -> CAS, same bank group.
+    pub tccd_l: u64,
+    /// CAS -> CAS, different bank group; == burst occupancy minimum.
+    pub tccd_s: u64,
+    /// End of write burst -> PRE (write recovery).
+    pub twr: u64,
+    /// End of write burst -> read command (same rank turnaround).
+    pub twtr: u64,
+    /// Read -> PRE.
+    pub trtp: u64,
+    /// Burst occupancy on the data bus in clock cycles (BL / 2).
+    pub burst: u64,
+    /// Average refresh interval.
+    pub trefi: u64,
+    /// Refresh cycle time (all banks busy).
+    pub trfc: u64,
+}
+
+/// Full DRAM configuration: standard + speed + organization.
+///
+/// `row_bytes` is the row-buffer size per bank as seen by the
+/// controller (Tab. 3 "RBS": 8 KB for DDR3/DDR4 ranks, 2 KB for HBM
+/// pseudo-channels).
+#[derive(Clone, Copy, Debug)]
+pub struct DramSpec {
+    pub standard: DramStandard,
+    pub speed: SpeedGrade,
+    pub channels: usize,
+    pub ranks: usize,
+    pub bank_groups: usize,
+    /// Banks per bank group.
+    pub banks_per_group: usize,
+    /// Row-buffer size per bank in bytes.
+    pub row_bytes: u64,
+    /// Total capacity per channel in bytes (drives the row count).
+    pub channel_bytes: u64,
+    /// Data-bus width in bits.
+    pub bus_bits: u64,
+    /// Mega-transfers per second (for reporting).
+    pub data_rate_mts: u64,
+}
+
+impl DramSpec {
+    /// Banks per rank.
+    pub fn banks(&self) -> usize {
+        self.bank_groups * self.banks_per_group
+    }
+
+    /// Total bank state machines per channel.
+    pub fn banks_per_channel(&self) -> usize {
+        self.ranks * self.banks()
+    }
+
+    /// Cache lines per row buffer.
+    pub fn lines_per_row(&self) -> u64 {
+        self.row_bytes / super::CACHE_LINE
+    }
+
+    /// Rows per bank (derived from capacity).
+    pub fn rows_per_bank(&self) -> u64 {
+        self.channel_bytes / (self.row_bytes * self.banks_per_channel() as u64)
+    }
+
+    /// Peak bandwidth per channel in bytes/second.
+    pub fn peak_bw_per_channel(&self) -> f64 {
+        self.data_rate_mts as f64 * 1e6 * (self.bus_bits as f64 / 8.0)
+    }
+
+    /// Seconds per controller clock cycle.
+    pub fn seconds_per_cycle(&self) -> f64 {
+        self.speed.tck_ps as f64 * 1e-12
+    }
+
+    /// DDR3-1600 (11-11-11), the HitGraph paper configuration.
+    pub fn ddr3_1600(channels: usize, ranks: usize) -> Self {
+        DramSpec {
+            standard: DramStandard::Ddr3,
+            speed: SpeedGrade {
+                tck_ps: 1250,
+                cl: 11,
+                cwl: 8,
+                trcd: 11,
+                trp: 11,
+                tras: 28,
+                trc: 39,
+                trrd_l: 6,
+                trrd_s: 6,
+                tfaw: 32,
+                tccd_l: 4,
+                tccd_s: 4,
+                twr: 12,
+                twtr: 6,
+                trtp: 6,
+                burst: 4,
+                trefi: 6240,
+                trfc: 280,
+            },
+            channels,
+            ranks,
+            bank_groups: 1,
+            banks_per_group: 8,
+            row_bytes: 8 * 1024,
+            channel_bytes: 8 * 1024 * 1024 * 1024 / 8, // 8 Gb chips -> 1 GiB/ch modelled
+            bus_bits: 64,
+            data_rate_mts: 1600,
+        }
+    }
+
+    /// DDR3-2133 (14-14-14) — the paper's "DDR3" comparison row in Tab. 3
+    /// (2133 MT/s, 17.1 GB/s, 8 Gb).
+    pub fn ddr3_2133(channels: usize) -> Self {
+        DramSpec {
+            standard: DramStandard::Ddr3,
+            speed: SpeedGrade {
+                tck_ps: 938,
+                cl: 14,
+                cwl: 10,
+                trcd: 14,
+                trp: 14,
+                tras: 34,
+                trc: 48,
+                trrd_l: 6,
+                trrd_s: 6,
+                tfaw: 37,
+                tccd_l: 4,
+                tccd_s: 4,
+                twr: 16,
+                twtr: 8,
+                trtp: 8,
+                burst: 4,
+                trefi: 8320,
+                trfc: 374,
+            },
+            channels,
+            ranks: 1,
+            bank_groups: 1,
+            banks_per_group: 8,
+            row_bytes: 8 * 1024,
+            channel_bytes: 1024 * 1024 * 1024,
+            bus_bits: 64,
+            data_rate_mts: 2133,
+        }
+    }
+
+    /// DDR4-2400 (17-17-17) — the paper's default (Tab. 3).
+    ///
+    /// DDR4 doubles the bank count over DDR3 via 4 bank groups x 4
+    /// banks, "at the cost of added latency due to another hierarchy
+    /// level" — modelled by the _L vs _S split of tRRD/tCCD.
+    pub fn ddr4_2400(channels: usize) -> Self {
+        DramSpec {
+            standard: DramStandard::Ddr4,
+            speed: SpeedGrade {
+                tck_ps: 833,
+                cl: 17,
+                cwl: 12,
+                trcd: 17,
+                trp: 17,
+                tras: 39,
+                trc: 56,
+                trrd_l: 6,
+                trrd_s: 4,
+                tfaw: 26,
+                tccd_l: 6,
+                tccd_s: 4,
+                twr: 18,
+                twtr: 9,
+                trtp: 9,
+                burst: 4,
+                trefi: 9360,
+                trfc: 420,
+            },
+            channels,
+            ranks: 1,
+            bank_groups: 4,
+            banks_per_group: 4,
+            row_bytes: 8 * 1024,
+            channel_bytes: 2 * 1024 * 1024 * 1024, // 16 Gb default row of Tab. 3
+            bus_bits: 64,
+            data_rate_mts: 2400,
+        }
+    }
+
+    /// HBM-1000 (Tab. 3: 1000 MT/s, 16 GB/s and 2 KB row buffers per
+    /// channel, 16 banks, 4n prefetch over a 128-bit channel).
+    pub fn hbm_1000(channels: usize) -> Self {
+        DramSpec {
+            standard: DramStandard::Hbm,
+            speed: SpeedGrade {
+                tck_ps: 2000, // 500 MHz clock, 1000 MT/s DDR
+                cl: 7,
+                cwl: 4,
+                trcd: 7,
+                trp: 7,
+                tras: 17,
+                trc: 24,
+                trrd_l: 3,
+                trrd_s: 2,
+                tfaw: 15,
+                tccd_l: 3,
+                tccd_s: 2,
+                twr: 8,
+                twtr: 4,
+                trtp: 4,
+                burst: 2,
+                trefi: 1950,
+                trfc: 130,
+            },
+            channels,
+            ranks: 1,
+            bank_groups: 4,
+            banks_per_group: 4,
+            row_bytes: 2 * 1024,
+            channel_bytes: 512 * 1024 * 1024, // 4 Gb per channel
+            bus_bits: 128,
+            data_rate_mts: 1000,
+        }
+    }
+
+    /// Named Tab. 3 rows.
+    pub fn preset(name: &str) -> Option<DramSpec> {
+        match name {
+            "accugraph" => Some(Self::ddr4_2400(1)),
+            "foregraph" => Some(Self::ddr4_2400(1)),
+            "hitgraph" => Some(Self::ddr3_1600(4, 2)),
+            "thundergp" => Some(Self::ddr4_2400(4)),
+            "default" | "ddr4" => Some(Self::ddr4_2400(1)),
+            "ddr3" => Some(Self::ddr3_2133(1)),
+            "hbm" => Some(Self::hbm_1000(1)),
+            _ => None,
+        }
+    }
+
+    /// The same spec with a different channel count (scale tests, Fig. 12).
+    pub fn with_channels(mut self, channels: usize) -> Self {
+        self.channels = channels;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["accugraph", "foregraph", "hitgraph", "thundergp", "default", "ddr3", "hbm"] {
+            assert!(DramSpec::preset(name).is_some(), "{name}");
+        }
+        assert!(DramSpec::preset("nope").is_none());
+    }
+
+    #[test]
+    fn ddr4_organization() {
+        let s = DramSpec::ddr4_2400(1);
+        assert_eq!(s.banks(), 16);
+        assert_eq!(s.lines_per_row(), 128);
+        assert!(s.rows_per_bank() > 1000);
+        // 2400 MT/s * 8 B = 19.2 GB/s (Tab. 3).
+        assert!((s.peak_bw_per_channel() - 19.2e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn ddr3_bandwidths_match_tab3() {
+        let hit = DramSpec::ddr3_1600(4, 2);
+        assert!((hit.peak_bw_per_channel() - 12.8e9).abs() < 1e6);
+        let d3 = DramSpec::ddr3_2133(1);
+        assert!((d3.peak_bw_per_channel() - 17.064e9).abs() < 0.1e9);
+    }
+
+    #[test]
+    fn hbm_matches_tab3() {
+        let h = DramSpec::hbm_1000(8);
+        assert!((h.peak_bw_per_channel() - 16.0e9).abs() < 1e6);
+        assert_eq!(h.row_bytes, 2048);
+        assert_eq!(h.banks(), 16);
+        assert_eq!(h.lines_per_row(), 32);
+    }
+
+    #[test]
+    fn trc_is_consistent() {
+        for s in [
+            DramSpec::ddr3_1600(1, 1),
+            DramSpec::ddr3_2133(1),
+            DramSpec::ddr4_2400(1),
+            DramSpec::hbm_1000(1),
+        ] {
+            assert!(s.speed.trc >= s.speed.tras + s.speed.trp - 1);
+            assert!(s.speed.tras >= s.speed.trcd);
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! DRAM statistics: the observable quantities of the paper's
+//! evaluation — row buffer outcome mix (Fig. 11(b)), data-bus busy
+//! cycles for bandwidth utilization, request counts and latencies.
+
+/// How a request was served by the row buffer (§2.1 scenarios 1-3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowOutcome {
+    /// Addressed row already in the row buffer.
+    Hit,
+    /// Row buffer empty: activate then serve.
+    Miss,
+    /// Different row present: precharge, activate, serve.
+    Conflict,
+}
+
+/// Aggregated statistics for one channel (or a roll-up of channels).
+#[derive(Clone, Debug, Default)]
+pub struct DramStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    /// Clock cycles the data bus carried a burst.
+    pub data_bus_cycles: u64,
+    /// Refresh operations performed.
+    pub refreshes: u64,
+    /// Sum of request latencies (arrival -> data done), cycles.
+    pub total_latency: u64,
+    /// Final completion time (cycles) — simulation makespan.
+    pub finish_cycle: u64,
+}
+
+impl DramStats {
+    pub fn requests(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    pub fn record(&mut self, outcome: RowOutcome) {
+        match outcome {
+            RowOutcome::Hit => self.row_hits += 1,
+            RowOutcome::Miss => self.row_misses += 1,
+            RowOutcome::Conflict => self.row_conflicts += 1,
+        }
+    }
+
+    /// Fraction of cycles the data bus was busy, i.e. achieved /
+    /// theoretical bandwidth (what Fig. 11(b) plots).
+    pub fn bus_utilization(&self) -> f64 {
+        if self.finish_cycle == 0 {
+            return 0.0;
+        }
+        self.data_bus_cycles as f64 / self.finish_cycle as f64
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.requests();
+        if n == 0 {
+            return 0.0;
+        }
+        self.row_hits as f64 / n as f64
+    }
+
+    pub fn avg_latency(&self) -> f64 {
+        let n = self.requests();
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_latency as f64 / n as f64
+    }
+
+    /// Merge another channel's stats into a roll-up. `finish_cycle`
+    /// takes the max (channels run concurrently).
+    pub fn merge(&mut self, other: &DramStats) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.row_hits += other.row_hits;
+        self.row_misses += other.row_misses;
+        self.row_conflicts += other.row_conflicts;
+        self.data_bus_cycles += other.data_bus_cycles;
+        self.refreshes += other.refreshes;
+        self.total_latency += other.total_latency;
+        self.finish_cycle = self.finish_cycle.max(other.finish_cycle);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_accounting() {
+        let mut s = DramStats::default();
+        s.record(RowOutcome::Hit);
+        s.record(RowOutcome::Hit);
+        s.record(RowOutcome::Miss);
+        s.record(RowOutcome::Conflict);
+        assert_eq!(s.row_hits, 2);
+        assert_eq!(s.row_misses, 1);
+        assert_eq!(s.row_conflicts, 1);
+    }
+
+    #[test]
+    fn utilization_and_merge() {
+        let mut a = DramStats {
+            data_bus_cycles: 50,
+            finish_cycle: 100,
+            reads: 10,
+            ..Default::default()
+        };
+        assert!((a.bus_utilization() - 0.5).abs() < 1e-12);
+        let b = DramStats {
+            data_bus_cycles: 30,
+            finish_cycle: 200,
+            writes: 5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.finish_cycle, 200);
+        assert_eq!(a.data_bus_cycles, 80);
+        assert_eq!(a.requests(), 15);
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = DramStats::default();
+        assert_eq!(s.bus_utilization(), 0.0);
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.avg_latency(), 0.0);
+    }
+}

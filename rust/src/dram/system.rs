@@ -1,0 +1,408 @@
+//! Multi-channel memory system facade.
+//!
+//! Routes line requests to channels by address, services them in
+//! (approximate) global time order, and exposes completions for the
+//! co-simulation driver. The paper's HitGraph model merges PE request
+//! streams round-robin because Ramulator has a single endpoint; here
+//! every channel is an independent endpoint, which matches the
+//! hardware more closely while preserving the same per-channel
+//! ordering.
+
+use super::channel::{Channel, Serviced};
+use super::spec::{DramPolicy, DramSpec};
+use super::stats::DramStats;
+
+/// Read or write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemKind {
+    Read,
+    Write,
+}
+
+/// A cache-line request. `tag` is an opaque token the issuer uses to
+/// route the completion callback.
+#[derive(Clone, Copy, Debug)]
+pub struct MemRequest {
+    pub addr: u64,
+    pub kind: MemKind,
+    pub tag: u64,
+}
+
+/// Token identifying a completed request.
+#[derive(Clone, Copy, Debug)]
+pub struct ReqToken {
+    pub tag: u64,
+    pub kind: MemKind,
+    pub channel: usize,
+    pub done_at: u64,
+}
+
+/// How byte addresses map to channels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelMode {
+    /// Cache-line interleaving (Ramulator's default; single data
+    /// structure striped across channels).
+    InterleaveLine,
+    /// Region mode: each channel owns a contiguous region of
+    /// `channel_bytes`. HitGraph and ThunderGP explicitly place each
+    /// partition's data structures on "their" channel (§3.2.3/3.2.4),
+    /// which this mode expresses.
+    Region,
+}
+
+/// One record of the optional request trace (Ramulator-style
+/// `<address> <R|W>` traces plus arrival cycles, for external replay
+/// or inspection).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceRecord {
+    pub addr: u64,
+    pub kind: MemKind,
+    pub arrival: u64,
+    pub channel: usize,
+}
+
+/// The full memory system: one controller per channel.
+pub struct MemorySystem {
+    spec: DramSpec,
+    mode: ChannelMode,
+    channels: Vec<Channel>,
+    trace: Option<Vec<TraceRecord>>,
+}
+
+impl MemorySystem {
+    pub fn new(spec: DramSpec) -> Self {
+        Self::with_mode(spec, ChannelMode::InterleaveLine)
+    }
+
+    pub fn with_mode(spec: DramSpec, mode: ChannelMode) -> Self {
+        Self::with_mode_and_policy(spec, mode, DramPolicy::default())
+    }
+
+    /// Full control: channel mode + controller policy bundle
+    /// (scheduling, row policy, address mapping — the ablation axes).
+    pub fn with_mode_and_policy(spec: DramSpec, mode: ChannelMode, policy: DramPolicy) -> Self {
+        MemorySystem {
+            spec,
+            mode,
+            channels: (0..spec.channels)
+                .map(|_| Channel::with_policy(spec.with_channels(1), policy))
+                .collect(),
+            trace: None,
+        }
+    }
+
+    /// Start recording every enqueued request (addresses are the
+    /// global, pre-routing addresses). Costs memory; off by default.
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// The recorded trace, if tracing was enabled.
+    pub fn trace(&self) -> Option<&[TraceRecord]> {
+        self.trace.as_deref()
+    }
+
+    /// Write the trace in a Ramulator-like text format:
+    /// `<hex addr> <R|W> <arrival> <channel>` per line.
+    pub fn write_trace(&self, mut w: impl std::io::Write) -> std::io::Result<u64> {
+        let Some(trace) = &self.trace else {
+            return Ok(0);
+        };
+        for t in trace {
+            writeln!(
+                w,
+                "0x{:x} {} {} {}",
+                t.addr,
+                if t.kind == MemKind::Write { "W" } else { "R" },
+                t.arrival,
+                t.channel
+            )?;
+        }
+        Ok(trace.len() as u64)
+    }
+
+    /// Base byte address of channel `c`'s region (Region mode).
+    pub fn region_base(&self, c: usize) -> u64 {
+        c as u64 * self.spec.channel_bytes
+    }
+
+    pub fn spec(&self) -> &DramSpec {
+        &self.spec
+    }
+
+    pub fn num_channels(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Which channel a byte address routes to.
+    #[inline]
+    pub fn channel_of(&self, addr: u64) -> usize {
+        match self.mode {
+            ChannelMode::InterleaveLine => {
+                ((addr / super::CACHE_LINE) % self.channels.len() as u64) as usize
+            }
+            ChannelMode::Region => {
+                ((addr / self.spec.channel_bytes) as usize).min(self.channels.len() - 1)
+            }
+        }
+    }
+
+    /// Enqueue a request. The address is rewritten into the channel-
+    /// local address space.
+    pub fn enqueue(&mut self, req: MemRequest, arrival: u64) {
+        let ch = self.channel_of(req.addr);
+        if let Some(trace) = &mut self.trace {
+            trace.push(TraceRecord {
+                addr: req.addr,
+                kind: req.kind,
+                arrival,
+                channel: ch,
+            });
+        }
+        let local_addr = match self.mode {
+            ChannelMode::InterleaveLine => {
+                let line = req.addr / super::CACHE_LINE / self.channels.len() as u64;
+                line * super::CACHE_LINE
+            }
+            ChannelMode::Region => req.addr % self.spec.channel_bytes,
+        };
+        let local = MemRequest {
+            addr: local_addr,
+            ..req
+        };
+        self.channels[ch].enqueue(local, arrival);
+    }
+
+    /// Total queued requests.
+    pub fn pending(&self) -> usize {
+        self.channels.iter().map(|c| c.pending()).sum()
+    }
+
+    /// Queued requests on one channel.
+    pub fn pending_on(&self, ch: usize) -> usize {
+        self.channels[ch].pending()
+    }
+
+    /// Service one request from the channel whose oldest work is
+    /// earliest (global-time approximation); returns its completion.
+    pub fn service_one(&mut self) -> Option<ReqToken> {
+        let ch = self
+            .channels
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, c)| c.earliest_arrival().map(|a| (a, i)))
+            .min()
+            .map(|(_, i)| i)?;
+        let Serviced {
+            tag,
+            kind,
+            done_at,
+            outcome: _,
+        } = self.channels[ch].service_one()?;
+        Some(ReqToken {
+            tag,
+            kind,
+            channel: ch,
+            done_at,
+        })
+    }
+
+    /// Drain everything; returns the completion time of the last
+    /// request (makespan in cycles).
+    pub fn drain(&mut self) -> u64 {
+        let mut last = 0;
+        while let Some(t) = self.service_one() {
+            last = last.max(t.done_at);
+        }
+        last
+    }
+
+    /// Current makespan across channels.
+    pub fn finish_cycle(&self) -> u64 {
+        self.channels
+            .iter()
+            .map(|c| c.stats.finish_cycle)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Roll-up of all channel stats.
+    pub fn stats(&self) -> DramStats {
+        let mut s = DramStats::default();
+        for c in &self.channels {
+            s.merge(&c.stats);
+        }
+        s
+    }
+
+    /// Per-channel stats (for scalability studies).
+    pub fn channel_stats(&self, ch: usize) -> &DramStats {
+        &self.channels[ch].stats
+    }
+
+    /// Makespan in seconds.
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.finish_cycle() as f64 * self.spec.seconds_per_cycle()
+    }
+
+    /// Aggregate bus utilization: busy data cycles / (makespan x channels).
+    pub fn utilization(&self) -> f64 {
+        let fin = self.finish_cycle();
+        if fin == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self.channels.iter().map(|c| c.stats.data_bus_cycles).sum();
+        busy as f64 / (fin as f64 * self.channels.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::CACHE_LINE;
+
+    #[test]
+    fn routes_by_line_interleaving() {
+        let sys = MemorySystem::new(DramSpec::ddr4_2400(4));
+        assert_eq!(sys.channel_of(0), 0);
+        assert_eq!(sys.channel_of(64), 1);
+        assert_eq!(sys.channel_of(128), 2);
+        assert_eq!(sys.channel_of(256), 0);
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let mut sys = MemorySystem::new(DramSpec::ddr4_2400(2));
+        for i in 0..100u64 {
+            sys.enqueue(
+                MemRequest {
+                    addr: i * CACHE_LINE,
+                    kind: MemKind::Read,
+                    tag: i,
+                },
+                0,
+            );
+        }
+        let mut seen = vec![false; 100];
+        while let Some(t) = sys.service_one() {
+            assert!(!seen[t.tag as usize]);
+            seen[t.tag as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+        assert_eq!(sys.stats().requests(), 100);
+    }
+
+    #[test]
+    fn more_channels_finish_sooner_on_sequential_stream() {
+        let mut one = MemorySystem::new(DramSpec::ddr4_2400(1));
+        let mut four = MemorySystem::new(DramSpec::ddr4_2400(4));
+        for i in 0..4096u64 {
+            let r = MemRequest {
+                addr: i * CACHE_LINE,
+                kind: MemKind::Read,
+                tag: i,
+            };
+            one.enqueue(r, 0);
+            four.enqueue(r, 0);
+        }
+        let t1 = one.drain();
+        let t4 = four.drain();
+        assert!(
+            (t1 as f64) / (t4 as f64) > 3.0,
+            "1ch {t1} vs 4ch {t4}: expected ~4x"
+        );
+    }
+
+    #[test]
+    fn region_mode_routes_by_region() {
+        let spec = DramSpec::ddr4_2400(4);
+        let sys = MemorySystem::with_mode(spec, ChannelMode::Region);
+        assert_eq!(sys.channel_of(0), 0);
+        assert_eq!(sys.channel_of(spec.channel_bytes), 1);
+        assert_eq!(sys.channel_of(3 * spec.channel_bytes + 4096), 3);
+        // out-of-range clamps to the last channel
+        assert_eq!(sys.channel_of(100 * spec.channel_bytes), 3);
+    }
+
+    #[test]
+    fn region_mode_requests_complete() {
+        let spec = DramSpec::ddr4_2400(2);
+        let mut sys = MemorySystem::with_mode(spec, ChannelMode::Region);
+        for i in 0..64u64 {
+            sys.enqueue(
+                MemRequest {
+                    addr: sys.region_base((i % 2) as usize) + (i / 2) * CACHE_LINE,
+                    kind: MemKind::Read,
+                    tag: i,
+                },
+                0,
+            );
+        }
+        let mut count = 0;
+        while sys.service_one().is_some() {
+            count += 1;
+        }
+        assert_eq!(count, 64);
+        assert_eq!(sys.channel_stats(0).requests(), 32);
+        assert_eq!(sys.channel_stats(1).requests(), 32);
+    }
+
+    #[test]
+    fn trace_records_requests() {
+        let mut sys = MemorySystem::new(DramSpec::ddr4_2400(2));
+        sys.enable_trace();
+        for i in 0..10u64 {
+            sys.enqueue(
+                MemRequest {
+                    addr: i * CACHE_LINE,
+                    kind: if i % 2 == 0 { MemKind::Read } else { MemKind::Write },
+                    tag: i,
+                },
+                i * 5,
+            );
+        }
+        sys.drain();
+        let trace = sys.trace().unwrap();
+        assert_eq!(trace.len(), 10);
+        assert_eq!(trace[3].arrival, 15);
+        assert_eq!(trace[1].kind, MemKind::Write);
+        let mut buf = Vec::new();
+        let n = sys.write_trace(&mut buf).unwrap();
+        assert_eq!(n, 10);
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.lines().count() == 10);
+        assert!(text.contains("0x40 W 5 1"));
+    }
+
+    #[test]
+    fn trace_disabled_by_default() {
+        let mut sys = MemorySystem::new(DramSpec::ddr4_2400(1));
+        sys.enqueue(
+            MemRequest {
+                addr: 0,
+                kind: MemKind::Read,
+                tag: 0,
+            },
+            0,
+        );
+        assert!(sys.trace().is_none());
+        let mut buf = Vec::new();
+        assert_eq!(sys.write_trace(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn elapsed_seconds_scales_with_tck() {
+        let mut sys = MemorySystem::new(DramSpec::ddr4_2400(1));
+        sys.enqueue(
+            MemRequest {
+                addr: 0,
+                kind: MemKind::Read,
+                tag: 0,
+            },
+            0,
+        );
+        sys.drain();
+        let secs = sys.elapsed_seconds();
+        assert!(secs > 0.0 && secs < 1e-6);
+    }
+}

@@ -1,0 +1,47 @@
+//! The golden algorithm engine: iterate a graph problem to fixpoint,
+//! independently of any accelerator model. Two interchangeable
+//! backends:
+//!
+//! * [`native`] — pure Rust, mirrors the padded edge-block semantics
+//!   of `python/compile/model.py` exactly; handles any graph size.
+//! * [`xla`] — executes the AOT-compiled JAX/Pallas artifacts through
+//!   PJRT ([`crate::runtime`]); bounded by the artifact buckets and
+//!   used as the cross-language verification path and in the
+//!   end-to-end example.
+//!
+//! Integration tests assert native == XLA on random graphs
+//! (`rust/tests/xla_engine.rs`).
+
+pub mod native;
+pub mod xla;
+
+pub use native::NativeEngine;
+pub use xla::XlaEngine;
+
+use crate::algo::problem::GraphProblem;
+use crate::graph::EdgeList;
+use anyhow::Result;
+
+/// Result of running a problem to fixpoint.
+#[derive(Clone, Debug)]
+pub struct EngineResult {
+    /// Final values for the *real* (unpadded) vertices.
+    pub values: Vec<f32>,
+    /// Iterations executed, including the final no-change pass.
+    pub iterations: u32,
+}
+
+/// A fixpoint engine over the 2-phase (level-synchronous) semantics —
+/// the semantics the L2 JAX model implements.
+pub trait AlgorithmEngine {
+    fn name(&self) -> &'static str;
+
+    /// Run `problem` on `graph` until no value changes (or the
+    /// problem's fixed iteration count), up to `max_iters`.
+    fn run(
+        &mut self,
+        problem: &GraphProblem,
+        graph: &EdgeList,
+        max_iters: u32,
+    ) -> Result<EngineResult>;
+}

@@ -1,0 +1,131 @@
+//! Pure-Rust engine mirroring `python/compile/model.py` step-for-step:
+//! gather source values, combine, scatter-reduce, apply — all against
+//! the previous iteration's values (2-phase semantics).
+
+use super::{AlgorithmEngine, EngineResult};
+use crate::algo::problem::{GraphProblem, ProblemKind};
+use crate::graph::EdgeList;
+use anyhow::Result;
+
+/// The pure-Rust golden engine.
+#[derive(Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine
+    }
+
+    /// One iteration step; mirrors `model.step` exactly.
+    /// Returns (new_values, changed).
+    pub fn step(p: &GraphProblem, g: &EdgeList, vals: &[f32]) -> (Vec<f32>, bool) {
+        let n = g.num_vertices;
+        let mut acc = vec![p.reduce_identity(); n];
+        for e in &g.edges {
+            let u = p.combine(e.src, vals[e.src as usize], e.weight);
+            let a = &mut acc[e.dst as usize];
+            *a = p.reduce(*a, u);
+        }
+        let mut new = Vec::with_capacity(n);
+        let mut changed = false;
+        for v in 0..n {
+            let nv = match p.kind {
+                // model.py: new = min(vals, acc)
+                ProblemKind::Bfs | ProblemKind::Sssp | ProblemKind::Wcc => vals[v].min(acc[v]),
+                // model.py: (1-d)/n + d*acc ; acc directly for SpMV
+                ProblemKind::PageRank | ProblemKind::SpMV => p.apply(vals[v], acc[v]),
+            };
+            if p.kind.reduces_with_min() {
+                if nv < vals[v] {
+                    changed = true;
+                }
+            }
+            new.push(nv);
+        }
+        if !p.kind.reduces_with_min() {
+            changed = true; // single-pass problems always report change
+        }
+        (new, changed)
+    }
+}
+
+impl AlgorithmEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run(
+        &mut self,
+        problem: &GraphProblem,
+        graph: &EdgeList,
+        max_iters: u32,
+    ) -> Result<EngineResult> {
+        let mut values = problem.init_values();
+        let mut iterations = 0u32;
+        let limit = problem
+            .kind
+            .fixed_iterations()
+            .unwrap_or(max_iters)
+            .min(max_iters);
+        loop {
+            iterations += 1;
+            let (new, changed) = Self::step(problem, graph, &values);
+            values = new;
+            if iterations >= limit || !changed {
+                break;
+            }
+        }
+        Ok(EngineResult { values, iterations })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::golden::{run_golden, values_agree, Propagation};
+    use crate::algo::problem::ProblemKind;
+    use crate::graph::synthetic::erdos_renyi;
+
+    #[test]
+    fn matches_golden_two_phase_on_all_problems() {
+        let g = erdos_renyi(400, 2400, 1).with_random_weights(2, 8.0);
+        for kind in [
+            ProblemKind::Bfs,
+            ProblemKind::PageRank,
+            ProblemKind::Wcc,
+            ProblemKind::Sssp,
+            ProblemKind::SpMV,
+        ] {
+            let p = GraphProblem::new(kind, &g);
+            let golden = run_golden(&p, &g, Propagation::TwoPhase);
+            let mut engine = NativeEngine::new();
+            let res = engine.run(&p, &g, 10_000).unwrap();
+            assert!(
+                values_agree(kind, &golden.values, &res.values),
+                "{kind:?} values diverge"
+            );
+            assert_eq!(res.iterations, golden.iterations, "{kind:?} iterations");
+        }
+    }
+
+    #[test]
+    fn max_iters_caps_execution() {
+        let g = erdos_renyi(200, 400, 3);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let mut engine = NativeEngine::new();
+        let res = engine.run(&p, &g, 2).unwrap();
+        assert_eq!(res.iterations, 2);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = EdgeList::new(3, true);
+        let p = GraphProblem::with_root(ProblemKind::Bfs, &g, 0);
+        let mut engine = NativeEngine::new();
+        let res = engine.run(&p, &g, 100).unwrap();
+        assert_eq!(res.values[0], 0.0);
+        assert_eq!(res.iterations, 1);
+    }
+
+    use crate::graph::edgelist::EdgeList;
+}

@@ -1,0 +1,132 @@
+//! XLA-backed engine: pads the graph into an artifact bucket and
+//! drives the AOT-compiled JAX/Pallas step through PJRT. The Rust side
+//! owns the convergence loop; the compiled step owns the compute.
+
+use super::{AlgorithmEngine, EngineResult};
+use crate::algo::problem::{GraphProblem, ProblemKind, INF};
+use crate::graph::EdgeList;
+use crate::runtime::Runtime;
+use anyhow::{bail, Result};
+
+/// Map a [`ProblemKind`] to its artifact name.
+pub fn problem_key(kind: ProblemKind) -> &'static str {
+    match kind {
+        ProblemKind::Bfs => "bfs",
+        ProblemKind::PageRank => "pr",
+        ProblemKind::Wcc => "wcc",
+        ProblemKind::Sssp => "sssp",
+        ProblemKind::SpMV => "spmv",
+    }
+}
+
+/// Engine backed by the PJRT runtime.
+pub struct XlaEngine {
+    runtime: Runtime,
+}
+
+impl XlaEngine {
+    pub fn new(runtime: Runtime) -> Self {
+        XlaEngine { runtime }
+    }
+
+    /// Convenience: artifacts from the default location.
+    pub fn from_repo_root() -> Result<Self> {
+        Ok(XlaEngine {
+            runtime: Runtime::from_repo_root()?,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Does an artifact bucket exist for this (problem, graph)?
+    pub fn fits(&self, kind: ProblemKind, g: &EdgeList) -> bool {
+        self.runtime
+            .pick_bucket(problem_key(kind), g.num_vertices, g.num_edges())
+            .is_some()
+    }
+}
+
+impl AlgorithmEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn run(
+        &mut self,
+        problem: &GraphProblem,
+        graph: &EdgeList,
+        max_iters: u32,
+    ) -> Result<EngineResult> {
+        let key = problem_key(problem.kind);
+        let n = graph.num_vertices;
+        let m = graph.num_edges();
+        let Some(entry) = self.runtime.pick_bucket(key, n, m) else {
+            bail!(
+                "graph (n={n}, m={m}) exceeds every artifact bucket for {key}; \
+                 use the native engine for large graphs"
+            );
+        };
+        let (n_pad, m_pad) = (entry.n_pad, entry.m_pad);
+
+        // Pad values: INF for min-problems keeps padding inert; 0 for
+        // add-problems (their padded edges are masked anyway).
+        let mut vals = problem.init_values();
+        let pad_val = if problem.kind.reduces_with_min() {
+            INF
+        } else {
+            0.0
+        };
+        vals.resize(n_pad, pad_val);
+
+        // Pad edges with mask = 0.
+        let mut src = vec![0i32; m_pad];
+        let mut dst = vec![0i32; m_pad];
+        let mut w = vec![0f32; m_pad];
+        let mut mask = vec![0f32; m_pad];
+        for (i, e) in graph.edges.iter().enumerate() {
+            src[i] = e.src as i32;
+            dst[i] = e.dst as i32;
+            w[i] = e.weight;
+            mask[i] = 1.0;
+        }
+
+        // aux = 1/out_degree for PR; zeros otherwise.
+        let mut aux = vec![0f32; n_pad];
+        if problem.kind == ProblemKind::PageRank {
+            aux[..problem.inv_out_deg.len()].copy_from_slice(&problem.inv_out_deg);
+        }
+
+        let limit = problem
+            .kind
+            .fixed_iterations()
+            .unwrap_or(max_iters)
+            .min(max_iters);
+        let mut iterations = 0u32;
+        loop {
+            iterations += 1;
+            let (new_vals, changed) = self.runtime.run_step(
+                key,
+                &vals,
+                &src,
+                &dst,
+                &w,
+                &mask,
+                &aux,
+                n as f32,
+            )?;
+            vals = new_vals;
+            if iterations >= limit || !changed {
+                break;
+            }
+        }
+        vals.truncate(n);
+        Ok(EngineResult {
+            values: vals,
+            iterations,
+        })
+    }
+}
+
+// Integration tests (require built artifacts): rust/tests/xla_engine.rs

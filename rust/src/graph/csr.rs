@@ -1,0 +1,153 @@
+//! Compressed sparse row (CSR): `n + 1` 32-bit pointers plus `m`
+//! 32-bit neighbor ids. AccuGraph processes the *inverted* graph in
+//! CSR ("in-CSR"): `neighbors(v)` are the in-neighbors (sources) of
+//! `v`, which a pull-based data flow reads sequentially.
+
+use super::edgelist::EdgeList;
+use super::VertexId;
+
+/// CSR adjacency structure.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// `n + 1` offsets into `neighbors`.
+    pub offsets: Vec<u32>,
+    /// Neighbor ids, grouped by vertex.
+    pub neighbors: Vec<VertexId>,
+    /// Parallel weights (empty when unweighted).
+    pub weights: Vec<f32>,
+}
+
+impl Csr {
+    /// Build CSR over out-edges: `neighbors(v)` = destinations of `v`.
+    pub fn from_edges(g: &EdgeList) -> Csr {
+        Self::build(g, false)
+    }
+
+    /// Build CSR over in-edges (the "in-CSR" of AccuGraph):
+    /// `neighbors(v)` = sources pointing at `v`.
+    pub fn inverted_from_edges(g: &EdgeList) -> Csr {
+        Self::build(g, true)
+    }
+
+    fn build(g: &EdgeList, inverted: bool) -> Csr {
+        let n = g.num_vertices;
+        let mut counts = vec![0u32; n + 1];
+        for e in &g.edges {
+            let key = if inverted { e.dst } else { e.src } as usize;
+            counts[key + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut neighbors = vec![0 as VertexId; g.edges.len()];
+        let mut weights = if g.weighted {
+            vec![0f32; g.edges.len()]
+        } else {
+            Vec::new()
+        };
+        for e in &g.edges {
+            let (key, val) = if inverted {
+                (e.dst as usize, e.src)
+            } else {
+                (e.src as usize, e.dst)
+            };
+            let pos = cursor[key] as usize;
+            neighbors[pos] = val;
+            if g.weighted {
+                weights[pos] = e.weight;
+            }
+            cursor[key] += 1;
+        }
+        Csr {
+            offsets,
+            neighbors,
+            weights,
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Neighbor slice of vertex `v`.
+    pub fn neighbors_of(&self, v: VertexId) -> &[VertexId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.neighbors[s..e]
+    }
+
+    /// Degree of vertex `v` in this CSR's direction.
+    pub fn degree(&self, v: VertexId) -> u32 {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Total byte size of the structure with 32-bit fields (the
+    /// quantity behind the paper's bytes-per-edge metric for
+    /// AccuGraph: `4 * (n + 1 + m)` plus weights).
+    pub fn byte_size(&self) -> u64 {
+        (self.offsets.len() * 4 + self.neighbors.len() * 4 + self.weights.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> EdgeList {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        let mut g = EdgeList::new(4, true);
+        g.add(0, 1);
+        g.add(0, 2);
+        g.add(1, 3);
+        g.add(2, 3);
+        g
+    }
+
+    #[test]
+    fn out_csr_structure() {
+        let c = Csr::from_edges(&diamond());
+        assert_eq!(c.num_vertices(), 4);
+        assert_eq!(c.num_edges(), 4);
+        assert_eq!(c.neighbors_of(0), &[1, 2]);
+        assert_eq!(c.neighbors_of(1), &[3]);
+        assert_eq!(c.neighbors_of(3), &[] as &[u32]);
+        assert_eq!(c.degree(0), 2);
+    }
+
+    #[test]
+    fn in_csr_structure() {
+        let c = Csr::inverted_from_edges(&diamond());
+        assert_eq!(c.neighbors_of(3), &[1, 2]);
+        assert_eq!(c.neighbors_of(0), &[] as &[u32]);
+        assert_eq!(c.degree(3), 2);
+    }
+
+    #[test]
+    fn offsets_monotone_and_cover_edges() {
+        let c = Csr::from_edges(&diamond());
+        assert!(c.offsets.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*c.offsets.last().unwrap() as usize, c.num_edges());
+    }
+
+    #[test]
+    fn weighted_csr_carries_weights() {
+        let g = diamond().with_random_weights(3, 5.0);
+        let c = Csr::from_edges(&g);
+        assert_eq!(c.weights.len(), 4);
+        assert_eq!(c.byte_size(), (5 * 4 + 4 * 4 + 4 * 4) as u64);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = EdgeList::new(0, true);
+        let c = Csr::from_edges(&g);
+        assert_eq!(c.num_vertices(), 0);
+        assert_eq!(c.num_edges(), 0);
+    }
+}

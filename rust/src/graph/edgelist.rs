@@ -1,0 +1,239 @@
+//! Edge-list representation: the binary format HitGraph and ThunderGP
+//! iterate over (8 B per unweighted edge: two 32-bit vertex ids;
+//! +4 B for a weight, §4.1).
+
+use super::VertexId;
+use crate::util::rng::Rng;
+
+/// A directed edge.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub src: VertexId,
+    pub dst: VertexId,
+    /// Weight; 1.0 for unweighted graphs.
+    pub weight: f32,
+}
+
+/// A graph as a list of directed edges.
+#[derive(Clone, Debug)]
+pub struct EdgeList {
+    /// Number of vertices `n = |V|`.
+    pub num_vertices: usize,
+    pub edges: Vec<Edge>,
+    /// Whether the source data was directed. Undirected inputs are
+    /// stored with both edge directions materialized (as the
+    /// accelerators do).
+    pub directed: bool,
+    /// Whether edges carry meaningful weights (SSSP / SpMV).
+    pub weighted: bool,
+}
+
+impl EdgeList {
+    pub fn new(num_vertices: usize, directed: bool) -> Self {
+        EdgeList {
+            num_vertices,
+            edges: Vec::new(),
+            directed,
+            weighted: false,
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn add(&mut self, src: VertexId, dst: VertexId) {
+        debug_assert!((src as usize) < self.num_vertices);
+        debug_assert!((dst as usize) < self.num_vertices);
+        self.edges.push(Edge {
+            src,
+            dst,
+            weight: 1.0,
+        });
+    }
+
+    /// Average degree `m / n` (the paper's `D_avg`).
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices == 0 {
+            return 0.0;
+        }
+        self.edges.len() as f64 / self.num_vertices as f64
+    }
+
+    /// Out-degree per vertex.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.num_vertices];
+        for e in &self.edges {
+            d[e.src as usize] += 1;
+        }
+        d
+    }
+
+    /// In-degree per vertex.
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.num_vertices];
+        for e in &self.edges {
+            d[e.dst as usize] += 1;
+        }
+        d
+    }
+
+    /// Sort edges by source vertex (ThunderGP's "sorted edge list").
+    pub fn sort_by_src(&mut self) {
+        self.edges.sort_by_key(|e| (e.src, e.dst));
+    }
+
+    /// Sort edges by destination vertex (HitGraph's `Sort` optimization).
+    pub fn sort_by_dst(&mut self) {
+        self.edges.sort_by_key(|e| (e.dst, e.src));
+    }
+
+    /// Reverse every edge (for pull-based / inverted-CSR processing).
+    pub fn inverted(&self) -> EdgeList {
+        EdgeList {
+            num_vertices: self.num_vertices,
+            edges: self
+                .edges
+                .iter()
+                .map(|e| Edge {
+                    src: e.dst,
+                    dst: e.src,
+                    weight: e.weight,
+                })
+                .collect(),
+            directed: self.directed,
+            weighted: self.weighted,
+        }
+    }
+
+    /// Materialize both directions (undirected semantics).
+    pub fn symmetrized(&self) -> EdgeList {
+        let mut edges = Vec::with_capacity(self.edges.len() * 2);
+        for e in &self.edges {
+            edges.push(*e);
+            edges.push(Edge {
+                src: e.dst,
+                dst: e.src,
+                weight: e.weight,
+            });
+        }
+        EdgeList {
+            num_vertices: self.num_vertices,
+            edges,
+            directed: false,
+            weighted: self.weighted,
+        }
+    }
+
+    /// Attach deterministic pseudo-random weights in `[1, max_w)`
+    /// (for SSSP/SpMV, which "require edge weights", §4.1).
+    pub fn with_random_weights(mut self, seed: u64, max_w: f32) -> EdgeList {
+        let mut rng = Rng::new(seed);
+        for e in &mut self.edges {
+            e.weight = 1.0 + rng.next_f32() * (max_w - 1.0);
+        }
+        self.weighted = true;
+        self
+    }
+
+    /// Rename vertices by a permutation (`perm[old] = new`). Used by
+    /// ForeGraph's stride mapping.
+    pub fn renamed(&self, perm: &[VertexId]) -> EdgeList {
+        assert_eq!(perm.len(), self.num_vertices);
+        EdgeList {
+            num_vertices: self.num_vertices,
+            edges: self
+                .edges
+                .iter()
+                .map(|e| Edge {
+                    src: perm[e.src as usize],
+                    dst: perm[e.dst as usize],
+                    weight: e.weight,
+                })
+                .collect(),
+            directed: self.directed,
+            weighted: self.weighted,
+        }
+    }
+
+    /// Bytes of one edge record in the accelerator binary formats.
+    pub fn edge_bytes(&self) -> u64 {
+        if self.weighted {
+            12
+        } else {
+            8
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> EdgeList {
+        let mut g = EdgeList::new(3, true);
+        g.add(0, 1);
+        g.add(1, 2);
+        g.add(2, 0);
+        g
+    }
+
+    #[test]
+    fn degrees() {
+        let g = triangle();
+        assert_eq!(g.out_degrees(), vec![1, 1, 1]);
+        assert_eq!(g.in_degrees(), vec![1, 1, 1]);
+        assert!((g.avg_degree() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inversion_swaps_directions() {
+        let g = triangle().inverted();
+        assert!(g.edges.contains(&Edge {
+            src: 1,
+            dst: 0,
+            weight: 1.0
+        }));
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn symmetrize_doubles_edges() {
+        let g = triangle().symmetrized();
+        assert_eq!(g.num_edges(), 6);
+        assert!(!g.directed);
+    }
+
+    #[test]
+    fn sorting_orders() {
+        let mut g = EdgeList::new(4, true);
+        g.add(3, 0);
+        g.add(1, 2);
+        g.add(1, 0);
+        g.sort_by_src();
+        assert_eq!(g.edges[0].src, 1);
+        assert_eq!(g.edges[0].dst, 0);
+        g.sort_by_dst();
+        assert_eq!(g.edges[0].dst, 0);
+    }
+
+    #[test]
+    fn weights_are_deterministic() {
+        let a = triangle().with_random_weights(7, 10.0);
+        let b = triangle().with_random_weights(7, 10.0);
+        assert_eq!(a.edges, b.edges);
+        assert!(a.weighted);
+        assert_eq!(a.edge_bytes(), 12);
+        assert!(a.edges.iter().all(|e| e.weight >= 1.0 && e.weight < 10.0));
+    }
+
+    #[test]
+    fn rename_applies_permutation() {
+        let g = triangle().renamed(&[2, 0, 1]);
+        assert!(g.edges.contains(&Edge {
+            src: 2,
+            dst: 0,
+            weight: 1.0
+        }));
+    }
+}

@@ -1,0 +1,320 @@
+//! Edge-list file I/O: whitespace-separated text (`src dst [weight]`,
+//! `#` comments — the SNAP format) and a compact binary format.
+
+use super::edgelist::{Edge, EdgeList};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Parse SNAP-style text: one `src dst [weight]` pair per line,
+/// `#`-prefixed comment lines ignored. Vertex count = max id + 1.
+pub fn parse_text(reader: impl Read, directed: bool) -> Result<EdgeList> {
+    let reader = BufReader::new(reader);
+    let mut edges: Vec<Edge> = Vec::new();
+    let mut max_id: u32 = 0;
+    let mut weighted = false;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("read line")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let src: u32 = it
+            .next()
+            .with_context(|| format!("line {}: missing src", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad src", lineno + 1))?;
+        let dst: u32 = it
+            .next()
+            .with_context(|| format!("line {}: missing dst", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad dst", lineno + 1))?;
+        let weight = match it.next() {
+            Some(w) => {
+                weighted = true;
+                w.parse::<f32>()
+                    .with_context(|| format!("line {}: bad weight", lineno + 1))?
+            }
+            None => 1.0,
+        };
+        max_id = max_id.max(src).max(dst);
+        edges.push(Edge { src, dst, weight });
+    }
+    if edges.is_empty() {
+        bail!("no edges in input");
+    }
+    Ok(EdgeList {
+        num_vertices: max_id as usize + 1,
+        edges,
+        directed,
+        weighted,
+    })
+}
+
+/// Load from a text file path.
+pub fn load_text(path: impl AsRef<Path>, directed: bool) -> Result<EdgeList> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    parse_text(f, directed)
+}
+
+/// Write text format.
+pub fn save_text(g: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# graphmem edge list: n={} m={}", g.num_vertices, g.num_edges())?;
+    for e in &g.edges {
+        if g.weighted {
+            writeln!(w, "{} {} {}", e.src, e.dst, e.weight)?;
+        } else {
+            writeln!(w, "{} {}", e.src, e.dst)?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse MatrixMarket coordinate format (`%%MatrixMarket matrix
+/// coordinate ...`): 1-based indices, optional per-entry value used as
+/// the edge weight. `symmetric` matrices are expanded to both
+/// directions.
+pub fn parse_matrix_market(reader: impl Read) -> Result<EdgeList> {
+    let reader = BufReader::new(reader);
+    let mut lines = reader.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if l.starts_with("%%MatrixMarket") {
+                    break l;
+                } else if !l.starts_with('%') && !l.trim().is_empty() {
+                    bail!("missing %%MatrixMarket header");
+                }
+            }
+            None => bail!("empty MatrixMarket file"),
+        }
+    };
+    if !header.contains("coordinate") {
+        bail!("only coordinate-format MatrixMarket is supported");
+    }
+    let symmetric = header.contains("symmetric");
+    // size line: first non-comment line
+    let size_line = loop {
+        let l = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("missing size line"))??;
+        if !l.starts_with('%') && !l.trim().is_empty() {
+            break l;
+        }
+    };
+    let mut it = size_line.split_whitespace();
+    let rows: usize = it.next().context("rows")?.parse()?;
+    let cols: usize = it.next().context("cols")?.parse()?;
+    let nnz: usize = it.next().context("nnz")?.parse()?;
+    let n = rows.max(cols);
+    let mut g = EdgeList::new(n, !symmetric);
+    g.edges.reserve(if symmetric { 2 * nnz } else { nnz });
+    let mut weighted = false;
+    for l in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: u32 = it.next().context("row")?.parse::<u32>()?;
+        let c: u32 = it.next().context("col")?.parse::<u32>()?;
+        if r == 0 || c == 0 {
+            bail!("MatrixMarket indices are 1-based");
+        }
+        let w = match it.next() {
+            Some(v) => {
+                weighted = true;
+                v.parse::<f32>().context("value")?
+            }
+            None => 1.0,
+        };
+        let (src, dst) = (r - 1, c - 1);
+        g.edges.push(Edge { src, dst, weight: w });
+        if symmetric && src != dst {
+            g.edges.push(Edge {
+                src: dst,
+                dst: src,
+                weight: w,
+            });
+        }
+    }
+    g.weighted = weighted;
+    if g.edges.is_empty() {
+        bail!("no entries in MatrixMarket file");
+    }
+    Ok(g)
+}
+
+/// Load a `.mtx` file.
+pub fn load_matrix_market(path: impl AsRef<Path>) -> Result<EdgeList> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    parse_matrix_market(f)
+}
+
+/// Binary format: the accelerator on-disk layout — header
+/// (`magic, n, m, flags`) then `m` records of `src:u32 dst:u32
+/// [weight:f32]` little-endian. 8 B/edge unweighted, 12 B weighted
+/// (§4.1 of the paper).
+pub fn save_binary(g: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    w.write_all(b"GMEL")?;
+    w.write_all(&(g.num_vertices as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    let flags: u32 = (g.directed as u32) | ((g.weighted as u32) << 1);
+    w.write_all(&flags.to_le_bytes())?;
+    for e in &g.edges {
+        w.write_all(&e.src.to_le_bytes())?;
+        w.write_all(&e.dst.to_le_bytes())?;
+        if g.weighted {
+            w.write_all(&e.weight.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load the binary format.
+pub fn load_binary(path: impl AsRef<Path>) -> Result<EdgeList> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    if buf.len() < 24 || &buf[0..4] != b"GMEL" {
+        bail!("not a graphmem binary edge list");
+    }
+    let n = u64::from_le_bytes(buf[4..12].try_into().unwrap()) as usize;
+    let m = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
+    let flags = u32::from_le_bytes(buf[20..24].try_into().unwrap());
+    let directed = flags & 1 != 0;
+    let weighted = flags & 2 != 0;
+    let rec = if weighted { 12 } else { 8 };
+    if buf.len() != 24 + m * rec {
+        bail!("truncated edge list: expected {} records", m);
+    }
+    let mut edges = Vec::with_capacity(m);
+    let mut off = 24;
+    for _ in 0..m {
+        let src = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+        let dst = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap());
+        let weight = if weighted {
+            f32::from_le_bytes(buf[off + 8..off + 12].try_into().unwrap())
+        } else {
+            1.0
+        };
+        edges.push(Edge { src, dst, weight });
+        off += rec;
+    }
+    Ok(EdgeList {
+        num_vertices: n,
+        edges,
+        directed,
+        weighted,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic::erdos_renyi;
+
+    #[test]
+    fn parse_text_with_comments() {
+        let input = "# comment\n0 1\n1 2\n\n2 0\n";
+        let g = parse_text(input.as_bytes(), true).unwrap();
+        assert_eq!(g.num_vertices, 3);
+        assert_eq!(g.num_edges(), 3);
+        assert!(!g.weighted);
+    }
+
+    #[test]
+    fn parse_weighted_text() {
+        let g = parse_text("0 1 2.5\n1 0 3.0\n".as_bytes(), true).unwrap();
+        assert!(g.weighted);
+        assert_eq!(g.edges[0].weight, 2.5);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_text("a b\n".as_bytes(), true).is_err());
+        assert!(parse_text("".as_bytes(), true).is_err());
+        assert!(parse_text("0\n".as_bytes(), true).is_err());
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let dir = std::env::temp_dir().join("graphmem_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.bin");
+        let g = erdos_renyi(100, 500, 1).with_random_weights(2, 8.0);
+        save_binary(&g, &p).unwrap();
+        let h = load_binary(&p).unwrap();
+        assert_eq!(g.num_vertices, h.num_vertices);
+        assert_eq!(g.edges, h.edges);
+        assert_eq!(g.weighted, h.weighted);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let dir = std::env::temp_dir().join("graphmem_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        let g = erdos_renyi(50, 200, 3);
+        save_text(&g, &p).unwrap();
+        let h = load_text(&p, true).unwrap();
+        assert_eq!(g.num_edges(), h.num_edges());
+        assert_eq!(g.edges[..20], h.edges[..20]);
+    }
+
+    #[test]
+    fn matrix_market_general() {
+        let mtx = "%%MatrixMarket matrix coordinate real general\n\
+                   % comment\n\
+                   3 3 3\n1 2 0.5\n2 3 1.5\n3 1 2.0\n";
+        let g = parse_matrix_market(mtx.as_bytes()).unwrap();
+        assert_eq!(g.num_vertices, 3);
+        assert_eq!(g.num_edges(), 3);
+        assert!(g.weighted);
+        assert_eq!(g.edges[0].src, 0);
+        assert_eq!(g.edges[0].dst, 1);
+        assert_eq!(g.edges[0].weight, 0.5);
+    }
+
+    #[test]
+    fn matrix_market_symmetric_expands() {
+        let mtx = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                   2 2 1\n1 2\n";
+        let g = parse_matrix_market(mtx.as_bytes()).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert!(!g.directed);
+        assert!(!g.weighted);
+    }
+
+    #[test]
+    fn matrix_market_rejects_garbage() {
+        assert!(parse_matrix_market("not mtx\n".as_bytes()).is_err());
+        assert!(parse_matrix_market(
+            "%%MatrixMarket matrix coordinate real general\n1 1 1\n0 1 2.0\n".as_bytes()
+        )
+        .is_err()); // 0-based index
+        assert!(parse_matrix_market(
+            "%%MatrixMarket matrix array real general\n1 1\n".as_bytes()
+        )
+        .is_err()); // array format
+    }
+
+    #[test]
+    fn binary_rejects_corrupt() {
+        let dir = std::env::temp_dir().join("graphmem_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(load_binary(&p).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Graph substrate: representations, generators, dataset stand-ins and
+//! property analysis (the paper's Tab. 2 inputs).
+
+pub mod csr;
+pub mod datasets;
+pub mod edgelist;
+pub mod io;
+pub mod properties;
+pub mod rmat;
+pub mod synthetic;
+
+pub use csr::Csr;
+pub use datasets::{dataset, dataset_names, DatasetSpec};
+pub use edgelist::{Edge, EdgeList};
+pub use properties::GraphProperties;
+
+/// Vertex identifier (the paper uses 32-bit ids throughout, §4.1).
+pub type VertexId = u32;

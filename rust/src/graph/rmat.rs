@@ -1,0 +1,124 @@
+//! Graph500-style R-MAT generator.
+//!
+//! Recursive-matrix sampling with the Graph500 parameters
+//! (a, b, c, d) = (0.57, 0.19, 0.19, 0.05), with the standard per-level
+//! parameter noise to avoid degenerate diagonals. Deterministic for a
+//! given seed. Used for the paper's `r21` / `r24` workloads (we run
+//! scaled-down instances; the process is identical).
+
+use super::edgelist::EdgeList;
+use super::VertexId;
+use crate::util::rng::Rng;
+
+/// R-MAT parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Scale: `n = 2^scale` vertices.
+    pub scale: u32,
+    /// Edge factor: `m = n * edge_factor` edges.
+    pub edge_factor: u32,
+    pub seed: u64,
+}
+
+impl RmatParams {
+    /// Graph500 defaults at a given scale/edge-factor.
+    pub fn graph500(scale: u32, edge_factor: u32, seed: u64) -> Self {
+        RmatParams {
+            a: 0.57,
+            b: 0.19,
+            c: 0.19,
+            scale,
+            edge_factor,
+            seed,
+        }
+    }
+}
+
+/// Generate an R-MAT graph (directed; may contain self-loops and
+/// multi-edges, like the Graph500 kernel output).
+pub fn generate(p: RmatParams) -> EdgeList {
+    let n: u64 = 1 << p.scale;
+    let m: u64 = n * p.edge_factor as u64;
+    let mut rng = Rng::new(p.seed);
+    let mut g = EdgeList::new(n as usize, true);
+    g.edges.reserve(m as usize);
+    for _ in 0..m {
+        let (src, dst) = sample_edge(&mut rng, p);
+        g.add(src, dst);
+    }
+    g
+}
+
+fn sample_edge(rng: &mut Rng, p: RmatParams) -> (VertexId, VertexId) {
+    let mut src: u64 = 0;
+    let mut dst: u64 = 0;
+    // Jitter quadrant probabilities +-10% once per edge (Graph500
+    // jitters per level; per-edge noise preserves the distribution
+    // shape at a fraction of the RNG cost — see EXPERIMENTS.md §Perf).
+    let jitter = |rng: &mut Rng, base: f64| base * (0.9 + 0.2 * rng.next_f64());
+    let a = jitter(rng, p.a);
+    let b = jitter(rng, p.b);
+    let c = jitter(rng, p.c);
+    let d = jitter(rng, 1.0 - p.a - p.b - p.c);
+    let total = a + b + c + d;
+    let ab = a + b;
+    let abc = ab + c;
+    let _ = d;
+    for _ in 0..p.scale {
+        src <<= 1;
+        dst <<= 1;
+        let r = rng.next_f64() * total;
+        if r < a {
+            // top-left: nothing to add
+        } else if r < ab {
+            dst |= 1;
+        } else if r < abc {
+            src |= 1;
+        } else {
+            src |= 1;
+            dst |= 1;
+        }
+    }
+    (src as VertexId, dst as VertexId)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::skewness;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(RmatParams::graph500(10, 8, 1));
+        let b = generate(RmatParams::graph500(10, 8, 1));
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.edges[..100], b.edges[..100]);
+    }
+
+    #[test]
+    fn sizes_match_scale() {
+        let g = generate(RmatParams::graph500(12, 16, 2));
+        assert_eq!(g.num_vertices, 1 << 12);
+        assert_eq!(g.num_edges(), (1 << 12) * 16);
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        let g = generate(RmatParams::graph500(12, 16, 3));
+        let degs: Vec<f64> = g.out_degrees().iter().map(|&d| d as f64).collect();
+        let sk = skewness(&degs);
+        assert!(sk > 2.0, "R-MAT should be heavily right-skewed, got {sk}");
+    }
+
+    #[test]
+    fn vertices_in_range() {
+        let g = generate(RmatParams::graph500(8, 8, 4));
+        for e in &g.edges {
+            assert!((e.src as usize) < g.num_vertices);
+            assert!((e.dst as usize) < g.num_vertices);
+        }
+    }
+}

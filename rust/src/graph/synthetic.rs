@@ -1,0 +1,151 @@
+//! Synthetic graph generators used to build the dataset stand-ins:
+//! Erdős–Rényi (low skew), 2-D grid (road-network-like: degree ~4,
+//! huge diameter), preferential attachment (power-law), and small-world
+//! ring lattices (moderate diameter, low skew — protein/brain-like).
+
+use super::edgelist::EdgeList;
+use super::VertexId;
+use crate::util::rng::Rng;
+
+/// G(n, m): `m` uniformly random directed edges (allows multi-edges —
+/// matches how the accelerators see raw edge lists).
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> EdgeList {
+    let mut rng = Rng::new(seed);
+    let mut g = EdgeList::new(n, true);
+    g.edges.reserve(m);
+    for _ in 0..m {
+        let s = rng.next_below(n as u64) as VertexId;
+        let d = rng.next_below(n as u64) as VertexId;
+        g.add(s, d);
+    }
+    g
+}
+
+/// 2-D grid (4-neighborhood), road-network stand-in: `rows * cols`
+/// vertices, degree <= 4, diameter `rows + cols` — the shape that makes
+/// rd/bk need many BFS iterations in the paper.
+pub fn grid_2d(rows: usize, cols: usize) -> EdgeList {
+    let n = rows * cols;
+    let mut g = EdgeList::new(n, false);
+    let idx = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                g.add(idx(r, c), idx(r, c + 1));
+                g.add(idx(r, c + 1), idx(r, c));
+            }
+            if r + 1 < rows {
+                g.add(idx(r, c), idx(r + 1, c));
+                g.add(idx(r + 1, c), idx(r, c));
+            }
+        }
+    }
+    g
+}
+
+/// Barabási–Albert-style preferential attachment: each new vertex
+/// attaches `k` edges to existing vertices with probability
+/// proportional to degree. Produces power-law (skewed) degree
+/// distributions — the social-network stand-in.
+pub fn preferential_attachment(n: usize, k: usize, seed: u64) -> EdgeList {
+    assert!(n > k && k >= 1);
+    let mut rng = Rng::new(seed);
+    let mut g = EdgeList::new(n, true);
+    // Repeated-target list trick: sample proportional to degree.
+    let mut targets: Vec<VertexId> = Vec::with_capacity(2 * n * k);
+    // Seed clique among the first k+1 vertices.
+    for v in 0..=k {
+        for u in 0..v {
+            g.add(v as VertexId, u as VertexId);
+            targets.push(v as VertexId);
+            targets.push(u as VertexId);
+        }
+    }
+    for v in (k + 1)..n {
+        for _ in 0..k {
+            let t = targets[rng.next_below(targets.len() as u64) as usize];
+            g.add(v as VertexId, t);
+            targets.push(v as VertexId);
+            targets.push(t);
+        }
+    }
+    g
+}
+
+/// Watts–Strogatz-style ring lattice with rewiring: each vertex links
+/// to `k/2` clockwise neighbors; each edge rewired with probability
+/// `beta`. Low skew, tunable diameter — the bio-graph stand-in.
+pub fn small_world(n: usize, k: usize, beta: f64, seed: u64) -> EdgeList {
+    assert!(k % 2 == 0 && k < n);
+    let mut rng = Rng::new(seed);
+    let mut g = EdgeList::new(n, false);
+    for v in 0..n {
+        for j in 1..=(k / 2) {
+            let mut t = ((v + j) % n) as VertexId;
+            if rng.chance(beta) {
+                t = rng.next_below(n as u64) as VertexId;
+            }
+            g.add(v as VertexId, t);
+            g.add(t, v as VertexId);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::skewness;
+
+    #[test]
+    fn er_sizes() {
+        let g = erdos_renyi(1000, 5000, 1);
+        assert_eq!(g.num_vertices, 1000);
+        assert_eq!(g.num_edges(), 5000);
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = grid_2d(10, 10);
+        assert_eq!(g.num_vertices, 100);
+        // interior edges: 2 * rows*(cols-1) horizontals + ... doubled for symmetry
+        assert_eq!(g.num_edges(), 2 * (10 * 9 + 9 * 10));
+        let degs = g.out_degrees();
+        assert!(degs.iter().all(|&d| d >= 2 && d <= 4));
+    }
+
+    #[test]
+    fn pa_is_skewed_er_is_not() {
+        let pa = preferential_attachment(2000, 4, 2);
+        let er = erdos_renyi(2000, 8000, 2);
+        let sk_pa = skewness(&pa.in_degrees().iter().map(|&d| d as f64).collect::<Vec<_>>());
+        let sk_er = skewness(&er.in_degrees().iter().map(|&d| d as f64).collect::<Vec<_>>());
+        assert!(sk_pa > 3.0, "PA skew {sk_pa}");
+        assert!(sk_er < 1.0, "ER skew {sk_er}");
+    }
+
+    #[test]
+    fn small_world_regular_degree() {
+        let g = small_world(500, 4, 0.05, 3);
+        assert_eq!(g.num_edges(), 500 * 4); // 2 per vertex, symmetrized
+        let degs = g.out_degrees();
+        let sk = skewness(&degs.iter().map(|&d| d as f64).collect::<Vec<_>>());
+        assert!(sk.abs() < 2.0, "small-world skew {sk}");
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        assert_eq!(
+            erdos_renyi(100, 300, 9).edges,
+            erdos_renyi(100, 300, 9).edges
+        );
+        assert_eq!(
+            preferential_attachment(100, 3, 9).edges,
+            preferential_attachment(100, 3, 9).edges
+        );
+        assert_eq!(
+            small_world(100, 4, 0.1, 9).edges,
+            small_world(100, 4, 0.1, 9).edges
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! # graphmem
+//!
+//! Reproduction of *"Demystifying Memory Access Patterns of FPGA-Based
+//! Graph Processing Accelerators"* (Dann, Ritter, Fröning, 2021).
+//!
+//! The crate provides:
+//!
+//! * [`dram`] — a cycle-level, multi-standard (DDR3 / DDR4 / HBM) DRAM
+//!   timing simulator (a Ramulator-equivalent built from scratch) with
+//!   row hit/miss/conflict accounting and bandwidth-utilization stats.
+//! * [`graph`] — graph substrate: edge lists, (in-)CSR, the Graph500
+//!   R-MAT generator, synthetic stand-ins for the paper's twelve
+//!   benchmark graphs, and dataset property analysis (density, degree
+//!   skewness, …).
+//! * [`partition`] — the three partitioning schemes used by the studied
+//!   accelerators: horizontal, vertical, and interval-shard.
+//! * [`algo`] — the five graph problems (BFS, PR, WCC, SSSP, SpMV) as
+//!   value semantics plus golden reference executors for the paper's
+//!   three update-propagation schemes.
+//! * [`accel`] — memory-access-pattern models of the four accelerators:
+//!   AccuGraph, HitGraph, ForeGraph, ThunderGP, with every optimization
+//!   the paper ablates (prefetch/partition/shard skipping, edge
+//!   shuffling, stride mapping, edge sorting, update combining, update
+//!   filtering, chunk scheduling).
+//! * [`sim`] — the co-simulation driver marrying accelerator request
+//!   producers to the DRAM model, and the metric set of the paper
+//!   (MTEPS, MREPS, iterations, bytes/edge, …).
+//! * [`engine`] + [`runtime`] — the golden algorithm engine, available
+//!   as a pure-Rust implementation and as an AOT-compiled JAX/Pallas
+//!   artifact executed through PJRT (the `xla` crate). Python is only
+//!   ever used at build time.
+//! * [`coordinator`] + [`report`] — experiment registry covering every
+//!   figure and table of the paper's evaluation, sweep runner, and
+//!   table/figure formatters.
+
+pub mod accel;
+pub mod algo;
+pub mod coordinator;
+pub mod dram;
+pub mod engine;
+pub mod graph;
+pub mod partition;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

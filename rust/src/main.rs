@@ -1,0 +1,279 @@
+//! `graphmem` CLI — the L3 entrypoint.
+//!
+//! Subcommands:
+//!   list                         available experiments / datasets / accelerators
+//!   datasets                     Tab. 2-style dataset property table
+//!   run <accel> <graph> <prob>   one simulation (options: --dram, --channels, --no-opt)
+//!   report --exp <id>            regenerate a figure/table (options: --scope, --csv)
+//!   verify <graph> <prob>        golden-engine cross-check (native vs XLA/PJRT)
+//!
+//! Std-only argument parsing (the offline crate set has no clap).
+
+use anyhow::{anyhow, bail, Result};
+use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::golden::values_agree;
+use graphmem::algo::problem::{GraphProblem, ProblemKind};
+use graphmem::coordinator::{run_experiment, run_one, Experiment, Scope};
+use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
+use graphmem::graph::{datasets, properties::GraphProperties};
+use graphmem::report::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("list") => cmd_list(),
+        Some("datasets") => cmd_datasets(),
+        Some("run") => cmd_run(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
+        Some("report") => cmd_report(&args[1..]),
+        Some("verify") => cmd_verify(&args[1..]),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?} (try `graphmem help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "graphmem — reproduction of 'Demystifying Memory Access Patterns of \
+         FPGA-Based Graph Processing Accelerators'\n\n\
+         USAGE:\n  graphmem list\n  graphmem datasets\n  \
+         graphmem run <accel> <graph> <problem> [--dram ddr3|ddr4|hbm] [--channels N] [--no-opt]\n  \
+         graphmem trace <accel> <graph> <problem> --out <file>   (Ramulator-style request trace)\n  \
+         graphmem report --exp <id|all> [--scope quick|standard|full] [--csv]\n  \
+         graphmem verify <graph> <problem> [--max-iters N]\n\n\
+         accel: accugraph|foregraph|hitgraph|thundergp   problem: bfs|pr|wcc|sssp|spmv"
+    );
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments:");
+    for e in Experiment::all() {
+        println!("  {:<6} {}", e.id(), e.description());
+    }
+    println!("\naccelerators:");
+    for k in AcceleratorKind::all() {
+        println!(
+            "  {:<10} multi-channel={} weighted={}",
+            k.name(),
+            k.multi_channel(),
+            k.supports_weighted()
+        );
+    }
+    println!("\ndatasets: {}", datasets::dataset_names().join(" "));
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut t = Table::new(
+        "Tab. 2 — dataset stand-ins (scaled; paper sizes in parentheses)",
+        &[
+            "graph", "|V|", "|E|", "dir", "D_avg", "skew", "diam~", "SCC", "paper |V|",
+            "paper |E|", "scale",
+        ],
+    );
+    for &name in datasets::dataset_names() {
+        let spec = datasets::spec(name).unwrap();
+        let g = datasets::dataset(name).unwrap();
+        let p = GraphProperties::compute(&g);
+        t.row(vec![
+            name.to_string(),
+            graphmem::util::fmt_count(p.num_vertices as u64),
+            graphmem::util::fmt_count(p.num_edges as u64),
+            if p.directed { "yes" } else { "no" }.into(),
+            format!("{:.2}", p.avg_degree),
+            format!("{:.1}", p.degree_skewness),
+            p.diameter_estimate.to_string(),
+            format!("{:.2}", p.scc_ratio),
+            graphmem::util::fmt_count(spec.paper_vertices),
+            graphmem::util::fmt_count(spec.paper_edges),
+            format!("1/{}", spec.scale_factor),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let (accel, graph, problem) = match (args.first(), args.get(1), args.get(2)) {
+        (Some(a), Some(g), Some(p)) => (a, g, p),
+        _ => bail!("usage: graphmem run <accel> <graph> <problem> [options]"),
+    };
+    let kind = AcceleratorKind::parse(accel).ok_or_else(|| anyhow!("unknown accel {accel:?}"))?;
+    let problem =
+        ProblemKind::parse(problem).ok_or_else(|| anyhow!("unknown problem {problem:?}"))?;
+    let dram = flag_value(args, "--dram").unwrap_or("ddr4");
+    let channels: usize = flag_value(args, "--channels").unwrap_or("1").parse()?;
+    let cfg = if has_flag(args, "--no-opt") {
+        AcceleratorConfig::baseline()
+    } else {
+        AcceleratorConfig::all_optimizations()
+    };
+    let r = run_one(kind, graph, problem, dram, channels, &cfg)?;
+    println!("{}", r.summary());
+    println!(
+        "  cycles={} requests={} (r={} w={}) bytes={}",
+        r.cycles,
+        r.dram.requests(),
+        r.dram.reads,
+        r.dram.writes,
+        r.bytes_total
+    );
+    let (h, m, c) = r.row_mix();
+    println!(
+        "  row mix: {:.1}% hit / {:.1}% miss / {:.1}% conflict; refreshes={}",
+        100.0 * h,
+        100.0 * m,
+        100.0 * c,
+        r.dram.refreshes
+    );
+    println!(
+        "  iterations={} edges_read={} values_read={} values_written={} updates={} skipped={}/{}",
+        r.metrics.iterations,
+        r.metrics.edges_read,
+        r.metrics.values_read,
+        r.metrics.values_written,
+        r.metrics.updates_rw,
+        r.metrics.skipped,
+        r.metrics.skipped + r.metrics.processed,
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    use graphmem::accel::build;
+    use graphmem::dram::{ChannelMode, MemorySystem};
+
+    let (accel, graph, problem) = match (args.first(), args.get(1), args.get(2)) {
+        (Some(a), Some(g), Some(p)) => (a, g, p),
+        _ => bail!("usage: graphmem trace <accel> <graph> <problem> --out <file>"),
+    };
+    let out = flag_value(args, "--out").unwrap_or("trace.txt");
+    let kind = AcceleratorKind::parse(accel).ok_or_else(|| anyhow!("unknown accel {accel:?}"))?;
+    let problem =
+        ProblemKind::parse(problem).ok_or_else(|| anyhow!("unknown problem {problem:?}"))?;
+    let g = if problem.weighted() {
+        datasets::dataset_weighted(graph)
+    } else {
+        datasets::dataset(graph)
+    }
+    .ok_or_else(|| anyhow!("unknown dataset {graph:?}"))?;
+    let p = GraphProblem::new(problem, &g);
+    let cfg = AcceleratorConfig::all_optimizations();
+    let mode = if kind.multi_channel() {
+        ChannelMode::Region
+    } else {
+        ChannelMode::InterleaveLine
+    };
+    let spec = graphmem::coordinator::runner::dram_spec(
+        flag_value(args, "--dram").unwrap_or("ddr4"),
+        1,
+    )?;
+    let mut mem = MemorySystem::with_mode(spec, mode);
+    mem.enable_trace();
+    let mut a = build(kind, &g, &cfg);
+    let r = a.run(&p, &mut mem);
+    let f = std::fs::File::create(out)?;
+    let n = mem.write_trace(std::io::BufWriter::new(f))?;
+    println!(
+        "wrote {n} requests to {out} ({} iterations, sim {:.5}s)",
+        r.metrics.iterations, r.seconds
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> Result<()> {
+    let exp_id = flag_value(args, "--exp").unwrap_or("all");
+    let scope = Scope::parse(flag_value(args, "--scope").unwrap_or("quick"))
+        .ok_or_else(|| anyhow!("bad --scope (quick|standard|full)"))?;
+    let csv = has_flag(args, "--csv");
+    let experiments: Vec<Experiment> = if exp_id == "all" {
+        Experiment::all().to_vec()
+    } else {
+        vec![Experiment::parse(exp_id).ok_or_else(|| anyhow!("unknown experiment {exp_id:?}"))?]
+    };
+    for exp in experiments {
+        eprintln!("running {} ({}) ...", exp.id(), exp.description());
+        let tables = run_experiment(exp, scope)?;
+        for t in tables {
+            if csv {
+                println!("# {}", t.title);
+                println!("{}", t.to_csv());
+            } else {
+                println!("{}", t.render());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &[String]) -> Result<()> {
+    let (graph, problem) = match (args.first(), args.get(1)) {
+        (Some(g), Some(p)) => (g, p),
+        _ => bail!("usage: graphmem verify <graph> <problem>"),
+    };
+    let problem =
+        ProblemKind::parse(problem).ok_or_else(|| anyhow!("unknown problem {problem:?}"))?;
+    let max_iters: u32 = flag_value(args, "--max-iters").unwrap_or("10000").parse()?;
+    let g = if problem.weighted() {
+        datasets::dataset_weighted(graph)
+    } else {
+        datasets::dataset(graph)
+    }
+    .ok_or_else(|| anyhow!("unknown dataset {graph:?}"))?;
+    let p = GraphProblem::new(problem, &g);
+
+    let mut native = NativeEngine::new();
+    let t0 = std::time::Instant::now();
+    let nres = native.run(&p, &g, max_iters)?;
+    let native_t = t0.elapsed();
+    println!(
+        "native: {} iterations in {:.3}s",
+        nres.iterations,
+        native_t.as_secs_f64()
+    );
+
+    let mut xla = XlaEngine::from_repo_root()?;
+    if !xla.fits(problem, &g) {
+        println!(
+            "xla: graph (n={}, m={}) exceeds artifact buckets — native-only verification done",
+            g.num_vertices,
+            g.num_edges()
+        );
+        return Ok(());
+    }
+    let t1 = std::time::Instant::now();
+    let xres = xla.run(&p, &g, max_iters)?;
+    let xla_t = t1.elapsed();
+    println!(
+        "xla:    {} iterations in {:.3}s (PJRT, AOT Pallas kernel)",
+        xres.iterations,
+        xla_t.as_secs_f64()
+    );
+    if xres.iterations == nres.iterations && values_agree(problem, &nres.values, &xres.values) {
+        println!("VERIFY OK — native and XLA engines agree");
+        Ok(())
+    } else {
+        bail!("VERIFY FAILED — engines diverge");
+    }
+}

@@ -1,0 +1,176 @@
+//! Horizontal partitioning: "dividing up the vertex set into equal
+//! intervals and letting each partition contain the outgoing edges of
+//! one interval" (§3.1).
+//!
+//! * HitGraph uses a horizontally partitioned **edge list**: partition
+//!   `q` holds the edges whose *source* lies in interval `q`.
+//! * AccuGraph uses a horizontally partitioned **in-CSR** of the
+//!   inverted graph: partition `q` holds, for *every* destination
+//!   vertex, the in-neighbors that lie in interval `q` — which is why
+//!   each AccuGraph partition needs `n + 1` CSR pointers (insight 4).
+
+use super::Interval;
+use crate::graph::edgelist::{Edge, EdgeList};
+
+/// Horizontally partitioned edge list (HitGraph flavor).
+#[derive(Clone, Debug)]
+pub struct HorizontalPartitioning {
+    pub intervals: Vec<Interval>,
+    /// Edges per partition (source in the interval).
+    pub edges: Vec<Vec<Edge>>,
+}
+
+impl HorizontalPartitioning {
+    pub fn new(g: &EdgeList, cap: usize) -> Self {
+        let intervals = super::intervals(g.num_vertices, cap);
+        let per = intervals.first().map_or(1, |i| i.len().max(1));
+        let mut edges: Vec<Vec<Edge>> = vec![Vec::new(); intervals.len()];
+        for e in &g.edges {
+            let q = e.src as usize / per;
+            edges[q].push(*e);
+        }
+        HorizontalPartitioning { intervals, edges }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.intervals.len()
+    }
+
+    /// Sort each partition's edges by destination (HitGraph `Sort`
+    /// optimization: gather-phase write locality + update combining).
+    pub fn sort_by_dst(&mut self) {
+        for part in &mut self.edges {
+            part.sort_by_key(|e| (e.dst, e.src));
+        }
+    }
+
+    pub fn total_edges(&self) -> usize {
+        self.edges.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// Horizontally partitioned in-CSR (AccuGraph flavor): one CSR per
+/// partition over all `n` destinations, neighbors restricted to
+/// sources in the partition interval.
+#[derive(Clone, Debug)]
+pub struct HorizontalInCsr {
+    pub intervals: Vec<Interval>,
+    /// Per partition: `n + 1` offsets.
+    pub offsets: Vec<Vec<u32>>,
+    /// Per partition: in-neighbors (sources) of each destination.
+    pub neighbors: Vec<Vec<u32>>,
+}
+
+impl HorizontalInCsr {
+    pub fn new(g: &EdgeList, cap: usize) -> Self {
+        let n = g.num_vertices;
+        let intervals = super::intervals(n, cap);
+        let per = intervals.first().map_or(1, |i| i.len().max(1));
+        let k = intervals.len();
+        let mut counts = vec![vec![0u32; n + 1]; k];
+        for e in &g.edges {
+            let q = e.src as usize / per;
+            counts[q][e.dst as usize + 1] += 1;
+        }
+        let mut offsets = Vec::with_capacity(k);
+        let mut neighbors = Vec::with_capacity(k);
+        for q in 0..k {
+            for i in 0..n {
+                counts[q][i + 1] += counts[q][i];
+            }
+            let offs = counts[q].clone();
+            let total = *offs.last().unwrap() as usize;
+            neighbors.push(vec![0u32; total]);
+            offsets.push(offs);
+        }
+        let mut cursor: Vec<Vec<u32>> = offsets.clone();
+        for e in &g.edges {
+            let q = e.src as usize / per;
+            let pos = cursor[q][e.dst as usize] as usize;
+            neighbors[q][pos] = e.src;
+            cursor[q][e.dst as usize] += 1;
+        }
+        HorizontalInCsr {
+            intervals,
+            offsets,
+            neighbors,
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.intervals.len()
+    }
+
+    /// In-neighbors of `dst` from partition `q`.
+    pub fn neighbors_of(&self, q: usize, dst: u32) -> &[u32] {
+        let s = self.offsets[q][dst as usize] as usize;
+        let e = self.offsets[q][dst as usize + 1] as usize;
+        &self.neighbors[q][s..e]
+    }
+
+    /// Edges stored in partition `q`.
+    pub fn partition_edges(&self, q: usize) -> usize {
+        self.neighbors[q].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic::erdos_renyi;
+
+    #[test]
+    fn edge_conservation() {
+        let g = erdos_renyi(1000, 5000, 1);
+        let p = HorizontalPartitioning::new(&g, 256);
+        assert_eq!(p.total_edges(), 5000);
+        assert_eq!(p.num_partitions(), 4); // 1000/256 -> 4 intervals of 250
+        // every edge's source is inside its interval
+        for (q, part) in p.edges.iter().enumerate() {
+            for e in part {
+                assert!(p.intervals[q].contains(e.src));
+            }
+        }
+    }
+
+    #[test]
+    fn single_partition_small_graph() {
+        let g = erdos_renyi(100, 300, 2);
+        let p = HorizontalPartitioning::new(&g, 16384);
+        assert_eq!(p.num_partitions(), 1);
+    }
+
+    #[test]
+    fn in_csr_partition_semantics() {
+        // edges: 0->2, 1->2, 3->2 with cap 2 -> intervals [0,2) [2,4)
+        let mut g = EdgeList::new(4, true);
+        g.add(0, 2);
+        g.add(1, 2);
+        g.add(3, 2);
+        let p = HorizontalInCsr::new(&g, 2);
+        assert_eq!(p.num_partitions(), 2);
+        assert_eq!(p.neighbors_of(0, 2), &[0, 1]); // sources in [0,2)
+        assert_eq!(p.neighbors_of(1, 2), &[3]); // sources in [2,4)
+        assert_eq!(p.neighbors_of(0, 0), &[] as &[u32]);
+        assert_eq!(p.partition_edges(0) + p.partition_edges(1), 3);
+    }
+
+    #[test]
+    fn in_csr_pointer_array_is_n_plus_1_per_partition() {
+        let g = erdos_renyi(500, 2000, 3);
+        let p = HorizontalInCsr::new(&g, 100);
+        for offs in &p.offsets {
+            assert_eq!(offs.len(), 501); // insight 4: n + 1 per partition
+        }
+    }
+
+    #[test]
+    fn sort_by_dst_orders_within_partition() {
+        let g = erdos_renyi(200, 1000, 4);
+        let mut p = HorizontalPartitioning::new(&g, 64);
+        p.sort_by_dst();
+        for part in &p.edges {
+            assert!(part.windows(2).all(|w| w[0].dst <= w[1].dst));
+        }
+    }
+}

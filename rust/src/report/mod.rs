@@ -1,0 +1,6 @@
+//! Report generation: aligned text tables, CSV emit, and the figure
+//! series formatters used by the bench harness and the CLI.
+
+pub mod table;
+
+pub use table::Table;

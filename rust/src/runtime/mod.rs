@@ -1,0 +1,208 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python never runs on this path — the artifacts are self-contained
+//! HLO modules compiled once per (problem, size bucket). The loader
+//! discovers them through `artifacts/manifest.txt` and caches compiled
+//! executables.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub problem: String,
+    pub bucket: String,
+    /// Padded vertex count.
+    pub n_pad: usize,
+    /// Padded edge count.
+    pub m_pad: usize,
+    pub file: PathBuf,
+}
+
+/// The PJRT runtime: CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    entries: Vec<ArtifactEntry>,
+    cache: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (must contain
+    /// `manifest.txt`; run `make artifacts` to produce it).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifact_dir.as_ref();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest.display()))?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("malformed manifest line: {line:?}");
+            }
+            entries.push(ArtifactEntry {
+                problem: parts[0].to_string(),
+                bucket: parts[1].to_string(),
+                n_pad: parts[2].parse().context("n_pad")?,
+                m_pad: parts[3].parse().context("m_pad")?,
+                file: dir.join(parts[4]),
+            });
+        }
+        if entries.is_empty() {
+            bail!("empty artifact manifest {}", manifest.display());
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client,
+            entries,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn from_repo_root() -> Result<Runtime> {
+        Self::new("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Smallest bucket fitting (n, m) for a problem.
+    pub fn pick_bucket(&self, problem: &str, n: usize, m: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.problem == problem && e.n_pad >= n && e.m_pad >= m)
+            .min_by_key(|e| (e.n_pad, e.m_pad))
+    }
+
+    /// Largest available bucket for a problem (for capacity queries).
+    pub fn max_bucket(&self, problem: &str) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.problem == problem)
+            .max_by_key(|e| (e.n_pad, e.m_pad))
+    }
+
+    /// Load + compile (cached) the artifact for (problem, n, m).
+    pub fn executable(
+        &mut self,
+        problem: &str,
+        n: usize,
+        m: usize,
+    ) -> Result<(&xla::PjRtLoadedExecutable, usize, usize)> {
+        let entry = self
+            .pick_bucket(problem, n, m)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact bucket fits problem={problem} n={n} m={m} \
+                     (largest: {:?})",
+                    self.max_bucket(problem).map(|e| (e.n_pad, e.m_pad))
+                )
+            })?
+            .clone();
+        let key = (problem.to_string(), entry.n_pad, entry.m_pad);
+        if !self.cache.contains_key(&key) {
+            let path = entry
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parse HLO text {path}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path}: {e}"))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok((&self.cache[&key], entry.n_pad, entry.m_pad))
+    }
+
+    /// Execute one iteration step. Inputs must already be padded to
+    /// the bucket shape returned by [`Runtime::executable`]. Returns
+    /// (new_values, changed).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_step(
+        &mut self,
+        problem: &str,
+        vals: &[f32],
+        src: &[i32],
+        dst: &[i32],
+        w: &[f32],
+        mask: &[f32],
+        aux: &[f32],
+        n_real: f32,
+    ) -> Result<(Vec<f32>, bool)> {
+        let n_pad = vals.len();
+        let m_pad = src.len();
+        let (exe, en, em) = self.executable(problem, n_pad, m_pad)?;
+        if en != n_pad || em != m_pad {
+            bail!("inputs not padded to bucket: have ({n_pad},{m_pad}), bucket ({en},{em})");
+        }
+        let lv = xla::Literal::vec1(vals);
+        let ls = xla::Literal::vec1(src);
+        let ld = xla::Literal::vec1(dst);
+        let lw = xla::Literal::vec1(w);
+        let lm = xla::Literal::vec1(mask);
+        let la = xla::Literal::vec1(aux);
+        let ln = xla::Literal::scalar(n_real);
+        let result = exe
+            .execute::<xla::Literal>(&[lv, ls, ld, lw, lm, la, ln])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True: (new_vals, changed).
+        let mut tuple = result.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        if tuple.len() != 2 {
+            bail!("expected 2-tuple from step, got {}", tuple.len());
+        }
+        let changed_lit = tuple.pop().unwrap();
+        let new_vals_lit = tuple.pop().unwrap();
+        let new_vals = new_vals_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("values: {e}"))?;
+        let changed = changed_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("changed: {e}"))?;
+        Ok((new_vals, changed.first().copied().unwrap_or(0.0) > 0.5))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/xla_engine.rs
+    // (integration scope). Here: manifest parsing failure modes.
+
+    #[test]
+    fn missing_dir_errors() {
+        let err = match Runtime::new("/nonexistent/artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error for missing artifact dir"),
+        };
+        assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        let dir = std::env::temp_dir().join("graphmem_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "bad line here\n").unwrap();
+        assert!(Runtime::new(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "# only comments\n").unwrap();
+        assert!(Runtime::new(&dir).is_err());
+    }
+}

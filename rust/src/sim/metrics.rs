@@ -1,0 +1,179 @@
+//! The paper's metric set: execution time, MTEPS/MREPS (§4.1), the
+//! four critical performance metrics of Fig. 9, and the DRAM stat
+//! roll-up of Fig. 11(b).
+
+use crate::dram::DramStats;
+
+/// Raw counters accumulated by an accelerator model during a run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Iterations executed (incl. the final no-change pass).
+    pub iterations: u32,
+    /// Edge primitives read, total (incl. padding / null edges).
+    pub edges_read: u64,
+    /// Vertex value elements read, total (prefetches + random reads).
+    pub values_read: u64,
+    /// Vertex value elements written.
+    pub values_written: u64,
+    /// Update records read + written (2-phase systems).
+    pub updates_rw: u64,
+    /// Partitions / shards skipped by skip optimizations.
+    pub skipped: u64,
+    /// Partitions / shards processed.
+    pub processed: u64,
+}
+
+/// Full result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub accelerator: &'static str,
+    pub problem: &'static str,
+    /// `|E|` of the input graph (for MTEPS).
+    pub graph_edges: u64,
+    /// Makespan in DRAM cycles and seconds.
+    pub cycles: u64,
+    pub seconds: f64,
+    pub metrics: RunMetrics,
+    pub dram: DramStats,
+    /// Total bytes moved (requests x 64 B).
+    pub bytes_total: u64,
+    /// Aggregate data-bus utilization (Fig. 11(b)).
+    pub bus_utilization: f64,
+    pub channels: usize,
+}
+
+impl SimReport {
+    /// Graph500 MTEPS: `|E| / t_exec` (§4.1) in millions.
+    pub fn mteps(&self) -> f64 {
+        if self.seconds == 0.0 {
+            return 0.0;
+        }
+        self.graph_edges as f64 / self.seconds / 1e6
+    }
+
+    /// MREPS: edges *read* over execution time (raw edge processing
+    /// performance; what most accelerator articles report).
+    pub fn mreps(&self) -> f64 {
+        if self.seconds == 0.0 {
+            return 0.0;
+        }
+        self.metrics.edges_read as f64 / self.seconds / 1e6
+    }
+
+    /// Bytes read/written per edge read (Fig. 9(b)).
+    pub fn bytes_per_edge(&self) -> f64 {
+        if self.metrics.edges_read == 0 {
+            return 0.0;
+        }
+        self.bytes_total as f64 / self.metrics.edges_read as f64
+    }
+
+    /// Values read per iteration (Fig. 9(c)).
+    pub fn values_read_per_iter(&self) -> f64 {
+        if self.metrics.iterations == 0 {
+            return 0.0;
+        }
+        self.metrics.values_read as f64 / self.metrics.iterations as f64
+    }
+
+    /// Edges read per iteration (Fig. 9(d)).
+    pub fn edges_read_per_iter(&self) -> f64 {
+        if self.metrics.iterations == 0 {
+            return 0.0;
+        }
+        self.metrics.edges_read as f64 / self.metrics.iterations as f64
+    }
+
+    /// Row-buffer outcome fractions (hits, misses, conflicts).
+    pub fn row_mix(&self) -> (f64, f64, f64) {
+        let n = self.dram.requests().max(1) as f64;
+        (
+            self.dram.row_hits as f64 / n,
+            self.dram.row_misses as f64 / n,
+            self.dram.row_conflicts as f64 / n,
+        )
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<10} {:<5} t={:.4}s MTEPS={:8.1} MREPS={:8.1} iters={} B/edge={:.2} util={:.1}%",
+            self.accelerator,
+            self.problem,
+            self.seconds,
+            self.mteps(),
+            self.mreps(),
+            self.metrics.iterations,
+            self.bytes_per_edge(),
+            100.0 * self.bus_utilization,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> SimReport {
+        SimReport {
+            accelerator: "Test",
+            problem: "BFS",
+            graph_edges: 1_000_000,
+            cycles: 1000,
+            seconds: 0.5,
+            metrics: RunMetrics {
+                iterations: 10,
+                edges_read: 2_000_000,
+                values_read: 500_000,
+                values_written: 100_000,
+                updates_rw: 0,
+                skipped: 3,
+                processed: 17,
+            },
+            dram: DramStats {
+                reads: 700,
+                writes: 300,
+                row_hits: 600,
+                row_misses: 100,
+                row_conflicts: 300,
+                ..Default::default()
+            },
+            bytes_total: 64_000_000,
+            bus_utilization: 0.42,
+            channels: 1,
+        }
+    }
+
+    #[test]
+    fn mteps_definition() {
+        let r = report();
+        assert!((r.mteps() - 2.0).abs() < 1e-9); // 1e6 edges / 0.5 s / 1e6
+        assert!((r.mreps() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig9_metrics() {
+        let r = report();
+        assert!((r.bytes_per_edge() - 32.0).abs() < 1e-9);
+        assert!((r.values_read_per_iter() - 50_000.0).abs() < 1e-9);
+        assert!((r.edges_read_per_iter() - 200_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_mix_sums_to_one() {
+        let r = report();
+        let (h, m, c) = r.row_mix();
+        assert!((h + m + c - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let mut r = report();
+        r.seconds = 0.0;
+        r.metrics.edges_read = 0;
+        r.metrics.iterations = 0;
+        assert_eq!(r.mteps(), 0.0);
+        assert_eq!(r.bytes_per_edge(), 0.0);
+        assert_eq!(r.values_read_per_iter(), 0.0);
+    }
+}

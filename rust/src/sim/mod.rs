@@ -1,0 +1,8 @@
+//! Co-simulation: accelerator request streams against the DRAM model,
+//! plus the paper's metric set.
+
+pub mod driver;
+pub mod metrics;
+
+pub use driver::{run_phase, PhaseTelemetry};
+pub use metrics::{RunMetrics, SimReport};

@@ -1,0 +1,53 @@
+//! Small self-contained utilities: deterministic PRNG, statistics,
+//! number formatting, and a seeded property-test driver (the offline
+//! crate registry has neither `rand` nor `proptest`).
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Format a float with engineering-style precision used in report tables.
+pub fn fmt_f64(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Format a large count with thousands separators (`1_468_400_000` -> "1,468.4M").
+pub fn fmt_count(v: u64) -> String {
+    if v >= 1_000_000_000 {
+        format!("{:.1}B", v as f64 / 1e9)
+    } else if v >= 1_000_000 {
+        format!("{:.1}M", v as f64 / 1e6)
+    } else if v >= 1_000 {
+        format!("{:.1}K", v as f64 / 1e3)
+    } else {
+        v.to_string()
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn fmt_count_ranges() {
+        assert_eq!(fmt_count(12), "12");
+        assert_eq!(fmt_count(1_200), "1.2K");
+        assert_eq!(fmt_count(69_000_000), "69.0M");
+        assert_eq!(fmt_count(1_468_400_000), "1.5B");
+    }
+}

@@ -1,0 +1,68 @@
+//! A tiny seeded property-test driver.
+//!
+//! The offline registry has no `proptest`, so this module provides the
+//! 20% we need: run a property over many deterministically-seeded
+//! random cases, and on failure report the *case seed* so the exact
+//! input can be replayed in a debugger. Used by module unit tests and
+//! by `rust/tests/properties.rs`.
+
+use super::rng::Rng;
+
+/// Run `cases` property evaluations. Each case gets its own [`Rng`]
+/// derived from (`seed`, case index). The property returns
+/// `Err(message)` to signal a failure; the driver panics with the seed
+/// and case index so the case is reproducible.
+pub fn check<F>(seed: u64, cases: u32, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (0xA076_1D64_78BD_642F_u64.wrapping_mul(case as u64 + 1));
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed (root seed {seed:#x}, case {case}, case seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion macro for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check(1, 50, |rng| {
+            let x = rng.next_below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn panics_with_seed_on_failure() {
+        check(2, 50, |rng| {
+            let x = rng.next_below(10);
+            if x != 7 {
+                Ok(())
+            } else {
+                Err("hit 7".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,108 @@
+//! Statistics helpers used by graph property analysis (Tab. 2 / Fig. 10
+//! of the paper) and by the bench harness.
+
+/// Arithmetic mean. Returns 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Pearson's moment coefficient of skewness `E[((D - mu)/sigma)^3]` —
+/// the skewness measure the paper uses for degree distributions (§4.3).
+pub fn skewness(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let s = std_dev(xs);
+    if s == 0.0 {
+        return 0.0;
+    }
+    xs.iter().map(|x| ((x - m) / s).powi(3)).sum::<f64>() / xs.len() as f64
+}
+
+/// Percentage error `e = 100 * |s - t| / t` as defined in §1 of the paper.
+pub fn pct_error(simulated: f64, target: f64) -> f64 {
+    if target == 0.0 {
+        return 0.0;
+    }
+    100.0 * (simulated - target).abs() / target
+}
+
+/// Geometric mean (for speedup aggregation). Ignores non-positive entries.
+pub fn geo_mean(xs: &[f64]) -> f64 {
+    let pos: Vec<f64> = xs.iter().copied().filter(|&x| x > 0.0).collect();
+    if pos.is_empty() {
+        return 0.0;
+    }
+    (pos.iter().map(|x| x.ln()).sum::<f64>() / pos.len() as f64).exp()
+}
+
+/// Median (of a copy; input left untouched).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((std_dev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewness_symmetric_is_zero() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!(skewness(&xs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewness_right_tail_positive() {
+        let xs = [1.0, 1.0, 1.0, 1.0, 100.0];
+        assert!(skewness(&xs) > 1.0);
+    }
+
+    #[test]
+    fn pct_error_matches_definition() {
+        assert!((pct_error(0.8, 1.0) - 20.0).abs() < 1e-12);
+        assert!((pct_error(1.2, 1.0) - 20.0).abs() < 1e-12);
+        assert_eq!(pct_error(5.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn geo_mean_of_speedups() {
+        assert!((geo_mean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geo_mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+}

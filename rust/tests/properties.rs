@@ -1,0 +1,296 @@
+//! Seeded property tests (via `graphmem::util::proptest`) over the
+//! simulator's core invariants: DRAM accounting, partitioning
+//! conservation laws, golden-algorithm fixpoints, phase-driver
+//! completion, and accelerator/golden agreement on random graphs.
+
+use graphmem::accel::stream::{seq_lines, LineStream, Merge, Phase, StreamClass};
+use graphmem::accel::{build, AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::golden::{run_golden, values_agree, Propagation};
+use graphmem::algo::problem::{GraphProblem, ProblemKind};
+use graphmem::dram::{ChannelMode, DramSpec, MemKind, MemRequest, MemorySystem};
+use graphmem::graph::edgelist::EdgeList;
+use graphmem::graph::properties::bfs_levels;
+use graphmem::graph::Csr;
+use graphmem::partition::interval_shard::{stride_permutation, IntervalShardPartitioning};
+use graphmem::partition::{HorizontalPartitioning, VerticalPartitioning};
+use graphmem::sim::run_phase;
+use graphmem::util::proptest::check;
+use graphmem::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng, max_n: u64, max_m: u64) -> EdgeList {
+    let n = rng.range(2, max_n) as usize;
+    let m = rng.range(1, max_m) as usize;
+    let mut g = EdgeList::new(n, true);
+    for _ in 0..m {
+        g.add(rng.next_below(n as u64) as u32, rng.next_below(n as u64) as u32);
+    }
+    g
+}
+
+// ---------------------------------------------------------------------------
+// DRAM invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dram_every_request_completes_once() {
+    check(0xD1, 30, |rng| {
+        let channels = 1 + rng.next_below(4) as usize;
+        let spec = DramSpec::ddr4_2400(channels);
+        let mut mem = MemorySystem::new(spec);
+        let n = 1 + rng.next_below(500);
+        let span = spec.channel_bytes * channels as u64 / 64;
+        for tag in 0..n {
+            mem.enqueue(
+                MemRequest {
+                    addr: rng.next_below(span) * 64,
+                    kind: if rng.chance(0.3) { MemKind::Write } else { MemKind::Read },
+                    tag,
+                },
+                rng.next_below(1000),
+            );
+        }
+        let mut seen = vec![false; n as usize];
+        while let Some(t) = mem.service_one() {
+            if seen[t.tag as usize] {
+                return Err(format!("tag {} completed twice", t.tag));
+            }
+            seen[t.tag as usize] = true;
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err("request lost".into());
+        }
+        let s = mem.stats();
+        if s.row_hits + s.row_misses + s.row_conflicts != s.requests() {
+            return Err("row outcome accounting broken".into());
+        }
+        if s.requests() != n {
+            return Err(format!("requests {} != {}", s.requests(), n));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dram_latency_at_least_cas_plus_burst() {
+    check(0xD2, 20, |rng| {
+        let spec = DramSpec::ddr3_1600(1, 1);
+        let mut mem = MemorySystem::new(spec);
+        let arrival = rng.next_below(10_000);
+        mem.enqueue(
+            MemRequest {
+                addr: rng.next_below(1 << 20) * 64,
+                kind: MemKind::Read,
+                tag: 0,
+            },
+            arrival,
+        );
+        let t = mem.service_one().unwrap();
+        let min = spec.speed.cl + spec.speed.burst;
+        if t.done_at < arrival + min {
+            return Err(format!("done {} < arrival {} + {}", t.done_at, arrival, min));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Partitioning conservation laws
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_partitioners_conserve_edges() {
+    check(0x9A, 25, |rng| {
+        let g = random_graph(rng, 3000, 12_000);
+        let cap = 1 + rng.next_below(g.num_vertices as u64) as usize;
+        let h = HorizontalPartitioning::new(&g, cap);
+        if h.total_edges() != g.num_edges() {
+            return Err("horizontal lost edges".into());
+        }
+        let channels = 1 + rng.next_below(4) as usize;
+        let v = VerticalPartitioning::new(&g, cap, channels);
+        if v.total_edges() != g.num_edges() {
+            return Err("vertical lost edges".into());
+        }
+        let interval = 1 + rng.next_below(4096) as usize;
+        let is = IntervalShardPartitioning::new(&g, interval);
+        if is.total_edges() != g.num_edges() {
+            return Err("interval-shard lost edges".into());
+        }
+        // shard membership: globalize round-trips into the intervals
+        for (i, row) in is.shards.iter().enumerate() {
+            for (j, shard) in row.iter().enumerate() {
+                for &ce in shard.iter().take(5) {
+                    let (s, d) = is.globalize(i, j, ce);
+                    if !is.intervals[i].contains(s) || !is.intervals[j].contains(d) {
+                        return Err("shard membership violated".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stride_permutation_bijective() {
+    check(0x9B, 50, |rng| {
+        let n = 1 + rng.next_below(10_000) as usize;
+        let q = 1 + rng.next_below(64) as usize;
+        let perm = stride_permutation(n, q);
+        let mut seen = vec![false; n];
+        for &x in &perm {
+            if x as usize >= n || seen[x as usize] {
+                return Err(format!("not a bijection at {x} (n={n}, q={q})"));
+            }
+            seen[x as usize] = true;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Golden algorithm invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_immediate_and_two_phase_agree_on_fixpoint() {
+    check(0xA1, 15, |rng| {
+        let g = random_graph(rng, 400, 2000);
+        for kind in [ProblemKind::Bfs, ProblemKind::Wcc] {
+            let p = GraphProblem::new(kind, &g);
+            let a = run_golden(&p, &g, Propagation::TwoPhase);
+            let b = run_golden(&p, &g, Propagation::Immediate);
+            if !values_agree(kind, &a.values, &b.values) {
+                return Err(format!("{kind:?} fixpoints diverge"));
+            }
+            if b.iterations > a.iterations {
+                return Err(format!(
+                    "{kind:?} immediate took more iterations ({} > {})",
+                    b.iterations, a.iterations
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bfs_golden_matches_bfs_levels() {
+    check(0xA2, 15, |rng| {
+        let g = random_graph(rng, 500, 3000);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let res = run_golden(&p, &g, Propagation::TwoPhase);
+        let levels = bfs_levels(&Csr::from_edges(&g), p.root);
+        for v in 0..g.num_vertices {
+            let want = if levels[v] == u32::MAX {
+                graphmem::algo::problem::INF
+            } else {
+                levels[v] as f32
+            };
+            if res.values[v] != want {
+                return Err(format!("vertex {v}: {} != {want}", res.values[v]));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Phase driver
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_driver_completes_every_stream_shape() {
+    check(0xB1, 25, |rng| {
+        let mut mem = MemorySystem::new(DramSpec::ddr4_2400(1));
+        // random independent parent + chained child with random fanout
+        let parent_lines = 1 + rng.next_below(64);
+        let parent = LineStream::independent(
+            StreamClass::Edges,
+            MemKind::Read,
+            seq_lines(rng.next_below(1 << 28) * 64, parent_lines * 64),
+        );
+        let mut fanout = Vec::new();
+        let mut child_total = 0u64;
+        for _ in 0..parent_lines {
+            let f = rng.next_below(4) as u32;
+            fanout.push(f);
+            child_total += f as u64;
+        }
+        let child = LineStream::chained(
+            StreamClass::Writes,
+            MemKind::Write,
+            seq_lines(rng.next_below(1 << 28) * 64, child_total.max(1) * 64)
+                [..child_total as usize]
+                .to_vec(),
+            0,
+            fanout,
+        );
+        let window = 1 + rng.next_below(64) as usize;
+        let merge = if rng.chance(0.5) {
+            Merge::rr([0, 1])
+        } else {
+            Merge::prio([1, 0])
+        };
+        let phase = Phase {
+            streams: vec![parent, child],
+            merge,
+            window,
+        };
+        let t = run_phase(&mut mem, &phase, rng.next_below(100_000));
+        if t.requests != parent_lines + child_total {
+            return Err(format!(
+                "driver lost requests: {} != {}",
+                t.requests,
+                parent_lines + child_total
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Accelerators vs golden on random graphs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_accelerators_converge_consistently() {
+    check(0xC1, 6, |rng| {
+        let g = random_graph(rng, 1500, 8000);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let two = run_golden(&p, &g, Propagation::TwoPhase);
+        let cfg = AcceleratorConfig::all_optimizations();
+        for kind in AcceleratorKind::all() {
+            let mode = if kind.multi_channel() {
+                ChannelMode::Region
+            } else {
+                ChannelMode::InterleaveLine
+            };
+            let mut accel = build(kind, &g, &cfg);
+            let mut mem = MemorySystem::with_mode(DramSpec::ddr4_2400(1), mode);
+            let r = accel.run(&p, &mut mem);
+            match kind {
+                AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp => {
+                    if r.metrics.iterations != two.iterations {
+                        return Err(format!(
+                            "{kind:?}: {} != golden {}",
+                            r.metrics.iterations, two.iterations
+                        ));
+                    }
+                }
+                _ => {
+                    if r.metrics.iterations > two.iterations {
+                        return Err(format!(
+                            "{kind:?}: immediate {} > two-phase {}",
+                            r.metrics.iterations, two.iterations
+                        ));
+                    }
+                }
+            }
+            if r.dram.row_hits + r.dram.row_misses + r.dram.row_conflicts != r.dram.requests() {
+                return Err(format!("{kind:?}: row accounting broken"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,114 @@
+//! Cross-layer integration: the AOT-compiled JAX/Pallas artifacts,
+//! loaded and executed from Rust through PJRT, must agree with the
+//! pure-Rust native engine on every problem.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so plain
+//! `cargo test` works before the first build).
+
+use graphmem::algo::golden::values_agree;
+use graphmem::algo::problem::{GraphProblem, ProblemKind};
+use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
+use graphmem::graph::edgelist::EdgeList;
+use graphmem::graph::rmat::{generate, RmatParams};
+use graphmem::graph::synthetic::{erdos_renyi, grid_2d};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine_or_skip() -> Option<XlaEngine> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaEngine::new(graphmem::runtime::Runtime::new(dir).expect("runtime")))
+}
+
+fn check_agreement(g: &EdgeList, kind: ProblemKind, xla: &mut XlaEngine) {
+    let p = GraphProblem::new(kind, g);
+    let mut native = NativeEngine::new();
+    let want = native.run(&p, g, 10_000).expect("native");
+    let got = xla.run(&p, g, 10_000).expect("xla");
+    assert_eq!(got.iterations, want.iterations, "{kind:?} iterations");
+    assert!(
+        values_agree(kind, &want.values, &got.values),
+        "{kind:?} values diverge (n={}, m={})",
+        g.num_vertices,
+        g.num_edges()
+    );
+}
+
+#[test]
+fn xla_matches_native_small_er() {
+    let Some(mut xla) = engine_or_skip() else { return };
+    let g = erdos_renyi(500, 4000, 11);
+    for kind in [ProblemKind::Bfs, ProblemKind::PageRank, ProblemKind::Wcc] {
+        check_agreement(&g, kind, &mut xla);
+    }
+}
+
+#[test]
+fn xla_matches_native_weighted() {
+    let Some(mut xla) = engine_or_skip() else { return };
+    let g = erdos_renyi(400, 3000, 13).with_random_weights(7, 16.0);
+    for kind in [ProblemKind::Sssp, ProblemKind::SpMV] {
+        check_agreement(&g, kind, &mut xla);
+    }
+}
+
+#[test]
+fn xla_matches_native_rmat_medium_bucket() {
+    let Some(mut xla) = engine_or_skip() else { return };
+    // forces the 4096x32768 bucket
+    let g = generate(RmatParams::graph500(11, 12, 5));
+    assert!(g.num_vertices > 1024);
+    check_agreement(&g, ProblemKind::Bfs, &mut xla);
+    check_agreement(&g, ProblemKind::PageRank, &mut xla);
+}
+
+#[test]
+fn xla_matches_native_large_diameter() {
+    let Some(mut xla) = engine_or_skip() else { return };
+    let g = grid_2d(30, 30); // many iterations
+    check_agreement(&g, ProblemKind::Bfs, &mut xla);
+    check_agreement(&g, ProblemKind::Wcc, &mut xla);
+}
+
+#[test]
+fn oversized_graph_is_rejected_with_clear_error() {
+    let Some(mut xla) = engine_or_skip() else { return };
+    let g = erdos_renyi(10_000, 100_000, 17); // exceeds every bucket
+    let p = GraphProblem::new(ProblemKind::Bfs, &g);
+    let err = xla.run(&p, &g, 10).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("native engine"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn bucket_selection_picks_smallest_fit() {
+    let Some(xla) = engine_or_skip() else { return };
+    let rt = xla.runtime();
+    let e = rt.pick_bucket("bfs", 100, 1000).expect("bucket");
+    assert_eq!((e.n_pad, e.m_pad), (1024, 8192));
+    let e = rt.pick_bucket("bfs", 2000, 1000).expect("bucket");
+    assert_eq!((e.n_pad, e.m_pad), (4096, 32768));
+    assert!(rt.pick_bucket("bfs", 1_000_000, 10).is_none());
+    assert!(rt.pick_bucket("nonsense", 10, 10).is_none());
+}
+
+#[test]
+fn empty_and_degenerate_graphs() {
+    let Some(mut xla) = engine_or_skip() else { return };
+    // single vertex, no edges
+    let g = EdgeList::new(1, true);
+    let p = GraphProblem::with_root(ProblemKind::Bfs, &g, 0);
+    let res = xla.run(&p, &g, 10).expect("single vertex");
+    assert_eq!(res.values, vec![0.0]);
+    // self-loop only
+    let mut g = EdgeList::new(2, true);
+    g.add(0, 0);
+    let p = GraphProblem::with_root(ProblemKind::Bfs, &g, 0);
+    let res = xla.run(&p, &g, 10).expect("self loop");
+    assert_eq!(res.values[0], 0.0);
+}
