@@ -1,50 +1,64 @@
 //! Fig. 8-style comparison: all four accelerators on several graphs
-//! and problems (MTEPS, DDR4 single channel).
+//! and problems (MTEPS, DDR4 single channel), swept in parallel
+//! through the typed `Sweep` API with a shared memoizing `Session`.
 //!
 //!     cargo run --release --example compare_accelerators [graphs...]
 
 use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
 use graphmem::algo::problem::ProblemKind;
-use graphmem::coordinator::Runner;
+use graphmem::graph::DatasetId;
 use graphmem::report::Table;
+use graphmem::sim::{Session, SimSpec, Sweep};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let graphs: Vec<String> = if args.is_empty() {
-        vec!["sd".into(), "db".into(), "yt".into(), "wt".into(), "rd".into()]
+    let graphs: Vec<DatasetId> = if args.is_empty() {
+        vec![DatasetId::Sd, DatasetId::Db, DatasetId::Yt, DatasetId::Wt, DatasetId::Rd]
     } else {
-        args
+        args.iter()
+            .map(|a| a.parse().unwrap_or_else(|e| panic!("{e}")))
+            .collect()
     };
+    let problems = [ProblemKind::Bfs, ProblemKind::PageRank, ProblemKind::Wcc];
     let cfg = AcceleratorConfig::all_optimizations();
-    let mut runner = Runner::new();
+    let session = Session::new();
 
-    for problem in [ProblemKind::Bfs, ProblemKind::PageRank, ProblemKind::Wcc] {
+    // One declarative sweep over all three axes; executed across
+    // worker threads, memoized in the session.
+    Sweep::new()
+        .accelerators(AcceleratorKind::all())
+        .graphs(graphs.clone())
+        .problems(problems)
+        .configs([cfg.clone()])
+        .run_with(&session)
+        .expect("sweep");
+
+    for problem in problems {
         let mut t = Table::new(
-            format!("{} MTEPS (DDR4, single channel, all optimizations)", problem.name()),
+            format!("{problem} MTEPS (DDR4, single channel, all optimizations)"),
             &["graph", "AccuGraph", "ForeGraph", "HitGraph", "ThunderGP", "best"],
         );
-        for g in &graphs {
-            let mut row = vec![g.clone()];
+        for &g in &graphs {
+            let mut row = vec![g.to_string()];
             let mut best = ("", 0.0f64);
             for kind in AcceleratorKind::all() {
-                match runner.run(kind, g, problem, "ddr4", 1, &cfg) {
-                    Ok(r) => {
-                        let mteps = r.mteps();
-                        if mteps > best.1 {
-                            best = (kind.name(), mteps);
-                        }
-                        row.push(format!("{mteps:.1}"));
-                    }
-                    Err(e) => {
-                        eprintln!("skipping {} on {g}: {e}", kind.name());
-                        row.push("-".into());
-                    }
+                let spec = SimSpec::builder()
+                    .accelerator(kind)
+                    .graph(g)
+                    .problem(problem)
+                    .config(cfg.clone())
+                    .build()
+                    .expect("spec");
+                let mteps = session.run(&spec).mteps();
+                if mteps > best.1 {
+                    best = (kind.name(), mteps);
                 }
+                row.push(format!("{mteps:.1}"));
             }
             row.push(best.0.to_string());
             t.row(row);
         }
         println!("{}", t.render());
     }
-    eprintln!("({} simulations)", runner.cached_runs());
+    eprintln!("({} simulations)", session.cached_runs());
 }

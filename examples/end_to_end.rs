@@ -17,8 +17,7 @@
 use graphmem::accel::{build, AcceleratorConfig, AcceleratorKind};
 use graphmem::algo::golden::{run_golden, values_agree, Propagation};
 use graphmem::algo::problem::{GraphProblem, ProblemKind};
-use graphmem::coordinator::runner::dram_spec;
-use graphmem::dram::{ChannelMode, MemorySystem};
+use graphmem::dram::{ChannelMode, MemTech, MemorySystem};
 use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
 use graphmem::graph::rmat::{generate, RmatParams};
 use graphmem::report::Table;
@@ -86,8 +85,7 @@ fn main() {
             } else {
                 ChannelMode::InterleaveLine
             };
-            let mut mem =
-                MemorySystem::with_mode(dram_spec("ddr4", 1).unwrap(), mode);
+            let mut mem = MemorySystem::with_mode(MemTech::Ddr4.spec(1), mode);
             let r = accel.run(&p, &mut mem);
             // Iteration sanity vs the matching golden propagation.
             let golden_prop = match kind {

@@ -1,19 +1,62 @@
 //! Fig. 11/12-style memory technology study: DDR3 vs DDR4 vs HBM and
 //! channel scaling, reproducing insight 6 ("modern memory does not
 //! necessarily lead to better performance") and insights 7-8 on
-//! scaling behaviour.
+//! scaling behaviour. All runs are described as typed `SimSpec`s,
+//! prefetched in parallel, and read back from the shared `Session`.
 //!
 //!     cargo run --release --example memory_technology
 
 use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
 use graphmem::algo::problem::ProblemKind;
-use graphmem::coordinator::Runner;
+use graphmem::dram::MemTech;
+use graphmem::graph::DatasetId;
 use graphmem::report::Table;
+use graphmem::sim::{Session, SimSpec, Sweep};
+
+fn spec(
+    kind: AcceleratorKind,
+    g: DatasetId,
+    mem: MemTech,
+    channels: usize,
+    cfg: &AcceleratorConfig,
+) -> SimSpec {
+    SimSpec::builder()
+        .accelerator(kind)
+        .graph(g)
+        .problem(ProblemKind::Bfs)
+        .mem(mem)
+        .channels(channels)
+        .config(cfg.clone())
+        .build()
+        .expect("valid spec")
+}
 
 fn main() {
-    let graphs = ["db", "rd"];
+    let graphs = [DatasetId::Db, DatasetId::Rd];
     let cfg = AcceleratorConfig::all_optimizations();
-    let mut runner = Runner::new();
+    let session = Session::new();
+
+    // Prefetch both studies in parallel: the full DRAM-type product,
+    // plus channel scaling for the multi-channel designs.
+    Sweep::new()
+        .accelerators(AcceleratorKind::all())
+        .graphs(graphs)
+        .problems([ProblemKind::Bfs])
+        .mem_techs(MemTech::all())
+        .configs([cfg.clone()])
+        .run_with(&session)
+        .expect("dram sweep");
+    for mem in [MemTech::Ddr4, MemTech::Hbm] {
+        Sweep::new()
+            .accelerators([AcceleratorKind::HitGraph, AcceleratorKind::ThunderGp])
+            .graphs(graphs)
+            .problems([ProblemKind::Bfs])
+            .mem_techs([mem])
+            .channels((0..=mem.max_channels().ilog2()).map(|p| 1 << p))
+            .configs([cfg.clone()])
+            .run_with(&session)
+            .expect("channel sweep");
+    }
 
     // --- single-channel DRAM-type comparison (Fig. 11a) ---
     let mut t = Table::new(
@@ -22,12 +65,12 @@ fn main() {
     );
     for g in graphs {
         for kind in AcceleratorKind::all() {
-            let d4 = runner.run(kind, g, ProblemKind::Bfs, "ddr4", 1, &cfg).unwrap();
-            let d3 = runner.run(kind, g, ProblemKind::Bfs, "ddr3", 1, &cfg).unwrap();
-            let hb = runner.run(kind, g, ProblemKind::Bfs, "hbm", 1, &cfg).unwrap();
+            let d4 = session.run(&spec(kind, g, MemTech::Ddr4, 1, &cfg));
+            let d3 = session.run(&spec(kind, g, MemTech::Ddr3, 1, &cfg));
+            let hb = session.run(&spec(kind, g, MemTech::Hbm, 1, &cfg));
             t.row(vec![
                 g.to_string(),
-                kind.name().to_string(),
+                kind.to_string(),
                 format!("{:.5}", d4.seconds),
                 format!("{:.2}x", d4.seconds / d3.seconds),
                 format!("{:.2}x", d4.seconds / hb.seconds),
@@ -47,15 +90,15 @@ fn main() {
     );
     for g in graphs {
         for kind in [AcceleratorKind::HitGraph, AcceleratorKind::ThunderGp] {
-            for dram in ["ddr4", "hbm"] {
-                let base = runner.run(kind, g, ProblemKind::Bfs, dram, 1, &cfg).unwrap();
-                let mut row = vec![g.to_string(), kind.name().to_string(), dram.to_uppercase()];
+            for mem in [MemTech::Ddr4, MemTech::Hbm] {
+                let base = session.run(&spec(kind, g, mem, 1, &cfg));
+                let mut row = vec![g.to_string(), kind.to_string(), mem.name().to_uppercase()];
                 for ch in [2usize, 4, 8] {
-                    if ch == 8 && dram != "hbm" {
+                    if ch > mem.max_channels() {
                         row.push("-".into());
                         continue;
                     }
-                    let r = runner.run(kind, g, ProblemKind::Bfs, dram, ch, &cfg).unwrap();
+                    let r = session.run(&spec(kind, g, mem, ch, &cfg));
                     row.push(format!("{:.2}x", base.seconds / r.seconds));
                 }
                 t.row(row);

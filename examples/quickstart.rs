@@ -1,16 +1,32 @@
-//! Quickstart: simulate BFS on one accelerator and one graph, print
-//! the paper's metric set.
+//! Quickstart: simulate BFS on one accelerator and one graph through
+//! the typed `SimSpec` session API, print the paper's metric set.
 //!
 //!     cargo run --release --example quickstart
 
-use graphmem::accel::{Accelerator, AcceleratorConfig, AccuGraph};
-use graphmem::algo::problem::{GraphProblem, ProblemKind};
-use graphmem::dram::{DramSpec, MemorySystem};
-use graphmem::graph::datasets;
+use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::problem::ProblemKind;
+use graphmem::dram::MemTech;
+use graphmem::graph::DatasetId;
+use graphmem::sim::SimSpec;
 
 fn main() {
-    // 1. A benchmark graph (scaled soc-Slashdot stand-in, Tab. 2).
-    let graph = datasets::dataset("sd").expect("dataset");
+    // 1. Describe the run as a typed spec: accelerator, benchmark
+    //    graph (scaled soc-Slashdot stand-in, Tab. 2), problem, memory
+    //    technology and channel count (DDR4-2400 x1, Tab. 3), plus all
+    //    paper optimizations. `build()` validates the combination —
+    //    unsupported pairings (say, SSSP on AccuGraph) fail here, not
+    //    mid-simulation.
+    let spec = SimSpec::builder()
+        .accelerator(AcceleratorKind::AccuGraph)
+        .graph(DatasetId::Sd)
+        .problem(ProblemKind::Bfs)
+        .mem(MemTech::Ddr4)
+        .channels(1)
+        .config(AcceleratorConfig::all_optimizations())
+        .build()
+        .expect("valid spec");
+
+    let graph = DatasetId::Sd.load_shared();
     println!(
         "graph: sd  |V|={} |E|={} D_avg={:.1}",
         graph.num_vertices,
@@ -18,17 +34,11 @@ fn main() {
         graph.avg_degree()
     );
 
-    // 2. A problem bound to the graph (root = max-out-degree vertex).
-    let problem = GraphProblem::new(ProblemKind::Bfs, &graph);
+    // 2. A built spec always runs — co-simulation against the
+    //    cycle-level DRAM model is infallible from here.
+    let report = spec.run();
 
-    // 3. An accelerator model with all paper optimizations enabled...
-    let mut accel = AccuGraph::new(&graph, &AcceleratorConfig::all_optimizations());
-
-    // 4. ...co-simulated against DDR4-2400, single channel (Tab. 3).
-    let mut mem = MemorySystem::new(DramSpec::ddr4_2400(1));
-    let report = accel.run(&problem, &mut mem);
-
-    // 5. The paper's metrics.
+    // 3. The paper's metrics.
     println!("{}", report.summary());
     let (h, m, c) = report.row_mix();
     println!(
@@ -38,9 +48,12 @@ fn main() {
         100.0 * c
     );
     println!(
-        "iterations={}  bytes/edge={:.2}  values read/iter={:.0}",
-        report.metrics.iterations,
+        "bytes/edge: {:.2}   bus utilization: {:.1}%",
         report.bytes_per_edge(),
-        report.values_read_per_iter()
+        100.0 * report.bus_utilization
     );
+
+    // 4. Sweeps over many specs run in parallel with shared
+    //    memoization — see examples/compare_accelerators.rs and the
+    //    `graphmem sweep` subcommand.
 }

@@ -1,0 +1,54 @@
+//! Bench: parallel sweep engine vs the serial path.
+//!
+//! Runs the Fig. 8-style product (4 accelerators x BFS/PR x scope
+//! graphs, DDR4 x1, all optimizations) once serially and once through
+//! the multi-threaded `Session`, reporting wall time and speedup.
+//! Scope via GRAPHMEM_SCOPE=quick|standard|full (default standard).
+
+use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::problem::ProblemKind;
+use graphmem::coordinator::experiment::bench_scope;
+use graphmem::sim::{Session, Sweep};
+
+fn main() {
+    let scope = bench_scope();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+    eprintln!("bench sweep_parallel (scope {scope:?}, {threads} threads)");
+
+    let sweep = Sweep::new()
+        .accelerators(AcceleratorKind::all())
+        .graphs(scope.graphs())
+        .problems([ProblemKind::Bfs, ProblemKind::PageRank])
+        .configs([AcceleratorConfig::all_optimizations()]);
+    let specs = sweep.specs().expect("specs");
+
+    // Warm the process-wide dataset cache so generation cost doesn't
+    // skew the serial-vs-parallel comparison.
+    for g in scope.graphs() {
+        let _ = g.load_shared();
+    }
+
+    let t0 = std::time::Instant::now();
+    let serial: Vec<_> = specs.iter().map(|s| s.run()).collect();
+    let t_serial = t0.elapsed().as_secs_f64();
+
+    let session = Session::new();
+    let t1 = std::time::Instant::now();
+    let parallel = session.run_batch(&specs, threads);
+    let t_parallel = t1.elapsed().as_secs_f64();
+
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a, b, "parallel sweep must match serial results");
+    }
+
+    println!(
+        "bench sweep_parallel: {} specs  serial {t_serial:.2}s  parallel {t_parallel:.2}s  \
+         speedup {:.2}x (scope {scope:?}, {threads} threads)",
+        specs.len(),
+        t_serial / t_parallel.max(1e-9),
+    );
+}

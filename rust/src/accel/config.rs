@@ -52,8 +52,24 @@ impl AcceleratorKind {
     }
 }
 
+impl std::str::FromStr for AcceleratorKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        AcceleratorKind::parse(s).ok_or_else(|| {
+            format!("unknown accelerator {s:?} (accugraph|foregraph|hitgraph|thundergp)")
+        })
+    }
+}
+
+impl std::fmt::Display for AcceleratorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Every optimization the paper ablates (Fig. 13 / Tab. 8).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Optimization {
     /// AccuGraph: skip the value prefetch when the on-chip partition
     /// is already the to-be-prefetched one (`Pref.`).
@@ -78,7 +94,12 @@ pub enum Optimization {
 }
 
 /// Full accelerator configuration.
-#[derive(Clone, Debug)]
+///
+/// Derives `Hash`/`Eq` so memoization keys (see
+/// [`crate::sim::Session`]) are derived from the *whole* value — the
+/// old hand-rolled string key silently omitted `window` and
+/// `experimental_multichannel`, aliasing distinct runs.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct AcceleratorConfig {
     /// Enabled optimizations.
     pub optimizations: Vec<Optimization>,
@@ -155,6 +176,20 @@ impl AcceleratorConfig {
     pub fn has(&self, opt: Optimization) -> bool {
         self.optimizations.contains(&opt)
     }
+
+    /// Outstanding-request window override (sweep axis; the old string
+    /// cache key famously ignored this field).
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Enable the open-challenge-(c) experimental multi-channel mode
+    /// for the immediate-propagation systems.
+    pub fn with_experimental_multichannel(mut self, on: bool) -> Self {
+        self.experimental_multichannel = on;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -166,6 +201,16 @@ mod tests {
         assert_eq!(AcceleratorKind::parse("accugraph"), Some(AcceleratorKind::AccuGraph));
         assert_eq!(AcceleratorKind::parse("TGP"), Some(AcceleratorKind::ThunderGp));
         assert_eq!(AcceleratorKind::parse("x"), None);
+    }
+
+    #[test]
+    fn from_str_display_round_trip() {
+        for kind in AcceleratorKind::all() {
+            assert_eq!(kind.to_string(), kind.name());
+            assert_eq!(kind.name().parse::<AcceleratorKind>().unwrap(), kind);
+        }
+        let err = "x".parse::<AcceleratorKind>().unwrap_err();
+        assert!(err.contains("unknown accelerator"), "{err}");
     }
 
     #[test]

@@ -49,6 +49,16 @@ impl ProblemKind {
         }
     }
 
+    pub fn all() -> [ProblemKind; 5] {
+        [
+            ProblemKind::Bfs,
+            ProblemKind::PageRank,
+            ProblemKind::Wcc,
+            ProblemKind::Sssp,
+            ProblemKind::SpMV,
+        ]
+    }
+
     /// Whether edge weights are consumed (§4.1: SSSP and SpMV).
     pub fn weighted(self) -> bool {
         matches!(self, ProblemKind::Sssp | ProblemKind::SpMV)
@@ -66,6 +76,21 @@ impl ProblemKind {
             ProblemKind::PageRank | ProblemKind::SpMV => Some(1),
             _ => None,
         }
+    }
+}
+
+impl std::str::FromStr for ProblemKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ProblemKind::parse(s)
+            .ok_or_else(|| format!("unknown problem {s:?} (bfs|pr|wcc|sssp|spmv)"))
+    }
+}
+
+impl std::fmt::Display for ProblemKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -210,6 +235,16 @@ mod tests {
         let v = p.init_values();
         assert_eq!(v[0], 0.0);
         assert_eq!(v[1], INF);
+    }
+
+    #[test]
+    fn from_str_display_round_trip() {
+        for kind in ProblemKind::all() {
+            assert_eq!(kind.to_string(), kind.name());
+            assert_eq!(kind.name().parse::<ProblemKind>().unwrap(), kind);
+        }
+        let err = "dfs".parse::<ProblemKind>().unwrap_err();
+        assert!(err.contains("unknown problem"), "{err}");
     }
 
     #[test]

@@ -1,21 +1,24 @@
 //! The experiment registry: one entry per figure/table of the paper's
-//! evaluation. Each experiment runs the required sweep on the scaled
-//! dataset stand-ins and renders the same rows/series the paper
-//! reports, plus (where meaningful) a shape comparison against the
-//! embedded published numbers.
+//! evaluation. Each experiment expresses its runs as typed
+//! [`SimSpec`]s, prefetches the full set in parallel through a shared
+//! [`Session`] (a declarative [`Sweep`] wherever the runs form a
+//! cartesian product), then renders the same rows/series the paper
+//! reports from the memoized results — plus (where meaningful) a shape
+//! comparison against the embedded published numbers.
 
 use super::paper;
-use super::runner::Runner;
 use crate::accel::{AcceleratorConfig, AcceleratorKind, Optimization};
 use crate::algo::problem::ProblemKind;
-use crate::graph::datasets;
+use crate::dram::MemTech;
+use crate::graph::datasets::DatasetId;
 use crate::graph::properties::GraphProperties;
 use crate::report::Table;
+use crate::sim::{Session, SimReport, SimSpec, Sweep};
 use crate::util::stats;
 use anyhow::{anyhow, Result};
 
 /// Which graphs to sweep. The paper always uses all 12; `Quick` and
-/// `Standard` keep CLI/bench turnaround sane on one core.
+/// `Standard` keep CLI/bench turnaround sane.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scope {
     /// sd, db, yt, wt
@@ -36,19 +39,29 @@ impl Scope {
         }
     }
 
-    pub fn graphs(self) -> Vec<&'static str> {
+    pub fn graphs(self) -> Vec<DatasetId> {
         match self {
-            Scope::Quick => vec!["sd", "db", "yt", "wt"],
-            Scope::Standard => vec!["sd", "db", "yt", "pk", "wt", "lj", "bk", "rd", "r21"],
+            Scope::Quick => vec![DatasetId::Sd, DatasetId::Db, DatasetId::Yt, DatasetId::Wt],
+            Scope::Standard => vec![
+                DatasetId::Sd,
+                DatasetId::Db,
+                DatasetId::Yt,
+                DatasetId::Pk,
+                DatasetId::Wt,
+                DatasetId::Lj,
+                DatasetId::Bk,
+                DatasetId::Rd,
+                DatasetId::R21,
+            ],
             Scope::Full => paper::GRAPHS.to_vec(),
         }
     }
 
     /// The Fig. 12/13 deep-dive subset, restricted to this scope where
     /// possible (rd is essential for the skipping effects).
-    pub fn ablation_graphs(self) -> Vec<&'static str> {
+    pub fn ablation_graphs(self) -> Vec<DatasetId> {
         match self {
-            Scope::Quick => vec!["db", "rd"],
+            Scope::Quick => vec![DatasetId::Db, DatasetId::Rd],
             _ => paper::ABLATION_GRAPHS.to_vec(),
         }
     }
@@ -137,24 +150,77 @@ pub fn bench_scope() -> Scope {
         .unwrap_or(Scope::Standard)
 }
 
-/// Run one experiment; returns rendered tables.
+/// Run one experiment; returns rendered tables. All simulations are
+/// prefetched in parallel through a per-call [`Session`].
 pub fn run_experiment(exp: Experiment, scope: Scope) -> Result<Vec<Table>> {
-    let mut runner = Runner::new();
+    let session = Session::new();
+    run_experiment_with(&session, exp, scope)
+}
+
+/// Run one experiment against a caller-provided session, sharing its
+/// memoized runs with other experiments (Fig. 8's BFS runs feed
+/// Figs. 9, 10 and 14, for example).
+pub fn run_experiment_with(
+    session: &Session,
+    exp: Experiment,
+    scope: Scope,
+) -> Result<Vec<Table>> {
     match exp {
-        Experiment::Fig02SimError => fig02(&mut runner, scope),
-        Experiment::Fig08Tab4Mteps => fig08(&mut runner, scope),
-        Experiment::Fig09Metrics => fig09(&mut runner, scope),
-        Experiment::Fig10Skewness => fig10(&mut runner, scope),
-        Experiment::Fig11Tab6Dram => fig11(&mut runner, scope),
-        Experiment::Fig12Tab7Channels => fig12(&mut runner, scope),
-        Experiment::Fig13Tab8Opts => fig13(&mut runner, scope),
-        Experiment::Fig14Degree => fig14(&mut runner, scope),
-        Experiment::Tab5Weighted => tab5(&mut runner, scope),
+        Experiment::Fig02SimError => fig02(session, scope),
+        Experiment::Fig08Tab4Mteps => fig08(session, scope),
+        Experiment::Fig09Metrics => fig09(session, scope),
+        Experiment::Fig10Skewness => fig10(session, scope),
+        Experiment::Fig11Tab6Dram => fig11(session, scope),
+        Experiment::Fig12Tab7Channels => fig12(session, scope),
+        Experiment::Fig13Tab8Opts => fig13(session, scope),
+        Experiment::Fig14Degree => fig14(session, scope),
+        Experiment::Tab5Weighted => tab5(session, scope),
     }
 }
 
 fn all_opt() -> AcceleratorConfig {
     AcceleratorConfig::all_optimizations()
+}
+
+/// Build one typed spec (experiment combinations are valid by
+/// construction; errors here indicate a registry bug).
+fn spec(
+    kind: AcceleratorKind,
+    g: DatasetId,
+    problem: ProblemKind,
+    mem: MemTech,
+    channels: usize,
+    cfg: &AcceleratorConfig,
+) -> Result<SimSpec> {
+    Ok(SimSpec::builder()
+        .accelerator(kind)
+        .graph(g)
+        .problem(problem)
+        .mem(mem)
+        .channels(channels)
+        .config(cfg.clone())
+        .build()?)
+}
+
+/// Run (or fetch) one spec through the session.
+fn sim(
+    session: &Session,
+    kind: AcceleratorKind,
+    g: DatasetId,
+    problem: ProblemKind,
+    mem: MemTech,
+    channels: usize,
+    cfg: &AcceleratorConfig,
+) -> Result<SimReport> {
+    Ok(session.run(&spec(kind, g, problem, mem, channels, cfg)?))
+}
+
+/// Materialize a sweep's product in parallel into the session cache;
+/// the serial table-building loops below then hit memoized results.
+fn prefetch(session: &Session, sweep: &Sweep) -> Result<()> {
+    let specs = sweep.specs()?;
+    session.run_all(&specs);
+    Ok(())
 }
 
 const PROBLEMS_FIG8: [ProblemKind; 3] =
@@ -164,8 +230,16 @@ const PROBLEMS_FIG8: [ProblemKind; 3] =
 // Fig. 8 / Tab. 4 — MTEPS (and runtimes) on DDR4 single-channel
 // ---------------------------------------------------------------------------
 
-fn fig08(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
+fn fig08(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     let cfg = all_opt();
+    prefetch(
+        session,
+        &Sweep::new()
+            .accelerators(AcceleratorKind::all())
+            .graphs(scope.graphs())
+            .problems(PROBLEMS_FIG8)
+            .configs([cfg.clone()]),
+    )?;
     let mut mteps = Table::new(
         "Fig. 8 — MTEPS by graph and problem (DDR4, single-channel)",
         &[
@@ -185,7 +259,7 @@ fn fig08(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
         let mut rrow = vec![g.to_string()];
         for kind in AcceleratorKind::all() {
             for problem in PROBLEMS_FIG8 {
-                let r = runner.run(kind, g, problem, "ddr4", 1, &cfg)?;
+                let r = sim(session, kind, g, problem, MemTech::Ddr4, 1, &cfg)?;
                 mrow.push(format!("{:.1}", r.mteps()));
                 rrow.push(format!("{:.5}", r.seconds));
             }
@@ -208,9 +282,17 @@ fn fig08(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
 /// reported. 0 % means "who wins, by what factor" matches the paper
 /// exactly; graph-scale and diameter effects cancel because they hit
 /// all four systems alike.
-fn fig02(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
+fn fig02(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     let cfg = all_opt();
     let graphs = scope.graphs();
+    prefetch(
+        session,
+        &Sweep::new()
+            .accelerators(AcceleratorKind::all())
+            .graphs(graphs.clone())
+            .problems(PROBLEMS_FIG8)
+            .configs([cfg.clone()]),
+    )?;
     let mut t = Table::new(
         "Fig. 2 — accelerator-share error vs published runtimes (%)",
         &["accelerator", "BFS", "PR", "WCC", "mean"],
@@ -223,8 +305,8 @@ fn fig02(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
             let mut ours = Vec::new();
             let mut theirs = Vec::new();
             for kind in kinds {
-                let r = runner.run(kind, g, *problem, "ddr4", 1, &cfg)?;
-                let p = paper::tab4_runtime(kind, g, *problem)
+                let r = sim(session, kind, *g, *problem, MemTech::Ddr4, 1, &cfg)?;
+                let p = paper::tab4_runtime(kind, *g, *problem)
                     .ok_or_else(|| anyhow!("no paper number for {kind:?} {g}"))?;
                 ours.push(r.seconds);
                 theirs.push(p);
@@ -271,10 +353,18 @@ fn fig02(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
 // Fig. 9 — critical performance metrics (BFS)
 // ---------------------------------------------------------------------------
 
-fn fig09(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
+fn fig09(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     let cfg = all_opt();
+    prefetch(
+        session,
+        &Sweep::new()
+            .accelerators(AcceleratorKind::all())
+            .graphs(scope.graphs())
+            .problems([ProblemKind::Bfs])
+            .configs([cfg.clone()]),
+    )?;
     let mut tables = Vec::new();
-    let metrics: [(&str, fn(&crate::sim::SimReport) -> f64); 4] = [
+    let metrics: [(&str, fn(&SimReport) -> f64); 4] = [
         ("Fig. 9(a) — iterations", |r| r.metrics.iterations as f64),
         ("Fig. 9(b) — bytes per edge", |r| r.bytes_per_edge()),
         ("Fig. 9(c) — values read per iteration", |r| {
@@ -292,7 +382,7 @@ fn fig09(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
         for g in scope.graphs() {
             let mut row = vec![g.to_string()];
             for kind in AcceleratorKind::all() {
-                let r = runner.run(kind, g, ProblemKind::Bfs, "ddr4", 1, &cfg)?;
+                let r = sim(session, kind, g, ProblemKind::Bfs, MemTech::Ddr4, 1, &cfg)?;
                 row.push(format!("{:.1}", f(&r)));
             }
             t.row(row);
@@ -307,17 +397,24 @@ fn fig09(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
 // ---------------------------------------------------------------------------
 
 fn mreps_by_property(
-    runner: &mut Runner,
+    session: &Session,
     scope: Scope,
     title: &str,
     prop: fn(&GraphProperties) -> f64,
     prop_name: &str,
 ) -> Result<Vec<Table>> {
     let cfg = all_opt();
-    let mut entries: Vec<(f64, &str)> = Vec::new();
+    prefetch(
+        session,
+        &Sweep::new()
+            .accelerators(AcceleratorKind::all())
+            .graphs(scope.graphs())
+            .problems([ProblemKind::Bfs])
+            .configs([cfg.clone()]),
+    )?;
+    let mut entries: Vec<(f64, DatasetId)> = Vec::new();
     for g in scope.graphs() {
-        let el = datasets::dataset(g).ok_or_else(|| anyhow!("dataset {g}"))?;
-        let p = GraphProperties::compute(&el);
+        let p = GraphProperties::compute(&g.load_shared());
         entries.push((prop(&p), g));
     }
     entries.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
@@ -330,7 +427,7 @@ fn mreps_by_property(
     for (val, g) in entries {
         let mut row = vec![g.to_string(), format!("{val:.2}")];
         for kind in AcceleratorKind::all() {
-            let r = runner.run(kind, g, ProblemKind::Bfs, "ddr4", 1, &cfg)?;
+            let r = sim(session, kind, g, ProblemKind::Bfs, MemTech::Ddr4, 1, &cfg)?;
             row.push(format!("{:.1}", r.mreps()));
         }
         t.row(row);
@@ -338,9 +435,9 @@ fn mreps_by_property(
     Ok(vec![t])
 }
 
-fn fig10(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
+fn fig10(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     mreps_by_property(
-        runner,
+        session,
         scope,
         "Fig. 10 — MREPS by skewness of degree distribution (BFS)",
         |p| p.degree_skewness,
@@ -348,9 +445,9 @@ fn fig10(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
     )
 }
 
-fn fig14(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
+fn fig14(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     mreps_by_property(
-        runner,
+        session,
         scope,
         "Fig. 14 — MREPS by average degree (BFS)",
         |p| p.avg_degree,
@@ -362,8 +459,17 @@ fn fig14(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
 // Fig. 11 / Tab. 6 — DRAM technology comparison
 // ---------------------------------------------------------------------------
 
-fn fig11(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
+fn fig11(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     let cfg = all_opt();
+    prefetch(
+        session,
+        &Sweep::new()
+            .accelerators(AcceleratorKind::all())
+            .graphs(scope.graphs())
+            .problems([ProblemKind::Bfs])
+            .mem_techs(MemTech::all())
+            .configs([cfg.clone()]),
+    )?;
     let mut speedup = Table::new(
         "Fig. 11(a) — DDR3 and HBM speedup over DDR4 (BFS, single-channel)",
         &[
@@ -378,9 +484,9 @@ fn fig11(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
     for g in scope.graphs() {
         let mut row = vec![g.to_string()];
         for kind in AcceleratorKind::all() {
-            let d4 = runner.run(kind, g, ProblemKind::Bfs, "ddr4", 1, &cfg)?;
-            let d3 = runner.run(kind, g, ProblemKind::Bfs, "ddr3", 1, &cfg)?;
-            let hb = runner.run(kind, g, ProblemKind::Bfs, "hbm", 1, &cfg)?;
+            let d4 = sim(session, kind, g, ProblemKind::Bfs, MemTech::Ddr4, 1, &cfg)?;
+            let d3 = sim(session, kind, g, ProblemKind::Bfs, MemTech::Ddr3, 1, &cfg)?;
+            let hb = sim(session, kind, g, ProblemKind::Bfs, MemTech::Hbm, 1, &cfg)?;
             row.push(format!("{:.2}", d4.seconds / d3.seconds));
             row.push(format!("{:.2}", d4.seconds / hb.seconds));
             let (h, m, c) = d4.row_mix();
@@ -402,31 +508,52 @@ fn fig11(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
 // Fig. 12 / Tab. 7 — channel scalability
 // ---------------------------------------------------------------------------
 
-fn fig12(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
+fn fig12(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     let cfg = all_opt();
+    let kinds = [AcceleratorKind::HitGraph, AcceleratorKind::ThunderGp];
+    prefetch(
+        session,
+        &Sweep::new()
+            .accelerators(kinds)
+            .graphs(scope.ablation_graphs())
+            .problems([ProblemKind::Bfs])
+            .mem_techs(MemTech::all())
+            .channels([1, 2, 4])
+            .configs([cfg.clone()]),
+    )?;
+    prefetch(
+        session,
+        &Sweep::new()
+            .accelerators(kinds)
+            .graphs(scope.ablation_graphs())
+            .problems([ProblemKind::Bfs])
+            .mem_techs([MemTech::Hbm])
+            .channels([8])
+            .configs([cfg.clone()]),
+    )?;
     let mut tables = Vec::new();
-    for kind in [AcceleratorKind::HitGraph, AcceleratorKind::ThunderGp] {
+    for kind in kinds {
         let mut t = Table::new(
             format!("Fig. 12 — {} speedup over 1 channel (BFS)", kind.name()),
             &["dram", "channels", "db", "lj", "or", "rd"],
         );
-        for dram in ["ddr3", "ddr4", "hbm"] {
-            let max_ch: &[usize] = if dram == "hbm" { &[2, 4, 8] } else { &[2, 4] };
+        for mem in MemTech::all() {
+            let chs: &[usize] = if mem == MemTech::Hbm { &[2, 4, 8] } else { &[2, 4] };
             // 1-channel baselines
             let mut base = std::collections::HashMap::new();
             for g in scope.ablation_graphs() {
-                let r = runner.run(kind, g, ProblemKind::Bfs, dram, 1, &cfg)?;
+                let r = sim(session, kind, g, ProblemKind::Bfs, mem, 1, &cfg)?;
                 base.insert(g, r.seconds);
             }
-            for &ch in max_ch {
-                let mut row = vec![dram.to_uppercase(), ch.to_string()];
-                for g in ["db", "lj", "or", "rd"] {
+            for &ch in chs {
+                let mut row = vec![mem.name().to_uppercase(), ch.to_string()];
+                for g in paper::ABLATION_GRAPHS {
                     if !scope.ablation_graphs().contains(&g) {
                         row.push("-".into());
                         continue;
                     }
-                    let r = runner.run(kind, g, ProblemKind::Bfs, dram, ch, &cfg)?;
-                    row.push(format!("{:.2}x", base[g] / r.seconds));
+                    let r = sim(session, kind, g, ProblemKind::Bfs, mem, ch, &cfg)?;
+                    row.push(format!("{:.2}x", base[&g] / r.seconds));
                 }
                 t.row(row);
             }
@@ -440,7 +567,7 @@ fn fig12(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
 // Fig. 13 / Tab. 8 — optimization ablations
 // ---------------------------------------------------------------------------
 
-fn fig13(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
+fn fig13(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     let graphs = scope.ablation_graphs();
     let mut tables = Vec::new();
 
@@ -507,12 +634,22 @@ fn fig13(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
         ),
     ];
 
+    // Not a cartesian product (each accelerator has its own config
+    // list), so build the spec batch directly and fan it out.
+    let mut batch = Vec::new();
+    for (kind, _, cfg) in &configs {
+        for &g in &graphs {
+            batch.push(spec(*kind, g, ProblemKind::Bfs, MemTech::Ddr4, 1, cfg)?);
+        }
+    }
+    session.run_all(&batch);
+
     let mut t = Table::new(
         "Fig. 13 / Tab. 8 — BFS runtime (s) and speedup over baseline by optimization",
         &{
             let mut h = vec!["accel", "optimization"];
             for g in &graphs {
-                h.push(g);
+                h.push(g.name());
             }
             h.push("geomean speedup");
             h
@@ -523,8 +660,8 @@ fn fig13(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
         std::collections::HashMap::new();
     for (kind, label, cfg) in &configs {
         let mut secs = Vec::new();
-        for g in &graphs {
-            let r = runner.run(*kind, g, ProblemKind::Bfs, "ddr4", 1, cfg)?;
+        for &g in &graphs {
+            let r = sim(session, *kind, g, ProblemKind::Bfs, MemTech::Ddr4, 1, cfg)?;
             secs.push(r.seconds);
         }
         if *label == "none" {
@@ -547,17 +684,26 @@ fn fig13(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
 // Tab. 5 — weighted problems
 // ---------------------------------------------------------------------------
 
-fn tab5(runner: &mut Runner, scope: Scope) -> Result<Vec<Table>> {
+fn tab5(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     let cfg = all_opt();
+    let kinds = [AcceleratorKind::HitGraph, AcceleratorKind::ThunderGp];
+    prefetch(
+        session,
+        &Sweep::new()
+            .accelerators(kinds)
+            .graphs(scope.graphs())
+            .problems([ProblemKind::Sssp, ProblemKind::SpMV])
+            .configs([cfg.clone()]),
+    )?;
     let mut t = Table::new(
         "Tab. 5 — SSSP / SpMV runtimes (s), DDR4 single-channel",
         &["graph", "HG:SSSP", "HG:SpMV", "TGP:SSSP", "TGP:SpMV"],
     );
     for g in scope.graphs() {
         let mut row = vec![g.to_string()];
-        for kind in [AcceleratorKind::HitGraph, AcceleratorKind::ThunderGp] {
+        for kind in kinds {
             for problem in [ProblemKind::Sssp, ProblemKind::SpMV] {
-                let r = runner.run(kind, g, problem, "ddr4", 1, &cfg)?;
+                let r = sim(session, kind, g, problem, MemTech::Ddr4, 1, &cfg)?;
                 row.push(format!("{:.5}", r.seconds));
             }
         }
@@ -601,5 +747,16 @@ mod tests {
         let tables = run_experiment(Experiment::Tab5Weighted, Scope::Quick).unwrap();
         assert_eq!(tables.len(), 1);
         assert!(tables[0].render().contains("HG:SSSP"));
+    }
+
+    #[test]
+    fn sessions_share_runs_across_experiments() {
+        let session = Session::new();
+        run_experiment_with(&session, Experiment::Fig10Skewness, Scope::Quick).unwrap();
+        let after_fig10 = session.cached_runs();
+        assert!(after_fig10 > 0);
+        // Fig. 14 uses the same BFS runs — nothing new simulates.
+        run_experiment_with(&session, Experiment::Fig14Degree, Scope::Quick).unwrap();
+        assert_eq!(session.cached_runs(), after_fig10);
     }
 }

@@ -1,11 +1,31 @@
-//! Experiment coordination: the registry of every figure and table in
-//! the paper's evaluation, the sweep runner that regenerates them on
-//! the scaled workloads, and the embedded published numbers used for
-//! shape comparison.
+//! Experiment coordination on top of the typed session API.
+//!
+//! The flow is: [`experiment`] declares every figure/table of the
+//! paper's evaluation; each experiment expresses its runs as
+//! [`crate::sim::SimSpec`]s (often via a [`crate::sim::Sweep`] over
+//! typed axes), prefetches them in parallel through a shared
+//! [`crate::sim::Session`], and formats the memoized reports into
+//! tables. [`paper`] embeds the published numbers for shape
+//! comparison.
+//!
+//! ```no_run
+//! use graphmem::coordinator::{run_experiment, Experiment, Scope};
+//!
+//! let tables = run_experiment(Experiment::Fig08Tab4Mteps, Scope::Quick).unwrap();
+//! for t in tables {
+//!     println!("{}", t.render());
+//! }
+//! ```
+//!
+//! [`runner`] holds the deprecated string-keyed shims (`run_one`,
+//! `Runner`, `dram_spec`) retained for one release; see its module
+//! docs for the migration table.
 
 pub mod experiment;
 pub mod paper;
 pub mod runner;
 
 pub use experiment::{run_experiment, Experiment, Scope};
+#[allow(deprecated)]
 pub use runner::{run_one, Runner};
+pub use crate::sim::{Session, SimSpec, Sweep};

@@ -6,18 +6,20 @@
 
 use crate::accel::AcceleratorKind;
 use crate::algo::problem::ProblemKind;
+use crate::dram::MemTech;
+use crate::graph::datasets::DatasetId;
 
-/// Graph order used by all appendix tables.
-pub const GRAPHS: [&str; 12] = [
-    "sd", "db", "yt", "pk", "wt", "or", "lj", "tw", "bk", "rd", "r21", "r24",
-];
+/// Graph order used by all appendix tables (the row-index source of
+/// truth for every table below — defined from `DatasetId` so the two
+/// can never drift).
+pub const GRAPHS: [DatasetId; 12] = DatasetId::all();
 
 /// The Fig. 12/13 subset.
-pub const ABLATION_GRAPHS: [&str; 4] = ["db", "lj", "or", "rd"];
+pub const ABLATION_GRAPHS: [DatasetId; 4] = DatasetId::ablation();
 
 /// Tab. 4: DDR4 single-channel runtimes (seconds), all optimizations,
 /// per graph: [BFS, PR, WCC].
-pub fn tab4(accel: AcceleratorKind, graph: &str) -> Option<[f64; 3]> {
+pub fn tab4(accel: AcceleratorKind, graph: DatasetId) -> Option<[f64; 3]> {
     let idx = GRAPHS.iter().position(|&g| g == graph)?;
     let table: &[[f64; 3]; 12] = match accel {
         AcceleratorKind::AccuGraph => &[
@@ -81,7 +83,11 @@ pub fn tab4(accel: AcceleratorKind, graph: &str) -> Option<[f64; 3]> {
 }
 
 /// Tab. 4 runtime for one problem.
-pub fn tab4_runtime(accel: AcceleratorKind, graph: &str, problem: ProblemKind) -> Option<f64> {
+pub fn tab4_runtime(
+    accel: AcceleratorKind,
+    graph: DatasetId,
+    problem: ProblemKind,
+) -> Option<f64> {
     let row = tab4(accel, graph)?;
     match problem {
         ProblemKind::Bfs => Some(row[0]),
@@ -93,7 +99,7 @@ pub fn tab4_runtime(accel: AcceleratorKind, graph: &str, problem: ProblemKind) -
 
 /// Tab. 5: weighted-problem runtimes (seconds) on DDR4 single-channel,
 /// per graph: [SSSP, SpMV]. Only HitGraph and ThunderGP.
-pub fn tab5(accel: AcceleratorKind, graph: &str) -> Option<[f64; 2]> {
+pub fn tab5(accel: AcceleratorKind, graph: DatasetId) -> Option<[f64; 2]> {
     let idx = GRAPHS.iter().position(|&g| g == graph)?;
     let table: &[[f64; 2]; 12] = match accel {
         AcceleratorKind::HitGraph => &[
@@ -131,7 +137,7 @@ pub fn tab5(accel: AcceleratorKind, graph: &str) -> Option<[f64; 2]> {
 
 /// Tab. 6: DDR3 and HBM single-channel BFS runtimes (seconds), per
 /// graph: [DDR3, HBM].
-pub fn tab6(accel: AcceleratorKind, graph: &str) -> Option<[f64; 2]> {
+pub fn tab6(accel: AcceleratorKind, graph: DatasetId) -> Option<[f64; 2]> {
     let idx = GRAPHS.iter().position(|&g| g == graph)?;
     let table: &[[f64; 2]; 12] = match accel {
         AcceleratorKind::AccuGraph => &[
@@ -195,29 +201,33 @@ pub fn tab6(accel: AcceleratorKind, graph: &str) -> Option<[f64; 2]> {
 }
 
 /// Tab. 7: multi-channel BFS runtimes (seconds) for HitGraph and
-/// ThunderGP on db/lj/or/rd. `dram` in {"ddr3","ddr4","hbm"};
-/// channels in {2, 4} (plus 8 for HBM).
-pub fn tab7(accel: AcceleratorKind, dram: &str, channels: usize, graph: &str) -> Option<f64> {
+/// ThunderGP on db/lj/or/rd. Channels in {2, 4} (plus 8 for HBM).
+pub fn tab7(
+    accel: AcceleratorKind,
+    mem: MemTech,
+    channels: usize,
+    graph: DatasetId,
+) -> Option<f64> {
     let gi = ABLATION_GRAPHS.iter().position(|&g| g == graph)?;
     let hit = matches!(accel, AcceleratorKind::HitGraph);
     if !hit && !matches!(accel, AcceleratorKind::ThunderGp) {
         return None;
     }
-    let row: [f64; 4] = match (dram, channels, hit) {
-        ("ddr3", 2, true) => [0.0174, 0.3640, 0.5433, 1.5002],
-        ("ddr3", 2, false) => [0.0169, 0.4143, 0.6355, 2.1135],
-        ("ddr3", 4, true) => [0.0105, 0.2221, 0.3151, 0.7443],
-        ("ddr3", 4, false) => [0.0109, 0.2336, 0.3222, 1.4887],
-        ("ddr4", 2, true) => [0.0192, 0.3998, 0.5966, 1.6494],
-        ("ddr4", 2, false) => [0.0185, 0.4557, 0.6978, 2.3198],
-        ("ddr4", 4, true) => [0.0127, 0.2682, 0.3798, 0.8968],
-        ("ddr4", 4, false) => [0.0131, 0.2807, 0.3865, 1.7867],
-        ("hbm", 2, true) => [0.0218, 0.4549, 0.6824, 1.8830],
-        ("hbm", 2, false) => [0.0211, 0.5236, 0.7753, 2.6404],
-        ("hbm", 4, true) => [0.0128, 0.2702, 0.3776, 0.8957],
-        ("hbm", 4, false) => [0.0128, 0.2772, 0.3735, 1.7533],
-        ("hbm", 8, true) => [0.0069, 0.1452, 0.1934, 0.3792],
-        ("hbm", 8, false) => [0.0108, 0.1926, 0.2400, 1.6126],
+    let row: [f64; 4] = match (mem, channels, hit) {
+        (MemTech::Ddr3, 2, true) => [0.0174, 0.3640, 0.5433, 1.5002],
+        (MemTech::Ddr3, 2, false) => [0.0169, 0.4143, 0.6355, 2.1135],
+        (MemTech::Ddr3, 4, true) => [0.0105, 0.2221, 0.3151, 0.7443],
+        (MemTech::Ddr3, 4, false) => [0.0109, 0.2336, 0.3222, 1.4887],
+        (MemTech::Ddr4, 2, true) => [0.0192, 0.3998, 0.5966, 1.6494],
+        (MemTech::Ddr4, 2, false) => [0.0185, 0.4557, 0.6978, 2.3198],
+        (MemTech::Ddr4, 4, true) => [0.0127, 0.2682, 0.3798, 0.8968],
+        (MemTech::Ddr4, 4, false) => [0.0131, 0.2807, 0.3865, 1.7867],
+        (MemTech::Hbm, 2, true) => [0.0218, 0.4549, 0.6824, 1.8830],
+        (MemTech::Hbm, 2, false) => [0.0211, 0.5236, 0.7753, 2.6404],
+        (MemTech::Hbm, 4, true) => [0.0128, 0.2702, 0.3776, 0.8957],
+        (MemTech::Hbm, 4, false) => [0.0128, 0.2772, 0.3735, 1.7533],
+        (MemTech::Hbm, 8, true) => [0.0069, 0.1452, 0.1934, 0.3792],
+        (MemTech::Hbm, 8, false) => [0.0108, 0.1926, 0.2400, 1.6126],
         _ => return None,
     };
     Some(row[gi])
@@ -225,7 +235,7 @@ pub fn tab7(accel: AcceleratorKind, dram: &str, channels: usize, graph: &str) ->
 
 /// Tab. 8: BFS runtimes (seconds) on DDR4 single-channel with a single
 /// optimization enabled (or none), on db/lj/or/rd.
-pub fn tab8(accel: AcceleratorKind, optimization: &str, graph: &str) -> Option<f64> {
+pub fn tab8(accel: AcceleratorKind, optimization: &str, graph: DatasetId) -> Option<f64> {
     let gi = ABLATION_GRAPHS.iter().position(|&g| g == graph)?;
     let row: [f64; 4] = match (accel, optimization) {
         (AcceleratorKind::AccuGraph, "none") => [0.0118, 0.3062, 0.5071, 1.3834],
@@ -262,7 +272,6 @@ mod tests {
                 assert!(row.iter().all(|&v| v > 0.0));
             }
         }
-        assert!(tab4(AcceleratorKind::AccuGraph, "zz").is_none());
     }
 
     #[test]
@@ -275,7 +284,7 @@ mod tests {
             }
         }
         // AccuGraph & ForeGraph beat HitGraph & ThunderGP on or/lj BFS
-        for g in ["or", "lj"] {
+        for g in [DatasetId::Or, DatasetId::Lj] {
             let ag = tab4(AcceleratorKind::AccuGraph, g).unwrap()[0];
             let hg = tab4(AcceleratorKind::HitGraph, g).unwrap()[0];
             assert!(ag < hg, "{g}");
@@ -284,9 +293,9 @@ mod tests {
 
     #[test]
     fn tab5_only_weighted_systems() {
-        assert!(tab5(AcceleratorKind::AccuGraph, "sd").is_none());
-        assert!(tab5(AcceleratorKind::HitGraph, "sd").is_some());
-        assert!(tab5(AcceleratorKind::ThunderGp, "r24").is_some());
+        assert!(tab5(AcceleratorKind::AccuGraph, DatasetId::Sd).is_none());
+        assert!(tab5(AcceleratorKind::HitGraph, DatasetId::Sd).is_some());
+        assert!(tab5(AcceleratorKind::ThunderGp, DatasetId::R24).is_some());
     }
 
     #[test]
@@ -303,12 +312,12 @@ mod tests {
     #[test]
     fn tab7_scaling_facts() {
         // HitGraph near-linear on rd (super-linear per the paper)
-        let one = tab4(AcceleratorKind::HitGraph, "rd").unwrap()[0];
-        let four = tab7(AcceleratorKind::HitGraph, "ddr4", 4, "rd").unwrap();
+        let one = tab4(AcceleratorKind::HitGraph, DatasetId::Rd).unwrap()[0];
+        let four = tab7(AcceleratorKind::HitGraph, MemTech::Ddr4, 4, DatasetId::Rd).unwrap();
         assert!(one / four > 3.5);
         // ThunderGP sub-linear on rd
-        let t1 = tab4(AcceleratorKind::ThunderGp, "rd").unwrap()[0];
-        let t4 = tab7(AcceleratorKind::ThunderGp, "ddr4", 4, "rd").unwrap();
+        let t1 = tab4(AcceleratorKind::ThunderGp, DatasetId::Rd).unwrap()[0];
+        let t4 = tab7(AcceleratorKind::ThunderGp, MemTech::Ddr4, 4, DatasetId::Rd).unwrap();
         assert!(t1 / t4 < 3.0);
     }
 

@@ -1,27 +1,42 @@
-//! Simulation sweep runner with memoization: several experiments share
-//! the same underlying runs (e.g. Fig. 8's BFS runs feed Figs. 9, 10
-//! and 14), so results are cached per configuration.
+//! Deprecated string-keyed entry points, kept for one release as thin
+//! shims over the typed session API.
+//!
+//! Migration:
+//!
+//! * `run_one(kind, "lj", problem, "ddr4", ch, &cfg)` →
+//!   `SimSpec::builder().accelerator(kind).graph(DatasetId::Lj)
+//!    .problem(problem).mem(MemTech::Ddr4).channels(ch)
+//!    .config(cfg).build()?.run()`
+//! * `Runner` → [`crate::sim::Session`] (shared across threads, runs
+//!   batches in parallel via [`crate::sim::Session::run_all`]).
+//! * `dram_spec("hbm", ch)` → `MemTech::Hbm.spec(ch)`.
+//!
+//! The old `Runner` memoized on a hand-rolled format-string key that
+//! omitted `cfg.window` and `cfg.experimental_multichannel`, so runs
+//! differing only in those fields aliased to one cached report. The
+//! typed [`crate::sim::SimSpec`] key derives `Hash`/`Eq` over every
+//! field, making that class of bug structurally impossible (regression
+//! test below).
 
-use crate::accel::{build, AcceleratorConfig, AcceleratorKind};
-use crate::algo::problem::{GraphProblem, ProblemKind};
-use crate::dram::{ChannelMode, DramSpec, MemorySystem};
-use crate::graph::datasets;
+use crate::accel::{AcceleratorConfig, AcceleratorKind};
+use crate::algo::problem::ProblemKind;
+use crate::dram::{DramSpec, MemTech};
 use crate::sim::metrics::SimReport;
+use crate::sim::{Session, SimSpec};
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
 
 /// Resolve a DRAM type name ("ddr3" | "ddr4" | "hbm") to a spec.
+#[deprecated(since = "0.2.0", note = "parse a `MemTech` and call `MemTech::spec` instead")]
 pub fn dram_spec(dram: &str, channels: usize) -> Result<DramSpec> {
-    let spec = match dram {
-        "ddr4" => DramSpec::ddr4_2400(channels),
-        "ddr3" => DramSpec::ddr3_2133(channels),
-        "hbm" => DramSpec::hbm_1000(channels),
-        other => return Err(anyhow!("unknown DRAM type {other:?} (ddr3|ddr4|hbm)")),
-    };
-    Ok(spec)
+    let tech: MemTech = dram.parse().map_err(|e: String| anyhow!(e))?;
+    Ok(tech.spec(channels))
 }
 
 /// Execute one simulation run.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a typed spec: `SimSpec::builder()...build()?.run()` (see `sim::spec`)"
+)]
 pub fn run_one(
     kind: AcceleratorKind,
     graph: &str,
@@ -30,71 +45,36 @@ pub fn run_one(
     channels: usize,
     cfg: &AcceleratorConfig,
 ) -> Result<SimReport> {
-    if problem.weighted() && !kind.supports_weighted() {
-        return Err(anyhow!(
-            "{} does not support weighted problems (Tab. 1)",
-            kind.name()
-        ));
-    }
-    if channels > 1 && !kind.multi_channel() && !cfg.experimental_multichannel {
-        return Err(anyhow!(
-            "{} is not enabled for multi-channel operation (Fig. 12); \
-             set experimental_multichannel for the open-challenge-(c) extension",
-            kind.name()
-        ));
-    }
-    let g = if problem.weighted() {
-        datasets::dataset_weighted(graph)
-    } else {
-        datasets::dataset(graph)
-    }
-    .ok_or_else(|| anyhow!("unknown dataset {graph:?}"))?;
-    let spec = dram_spec(dram, channels)?;
-    // HitGraph/ThunderGP place data per channel (region mode); the
-    // single-channel accelerators see one region either way.
-    let mode = if kind.multi_channel() {
-        ChannelMode::Region
-    } else {
-        ChannelMode::InterleaveLine
-    };
-    let p = GraphProblem::new(problem, &g);
-    let cfg = cfg.clone().with_channels(channels);
-    let mut accel = build(kind, &g, &cfg);
-    let mut mem = MemorySystem::with_mode(spec, mode);
-    Ok(accel.run(&p, &mut mem))
+    let spec = SimSpec::builder()
+        .accelerator(kind)
+        .graph_named(graph)
+        .problem(problem)
+        .mem_named(dram)
+        .channels(channels)
+        .config(cfg.clone())
+        .build()?;
+    Ok(spec.run())
 }
 
-/// Memoizing runner.
-#[derive(Default)]
+/// Memoizing runner (deprecated shim over [`Session`]).
+#[deprecated(since = "0.2.0", note = "use `sim::Session` (thread-safe, parallel batches)")]
 pub struct Runner {
-    cache: HashMap<String, SimReport>,
+    session: Session,
 }
 
+#[allow(deprecated)]
+impl Default for Runner {
+    fn default() -> Runner {
+        Runner {
+            session: Session::new(),
+        }
+    }
+}
+
+#[allow(deprecated)]
 impl Runner {
     pub fn new() -> Runner {
         Runner::default()
-    }
-
-    fn key(
-        kind: AcceleratorKind,
-        graph: &str,
-        problem: ProblemKind,
-        dram: &str,
-        channels: usize,
-        cfg: &AcceleratorConfig,
-    ) -> String {
-        format!(
-            "{}|{}|{}|{}|{}|{:?}|{}|{}|{}",
-            kind.name(),
-            graph,
-            problem.name(),
-            dram,
-            channels,
-            cfg.optimizations,
-            cfg.bram_values,
-            cfg.foregraph_interval,
-            cfg.num_pes,
-        )
     }
 
     /// Run (or fetch from cache).
@@ -107,23 +87,27 @@ impl Runner {
         channels: usize,
         cfg: &AcceleratorConfig,
     ) -> Result<SimReport> {
-        let key = Self::key(kind, graph, problem, dram, channels, cfg);
-        if let Some(hit) = self.cache.get(&key) {
-            return Ok(hit.clone());
-        }
-        let report = run_one(kind, graph, problem, dram, channels, cfg)?;
-        self.cache.insert(key, report.clone());
-        Ok(report)
+        let spec = SimSpec::builder()
+            .accelerator(kind)
+            .graph_named(graph)
+            .problem(problem)
+            .mem_named(dram)
+            .channels(channels)
+            .config(cfg.clone())
+            .build()?;
+        Ok(self.session.run(&spec))
     }
 
     pub fn cached_runs(&self) -> usize {
-        self.cache.len()
+        self.session.cached_runs()
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::graph::datasets::DatasetId;
 
     #[test]
     fn rejects_invalid_combinations() {
@@ -174,5 +158,77 @@ mod tests {
         assert!(dram_spec("ddr3", 2).is_ok());
         assert!(dram_spec("hbm", 8).is_ok());
         assert!(dram_spec("lpddr", 1).is_err());
+    }
+
+    /// The retired `Runner::key` format string, verbatim — it omitted
+    /// `cfg.window` and `cfg.experimental_multichannel`.
+    fn old_key(
+        kind: AcceleratorKind,
+        graph: &str,
+        problem: ProblemKind,
+        dram: &str,
+        channels: usize,
+        cfg: &AcceleratorConfig,
+    ) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{:?}|{}|{}|{}",
+            kind.name(),
+            graph,
+            problem.name(),
+            dram,
+            channels,
+            cfg.optimizations,
+            cfg.bram_values,
+            cfg.foregraph_interval,
+            cfg.num_pes,
+        )
+    }
+
+    /// Regression for the stale-cache bug: two configs differing only
+    /// in `window` (or `experimental_multichannel`) collided under the
+    /// old string key, so the second run silently returned the first
+    /// run's report. The derived `SimSpec` key keeps them distinct.
+    #[test]
+    fn old_key_collision_is_structurally_impossible_now() {
+        let wide = AcceleratorConfig::default().with_window(32);
+        let narrow = AcceleratorConfig::default().with_window(1);
+        assert_ne!(wide, narrow);
+        // The old cache key cannot tell them apart...
+        assert_eq!(
+            old_key(AcceleratorKind::HitGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &wide),
+            old_key(AcceleratorKind::HitGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &narrow),
+        );
+        // ...and the flag was dropped too.
+        let flagged = AcceleratorConfig::default().with_experimental_multichannel(true);
+        assert_eq!(
+            old_key(AcceleratorKind::HitGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &flagged),
+            old_key(
+                AcceleratorKind::HitGraph,
+                "sd",
+                ProblemKind::Bfs,
+                "ddr4",
+                1,
+                &AcceleratorConfig::default()
+            ),
+        );
+        // The typed key separates them: two cache entries, and the
+        // window genuinely changes DRAM timing — the old cache was
+        // returning a wrong report for one of the two.
+        let build = |cfg: AcceleratorConfig| {
+            SimSpec::builder()
+                .accelerator(AcceleratorKind::HitGraph)
+                .graph(DatasetId::Sd)
+                .problem(ProblemKind::Bfs)
+                .config(cfg)
+                .build()
+                .unwrap()
+        };
+        let (sa, sb) = (build(wide), build(narrow));
+        assert_ne!(sa, sb);
+        let session = Session::new();
+        let ra = session.run(&sa);
+        let rb = session.run(&sb);
+        assert_eq!(session.cached_runs(), 2);
+        assert_ne!(ra.cycles, rb.cycles, "window must affect timing");
     }
 }

@@ -24,7 +24,9 @@ pub mod system;
 
 pub use address::{AddressMapper, DecodedAddr};
 pub use channel::Channel;
-pub use spec::{AddrMap, DramPolicy, DramSpec, DramStandard, RowPolicy, SchedPolicy, SpeedGrade};
+pub use spec::{
+    AddrMap, DramPolicy, DramSpec, DramStandard, MemTech, RowPolicy, SchedPolicy, SpeedGrade,
+};
 pub use stats::{DramStats, RowOutcome};
 pub use system::{ChannelMode, MemKind, MemRequest, MemorySystem, ReqToken};
 

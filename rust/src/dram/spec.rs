@@ -14,6 +14,71 @@ pub enum DramStandard {
     Hbm,
 }
 
+/// A memory *technology* as the evaluation sweeps it (Tab. 3 rows):
+/// the typed replacement for the old `"ddr3" | "ddr4" | "hbm"` strings.
+/// Each variant maps to one concrete [`DramSpec`] preset via
+/// [`MemTech::spec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemTech {
+    /// DDR3-2133 (Tab. 3 "DDR3" row).
+    Ddr3,
+    /// DDR4-2400 — the paper's default.
+    Ddr4,
+    /// HBM-1000 pseudo-channels.
+    Hbm,
+}
+
+impl MemTech {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemTech::Ddr3 => "ddr3",
+            MemTech::Ddr4 => "ddr4",
+            MemTech::Hbm => "hbm",
+        }
+    }
+
+    pub fn all() -> [MemTech; 3] {
+        [MemTech::Ddr3, MemTech::Ddr4, MemTech::Hbm]
+    }
+
+    /// The Tab. 3 [`DramSpec`] for this technology at a channel count.
+    pub fn spec(self, channels: usize) -> DramSpec {
+        match self {
+            MemTech::Ddr3 => DramSpec::ddr3_2133(channels),
+            MemTech::Ddr4 => DramSpec::ddr4_2400(channels),
+            MemTech::Hbm => DramSpec::hbm_1000(channels),
+        }
+    }
+
+    /// Highest channel count the paper evaluates for this technology
+    /// (Fig. 12: DDR3/DDR4 up to 4 channels, HBM up to 8).
+    pub fn max_channels(self) -> usize {
+        match self {
+            MemTech::Ddr3 | MemTech::Ddr4 => 4,
+            MemTech::Hbm => 8,
+        }
+    }
+}
+
+impl std::str::FromStr for MemTech {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "ddr3" => Ok(MemTech::Ddr3),
+            "ddr4" => Ok(MemTech::Ddr4),
+            "hbm" => Ok(MemTech::Hbm),
+            other => Err(format!("unknown DRAM type {other:?} (ddr3|ddr4|hbm)")),
+        }
+    }
+}
+
+impl std::fmt::Display for MemTech {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Row-buffer management policy (ablation axis; the paper's systems
 /// all assume open-page, which is Ramulator's default).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -337,6 +402,20 @@ impl DramSpec {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mem_tech_round_trips_and_maps_to_specs() {
+        for tech in MemTech::all() {
+            let parsed: MemTech = tech.name().parse().unwrap();
+            assert_eq!(parsed, tech);
+            assert_eq!(tech.to_string(), tech.name());
+            let s = tech.spec(2);
+            assert_eq!(s.channels, 2);
+        }
+        assert_eq!(MemTech::Ddr4.spec(1).standard, DramStandard::Ddr4);
+        assert_eq!(MemTech::Hbm.spec(1).standard, DramStandard::Hbm);
+        assert!("lpddr".parse::<MemTech>().is_err());
+    }
 
     #[test]
     fn presets_resolve() {

@@ -14,7 +14,7 @@ pub enum RowOutcome {
 }
 
 /// Aggregated statistics for one channel (or a roll-up of channels).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct DramStats {
     pub reads: u64,
     pub writes: u64,

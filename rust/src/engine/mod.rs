@@ -16,7 +16,8 @@ pub mod native;
 pub mod xla;
 
 pub use native::NativeEngine;
-pub use xla::XlaEngine;
+// `self::` disambiguates the local module from the extern `xla` crate.
+pub use self::xla::XlaEngine;
 
 use crate::algo::problem::GraphProblem;
 use crate::graph::EdgeList;

@@ -16,6 +16,119 @@ use super::rmat::{self, RmatParams};
 use super::synthetic;
 use super::VertexId;
 use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Typed identifier for the twelve Tab. 2 benchmark graphs — the
+/// typed replacement for the bare `"sd" | "db" | ...` strings. Parse
+/// user input with [`FromStr`](std::str::FromStr); the short paper
+/// name round-trips through [`Display`](std::fmt::Display).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DatasetId {
+    Sd,
+    Db,
+    Yt,
+    Pk,
+    Wt,
+    Or,
+    Lj,
+    Tw,
+    Bk,
+    Rd,
+    R21,
+    R24,
+}
+
+impl DatasetId {
+    /// Short identifier used throughout the paper.
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetId::Sd => "sd",
+            DatasetId::Db => "db",
+            DatasetId::Yt => "yt",
+            DatasetId::Pk => "pk",
+            DatasetId::Wt => "wt",
+            DatasetId::Or => "or",
+            DatasetId::Lj => "lj",
+            DatasetId::Tw => "tw",
+            DatasetId::Bk => "bk",
+            DatasetId::Rd => "rd",
+            DatasetId::R21 => "r21",
+            DatasetId::R24 => "r24",
+        }
+    }
+
+    /// All twelve Tab. 2 graphs, in appendix-table order.
+    pub const fn all() -> [DatasetId; 12] {
+        [
+            DatasetId::Sd,
+            DatasetId::Db,
+            DatasetId::Yt,
+            DatasetId::Pk,
+            DatasetId::Wt,
+            DatasetId::Or,
+            DatasetId::Lj,
+            DatasetId::Tw,
+            DatasetId::Bk,
+            DatasetId::Rd,
+            DatasetId::R21,
+            DatasetId::R24,
+        ]
+    }
+
+    /// The Fig. 12 / Fig. 13 deep-dive subset.
+    pub const fn ablation() -> [DatasetId; 4] {
+        [DatasetId::Db, DatasetId::Lj, DatasetId::Or, DatasetId::Rd]
+    }
+
+    /// The dataset specification (sizes, scale factor, ...).
+    pub fn spec(self) -> DatasetSpec {
+        spec(self.name()).expect("every DatasetId has a spec")
+    }
+
+    /// Build (or fetch from the process-wide cache) the unweighted
+    /// stand-in graph.
+    pub fn load(self) -> EdgeList {
+        dataset(self.name()).expect("every DatasetId has a generator")
+    }
+
+    /// Weighted variant (SSSP / SpMV, Tab. 5).
+    pub fn load_weighted(self) -> EdgeList {
+        dataset_weighted(self.name()).expect("every DatasetId has a generator")
+    }
+
+    /// Like [`DatasetId::load`] but hands out the cache's shared
+    /// `Arc` — no copy of the edge list.
+    pub fn load_shared(self) -> Arc<EdgeList> {
+        dataset_shared(self.name()).expect("every DatasetId has a generator")
+    }
+
+    /// Like [`DatasetId::load_weighted`], shared.
+    pub fn load_weighted_shared(self) -> Arc<EdgeList> {
+        dataset_weighted_shared(self.name()).expect("every DatasetId has a generator")
+    }
+}
+
+impl std::str::FromStr for DatasetId {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        DatasetId::all()
+            .into_iter()
+            .find(|d| d.name() == s.to_ascii_lowercase())
+            .ok_or_else(|| {
+                format!(
+                    "unknown dataset {s:?} (expected one of: {})",
+                    dataset_names().join(" ")
+                )
+            })
+    }
+}
+
+impl std::fmt::Display for DatasetId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Description + generator for one benchmark graph.
 #[derive(Clone, Debug)]
@@ -163,23 +276,47 @@ pub fn spec(name: &str) -> Option<DatasetSpec> {
     Some(s)
 }
 
-/// Build a named dataset stand-in. Deterministic. Results are cached
-/// process-wide: generation (especially R-MAT) dominates short
-/// simulation runs otherwise (§Perf in EXPERIMENTS.md).
-pub fn dataset(name: &str) -> Option<EdgeList> {
+/// Build a named dataset stand-in, returning the process-wide cache's
+/// shared `Arc` (no edge-list copy). Deterministic; generation
+/// (especially R-MAT) dominates short simulation runs otherwise
+/// (§Perf in EXPERIMENTS.md).
+pub fn dataset_shared(name: &str) -> Option<Arc<EdgeList>> {
+    cached(name, || build_dataset(name))
+}
+
+/// Weighted variant, shared (cached separately from the unweighted
+/// graph so weights are attached once, not per call).
+pub fn dataset_weighted_shared(name: &str) -> Option<Arc<EdgeList>> {
+    cached(&format!("{name}#weighted"), || {
+        dataset_shared(name).map(|g| (*g).clone().with_random_weights(0x77EE, 64.0))
+    })
+}
+
+fn cached(key: &str, build: impl FnOnce() -> Option<EdgeList>) -> Option<Arc<EdgeList>> {
     use std::collections::HashMap;
     use std::sync::{Mutex, OnceLock};
-    static CACHE: OnceLock<Mutex<HashMap<String, EdgeList>>> = OnceLock::new();
+    static CACHE: OnceLock<Mutex<HashMap<String, Arc<EdgeList>>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(g) = cache.lock().unwrap().get(name) {
-        return Some(g.clone());
+    if let Some(g) = cache.lock().unwrap().get(key) {
+        return Some(Arc::clone(g));
     }
-    let g = build_dataset(name)?;
-    cache
-        .lock()
-        .unwrap()
-        .insert(name.to_string(), g.clone());
-    Some(g)
+    // Build outside the lock (R-MAT generation can take seconds); a
+    // racing duplicate builds the same deterministic graph and the
+    // first insert wins.
+    let g = Arc::new(build()?);
+    Some(Arc::clone(
+        cache
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_insert(g),
+    ))
+}
+
+/// Build a named dataset stand-in (owned copy; see [`dataset_shared`]
+/// for the copy-free variant).
+pub fn dataset(name: &str) -> Option<EdgeList> {
+    dataset_shared(name).map(|g| (*g).clone())
 }
 
 fn build_dataset(name: &str) -> Option<EdgeList> {
@@ -217,9 +354,9 @@ fn build_dataset(name: &str) -> Option<EdgeList> {
     Some(g)
 }
 
-/// Weighted variant (SSSP / SpMV, Tab. 5).
+/// Weighted variant (SSSP / SpMV, Tab. 5; owned copy).
 pub fn dataset_weighted(name: &str) -> Option<EdgeList> {
-    dataset(name).map(|g| g.with_random_weights(0x77EE, 64.0))
+    dataset_weighted_shared(name).map(|g| (*g).clone())
 }
 
 /// Rename vertices by a random permutation (destroys construction-
@@ -291,6 +428,30 @@ fn thinned_grid(rows: usize, cols: usize, drop: f64, seed: u64) -> EdgeList {
 mod tests {
     use super::*;
     use crate::graph::properties::GraphProperties;
+
+    #[test]
+    fn dataset_id_round_trips() {
+        assert_eq!(DatasetId::all().len(), dataset_names().len());
+        for (id, &name) in DatasetId::all().iter().zip(dataset_names()) {
+            assert_eq!(id.name(), name);
+            assert_eq!(name.parse::<DatasetId>().unwrap(), *id);
+            assert_eq!(id.to_string(), name);
+            assert_eq!(id.spec().name, name);
+        }
+        assert_eq!(
+            DatasetId::ablation().map(|d| d.name()),
+            *ablation_dataset_names()
+        );
+        let err = "zz".parse::<DatasetId>().unwrap_err();
+        assert!(err.contains("unknown dataset"), "{err}");
+    }
+
+    #[test]
+    fn dataset_id_loads_graphs() {
+        let g = DatasetId::Sd.load();
+        assert!(g.num_edges() > 0);
+        assert!(DatasetId::Sd.load_weighted().weighted);
+    }
 
     #[test]
     fn all_names_resolve() {

@@ -10,7 +10,7 @@ pub mod rmat;
 pub mod synthetic;
 
 pub use csr::Csr;
-pub use datasets::{dataset, dataset_names, DatasetSpec};
+pub use datasets::{dataset, dataset_names, DatasetId, DatasetSpec};
 pub use edgelist::{Edge, EdgeList};
 pub use properties::GraphProperties;
 

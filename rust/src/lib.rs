@@ -22,16 +22,41 @@
 //!   the paper ablates (prefetch/partition/shard skipping, edge
 //!   shuffling, stride mapping, edge sorting, update combining, update
 //!   filtering, chunk scheduling).
-//! * [`sim`] — the co-simulation driver marrying accelerator request
-//!   producers to the DRAM model, and the metric set of the paper
-//!   (MTEPS, MREPS, iterations, bytes/edge, …).
+//! * [`sim`] — the typed session API and the co-simulation engine:
+//!   [`sim::SimSpec`] describes one run (accelerator × workload ×
+//!   problem × memory technology × channels × configuration) with all
+//!   invalid combinations rejected at build time; [`sim::Sweep`] /
+//!   [`sim::Session`] execute whole cartesian products in parallel
+//!   against a shared memoizing cache; [`sim::driver`] marries
+//!   accelerator request producers to the DRAM model and produces the
+//!   paper's metric set (MTEPS, MREPS, iterations, bytes/edge, …).
 //! * [`engine`] + [`runtime`] — the golden algorithm engine, available
 //!   as a pure-Rust implementation and as an AOT-compiled JAX/Pallas
 //!   artifact executed through PJRT (the `xla` crate). Python is only
 //!   ever used at build time.
 //! * [`coordinator`] + [`report`] — experiment registry covering every
-//!   figure and table of the paper's evaluation, sweep runner, and
-//!   table/figure formatters.
+//!   figure and table of the paper's evaluation (each expressed as
+//!   `SimSpec` sweeps over a shared session), and table/figure
+//!   formatters.
+//!
+//! # Quick start
+//!
+//! ```
+//! use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+//! use graphmem::algo::problem::ProblemKind;
+//! use graphmem::graph::DatasetId;
+//! use graphmem::sim::SimSpec;
+//!
+//! let report = SimSpec::builder()
+//!     .accelerator(AcceleratorKind::AccuGraph)
+//!     .graph(DatasetId::Sd)
+//!     .problem(ProblemKind::Bfs)
+//!     .config(AcceleratorConfig::all_optimizations())
+//!     .build()
+//!     .unwrap() // invalid combinations fail here, never mid-run
+//!     .run();
+//! assert!(report.mteps() > 0.0);
+//! ```
 
 pub mod accel;
 pub mod algo;

@@ -4,19 +4,27 @@
 //!   list                         available experiments / datasets / accelerators
 //!   datasets                     Tab. 2-style dataset property table
 //!   run <accel> <graph> <prob>   one simulation (options: --dram, --channels, --no-opt)
+//!   sweep                        parallel multi-axis sweep (options below)
 //!   report --exp <id>            regenerate a figure/table (options: --scope, --csv)
 //!   verify <graph> <prob>        golden-engine cross-check (native vs XLA/PJRT)
 //!
-//! Std-only argument parsing (the offline crate set has no clap).
+//! All argument parsing goes through the typed `FromStr` impls
+//! (`AcceleratorKind`, `DatasetId`, `ProblemKind`, `MemTech`) and into
+//! `SimSpec`s; invalid combinations are rejected before any simulation
+//! starts. Std-only argument parsing (the offline crate set has no
+//! clap).
 
 use anyhow::{anyhow, bail, Result};
 use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
 use graphmem::algo::golden::values_agree;
 use graphmem::algo::problem::{GraphProblem, ProblemKind};
-use graphmem::coordinator::{run_experiment, run_one, Experiment, Scope};
+use graphmem::coordinator::{run_experiment, Experiment, Scope};
+use graphmem::dram::MemTech;
 use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
-use graphmem::graph::{datasets, properties::GraphProperties};
+use graphmem::graph::{datasets, properties::GraphProperties, DatasetId};
 use graphmem::report::Table;
+use graphmem::sim::{Session, SimSpec, SpecError, Sweep};
+use std::str::FromStr;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,11 +45,22 @@ fn has_flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
 }
 
+/// Parse through a typed `FromStr` impl, lifting its message.
+fn parse_arg<T: FromStr<Err = String>>(s: &str) -> Result<T> {
+    s.parse().map_err(|e: String| anyhow!(e))
+}
+
+/// Parse a comma-separated list through a typed `FromStr` impl.
+fn parse_list<T: FromStr<Err = String>>(s: &str) -> Result<Vec<T>> {
+    s.split(',').filter(|p| !p.is_empty()).map(parse_arg).collect()
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("list") => cmd_list(),
         Some("datasets") => cmd_datasets(),
         Some("run") => cmd_run(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("report") => cmd_report(&args[1..]),
         Some("verify") => cmd_verify(&args[1..]),
@@ -59,6 +78,8 @@ fn print_help() {
          FPGA-Based Graph Processing Accelerators'\n\n\
          USAGE:\n  graphmem list\n  graphmem datasets\n  \
          graphmem run <accel> <graph> <problem> [--dram ddr3|ddr4|hbm] [--channels N] [--no-opt]\n  \
+         graphmem sweep [--accels a,b,..] [--graphs g,..] [--problems p,..] [--drams d,..]\n  \
+         \x20            [--channels n,..] [--threads N] [--no-opt] [--skip-unsupported]\n  \
          graphmem trace <accel> <graph> <problem> --out <file>   (Ramulator-style request trace)\n  \
          graphmem report --exp <id|all> [--scope quick|standard|full] [--csv]\n  \
          graphmem verify <graph> <problem> [--max-iters N]\n\n\
@@ -92,12 +113,12 @@ fn cmd_datasets() -> Result<()> {
             "paper |E|", "scale",
         ],
     );
-    for &name in datasets::dataset_names() {
-        let spec = datasets::spec(name).unwrap();
-        let g = datasets::dataset(name).unwrap();
+    for id in DatasetId::all() {
+        let spec = id.spec();
+        let g = id.load_shared();
         let p = GraphProperties::compute(&g);
         t.row(vec![
-            name.to_string(),
+            id.to_string(),
             graphmem::util::fmt_count(p.num_vertices as u64),
             graphmem::util::fmt_count(p.num_edges as u64),
             if p.directed { "yes" } else { "no" }.into(),
@@ -119,17 +140,25 @@ fn cmd_run(args: &[String]) -> Result<()> {
         (Some(a), Some(g), Some(p)) => (a, g, p),
         _ => bail!("usage: graphmem run <accel> <graph> <problem> [options]"),
     };
-    let kind = AcceleratorKind::parse(accel).ok_or_else(|| anyhow!("unknown accel {accel:?}"))?;
-    let problem =
-        ProblemKind::parse(problem).ok_or_else(|| anyhow!("unknown problem {problem:?}"))?;
-    let dram = flag_value(args, "--dram").unwrap_or("ddr4");
+    let kind: AcceleratorKind = parse_arg(accel)?;
+    let graph: DatasetId = parse_arg(graph)?;
+    let problem: ProblemKind = parse_arg(problem)?;
+    let mem: MemTech = parse_arg(flag_value(args, "--dram").unwrap_or("ddr4"))?;
     let channels: usize = flag_value(args, "--channels").unwrap_or("1").parse()?;
     let cfg = if has_flag(args, "--no-opt") {
         AcceleratorConfig::baseline()
     } else {
         AcceleratorConfig::all_optimizations()
     };
-    let r = run_one(kind, graph, problem, dram, channels, &cfg)?;
+    let spec = SimSpec::builder()
+        .accelerator(kind)
+        .graph(graph)
+        .problem(problem)
+        .mem(mem)
+        .channels(channels)
+        .config(cfg)
+        .build()?;
+    let r = spec.run();
     println!("{}", r.summary());
     println!(
         "  cycles={} requests={} (r={} w={}) bytes={}",
@@ -160,6 +189,93 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let accels: Vec<AcceleratorKind> = match flag_value(args, "--accels") {
+        Some(s) => parse_list(s)?,
+        None => AcceleratorKind::all().to_vec(),
+    };
+    let graphs: Vec<DatasetId> = match flag_value(args, "--graphs") {
+        Some(s) => parse_list(s)?,
+        None => vec![DatasetId::Sd, DatasetId::Db, DatasetId::Yt, DatasetId::Wt],
+    };
+    let problems: Vec<ProblemKind> = match flag_value(args, "--problems") {
+        Some(s) => parse_list(s)?,
+        None => vec![ProblemKind::Bfs],
+    };
+    let drams: Vec<MemTech> = match flag_value(args, "--drams") {
+        Some(s) => parse_list(s)?,
+        None => vec![MemTech::Ddr4],
+    };
+    let channels: Vec<usize> = match flag_value(args, "--channels") {
+        Some(s) => s
+            .split(',')
+            .filter(|p| !p.is_empty())
+            .map(|p| p.parse::<usize>().map_err(|e| anyhow!("bad channel count {p:?}: {e}")))
+            .collect::<Result<_>>()?,
+        None => vec![1],
+    };
+    let cfg = if has_flag(args, "--no-opt") {
+        AcceleratorConfig::baseline()
+    } else {
+        AcceleratorConfig::all_optimizations()
+    };
+    let mut sweep = Sweep::new()
+        .accelerators(accels)
+        .graphs(graphs)
+        .problems(problems)
+        .mem_techs(drams)
+        .channels(channels)
+        .configs([cfg]);
+    if has_flag(args, "--skip-unsupported") {
+        sweep = sweep.skip_unsupported();
+    }
+    if let Some(t) = flag_value(args, "--threads") {
+        sweep = sweep.threads(t.parse()?);
+    }
+    let session = Session::new();
+    let t0 = std::time::Instant::now();
+    // Translate internal axis names into the flags this command exposes.
+    let runs = sweep.run_with(&session).map_err(|e| match e {
+        SpecError::EmptyAxis(axis) => {
+            let flag = match axis {
+                "accelerators" => "--accels",
+                "workloads" => "--graphs",
+                "problems" => "--problems",
+                "mem_techs" => "--drams",
+                "channels" => "--channels",
+                other => other,
+            };
+            anyhow!("nothing to sweep: {flag} is empty")
+        }
+        other => anyhow!("{other}"),
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        "Sweep results",
+        &["accel", "graph", "problem", "dram", "ch", "sim time (s)", "MTEPS", "util%"],
+    );
+    for run in &runs {
+        let (s, r) = (&run.spec, &run.report);
+        t.row(vec![
+            s.accelerator().to_string(),
+            s.workload().label().to_string(),
+            s.problem().to_string(),
+            s.mem().to_string(),
+            s.channels().to_string(),
+            format!("{:.5}", r.seconds),
+            format!("{:.1}", r.mteps()),
+            format!("{:.1}", 100.0 * r.bus_utilization),
+        ]);
+    }
+    println!("{}", t.render());
+    eprintln!(
+        "{} runs ({} distinct simulations) in {wall:.2}s wall",
+        runs.len(),
+        session.cached_runs()
+    );
+    Ok(())
+}
+
 fn cmd_trace(args: &[String]) -> Result<()> {
     use graphmem::accel::build;
     use graphmem::dram::{ChannelMode, MemorySystem};
@@ -169,15 +285,15 @@ fn cmd_trace(args: &[String]) -> Result<()> {
         _ => bail!("usage: graphmem trace <accel> <graph> <problem> --out <file>"),
     };
     let out = flag_value(args, "--out").unwrap_or("trace.txt");
-    let kind = AcceleratorKind::parse(accel).ok_or_else(|| anyhow!("unknown accel {accel:?}"))?;
-    let problem =
-        ProblemKind::parse(problem).ok_or_else(|| anyhow!("unknown problem {problem:?}"))?;
+    let kind: AcceleratorKind = parse_arg(accel)?;
+    let graph: DatasetId = parse_arg(graph)?;
+    let problem: ProblemKind = parse_arg(problem)?;
+    let mem: MemTech = parse_arg(flag_value(args, "--dram").unwrap_or("ddr4"))?;
     let g = if problem.weighted() {
-        datasets::dataset_weighted(graph)
+        graph.load_weighted()
     } else {
-        datasets::dataset(graph)
-    }
-    .ok_or_else(|| anyhow!("unknown dataset {graph:?}"))?;
+        graph.load()
+    };
     let p = GraphProblem::new(problem, &g);
     let cfg = AcceleratorConfig::all_optimizations();
     let mode = if kind.multi_channel() {
@@ -185,11 +301,7 @@ fn cmd_trace(args: &[String]) -> Result<()> {
     } else {
         ChannelMode::InterleaveLine
     };
-    let spec = graphmem::coordinator::runner::dram_spec(
-        flag_value(args, "--dram").unwrap_or("ddr4"),
-        1,
-    )?;
-    let mut mem = MemorySystem::with_mode(spec, mode);
+    let mut mem = MemorySystem::with_mode(mem.spec(1), mode);
     mem.enable_trace();
     let mut a = build(kind, &g, &cfg);
     let r = a.run(&p, &mut mem);
@@ -232,15 +344,14 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         (Some(g), Some(p)) => (g, p),
         _ => bail!("usage: graphmem verify <graph> <problem>"),
     };
-    let problem =
-        ProblemKind::parse(problem).ok_or_else(|| anyhow!("unknown problem {problem:?}"))?;
+    let graph: DatasetId = parse_arg(graph)?;
+    let problem: ProblemKind = parse_arg(problem)?;
     let max_iters: u32 = flag_value(args, "--max-iters").unwrap_or("10000").parse()?;
     let g = if problem.weighted() {
-        datasets::dataset_weighted(graph)
+        graph.load_weighted()
     } else {
-        datasets::dataset(graph)
-    }
-    .ok_or_else(|| anyhow!("unknown dataset {graph:?}"))?;
+        graph.load()
+    };
     let p = GraphProblem::new(problem, &g);
 
     let mut native = NativeEngine::new();

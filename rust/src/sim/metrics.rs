@@ -5,7 +5,7 @@
 use crate::dram::DramStats;
 
 /// Raw counters accumulated by an accelerator model during a run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RunMetrics {
     /// Iterations executed (incl. the final no-change pass).
     pub iterations: u32,
@@ -24,7 +24,12 @@ pub struct RunMetrics {
 }
 
 /// Full result of one simulated run.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares every field (including exact float bits via
+/// `f64` equality) — the simulation is deterministic, so two runs of
+/// the same [`crate::sim::SimSpec`] must compare equal; the parallel
+/// sweep determinism test relies on this.
+#[derive(Clone, Debug, PartialEq)]
 pub struct SimReport {
     pub accelerator: &'static str,
     pub problem: &'static str,

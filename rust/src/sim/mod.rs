@@ -1,8 +1,24 @@
 //! Co-simulation: accelerator request streams against the DRAM model,
-//! plus the paper's metric set.
+//! the paper's metric set, and the typed session API.
+//!
+//! Entry points, highest level first:
+//!
+//! * [`spec`] — [`SimSpec`] / [`SimSpecBuilder`]: a typed, validated
+//!   description of one run (accelerator × workload × problem ×
+//!   memory technology × channels × configuration). Invalid
+//!   combinations are rejected at build time; a built spec always
+//!   simulates.
+//! * [`sweep`] — [`Sweep`] (cartesian axes) and [`Session`] (shared
+//!   lock-striped memo cache + parallel batch execution).
+//! * [`driver`] / [`metrics`] — the phase-level co-simulation engine
+//!   and the metric set the specs produce.
 
 pub mod driver;
 pub mod metrics;
+pub mod spec;
+pub mod sweep;
 
 pub use driver::{run_phase, PhaseTelemetry};
 pub use metrics::{RunMetrics, SimReport};
+pub use spec::{SimSpec, SimSpecBuilder, SpecError, Workload};
+pub use sweep::{Session, Sweep, SweepRun};

@@ -1,0 +1,653 @@
+//! Typed simulation specifications — the session API that replaces the
+//! stringly-typed `run_one(kind, "wv", ..., "ddr4", 1, &cfg)` entry
+//! point.
+//!
+//! A [`SimSpec`] pins down one run completely: accelerator, workload,
+//! problem, memory technology, channel count and full
+//! [`AcceleratorConfig`]. It is built through [`SimSpecBuilder`], which
+//! rejects every unsupported combination (Tab. 1 capability matrix,
+//! Fig. 12 channel support, weighted-problem requirements) at *build*
+//! time — a successfully built spec always simulates, so
+//! [`SimSpec::run`] is infallible.
+//!
+//! `SimSpec` derives `Hash`/`Eq`, so memoization keys (see
+//! [`super::sweep::Session`]) come from the type itself rather than a
+//! hand-rolled format string; fields can no longer be silently omitted
+//! from the cache key.
+//!
+//! Workloads are either the named Tab. 2 stand-ins
+//! ([`Workload::Named`]) or any user-supplied edge list
+//! ([`Workload::Custom`]) — custom graphs flow through the same
+//! builder, validation and cache as the benchmark set.
+
+use crate::accel::{build, AcceleratorConfig, AcceleratorKind};
+use crate::algo::problem::{GraphProblem, ProblemKind};
+use crate::dram::{ChannelMode, MemTech, MemorySystem};
+use crate::graph::datasets::DatasetId;
+use crate::graph::EdgeList;
+use crate::sim::metrics::SimReport;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+/// What graph a simulation runs on.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    /// One of the twelve Tab. 2 benchmark stand-ins.
+    Named(DatasetId),
+    /// A user-supplied graph. Identity (for `Eq`/`Hash`/memoization)
+    /// is the label plus a content digest, so two custom workloads
+    /// with the same label but different edges never alias.
+    Custom {
+        name: String,
+        graph: Arc<EdgeList>,
+        digest: u64,
+    },
+}
+
+impl Workload {
+    /// Wrap a user-supplied graph.
+    pub fn custom(name: impl Into<String>, graph: EdgeList) -> Workload {
+        let digest = edge_list_digest(&graph);
+        Workload::Custom {
+            name: name.into(),
+            graph: Arc::new(graph),
+            digest,
+        }
+    }
+
+    /// Short display label ("lj", or the custom name).
+    pub fn label(&self) -> &str {
+        match self {
+            Workload::Named(id) => id.name(),
+            Workload::Custom { name, .. } => name,
+        }
+    }
+
+    /// Materialize the edge list (weighted variant when asked). Both
+    /// arms hand out a shared `Arc` — no edge-list copy per run,
+    /// however many threads sweep the same graph.
+    fn resolve(&self, weighted: bool) -> Arc<EdgeList> {
+        match self {
+            Workload::Named(id) => {
+                if weighted {
+                    id.load_weighted_shared()
+                } else {
+                    id.load_shared()
+                }
+            }
+            Workload::Custom { graph, .. } => Arc::clone(graph),
+        }
+    }
+}
+
+impl PartialEq for Workload {
+    fn eq(&self, other: &Workload) -> bool {
+        match (self, other) {
+            (Workload::Named(a), Workload::Named(b)) => a == b,
+            (
+                Workload::Custom {
+                    name: an,
+                    digest: ad,
+                    ..
+                },
+                Workload::Custom {
+                    name: bn,
+                    digest: bd,
+                    ..
+                },
+            ) => an == bn && ad == bd,
+            _ => false,
+        }
+    }
+}
+
+impl Eq for Workload {}
+
+impl Hash for Workload {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        match self {
+            Workload::Named(id) => {
+                0u8.hash(state);
+                id.hash(state);
+            }
+            Workload::Custom { name, digest, .. } => {
+                1u8.hash(state);
+                name.hash(state);
+                digest.hash(state);
+            }
+        }
+    }
+}
+
+impl From<DatasetId> for Workload {
+    fn from(id: DatasetId) -> Workload {
+        Workload::Named(id)
+    }
+}
+
+/// FNV-1a over the structural content of an edge list.
+fn edge_list_digest(g: &EdgeList) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |v: u64| {
+        for byte in v.to_le_bytes() {
+            h = (h ^ u64::from(byte)).wrapping_mul(PRIME);
+        }
+    };
+    mix(g.num_vertices as u64);
+    mix(u64::from(g.directed));
+    mix(u64::from(g.weighted));
+    for e in &g.edges {
+        mix(u64::from(e.src));
+        mix(u64::from(e.dst));
+        mix(u64::from(e.weight.to_bits()));
+    }
+    h
+}
+
+/// Everything [`SimSpecBuilder::build`] can reject. All combination
+/// errors surface here, *before* any simulation work starts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpecError {
+    /// A required builder field was never set.
+    MissingField(&'static str),
+    /// `channels == 0` is meaningless.
+    ZeroChannels,
+    /// Weighted problem on a system without weight support (Tab. 1).
+    WeightedUnsupported {
+        accelerator: AcceleratorKind,
+        problem: ProblemKind,
+    },
+    /// Multi-channel request on a single-channel design (Fig. 12)
+    /// without the open-challenge-(c) experimental flag.
+    MultiChannelUnsupported {
+        accelerator: AcceleratorKind,
+        channels: usize,
+    },
+    /// More channels than the technology's Tab. 3 / Fig. 12
+    /// configuration space provides.
+    ChannelsExceedMemTech { mem: MemTech, channels: usize },
+    /// Weighted problem on a custom workload that has no weights.
+    CustomGraphUnweighted { name: String, problem: ProblemKind },
+    /// A dataset name that is not one of the Tab. 2 identifiers.
+    UnknownDataset(String),
+    /// A DRAM technology name outside ddr3|ddr4|hbm.
+    UnknownMemTech(String),
+    /// A sweep axis was left empty.
+    EmptyAxis(&'static str),
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::MissingField(field) => {
+                write!(f, "spec incomplete: `{field}` was never set")
+            }
+            SpecError::ZeroChannels => write!(f, "channel count must be at least 1"),
+            SpecError::WeightedUnsupported {
+                accelerator,
+                problem,
+            } => write!(
+                f,
+                "{accelerator} does not support weighted problems (Tab. 1); \
+                 {problem} requires edge weights"
+            ),
+            SpecError::MultiChannelUnsupported {
+                accelerator,
+                channels,
+            } => write!(
+                f,
+                "{accelerator} is not enabled for multi-channel operation \
+                 ({channels} channels requested, Fig. 12); set \
+                 experimental_multichannel for the open-challenge-(c) extension"
+            ),
+            SpecError::ChannelsExceedMemTech { mem, channels } => write!(
+                f,
+                "{mem} supports at most {} channels in the paper's configuration \
+                 space (Tab. 3 / Fig. 12); got {channels}",
+                mem.max_channels()
+            ),
+            SpecError::CustomGraphUnweighted { name, problem } => write!(
+                f,
+                "custom workload {name:?} has no edge weights, but {problem} \
+                 requires them; attach weights (e.g. \
+                 EdgeList::with_random_weights) first"
+            ),
+            SpecError::UnknownDataset(name) => {
+                write!(
+                    f,
+                    "unknown dataset {name:?} (expected one of: {})",
+                    crate::graph::datasets::dataset_names().join(" ")
+                )
+            }
+            SpecError::UnknownMemTech(name) => {
+                write!(f, "unknown DRAM type {name:?} (ddr3|ddr4|hbm)")
+            }
+            SpecError::EmptyAxis(axis) => {
+                write!(f, "sweep axis `{axis}` is empty — nothing to run")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// A fully validated simulation specification.
+///
+/// Construct through [`SimSpec::builder`]; every value of this type is
+/// runnable ([`SimSpec::run`] cannot fail). Derived `Hash`/`Eq` make
+/// it the memoization key of [`super::sweep::Session`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SimSpec {
+    accelerator: AcceleratorKind,
+    workload: Workload,
+    problem: ProblemKind,
+    mem: MemTech,
+    channels: usize,
+    config: AcceleratorConfig,
+}
+
+impl SimSpec {
+    pub fn builder() -> SimSpecBuilder {
+        SimSpecBuilder::new()
+    }
+
+    pub fn accelerator(&self) -> AcceleratorKind {
+        self.accelerator
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    pub fn problem(&self) -> ProblemKind {
+        self.problem
+    }
+
+    pub fn mem(&self) -> MemTech {
+        self.mem
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    pub fn config(&self) -> &AcceleratorConfig {
+        &self.config
+    }
+
+    /// Compact human label, e.g. `AccuGraph/lj/BFS/ddr4x1`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}x{}",
+            self.accelerator,
+            self.workload.label(),
+            self.problem,
+            self.mem,
+            self.channels
+        )
+    }
+
+    /// Execute the simulation. Infallible: every invalid combination
+    /// was rejected by [`SimSpecBuilder::build`].
+    pub fn run(&self) -> SimReport {
+        let g = self.workload.resolve(self.problem.weighted());
+        let spec = self.mem.spec(self.channels);
+        // HitGraph/ThunderGP place data per channel (region mode); the
+        // single-channel accelerators see one region either way.
+        let mode = if self.accelerator.multi_channel() {
+            ChannelMode::Region
+        } else {
+            ChannelMode::InterleaveLine
+        };
+        let p = GraphProblem::new(self.problem, &g);
+        let mut accel = build(self.accelerator, &g, &self.config);
+        let mut mem = MemorySystem::with_mode(spec, mode);
+        accel.run(&p, &mut mem)
+    }
+}
+
+/// Fluent builder for [`SimSpec`]; all validation happens in
+/// [`SimSpecBuilder::build`].
+#[derive(Clone, Debug, Default)]
+pub struct SimSpecBuilder {
+    accelerator: Option<AcceleratorKind>,
+    workload: Option<Workload>,
+    problem: Option<ProblemKind>,
+    mem: Option<MemTech>,
+    channels: Option<usize>,
+    config: Option<AcceleratorConfig>,
+    /// Parse errors from the `*_named` convenience setters, one slot
+    /// per axis (so a bad dataset name cannot shadow a bad DRAM name),
+    /// surfaced at build time. A later successful setter for the same
+    /// axis clears its slot — fallback patterns like "try the user's
+    /// name, then a default" must not stay poisoned.
+    deferred_dataset: Option<SpecError>,
+    deferred_mem: Option<SpecError>,
+}
+
+impl SimSpecBuilder {
+    pub fn new() -> SimSpecBuilder {
+        SimSpecBuilder::default()
+    }
+
+    pub fn accelerator(mut self, kind: AcceleratorKind) -> Self {
+        self.accelerator = Some(kind);
+        self
+    }
+
+    /// Benchmark workload by typed id.
+    pub fn graph(mut self, id: DatasetId) -> Self {
+        self.workload = Some(Workload::Named(id));
+        self.deferred_dataset = None;
+        self
+    }
+
+    /// Benchmark workload by paper short name; an unknown name is
+    /// reported by [`SimSpecBuilder::build`].
+    pub fn graph_named(mut self, name: &str) -> Self {
+        match name.parse::<DatasetId>() {
+            Ok(id) => {
+                self.workload = Some(Workload::Named(id));
+                self.deferred_dataset = None;
+            }
+            Err(_) => {
+                self.deferred_dataset = Some(SpecError::UnknownDataset(name.to_string()));
+            }
+        }
+        self
+    }
+
+    /// Any workload value (named or custom).
+    pub fn workload(mut self, workload: Workload) -> Self {
+        self.workload = Some(workload);
+        self.deferred_dataset = None;
+        self
+    }
+
+    /// User-supplied graph; flows through the same validation and
+    /// cache as the named datasets.
+    pub fn custom_graph(mut self, name: impl Into<String>, graph: EdgeList) -> Self {
+        self.workload = Some(Workload::custom(name, graph));
+        self.deferred_dataset = None;
+        self
+    }
+
+    pub fn problem(mut self, problem: ProblemKind) -> Self {
+        self.problem = Some(problem);
+        self
+    }
+
+    /// Memory technology (defaults to DDR4, the paper's baseline).
+    pub fn mem(mut self, mem: MemTech) -> Self {
+        self.mem = Some(mem);
+        self.deferred_mem = None;
+        self
+    }
+
+    /// Memory technology by name; an unknown name is reported by
+    /// [`SimSpecBuilder::build`].
+    pub fn mem_named(mut self, name: &str) -> Self {
+        match name.parse::<MemTech>() {
+            Ok(tech) => {
+                self.mem = Some(tech);
+                self.deferred_mem = None;
+            }
+            Err(_) => {
+                self.deferred_mem = Some(SpecError::UnknownMemTech(name.to_string()));
+            }
+        }
+        self
+    }
+
+    /// Memory channel count (defaults to 1). Also applied to the
+    /// accelerator configuration at build time.
+    pub fn channels(mut self, channels: usize) -> Self {
+        self.channels = Some(channels);
+        self
+    }
+
+    /// Full accelerator configuration (defaults to
+    /// [`AcceleratorConfig::default`], the no-optimization baseline).
+    pub fn config(mut self, config: AcceleratorConfig) -> Self {
+        self.config = Some(config);
+        self
+    }
+
+    /// Validate and freeze. Every unsupported combination is rejected
+    /// here, before any simulation work.
+    pub fn build(self) -> Result<SimSpec, SpecError> {
+        if let Some(err) = self.deferred_dataset {
+            return Err(err);
+        }
+        if let Some(err) = self.deferred_mem {
+            return Err(err);
+        }
+        let accelerator = self.accelerator.ok_or(SpecError::MissingField("accelerator"))?;
+        let workload = self.workload.ok_or(SpecError::MissingField("workload"))?;
+        let problem = self.problem.ok_or(SpecError::MissingField("problem"))?;
+        let mem = self.mem.unwrap_or(MemTech::Ddr4);
+        let channels = self.channels.unwrap_or(1);
+        let config = self.config.unwrap_or_default();
+
+        if channels == 0 {
+            return Err(SpecError::ZeroChannels);
+        }
+        if problem.weighted() && !accelerator.supports_weighted() {
+            return Err(SpecError::WeightedUnsupported {
+                accelerator,
+                problem,
+            });
+        }
+        if channels > 1 && !accelerator.multi_channel() && !config.experimental_multichannel {
+            return Err(SpecError::MultiChannelUnsupported {
+                accelerator,
+                channels,
+            });
+        }
+        if channels > mem.max_channels() {
+            return Err(SpecError::ChannelsExceedMemTech { mem, channels });
+        }
+        if let Workload::Custom { name, graph, .. } = &workload {
+            if problem.weighted() && !graph.weighted {
+                return Err(SpecError::CustomGraphUnweighted {
+                    name: name.clone(),
+                    problem,
+                });
+            }
+        }
+        // Normalize: the spec's channel axis is authoritative, so the
+        // config the accelerator sees (and the derived cache key)
+        // always agree with it; the optimization list is canonicalized
+        // so insertion order cannot split the memo key.
+        let mut config = config.with_channels(channels);
+        config.optimizations.sort_unstable();
+        config.optimizations.dedup();
+        Ok(SimSpec {
+            accelerator,
+            workload,
+            problem,
+            mem,
+            channels,
+            config,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+
+    fn base() -> SimSpecBuilder {
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::HitGraph)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::Bfs)
+    }
+
+    #[test]
+    fn builder_defaults() {
+        let spec = base().build().unwrap();
+        assert_eq!(spec.mem(), MemTech::Ddr4);
+        assert_eq!(spec.channels(), 1);
+        assert_eq!(spec.config().channels, 1);
+        assert_eq!(spec.label(), "HitGraph/sd/BFS/ddr4x1");
+    }
+
+    #[test]
+    fn missing_fields_are_reported() {
+        let err = SimSpec::builder().build().unwrap_err();
+        assert_eq!(err, SpecError::MissingField("accelerator"));
+        let err = SimSpec::builder()
+            .accelerator(AcceleratorKind::HitGraph)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, SpecError::MissingField("workload"));
+    }
+
+    #[test]
+    fn weighted_combinations_validated_at_build() {
+        for kind in AcceleratorKind::all() {
+            let res = base().accelerator(kind).problem(ProblemKind::Sssp).build();
+            if kind.supports_weighted() {
+                assert!(res.is_ok(), "{kind}");
+            } else {
+                assert!(
+                    matches!(res, Err(SpecError::WeightedUnsupported { .. })),
+                    "{kind}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multichannel_needs_support_or_flag() {
+        let err = base()
+            .accelerator(AcceleratorKind::ForeGraph)
+            .channels(4)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SpecError::MultiChannelUnsupported { .. }));
+        // Experimental flag unlocks the open-challenge-(c) extension.
+        let ok = base()
+            .accelerator(AcceleratorKind::ForeGraph)
+            .channels(4)
+            .config(AcceleratorConfig::default().with_experimental_multichannel(true))
+            .build();
+        assert!(ok.is_ok());
+        // Native multi-channel designs need no flag.
+        assert!(base().channels(4).build().is_ok());
+    }
+
+    #[test]
+    fn named_setters_defer_errors_to_build() {
+        let err = base().graph_named("zz").build().unwrap_err();
+        assert_eq!(err, SpecError::UnknownDataset("zz".to_string()));
+        assert!(err.to_string().contains("unknown dataset"));
+        let err = base().mem_named("dd5").build().unwrap_err();
+        assert_eq!(err, SpecError::UnknownMemTech("dd5".to_string()));
+        assert!(base().graph_named("lj").mem_named("hbm").build().is_ok());
+    }
+
+    #[test]
+    fn later_valid_setter_overrides_deferred_parse_error() {
+        // Fallback pattern: a bad user-supplied name followed by a
+        // valid default must not stay poisoned...
+        assert!(base().graph_named("zz").graph(DatasetId::Lj).build().is_ok());
+        assert!(base().graph_named("zz").graph_named("lj").build().is_ok());
+        assert!(base().mem_named("dd5").mem(MemTech::Hbm).build().is_ok());
+        // ...but an untouched axis keeps its error: the slots are
+        // per-axis, so fixing the dataset cannot swallow a bad DRAM
+        // name (and vice versa).
+        let err = base().graph_named("zz").mem_named("hbm").build().unwrap_err();
+        assert_eq!(err, SpecError::UnknownDataset("zz".to_string()));
+        let err = base()
+            .graph_named("zz")
+            .mem_named("dd5")
+            .graph(DatasetId::Lj)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, SpecError::UnknownMemTech("dd5".to_string()));
+    }
+
+    #[test]
+    fn optimization_order_does_not_split_the_memo_key() {
+        use crate::accel::Optimization;
+        let ab = AcceleratorConfig::default()
+            .with(Optimization::EdgeSorting)
+            .with(Optimization::UpdateCombining);
+        let ba = AcceleratorConfig::default()
+            .with(Optimization::UpdateCombining)
+            .with(Optimization::EdgeSorting);
+        assert_ne!(ab, ba, "raw configs differ by insertion order");
+        let sa = base().config(ab).build().unwrap();
+        let sb = base().config(ba).build().unwrap();
+        assert_eq!(sa, sb, "built specs canonicalize the optimization list");
+    }
+
+    #[test]
+    fn custom_workload_identity_is_content_based() {
+        let a = Workload::custom("mine", synthetic::erdos_renyi(64, 256, 1));
+        let b = Workload::custom("mine", synthetic::erdos_renyi(64, 256, 1));
+        let c = Workload::custom("mine", synthetic::erdos_renyi(64, 256, 2));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, Workload::Named(DatasetId::Sd));
+    }
+
+    #[test]
+    fn custom_unweighted_rejected_for_weighted_problems() {
+        let g = synthetic::erdos_renyi(64, 256, 3);
+        let err = base()
+            .custom_graph("mine", g.clone())
+            .problem(ProblemKind::Sssp)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SpecError::CustomGraphUnweighted { .. }));
+        let ok = base()
+            .custom_graph("mine", g.with_random_weights(9, 8.0))
+            .problem(ProblemKind::Sssp)
+            .build();
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn zero_channels_rejected() {
+        assert_eq!(base().channels(0).build().unwrap_err(), SpecError::ZeroChannels);
+    }
+
+    #[test]
+    fn custom_workload_runs_like_named() {
+        let g = synthetic::erdos_renyi(200, 900, 7);
+        let spec = base()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .custom_graph("er200", g)
+            .build()
+            .unwrap();
+        let r = spec.run();
+        assert!(r.cycles > 0);
+        assert!(r.metrics.iterations > 0);
+    }
+
+    #[test]
+    fn spec_hash_distinguishes_window_and_flag() {
+        let s1 = base()
+            .config(AcceleratorConfig::default().with_window(32))
+            .build()
+            .unwrap();
+        let s2 = base()
+            .config(AcceleratorConfig::default().with_window(1))
+            .build()
+            .unwrap();
+        assert_ne!(s1, s2);
+        let s3 = base()
+            .config(AcceleratorConfig::default().with_experimental_multichannel(true))
+            .build()
+            .unwrap();
+        let s4 = base().config(AcceleratorConfig::default()).build().unwrap();
+        assert_ne!(s3, s4);
+    }
+}

@@ -1,0 +1,388 @@
+//! Parallel sweep execution over [`SimSpec`]s.
+//!
+//! [`Session`] is the shared, lock-striped result cache that replaces
+//! the old serial `coordinator::Runner`: results are memoized per
+//! [`SimSpec`] (derived `Hash`/`Eq` keys — no hand-rolled strings),
+//! and [`Session::run_all`] fans a batch of specs out across worker
+//! threads. The simulator is deterministic, so parallel execution
+//! yields reports identical to the serial path.
+//!
+//! [`Sweep`] declares experiment axes (accelerators × workloads ×
+//! problems × memory technologies × channel counts × configurations),
+//! takes their cartesian product and executes it through a session:
+//!
+//! ```
+//! use graphmem::accel::AcceleratorKind;
+//! use graphmem::algo::problem::ProblemKind;
+//! use graphmem::dram::MemTech;
+//! use graphmem::graph::DatasetId;
+//! use graphmem::sim::Sweep;
+//!
+//! let runs = Sweep::new()
+//!     .accelerators(AcceleratorKind::all())
+//!     .graphs([DatasetId::Sd])
+//!     .problems([ProblemKind::Bfs])
+//!     .mem_techs([MemTech::Ddr4, MemTech::Hbm])
+//!     .run()
+//!     .unwrap();
+//! assert_eq!(runs.len(), 8);
+//! ```
+
+use super::metrics::SimReport;
+use super::spec::{SimSpec, SpecError, Workload};
+use crate::accel::{AcceleratorConfig, AcceleratorKind};
+use crate::algo::problem::ProblemKind;
+use crate::dram::MemTech;
+use crate::graph::datasets::DatasetId;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of independent cache shards; keeps lock contention low when
+/// many worker threads publish results concurrently.
+const CACHE_SHARDS: usize = 16;
+
+/// Shared memoizing simulation session: run any number of specs
+/// (serially or in parallel) and every distinct [`SimSpec`] simulates
+/// at most once per session.
+pub struct Session {
+    shards: Vec<Mutex<HashMap<SimSpec, SimReport>>>,
+    /// Worker threads used by [`Session::run_all`]; `None` = derive
+    /// from the machine.
+    threads: Option<usize>,
+}
+
+impl Session {
+    pub fn new() -> Session {
+        Session {
+            shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            threads: None,
+        }
+    }
+
+    /// Fix the worker-thread count for batched runs (1 = serial).
+    pub fn with_threads(mut self, threads: usize) -> Session {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    fn shard(&self, spec: &SimSpec) -> &Mutex<HashMap<SimSpec, SimReport>> {
+        let mut h = DefaultHasher::new();
+        spec.hash(&mut h);
+        &self.shards[(h.finish() as usize) % CACHE_SHARDS]
+    }
+
+    /// Run one spec (or fetch its memoized report).
+    pub fn run(&self, spec: &SimSpec) -> SimReport {
+        if let Some(hit) = self.shard(spec).lock().unwrap().get(spec) {
+            return hit.clone();
+        }
+        // Simulate outside the lock; a racing duplicate computes the
+        // same deterministic report, and the first insert wins.
+        let report = spec.run();
+        self.shard(spec)
+            .lock()
+            .unwrap()
+            .entry(spec.clone())
+            .or_insert(report)
+            .clone()
+    }
+
+    /// Run a batch of specs across worker threads; the result vector
+    /// is index-aligned with `specs`. Reports are identical to calling
+    /// [`Session::run`] serially (the simulator is deterministic).
+    pub fn run_all(&self, specs: &[SimSpec]) -> Vec<SimReport> {
+        self.run_batch(specs, self.threads.unwrap_or_else(default_threads))
+    }
+
+    /// [`Session::run_all`] with an explicit worker-thread count.
+    pub fn run_batch(&self, specs: &[SimSpec], threads: usize) -> Vec<SimReport> {
+        let threads = threads.min(specs.len().max(1));
+        if threads <= 1 || specs.len() <= 1 {
+            return specs.iter().map(|s| self.run(s)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<SimReport>>> =
+            specs.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(spec) = specs.get(i) else { break };
+                    let report = self.run(spec);
+                    *slots[i].lock().unwrap() = Some(report);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("every slot filled"))
+            .collect()
+    }
+
+    /// Number of distinct simulations materialized so far.
+    pub fn cached_runs(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+impl Default for Session {
+    fn default() -> Session {
+        Session::new()
+    }
+}
+
+/// Worker threads when none are requested: the machine's parallelism,
+/// capped to keep memory in check on very wide hosts.
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// One executed sweep point.
+#[derive(Clone, Debug)]
+pub struct SweepRun {
+    pub spec: SimSpec,
+    pub report: SimReport,
+}
+
+/// Declarative cartesian sweep over simulation axes.
+///
+/// Axis order in the product (outer to inner): accelerators,
+/// workloads, problems, memory technologies, channels, configurations
+/// — deterministic, so sweep output order is stable.
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    accelerators: Vec<AcceleratorKind>,
+    workloads: Vec<Workload>,
+    problems: Vec<ProblemKind>,
+    mem_techs: Vec<MemTech>,
+    channels: Vec<usize>,
+    configs: Vec<AcceleratorConfig>,
+    skip_unsupported: bool,
+    threads: Option<usize>,
+}
+
+impl Sweep {
+    /// Empty accelerator/workload/problem axes (must be filled);
+    /// memory defaults to single-channel DDR4 with the default
+    /// configuration.
+    pub fn new() -> Sweep {
+        Sweep {
+            accelerators: Vec::new(),
+            workloads: Vec::new(),
+            problems: Vec::new(),
+            mem_techs: vec![MemTech::Ddr4],
+            channels: vec![1],
+            configs: vec![AcceleratorConfig::default()],
+            skip_unsupported: false,
+            threads: None,
+        }
+    }
+
+    pub fn accelerators(mut self, kinds: impl IntoIterator<Item = AcceleratorKind>) -> Self {
+        self.accelerators = kinds.into_iter().collect();
+        self
+    }
+
+    /// Named benchmark graphs.
+    pub fn graphs(mut self, ids: impl IntoIterator<Item = DatasetId>) -> Self {
+        self.workloads = ids.into_iter().map(Workload::Named).collect();
+        self
+    }
+
+    /// Arbitrary workloads (named and/or custom).
+    pub fn workloads(mut self, workloads: impl IntoIterator<Item = Workload>) -> Self {
+        self.workloads = workloads.into_iter().collect();
+        self
+    }
+
+    pub fn problems(mut self, problems: impl IntoIterator<Item = ProblemKind>) -> Self {
+        self.problems = problems.into_iter().collect();
+        self
+    }
+
+    pub fn mem_techs(mut self, techs: impl IntoIterator<Item = MemTech>) -> Self {
+        self.mem_techs = techs.into_iter().collect();
+        self
+    }
+
+    pub fn channels(mut self, channels: impl IntoIterator<Item = usize>) -> Self {
+        self.channels = channels.into_iter().collect();
+        self
+    }
+
+    pub fn configs(mut self, configs: impl IntoIterator<Item = AcceleratorConfig>) -> Self {
+        self.configs = configs.into_iter().collect();
+        self
+    }
+
+    /// Silently drop invalid combinations (e.g. weighted problems on
+    /// AccuGraph in a product that also contains HitGraph) instead of
+    /// failing the whole sweep.
+    pub fn skip_unsupported(mut self) -> Self {
+        self.skip_unsupported = true;
+        self
+    }
+
+    /// Fix the worker-thread count (1 = serial).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    /// The validated cartesian product. With
+    /// [`Sweep::skip_unsupported`], invalid points are filtered;
+    /// otherwise the first invalid combination aborts with its
+    /// [`SpecError`].
+    pub fn specs(&self) -> Result<Vec<SimSpec>, SpecError> {
+        if self.accelerators.is_empty() {
+            return Err(SpecError::EmptyAxis("accelerators"));
+        }
+        if self.workloads.is_empty() {
+            return Err(SpecError::EmptyAxis("workloads"));
+        }
+        if self.problems.is_empty() {
+            return Err(SpecError::EmptyAxis("problems"));
+        }
+        if self.mem_techs.is_empty() {
+            return Err(SpecError::EmptyAxis("mem_techs"));
+        }
+        if self.channels.is_empty() {
+            return Err(SpecError::EmptyAxis("channels"));
+        }
+        if self.configs.is_empty() {
+            return Err(SpecError::EmptyAxis("configs"));
+        }
+        let mut specs = Vec::new();
+        for &kind in &self.accelerators {
+            for workload in &self.workloads {
+                for &problem in &self.problems {
+                    for &mem in &self.mem_techs {
+                        for &ch in &self.channels {
+                            for cfg in &self.configs {
+                                let built = SimSpec::builder()
+                                    .accelerator(kind)
+                                    .workload(workload.clone())
+                                    .problem(problem)
+                                    .mem(mem)
+                                    .channels(ch)
+                                    .config(cfg.clone())
+                                    .build();
+                                match built {
+                                    Ok(spec) => specs.push(spec),
+                                    Err(_) if self.skip_unsupported => {}
+                                    Err(e) => return Err(e),
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(specs)
+    }
+
+    /// Execute against a fresh session.
+    pub fn run(&self) -> Result<Vec<SweepRun>, SpecError> {
+        self.run_with(&Session::new())
+    }
+
+    /// Execute against a shared session (reusing its memoized runs).
+    pub fn run_with(&self, session: &Session) -> Result<Vec<SweepRun>, SpecError> {
+        let specs = self.specs()?;
+        let reports = match self.threads {
+            Some(t) => session.run_batch(&specs, t),
+            None => session.run_all(&specs),
+        };
+        Ok(specs
+            .into_iter()
+            .zip(reports)
+            .map(|(spec, report)| SweepRun { spec, report })
+            .collect())
+    }
+}
+
+impl Default for Sweep {
+    fn default() -> Sweep {
+        Sweep::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_sweep() -> Sweep {
+        Sweep::new()
+            .accelerators([AcceleratorKind::AccuGraph, AcceleratorKind::HitGraph])
+            .graphs([DatasetId::Sd])
+            .problems([ProblemKind::Bfs])
+    }
+
+    #[test]
+    fn product_order_is_deterministic() {
+        let specs = quick_sweep()
+            .mem_techs([MemTech::Ddr4, MemTech::Hbm])
+            .specs()
+            .unwrap();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].accelerator(), AcceleratorKind::AccuGraph);
+        assert_eq!(specs[0].mem(), MemTech::Ddr4);
+        assert_eq!(specs[1].mem(), MemTech::Hbm);
+        assert_eq!(specs[2].accelerator(), AcceleratorKind::HitGraph);
+    }
+
+    #[test]
+    fn empty_axis_is_an_error() {
+        let err = Sweep::new().specs().unwrap_err();
+        assert_eq!(err, SpecError::EmptyAxis("accelerators"));
+        let err = quick_sweep().channels([]).specs().unwrap_err();
+        assert_eq!(err, SpecError::EmptyAxis("channels"));
+    }
+
+    #[test]
+    fn invalid_points_error_or_skip() {
+        let bad = Sweep::new()
+            .accelerators(AcceleratorKind::all())
+            .graphs([DatasetId::Sd])
+            .problems([ProblemKind::Sssp]);
+        assert!(bad.specs().is_err());
+        let kept = bad.clone().skip_unsupported().specs().unwrap();
+        // Only HitGraph and ThunderGP support weighted problems.
+        assert_eq!(kept.len(), 2);
+        assert!(kept.iter().all(|s| s.accelerator().supports_weighted()));
+    }
+
+    #[test]
+    fn session_memoizes() {
+        let session = Session::new();
+        let spec = SimSpec::builder()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::PageRank)
+            .config(AcceleratorConfig::all_optimizations())
+            .build()
+            .unwrap();
+        let a = session.run(&spec);
+        assert_eq!(session.cached_runs(), 1);
+        let b = session.run(&spec);
+        assert_eq!(session.cached_runs(), 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sweep_runs_in_parallel_and_fills_session() {
+        let session = Session::new();
+        let runs = quick_sweep().threads(4).run_with(&session).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(session.cached_runs(), 2);
+        for run in &runs {
+            assert!(run.report.cycles > 0, "{}", run.spec.label());
+        }
+    }
+}

@@ -1,32 +1,35 @@
 //! Cross-module integration tests: accelerator models against real
-//! dataset stand-ins, metric/DRAM consistency invariants, experiment
-//! registry plumbing, and paper-shape assertions.
+//! dataset stand-ins, metric/DRAM consistency invariants, typed-spec
+//! plumbing, experiment registry, and paper-shape assertions.
 
 use graphmem::accel::{build, AcceleratorConfig, AcceleratorKind, Optimization};
 use graphmem::algo::golden::{run_golden, Propagation};
 use graphmem::algo::problem::{GraphProblem, ProblemKind};
-use graphmem::coordinator::{run_experiment, run_one, Experiment, Runner, Scope};
-use graphmem::dram::{ChannelMode, DramSpec, MemorySystem};
-use graphmem::graph::datasets;
-use graphmem::sim::SimReport;
+use graphmem::coordinator::{run_experiment, Experiment, Scope};
+use graphmem::dram::{ChannelMode, DramSpec, MemTech, MemorySystem};
+use graphmem::graph::DatasetId;
+use graphmem::sim::{Session, SimReport, SimSpec, SpecError};
 
-fn simulate(kind: AcceleratorKind, graph: &str, problem: ProblemKind) -> SimReport {
-    run_one(
-        kind,
-        graph,
-        problem,
-        "ddr4",
-        1,
-        &AcceleratorConfig::all_optimizations(),
-    )
-    .expect("simulation")
+fn spec(kind: AcceleratorKind, graph: DatasetId, problem: ProblemKind) -> SimSpec {
+    SimSpec::builder()
+        .accelerator(kind)
+        .graph(graph)
+        .problem(problem)
+        .mem(MemTech::Ddr4)
+        .config(AcceleratorConfig::all_optimizations())
+        .build()
+        .expect("valid spec")
+}
+
+fn simulate(kind: AcceleratorKind, graph: DatasetId, problem: ProblemKind) -> SimReport {
+    spec(kind, graph, problem).run()
 }
 
 #[test]
 fn report_invariants_hold_for_all_accelerators() {
     for kind in AcceleratorKind::all() {
         for problem in [ProblemKind::Bfs, ProblemKind::PageRank] {
-            let r = simulate(kind, "sd", problem);
+            let r = simulate(kind, DatasetId::Sd, problem);
             assert!(r.seconds > 0.0, "{kind:?} {problem:?}");
             assert!(r.cycles > 0);
             assert!(r.mteps() > 0.0);
@@ -46,8 +49,8 @@ fn report_invariants_hold_for_all_accelerators() {
 
 #[test]
 fn two_phase_models_match_golden_iterations_on_datasets() {
-    for graph in ["sd", "db", "yt"] {
-        let g = datasets::dataset(graph).unwrap();
+    for graph in [DatasetId::Sd, DatasetId::Db, DatasetId::Yt] {
+        let g = graph.load();
         let p = GraphProblem::new(ProblemKind::Bfs, &g);
         let golden = run_golden(&p, &g, Propagation::TwoPhase);
         for kind in [AcceleratorKind::HitGraph, AcceleratorKind::ThunderGp] {
@@ -62,8 +65,8 @@ fn two_phase_models_match_golden_iterations_on_datasets() {
 
 #[test]
 fn immediate_models_never_exceed_two_phase_iterations() {
-    for graph in ["sd", "db", "rd"] {
-        let g = datasets::dataset(graph).unwrap();
+    for graph in [DatasetId::Sd, DatasetId::Db, DatasetId::Rd] {
+        let g = graph.load();
         let p = GraphProblem::new(ProblemKind::Bfs, &g);
         let two = run_golden(&p, &g, Propagation::TwoPhase);
         for kind in [AcceleratorKind::AccuGraph, AcceleratorKind::ForeGraph] {
@@ -82,8 +85,8 @@ fn immediate_models_never_exceed_two_phase_iterations() {
 fn insight1_immediate_wins_iterations_on_road_like_graphs() {
     // rd: large diameter — immediate propagation converges in fewer
     // iterations than 2-phase (the paper's headline trade-off).
-    let imm = simulate(AcceleratorKind::AccuGraph, "rd", ProblemKind::Bfs);
-    let two = simulate(AcceleratorKind::HitGraph, "rd", ProblemKind::Bfs);
+    let imm = simulate(AcceleratorKind::AccuGraph, DatasetId::Rd, ProblemKind::Bfs);
+    let two = simulate(AcceleratorKind::HitGraph, DatasetId::Rd, ProblemKind::Bfs);
     assert!(
         imm.metrics.iterations < two.metrics.iterations,
         "immediate {} !< 2-phase {}",
@@ -96,10 +99,10 @@ fn insight1_immediate_wins_iterations_on_road_like_graphs() {
 fn insight2_csr_and_compressed_edges_need_fewer_bytes_per_edge() {
     // dense graph: AccuGraph (CSR) and ForeGraph (compressed) move
     // fewer bytes per edge than the 8-byte edge-list systems.
-    let ag = simulate(AcceleratorKind::AccuGraph, "pk", ProblemKind::PageRank);
-    let fg = simulate(AcceleratorKind::ForeGraph, "pk", ProblemKind::PageRank);
-    let hg = simulate(AcceleratorKind::HitGraph, "pk", ProblemKind::PageRank);
-    let tg = simulate(AcceleratorKind::ThunderGp, "pk", ProblemKind::PageRank);
+    let ag = simulate(AcceleratorKind::AccuGraph, DatasetId::Pk, ProblemKind::PageRank);
+    let fg = simulate(AcceleratorKind::ForeGraph, DatasetId::Pk, ProblemKind::PageRank);
+    let hg = simulate(AcceleratorKind::HitGraph, DatasetId::Pk, ProblemKind::PageRank);
+    let tg = simulate(AcceleratorKind::ThunderGp, DatasetId::Pk, ProblemKind::PageRank);
     assert!(ag.bytes_per_edge() < hg.bytes_per_edge());
     assert!(fg.bytes_per_edge() < hg.bytes_per_edge());
     assert!(fg.bytes_per_edge() < tg.bytes_per_edge());
@@ -110,8 +113,13 @@ fn insight6_hbm_single_channel_not_faster() {
     // Tab. 6: single-channel HBM never beats DDR4 (nor DDR3).
     let cfg = AcceleratorConfig::all_optimizations();
     for kind in [AcceleratorKind::AccuGraph, AcceleratorKind::HitGraph] {
-        let d4 = run_one(kind, "db", ProblemKind::Bfs, "ddr4", 1, &cfg).unwrap();
-        let hb = run_one(kind, "db", ProblemKind::Bfs, "hbm", 1, &cfg).unwrap();
+        let base = SimSpec::builder()
+            .accelerator(kind)
+            .graph(DatasetId::Db)
+            .problem(ProblemKind::Bfs)
+            .config(cfg.clone());
+        let d4 = base.clone().mem(MemTech::Ddr4).build().unwrap().run();
+        let hb = base.mem(MemTech::Hbm).build().unwrap().run();
         assert!(
             hb.seconds > d4.seconds,
             "{kind:?}: HBM {} should be slower than DDR4 {}",
@@ -123,7 +131,7 @@ fn insight6_hbm_single_channel_not_faster() {
 
 #[test]
 fn insight9_thundergp_footprint_scales_with_channels() {
-    let g = datasets::dataset("db").unwrap();
+    let g = DatasetId::Db.load();
     let p1 = graphmem::partition::VerticalPartitioning::new(&g, 16384, 1);
     let p4 = graphmem::partition::VerticalPartitioning::new(&g, 16384, 4);
     let n = g.num_vertices;
@@ -136,24 +144,20 @@ fn insight9_thundergp_footprint_scales_with_channels() {
 
 #[test]
 fn weighted_problems_only_on_supporting_accelerators() {
-    assert!(run_one(
-        AcceleratorKind::AccuGraph,
-        "sd",
-        ProblemKind::SpMV,
-        "ddr4",
-        1,
-        &AcceleratorConfig::default()
-    )
-    .is_err());
-    let r = run_one(
-        AcceleratorKind::ThunderGp,
-        "sd",
-        ProblemKind::SpMV,
-        "ddr4",
-        1,
-        &AcceleratorConfig::default(),
-    )
-    .unwrap();
+    let err = SimSpec::builder()
+        .accelerator(AcceleratorKind::AccuGraph)
+        .graph(DatasetId::Sd)
+        .problem(ProblemKind::SpMV)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, SpecError::WeightedUnsupported { .. }));
+    let r = SimSpec::builder()
+        .accelerator(AcceleratorKind::ThunderGp)
+        .graph(DatasetId::Sd)
+        .problem(ProblemKind::SpMV)
+        .build()
+        .unwrap()
+        .run();
     assert_eq!(r.metrics.iterations, 1);
 }
 
@@ -171,9 +175,35 @@ fn experiment_registry_runs_quick() {
 }
 
 #[test]
-fn runner_caches_across_experiments() {
-    let mut runner = Runner::new();
+fn session_caches_across_specs() {
+    let session = Session::new();
+    let bfs = spec(AcceleratorKind::AccuGraph, DatasetId::Sd, ProblemKind::Bfs);
+    session.run(&bfs);
+    session.run(&bfs);
+    assert_eq!(session.cached_runs(), 1);
+    // different mem tech -> new entry
+    let ddr3 = SimSpec::builder()
+        .accelerator(AcceleratorKind::AccuGraph)
+        .graph(DatasetId::Sd)
+        .problem(ProblemKind::Bfs)
+        .mem(MemTech::Ddr3)
+        .config(AcceleratorConfig::all_optimizations())
+        .build()
+        .unwrap();
+    session.run(&ddr3);
+    assert_eq!(session.cached_runs(), 2);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_runner_shim_still_works() {
+    use graphmem::coordinator::{run_one, Runner};
     let cfg = AcceleratorConfig::all_optimizations();
+    let via_shim =
+        run_one(AcceleratorKind::AccuGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &cfg).unwrap();
+    let via_spec = simulate(AcceleratorKind::AccuGraph, DatasetId::Sd, ProblemKind::Bfs);
+    assert_eq!(via_shim, via_spec);
+    let mut runner = Runner::new();
     runner
         .run(AcceleratorKind::AccuGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &cfg)
         .unwrap();
@@ -181,11 +211,6 @@ fn runner_caches_across_experiments() {
         .run(AcceleratorKind::AccuGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &cfg)
         .unwrap();
     assert_eq!(runner.cached_runs(), 1);
-    // different dram -> new entry
-    runner
-        .run(AcceleratorKind::AccuGraph, "sd", ProblemKind::Bfs, "ddr3", 1, &cfg)
-        .unwrap();
-    assert_eq!(runner.cached_runs(), 2);
 }
 
 #[test]
@@ -193,31 +218,29 @@ fn optimizations_never_change_algorithm_results() {
     // iteration counts may differ, but convergence must hold: compare
     // iterations of baseline vs all-opt HitGraph — identical (2-phase
     // semantics are optimization-independent).
-    let base = run_one(
-        AcceleratorKind::HitGraph,
-        "db",
-        ProblemKind::Bfs,
-        "ddr4",
-        1,
-        &AcceleratorConfig::baseline(),
-    )
-    .unwrap();
-    let opt = run_one(
-        AcceleratorKind::HitGraph,
-        "db",
-        ProblemKind::Bfs,
-        "ddr4",
-        1,
-        &AcceleratorConfig::all_optimizations(),
-    )
-    .unwrap();
+    let base = SimSpec::builder()
+        .accelerator(AcceleratorKind::HitGraph)
+        .graph(DatasetId::Db)
+        .problem(ProblemKind::Bfs)
+        .config(AcceleratorConfig::baseline())
+        .build()
+        .unwrap()
+        .run();
+    let opt = SimSpec::builder()
+        .accelerator(AcceleratorKind::HitGraph)
+        .graph(DatasetId::Db)
+        .problem(ProblemKind::Bfs)
+        .config(AcceleratorConfig::all_optimizations())
+        .build()
+        .unwrap()
+        .run();
     assert_eq!(base.metrics.iterations, opt.metrics.iterations);
     assert!(opt.seconds <= base.seconds, "optimizations should not hurt overall");
 }
 
 #[test]
 fn foregraph_stride_mapping_alone_preserves_results() {
-    let g = datasets::dataset("yt").unwrap();
+    let g = DatasetId::Yt.load();
     let p = GraphProblem::new(ProblemKind::Bfs, &g);
     let golden = run_golden(&p, &g, Propagation::TwoPhase);
     let cfg = AcceleratorConfig::baseline().with(Optimization::StrideMapping);

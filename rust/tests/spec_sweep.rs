@@ -1,0 +1,166 @@
+//! Acceptance tests for the typed `SimSpec` session API and the
+//! parallel `Sweep` engine:
+//!
+//! * every invalid combination is rejected at `SimSpecBuilder::build`
+//!   (before any simulation work) with a descriptive error;
+//! * a multi-axis sweep executed with >1 worker thread produces
+//!   `SimReport`s identical to the serial path;
+//! * custom (user-supplied) workloads flow through the same API.
+
+use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::problem::ProblemKind;
+use graphmem::dram::MemTech;
+use graphmem::graph::{synthetic, DatasetId};
+use graphmem::sim::{Session, SimSpec, SpecError, Sweep, Workload};
+
+fn builder(kind: AcceleratorKind, problem: ProblemKind) -> graphmem::sim::SimSpecBuilder {
+    SimSpec::builder()
+        .accelerator(kind)
+        .graph(DatasetId::Sd)
+        .problem(problem)
+}
+
+#[test]
+fn every_invalid_combination_is_rejected_at_build() {
+    for kind in AcceleratorKind::all() {
+        for problem in [ProblemKind::Sssp, ProblemKind::SpMV] {
+            let res = builder(kind, problem).build();
+            if kind.supports_weighted() {
+                assert!(res.is_ok(), "{kind} {problem}");
+            } else {
+                let err = res.unwrap_err();
+                assert!(
+                    matches!(err, SpecError::WeightedUnsupported { .. }),
+                    "{kind} {problem}: {err}"
+                );
+                assert!(err.to_string().contains("does not support weighted"));
+            }
+        }
+        for channels in [2usize, 4] {
+            let res = builder(kind, ProblemKind::Bfs).channels(channels).build();
+            if kind.multi_channel() {
+                assert!(res.is_ok(), "{kind} x{channels}");
+            } else {
+                let err = res.unwrap_err();
+                assert!(
+                    matches!(err, SpecError::MultiChannelUnsupported { .. }),
+                    "{kind} x{channels}: {err}"
+                );
+                assert!(err.to_string().contains("multi-channel"));
+                // The open-challenge-(c) escape hatch must unlock it.
+                let flagged = builder(kind, ProblemKind::Bfs)
+                    .channels(channels)
+                    .config(AcceleratorConfig::default().with_experimental_multichannel(true))
+                    .build();
+                assert!(flagged.is_ok(), "{kind} x{channels} flagged");
+            }
+        }
+    }
+    // Channel counts outside the technology's Tab. 3 envelope are
+    // rejected even on multi-channel designs: 8 channels needs HBM.
+    let err = builder(AcceleratorKind::HitGraph, ProblemKind::Bfs)
+        .channels(8)
+        .build()
+        .unwrap_err();
+    assert!(
+        matches!(err, SpecError::ChannelsExceedMemTech { .. }),
+        "{err}"
+    );
+    assert!(builder(AcceleratorKind::HitGraph, ProblemKind::Bfs)
+        .mem(MemTech::Hbm)
+        .channels(8)
+        .build()
+        .is_ok());
+    // Unknown dataset names surface at build, not at run.
+    let err = builder(AcceleratorKind::HitGraph, ProblemKind::Bfs)
+        .graph_named("wv")
+        .build()
+        .unwrap_err();
+    assert_eq!(err, SpecError::UnknownDataset("wv".to_string()));
+    assert!(err.to_string().contains("unknown dataset \"wv\""));
+}
+
+#[test]
+fn parallel_sweep_is_byte_identical_to_serial() {
+    // Two axes (4 accelerators x 3 memory technologies), >1 worker.
+    let sweep = Sweep::new()
+        .accelerators(AcceleratorKind::all())
+        .graphs([DatasetId::Sd])
+        .problems([ProblemKind::Bfs])
+        .mem_techs(MemTech::all())
+        .configs([AcceleratorConfig::all_optimizations()])
+        .threads(4);
+    let specs = sweep.specs().unwrap();
+    assert_eq!(specs.len(), 12);
+
+    let parallel = sweep.run().unwrap();
+    assert_eq!(parallel.len(), specs.len());
+    for (i, run) in parallel.iter().enumerate() {
+        // Results stay index-aligned with the declared product...
+        assert_eq!(run.spec, specs[i]);
+        // ...and match a fresh serial execution of the same spec
+        // exactly (every counter, every float bit).
+        let serial = specs[i].run();
+        assert_eq!(run.report, serial, "{}", specs[i].label());
+    }
+}
+
+#[test]
+fn shared_session_deduplicates_across_sweeps() {
+    let session = Session::new();
+    let a = Sweep::new()
+        .accelerators([AcceleratorKind::HitGraph])
+        .graphs([DatasetId::Sd, DatasetId::Db])
+        .problems([ProblemKind::Bfs])
+        .threads(2);
+    a.run_with(&session).unwrap();
+    assert_eq!(session.cached_runs(), 2);
+    // Overlapping sweep: only the new (graph, problem) points run.
+    let b = Sweep::new()
+        .accelerators([AcceleratorKind::HitGraph])
+        .graphs([DatasetId::Sd, DatasetId::Db])
+        .problems([ProblemKind::Bfs, ProblemKind::PageRank])
+        .threads(2);
+    b.run_with(&session).unwrap();
+    assert_eq!(session.cached_runs(), 4);
+}
+
+#[test]
+fn custom_workloads_flow_through_sweep_and_session() {
+    let g = synthetic::erdos_renyi(300, 1500, 21);
+    let sweep = Sweep::new()
+        .accelerators([AcceleratorKind::AccuGraph, AcceleratorKind::HitGraph])
+        .workloads([
+            Workload::Named(DatasetId::Sd),
+            Workload::custom("er300", g.clone()),
+        ])
+        .problems([ProblemKind::Bfs])
+        .threads(2);
+    let runs = sweep.run().unwrap();
+    assert_eq!(runs.len(), 4);
+    let custom = runs
+        .iter()
+        .filter(|r| r.spec.workload().label() == "er300")
+        .count();
+    assert_eq!(custom, 2);
+    for run in &runs {
+        assert!(run.report.cycles > 0, "{}", run.spec.label());
+    }
+    // Same content, same identity: a second session run is a cache hit.
+    let session = Session::new();
+    let spec = SimSpec::builder()
+        .accelerator(AcceleratorKind::AccuGraph)
+        .custom_graph("er300", g.clone())
+        .problem(ProblemKind::Bfs)
+        .build()
+        .unwrap();
+    let again = SimSpec::builder()
+        .accelerator(AcceleratorKind::AccuGraph)
+        .custom_graph("er300", g)
+        .problem(ProblemKind::Bfs)
+        .build()
+        .unwrap();
+    session.run(&spec);
+    session.run(&again);
+    assert_eq!(session.cached_runs(), 1);
+}

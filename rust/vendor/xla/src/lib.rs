@@ -1,0 +1,100 @@
+//! Offline stub of the `xla` (PJRT bindings) crate surface used by
+//! `graphmem::runtime` (see vendor/README.md).
+//!
+//! Every type and method compiles; [`PjRtClient::cpu`] fails with a
+//! descriptive error, so callers degrade exactly as they do when AOT
+//! artifacts are missing. Swap this path dependency for the real
+//! bindings to enable the PJRT execution path.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries a static description of the missing capability.
+#[derive(Debug, Clone)]
+pub struct Error(&'static str);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT unavailable: built against the vendored stub `xla` crate (offline build); \
+     replace rust/vendor/xla with the real PJRT bindings to enable this path";
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// Compiled executable handle (stub: unreachable at runtime).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// Device buffer handle (stub: unreachable at runtime).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// Host literal (stub: constructible, never executable).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T: Copy>(_value: T) -> Literal {
+        Literal
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
