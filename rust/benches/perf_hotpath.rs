@@ -36,6 +36,7 @@ fn bench_dram_channel() {
                     addr: i * 64,
                     kind: MemKind::Read,
                     tag: i,
+                    region: graphmem::trace::Region::Edges,
                 },
                 0,
             );
@@ -63,6 +64,7 @@ fn bench_dram_channel() {
                     addr: rng.next_below(span) * 64,
                     kind: MemKind::Read,
                     tag: i,
+                    region: graphmem::trace::Region::Vertices,
                 },
                 0,
             );

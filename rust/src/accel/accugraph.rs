@@ -278,6 +278,8 @@ impl Accelerator for AccuGraph {
             channels: mem.num_channels(),
             metrics,
             dram,
+            // Filled in by SimSpec::run when pattern analysis is on.
+            patterns: None,
         }
     }
 }

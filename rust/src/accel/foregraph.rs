@@ -323,6 +323,8 @@ impl Accelerator for ForeGraph {
             channels: mem.num_channels(),
             metrics,
             dram,
+            // Filled in by SimSpec::run when pattern analysis is on.
+            patterns: None,
         }
     }
 }

@@ -477,6 +477,8 @@ impl Accelerator for HitGraph {
             channels: mem.num_channels(),
             metrics,
             dram,
+            // Filled in by SimSpec::run when pattern analysis is on.
+            patterns: None,
         }
     }
 }

@@ -9,9 +9,11 @@
 //! mirrors the accelerator's on-chip arbiters.
 
 use crate::dram::{MemKind, CACHE_LINE};
+use crate::trace::Region;
 
-/// Identifies what a stream models (used for metric attribution and
-/// debugging; not consumed by the driver).
+/// Identifies what a stream models. The phase driver maps it onto a
+/// [`Region`] tag stamped on every issued request, which is how the
+/// trace-analysis subsystem attributes traffic to data structures.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StreamClass {
     /// Vertex value prefetch.
@@ -26,6 +28,20 @@ pub enum StreamClass {
     Updates,
     /// Vertex value write-backs.
     Writes,
+}
+
+impl StreamClass {
+    /// The trace region a stream of this class belongs to: vertex
+    /// value traffic (prefetches, random reads, write-backs), edge
+    /// reads, update sets, or auxiliary payload (CSR pointers).
+    pub fn region(self) -> Region {
+        match self {
+            StreamClass::Prefetch | StreamClass::Values | StreamClass::Writes => Region::Vertices,
+            StreamClass::Edges => Region::Edges,
+            StreamClass::Updates => Region::Updates,
+            StreamClass::Pointers => Region::Payload,
+        }
+    }
 }
 
 /// A precomputed sequence of cache-line requests.
@@ -214,6 +230,16 @@ mod tests {
         assert!(!p.is_empty());
         let empty = Phase::single(StreamClass::Prefetch, MemKind::Read, vec![], 16);
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn stream_classes_map_onto_regions() {
+        assert_eq!(StreamClass::Prefetch.region(), Region::Vertices);
+        assert_eq!(StreamClass::Values.region(), Region::Vertices);
+        assert_eq!(StreamClass::Writes.region(), Region::Vertices);
+        assert_eq!(StreamClass::Edges.region(), Region::Edges);
+        assert_eq!(StreamClass::Updates.region(), Region::Updates);
+        assert_eq!(StreamClass::Pointers.region(), Region::Payload);
     }
 
     #[test]

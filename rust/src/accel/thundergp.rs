@@ -344,6 +344,8 @@ impl Accelerator for ThunderGp {
             channels: mem.num_channels(),
             metrics,
             dram,
+            // Filled in by SimSpec::run when pattern analysis is on.
+            patterns: None,
         }
     }
 }

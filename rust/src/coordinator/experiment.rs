@@ -10,6 +10,7 @@ use super::paper;
 use crate::accel::{AcceleratorConfig, AcceleratorKind, Optimization};
 use crate::algo::problem::ProblemKind;
 use crate::dram::MemTech;
+use crate::trace::Region;
 use crate::graph::datasets::DatasetId;
 use crate::graph::properties::GraphProperties;
 use crate::report::Table;
@@ -79,6 +80,9 @@ pub enum Experiment {
     Fig13Tab8Opts,
     Fig14Degree,
     Tab5Weighted,
+    /// Per-region access-pattern comparison (the trace-analysis
+    /// subsystem run across accelerators; Figs. 8–11 companion).
+    Patterns,
 }
 
 impl Experiment {
@@ -93,11 +97,12 @@ impl Experiment {
             "fig13" | "tab8" | "opts" => Some(Experiment::Fig13Tab8Opts),
             "fig14" | "degree" => Some(Experiment::Fig14Degree),
             "tab5" | "weighted" => Some(Experiment::Tab5Weighted),
+            "patterns" | "pattern" | "access" => Some(Experiment::Patterns),
             _ => None,
         }
     }
 
-    pub fn all() -> [Experiment; 9] {
+    pub fn all() -> [Experiment; 10] {
         [
             Experiment::Fig02SimError,
             Experiment::Fig08Tab4Mteps,
@@ -108,6 +113,7 @@ impl Experiment {
             Experiment::Fig13Tab8Opts,
             Experiment::Fig14Degree,
             Experiment::Tab5Weighted,
+            Experiment::Patterns,
         ]
     }
 
@@ -122,6 +128,7 @@ impl Experiment {
             Experiment::Fig13Tab8Opts => "fig13",
             Experiment::Fig14Degree => "fig14",
             Experiment::Tab5Weighted => "tab5",
+            Experiment::Patterns => "patterns",
         }
     }
 
@@ -136,6 +143,7 @@ impl Experiment {
             Experiment::Fig13Tab8Opts => "optimization ablation speedups (Tab. 8)",
             Experiment::Fig14Degree => "MREPS by average degree",
             Experiment::Tab5Weighted => "SSSP/SpMV runtimes, HitGraph/ThunderGP (Tab. 5)",
+            Experiment::Patterns => "per-region access-pattern comparison (Figs. 8-11 companion)",
         }
     }
 }
@@ -175,6 +183,7 @@ pub fn run_experiment_with(
         Experiment::Fig13Tab8Opts => fig13(session, scope),
         Experiment::Fig14Degree => fig14(session, scope),
         Experiment::Tab5Weighted => tab5(session, scope),
+        Experiment::Patterns => patterns_exp(session, scope),
     }
 }
 
@@ -681,6 +690,80 @@ fn fig13(session: &Session, scope: Scope) -> Result<Vec<Table>> {
 }
 
 // ---------------------------------------------------------------------------
+// Patterns — per-region access-pattern comparison (trace::analysis)
+// ---------------------------------------------------------------------------
+
+/// The paper's central analysis as an experiment: for every
+/// accelerator × graph, break the DRAM traffic down by data-structure
+/// region and report sequentiality and in-order row locality. The
+/// summaries ride on the memoized [`SimReport`]s (no trace files).
+fn patterns_exp(session: &Session, scope: Scope) -> Result<Vec<Table>> {
+    let cfg = all_opt();
+    prefetch(
+        session,
+        &Sweep::new()
+            .accelerators(AcceleratorKind::all())
+            .graphs(scope.graphs())
+            .problems([ProblemKind::Bfs])
+            .configs([cfg.clone()])
+            .collect_patterns(),
+    )?;
+    let pct = crate::report::pattern::pct;
+    let mut share = Table::new(
+        "Patterns (a) — traffic share by region (%, BFS, DDR4 single-channel)",
+        &["graph", "accel", "edges%", "vertices%", "updates%", "payload%", "total req"],
+    );
+    let mut locality = Table::new(
+        "Patterns (b) — sequentiality and in-order row locality by region (BFS)",
+        &["graph", "accel", "region", "seq%", "strided%", "random%", "hit%", "miss%", "conf%"],
+    );
+    for g in scope.graphs() {
+        for kind in AcceleratorKind::all() {
+            let spec = SimSpec::builder()
+                .accelerator(kind)
+                .graph(g)
+                .problem(ProblemKind::Bfs)
+                .mem(MemTech::Ddr4)
+                .channels(1)
+                .config(cfg.clone())
+                .patterns(true)
+                .build()?;
+            let r = session.run(&spec);
+            let s = r
+                .patterns
+                .as_ref()
+                .expect("patterns(true) specs always attach a summary");
+            let total = s.total_requests();
+            let mut row = vec![g.to_string(), kind.name().to_string()];
+            for region in Region::all() {
+                row.push(pct(s.region(region).requests(), total));
+            }
+            row.push(total.to_string());
+            share.row(row);
+            for region in Region::all() {
+                let reg = s.region(region);
+                let n = reg.requests();
+                if n == 0 {
+                    continue;
+                }
+                locality.row(vec![
+                    g.to_string(),
+                    kind.name().to_string(),
+                    region.name().to_string(),
+                    pct(reg.sequential, n),
+                    pct(reg.strided, n),
+                    pct(reg.random, n),
+                    pct(reg.row_hits, n),
+                    pct(reg.row_misses, n),
+                    pct(reg.row_conflicts, n),
+                ]);
+            }
+        }
+    }
+    Ok(vec![share, locality])
+}
+
+// ---------------------------------------------------------------------------
 // Tab. 5 — weighted problems
 // ---------------------------------------------------------------------------
 
@@ -747,6 +830,16 @@ mod tests {
         let tables = run_experiment(Experiment::Tab5Weighted, Scope::Quick).unwrap();
         assert_eq!(tables.len(), 1);
         assert!(tables[0].render().contains("HG:SSSP"));
+    }
+
+    #[test]
+    fn quick_patterns_runs() {
+        let tables = run_experiment(Experiment::Patterns, Scope::Quick).unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].num_rows(), 16); // 4 quick graphs x 4 accelerators
+        let txt = tables[1].render();
+        assert!(txt.contains("edges"), "{txt}");
+        assert!(txt.contains("vertices"), "{txt}");
     }
 
     #[test]

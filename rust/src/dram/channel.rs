@@ -333,6 +333,7 @@ impl Channel {
         } else {
             self.stats.reads += 1;
         }
+        self.stats.record_region(q.req.region, is_write);
         self.stats.record(outcome);
         self.stats.data_bus_cycles += sp.burst;
         self.stats.total_latency += data_end - q.arrival;
@@ -357,6 +358,7 @@ mod tests {
             addr,
             kind: MemKind::Read,
             tag,
+            region: crate::trace::Region::Edges,
         }
     }
 
@@ -365,6 +367,7 @@ mod tests {
             addr,
             kind: MemKind::Write,
             tag,
+            region: crate::trace::Region::Updates,
         }
     }
 
@@ -459,6 +462,9 @@ mod tests {
         while ch.service_one().is_some() {}
         assert_eq!(ch.stats.writes, 1);
         assert_eq!(ch.stats.reads, 1);
+        // Region attribution follows the request tags.
+        assert_eq!(ch.stats.region_requests(crate::trace::Region::Edges), 1);
+        assert_eq!(ch.stats.region_requests(crate::trace::Region::Updates), 1);
     }
 
     #[test]

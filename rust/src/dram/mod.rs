@@ -7,7 +7,9 @@
 //! * open-page row-buffer policy with FR-FCFS scheduling,
 //! * row hit / miss (empty) / conflict accounting (Fig. 11(b)),
 //! * data-bus occupancy for bandwidth-utilization reporting,
-//! * periodic refresh (tREFI / tRFC).
+//! * periodic refresh (tREFI / tRFC),
+//! * per-region serviced-request accounting and optional issue-order
+//!   tracing / streaming pattern analysis (see [`crate::trace`]).
 //!
 //! The model is *transactional*: commands are not replayed cycle by
 //! cycle; instead each serviced request computes its earliest legal

@@ -1,6 +1,11 @@
 //! DRAM statistics: the observable quantities of the paper's
 //! evaluation — row buffer outcome mix (Fig. 11(b)), data-bus busy
-//! cycles for bandwidth utilization, request counts and latencies.
+//! cycles for bandwidth utilization, request counts and latencies,
+//! and serviced-request counts per [`Region`] (the controller-side
+//! half of the traffic attribution; the issue-order pattern analysis
+//! lives in [`crate::trace`]).
+
+use crate::trace::Region;
 
 /// How a request was served by the row buffer (§2.1 scenarios 1-3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,6 +34,10 @@ pub struct DramStats {
     pub total_latency: u64,
     /// Final completion time (cycles) — simulation makespan.
     pub finish_cycle: u64,
+    /// Serviced reads per [`Region`] (indexed by [`Region::index`]).
+    pub region_reads: [u64; Region::COUNT],
+    /// Serviced writes per [`Region`].
+    pub region_writes: [u64; Region::COUNT],
 }
 
 impl DramStats {
@@ -42,6 +51,20 @@ impl DramStats {
             RowOutcome::Miss => self.row_misses += 1,
             RowOutcome::Conflict => self.row_conflicts += 1,
         }
+    }
+
+    /// Count one serviced request against its region.
+    pub fn record_region(&mut self, region: Region, is_write: bool) {
+        if is_write {
+            self.region_writes[region.index()] += 1;
+        } else {
+            self.region_reads[region.index()] += 1;
+        }
+    }
+
+    /// Serviced requests (reads + writes) attributed to `region`.
+    pub fn region_requests(&self, region: Region) -> u64 {
+        self.region_reads[region.index()] + self.region_writes[region.index()]
     }
 
     /// Fraction of cycles the data bus was busy, i.e. achieved /
@@ -81,6 +104,10 @@ impl DramStats {
         self.refreshes += other.refreshes;
         self.total_latency += other.total_latency;
         self.finish_cycle = self.finish_cycle.max(other.finish_cycle);
+        for i in 0..Region::COUNT {
+            self.region_reads[i] += other.region_reads[i];
+            self.region_writes[i] += other.region_writes[i];
+        }
     }
 }
 
@@ -127,5 +154,24 @@ mod tests {
         assert_eq!(s.bus_utilization(), 0.0);
         assert_eq!(s.hit_rate(), 0.0);
         assert_eq!(s.avg_latency(), 0.0);
+        for r in Region::all() {
+            assert_eq!(s.region_requests(r), 0);
+        }
+    }
+
+    #[test]
+    fn region_accounting_and_merge() {
+        let mut a = DramStats::default();
+        a.record_region(Region::Edges, false);
+        a.record_region(Region::Edges, false);
+        a.record_region(Region::Updates, true);
+        let mut b = DramStats::default();
+        b.record_region(Region::Edges, true);
+        a.merge(&b);
+        assert_eq!(a.region_requests(Region::Edges), 3);
+        assert_eq!(a.region_reads[Region::Edges.index()], 2);
+        assert_eq!(a.region_writes[Region::Edges.index()], 1);
+        assert_eq!(a.region_requests(Region::Updates), 1);
+        assert_eq!(a.region_requests(Region::Vertices), 0);
     }
 }

@@ -11,6 +11,7 @@
 use super::channel::{Channel, Serviced};
 use super::spec::{DramPolicy, DramSpec};
 use super::stats::DramStats;
+use crate::trace::{AccessPatternAnalyzer, AccessPatternSummary, Region, TraceEvent};
 
 /// Read or write.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -20,12 +21,15 @@ pub enum MemKind {
 }
 
 /// A cache-line request. `tag` is an opaque token the issuer uses to
-/// route the completion callback.
+/// route the completion callback; `region` attributes the request to
+/// the data structure it belongs to (stamped at issue time by the
+/// accelerator models — see [`crate::trace`]).
 #[derive(Clone, Copy, Debug)]
 pub struct MemRequest {
     pub addr: u64,
     pub kind: MemKind,
     pub tag: u64,
+    pub region: Region,
 }
 
 /// Token identifying a completed request.
@@ -50,23 +54,31 @@ pub enum ChannelMode {
     Region,
 }
 
-/// One record of the optional request trace (Ramulator-style
-/// `<address> <R|W>` traces plus arrival cycles, for external replay
-/// or inspection).
-#[derive(Clone, Copy, Debug)]
-pub struct TraceRecord {
-    pub addr: u64,
-    pub kind: MemKind,
-    pub arrival: u64,
-    pub channel: usize,
+impl ChannelMode {
+    /// Rewrite a global byte address into the channel-local address
+    /// space. The single definition shared by [`MemorySystem::enqueue`]
+    /// and the trace analyzer — the bit-identical live-vs-trace
+    /// analysis guarantee depends on both using exactly this rewrite.
+    #[inline]
+    pub fn local_addr(self, addr: u64, channels: usize, channel_bytes: u64) -> u64 {
+        match self {
+            ChannelMode::InterleaveLine => {
+                let line = addr / super::CACHE_LINE / channels as u64;
+                line * super::CACHE_LINE
+            }
+            ChannelMode::Region => addr % channel_bytes,
+        }
+    }
 }
 
 /// The full memory system: one controller per channel.
 pub struct MemorySystem {
     spec: DramSpec,
     mode: ChannelMode,
+    policy: DramPolicy,
     channels: Vec<Channel>,
-    trace: Option<Vec<TraceRecord>>,
+    trace: Option<Vec<TraceEvent>>,
+    analyzer: Option<AccessPatternAnalyzer>,
 }
 
 impl MemorySystem {
@@ -84,10 +96,12 @@ impl MemorySystem {
         MemorySystem {
             spec,
             mode,
+            policy,
             channels: (0..spec.channels)
                 .map(|_| Channel::with_policy(spec.with_channels(1), policy))
                 .collect(),
             trace: None,
+            analyzer: None,
         }
     }
 
@@ -97,28 +111,41 @@ impl MemorySystem {
         self.trace = Some(Vec::new());
     }
 
+    /// Attach a streaming [`AccessPatternAnalyzer`] matched to this
+    /// system's spec, channel mode and address mapping. Every
+    /// subsequently enqueued request is fed through it — no trace
+    /// buffer required. Collect the result with
+    /// [`MemorySystem::take_pattern_summary`].
+    pub fn attach_analyzer(&mut self) {
+        self.analyzer = Some(AccessPatternAnalyzer::with_addr_map(
+            self.spec,
+            self.mode,
+            self.policy.addr_map,
+        ));
+    }
+
+    /// Detach the analyzer (if any) and return its summary.
+    pub fn take_pattern_summary(&mut self) -> Option<AccessPatternSummary> {
+        self.analyzer.take().map(AccessPatternAnalyzer::finish)
+    }
+
     /// The recorded trace, if tracing was enabled.
-    pub fn trace(&self) -> Option<&[TraceRecord]> {
+    pub fn trace(&self) -> Option<&[TraceEvent]> {
         self.trace.as_deref()
     }
 
-    /// Write the trace in a Ramulator-like text format:
-    /// `<hex addr> <R|W> <arrival> <channel>` per line.
-    pub fn write_trace(&self, mut w: impl std::io::Write) -> std::io::Result<u64> {
+    /// Detach and return the recorded trace (if tracing was enabled).
+    pub fn take_trace(&mut self) -> Option<Vec<TraceEvent>> {
+        self.trace.take()
+    }
+
+    /// Write the trace in the text format of [`crate::trace::record`]:
+    /// `<hex addr> <R|W> <arrival> <channel> <region>` per line.
+    pub fn write_trace(&self, w: impl std::io::Write) -> std::io::Result<u64> {
         let Some(trace) = &self.trace else {
             return Ok(0);
         };
-        for t in trace {
-            writeln!(
-                w,
-                "0x{:x} {} {} {}",
-                t.addr,
-                if t.kind == MemKind::Write { "W" } else { "R" },
-                t.arrival,
-                t.channel
-            )?;
-        }
-        Ok(trace.len() as u64)
+        crate::trace::write_events(w, trace)
     }
 
     /// Base byte address of channel `c`'s region (Region mode).
@@ -151,23 +178,25 @@ impl MemorySystem {
     /// local address space.
     pub fn enqueue(&mut self, req: MemRequest, arrival: u64) {
         let ch = self.channel_of(req.addr);
-        if let Some(trace) = &mut self.trace {
-            trace.push(TraceRecord {
+        if self.trace.is_some() || self.analyzer.is_some() {
+            let ev = TraceEvent {
                 addr: req.addr,
                 kind: req.kind,
+                region: req.region,
                 arrival,
                 channel: ch,
-            });
-        }
-        let local_addr = match self.mode {
-            ChannelMode::InterleaveLine => {
-                let line = req.addr / super::CACHE_LINE / self.channels.len() as u64;
-                line * super::CACHE_LINE
+            };
+            if let Some(trace) = &mut self.trace {
+                trace.push(ev);
             }
-            ChannelMode::Region => req.addr % self.spec.channel_bytes,
-        };
+            if let Some(analyzer) = &mut self.analyzer {
+                analyzer.observe(&ev);
+            }
+        }
         let local = MemRequest {
-            addr: local_addr,
+            addr: self
+                .mode
+                .local_addr(req.addr, self.channels.len(), self.spec.channel_bytes),
             ..req
         };
         self.channels[ch].enqueue(local, arrival);
@@ -279,6 +308,7 @@ mod tests {
                     addr: i * CACHE_LINE,
                     kind: MemKind::Read,
                     tag: i,
+                    region: Region::Edges,
                 },
                 0,
             );
@@ -301,6 +331,7 @@ mod tests {
                 addr: i * CACHE_LINE,
                 kind: MemKind::Read,
                 tag: i,
+                region: Region::Edges,
             };
             one.enqueue(r, 0);
             four.enqueue(r, 0);
@@ -334,6 +365,7 @@ mod tests {
                     addr: sys.region_base((i % 2) as usize) + (i / 2) * CACHE_LINE,
                     kind: MemKind::Read,
                     tag: i,
+                    region: Region::Vertices,
                 },
                 0,
             );
@@ -357,6 +389,7 @@ mod tests {
                     addr: i * CACHE_LINE,
                     kind: if i % 2 == 0 { MemKind::Read } else { MemKind::Write },
                     tag: i,
+                    region: if i % 2 == 0 { Region::Edges } else { Region::Updates },
                 },
                 i * 5,
             );
@@ -366,12 +399,16 @@ mod tests {
         assert_eq!(trace.len(), 10);
         assert_eq!(trace[3].arrival, 15);
         assert_eq!(trace[1].kind, MemKind::Write);
+        assert_eq!(trace[1].region, Region::Updates);
         let mut buf = Vec::new();
         let n = sys.write_trace(&mut buf).unwrap();
         assert_eq!(n, 10);
         let text = String::from_utf8(buf).unwrap();
         assert!(text.lines().count() == 10);
-        assert!(text.contains("0x40 W 5 1"));
+        assert!(text.contains("0x40 W 5 1 updates"), "{text}");
+        // The written trace parses back to the recorded events.
+        let parsed = crate::trace::parse_events(&text).unwrap();
+        assert_eq!(parsed.as_slice(), sys.trace().unwrap());
     }
 
     #[test]
@@ -382,12 +419,38 @@ mod tests {
                 addr: 0,
                 kind: MemKind::Read,
                 tag: 0,
+                region: Region::Payload,
             },
             0,
         );
         assert!(sys.trace().is_none());
         let mut buf = Vec::new();
         assert_eq!(sys.write_trace(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn attached_analyzer_summarizes_without_trace_buffer() {
+        let mut sys = MemorySystem::new(DramSpec::ddr4_2400(2));
+        sys.attach_analyzer();
+        for i in 0..32u64 {
+            sys.enqueue(
+                MemRequest {
+                    addr: i * CACHE_LINE,
+                    kind: MemKind::Read,
+                    tag: i,
+                    region: Region::Edges,
+                },
+                0,
+            );
+        }
+        sys.drain();
+        assert!(sys.trace().is_none(), "analyzer must not allocate a trace");
+        let summary = sys.take_pattern_summary().unwrap();
+        assert_eq!(summary.region(Region::Edges).reads, 32);
+        assert_eq!(summary.channels.len(), 2);
+        assert_eq!(summary.channels[0].requests(), 16);
+        // Detached: a second take yields nothing.
+        assert!(sys.take_pattern_summary().is_none());
     }
 
     #[test]
@@ -398,6 +461,7 @@ mod tests {
                 addr: 0,
                 kind: MemKind::Read,
                 tag: 0,
+                region: Region::Payload,
             },
             0,
         );

@@ -22,6 +22,13 @@
 //!   the paper ablates (prefetch/partition/shard skipping, edge
 //!   shuffling, stride mapping, edge sorting, update combining, update
 //!   filtering, chunk scheduling).
+//! * [`trace`] — the access-pattern analysis subsystem: every off-chip
+//!   request carries a [`trace::Region`] tag (edges / vertices /
+//!   updates / payload) stamped at issue time, and the streaming
+//!   [`trace::AccessPatternAnalyzer`] turns issue-order event streams
+//!   (live simulations or written trace files — identical results)
+//!   into per-region traffic, sequentiality and row-locality
+//!   summaries: the paper's Figs. 8–11 analysis as a library.
 //! * [`sim`] — the typed session API and the co-simulation engine:
 //!   [`sim::SimSpec`] describes one run (accelerator × workload ×
 //!   problem × memory technology × channels × configuration) with all
@@ -52,10 +59,13 @@
 //!     .graph(DatasetId::Sd)
 //!     .problem(ProblemKind::Bfs)
 //!     .config(AcceleratorConfig::all_optimizations())
+//!     .patterns(true) // opt in to the access-pattern summary
 //!     .build()
 //!     .unwrap() // invalid combinations fail here, never mid-run
 //!     .run();
 //! assert!(report.mteps() > 0.0);
+//! let patterns = report.patterns.as_ref().unwrap();
+//! assert!(patterns.total_requests() > 0);
 //! ```
 
 pub mod accel;
@@ -68,4 +78,5 @@ pub mod partition;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod util;

@@ -5,6 +5,9 @@
 //!   datasets                     Tab. 2-style dataset property table
 //!   run <accel> <graph> <prob>   one simulation (options: --dram, --channels, --no-opt)
 //!   sweep                        parallel multi-axis sweep (options below)
+//!   trace <accel> <graph> <prob> write an issue-order request trace (--dram, --channels, --out)
+//!   analyze <accel> <graph> <prob>  per-region access-pattern analysis of a live sim
+//!   analyze --trace <file>       the same analysis over an existing trace file
 //!   report --exp <id>            regenerate a figure/table (options: --scope, --csv)
 //!   verify <graph> <prob>        golden-engine cross-check (native vs XLA/PJRT)
 //!
@@ -19,11 +22,15 @@ use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
 use graphmem::algo::golden::values_agree;
 use graphmem::algo::problem::{GraphProblem, ProblemKind};
 use graphmem::coordinator::{run_experiment, Experiment, Scope};
-use graphmem::dram::MemTech;
+use graphmem::dram::{ChannelMode, MemTech};
 use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
+use graphmem::graph::rmat::{self, RmatParams};
 use graphmem::graph::{datasets, properties::GraphProperties, DatasetId};
-use graphmem::report::Table;
-use graphmem::sim::{Session, SimSpec, SpecError, Sweep};
+use graphmem::report::{pattern_tables, Table};
+use graphmem::sim::{Session, SimSpec, SpecError, Sweep, Workload};
+use graphmem::trace::{
+    parse_events, parse_meta, write_events, write_meta, AccessPatternAnalyzer, TraceMeta,
+};
 use std::str::FromStr;
 
 fn main() {
@@ -62,6 +69,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
+        Some("analyze") => cmd_analyze(&args[1..]),
         Some("report") => cmd_report(&args[1..]),
         Some("verify") => cmd_verify(&args[1..]),
         Some("help") | None => {
@@ -80,10 +88,17 @@ fn print_help() {
          graphmem run <accel> <graph> <problem> [--dram ddr3|ddr4|hbm] [--channels N] [--no-opt]\n  \
          graphmem sweep [--accels a,b,..] [--graphs g,..] [--problems p,..] [--drams d,..]\n  \
          \x20            [--channels n,..] [--threads N] [--no-opt] [--skip-unsupported]\n  \
-         graphmem trace <accel> <graph> <problem> --out <file>   (Ramulator-style request trace)\n  \
+         graphmem trace <accel> <graph> <problem> [--dram ddr3|ddr4|hbm] [--channels N] [--out <file>]\n  \
+         \x20            (issue-order request trace; --channels is validated against the DRAM's\n  \
+         \x20             Tab. 3 maximum: 4 for DDR3/DDR4, 8 for HBM)\n  \
+         graphmem analyze <accel> <graph> <problem> [--dram d] [--channels N] [--no-opt] [--csv]\n  \
+         \x20            (per-region access-pattern tables from a live simulation)\n  \
+         graphmem analyze --trace <file> [--dram d] [--channels N] [--mode interleave|region] [--csv]\n  \
+         \x20            (same analysis over a trace file; flags default to the file's header)\n  \
          graphmem report --exp <id|all> [--scope quick|standard|full] [--csv]\n  \
          graphmem verify <graph> <problem> [--max-iters N]\n\n\
-         accel: accugraph|foregraph|hitgraph|thundergp   problem: bfs|pr|wcc|sssp|spmv"
+         accel: accugraph|foregraph|hitgraph|thundergp   problem: bfs|pr|wcc|sssp|spmv\n\
+         graph: any Tab. 2 name (see `graphmem list`) or rmat-small (synthetic quick-analysis graph)"
     );
 }
 
@@ -141,8 +156,8 @@ fn cmd_run(args: &[String]) -> Result<()> {
         _ => bail!("usage: graphmem run <accel> <graph> <problem> [options]"),
     };
     let kind: AcceleratorKind = parse_arg(accel)?;
-    let graph: DatasetId = parse_arg(graph)?;
     let problem: ProblemKind = parse_arg(problem)?;
+    let workload = parse_workload(graph, problem.weighted())?;
     let mem: MemTech = parse_arg(flag_value(args, "--dram").unwrap_or("ddr4"))?;
     let channels: usize = flag_value(args, "--channels").unwrap_or("1").parse()?;
     let cfg = if has_flag(args, "--no-opt") {
@@ -152,7 +167,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     };
     let spec = SimSpec::builder()
         .accelerator(kind)
-        .graph(graph)
+        .workload(workload)
         .problem(problem)
         .mem(mem)
         .channels(channels)
@@ -176,6 +191,11 @@ fn cmd_run(args: &[String]) -> Result<()> {
         100.0 * c,
         r.dram.refreshes
     );
+    let regions: Vec<String> = graphmem::trace::Region::all()
+        .iter()
+        .map(|&reg| format!("{reg}={}", r.dram.region_requests(reg)))
+        .collect();
+    println!("  region requests: {}", regions.join(" "));
     println!(
         "  iterations={} edges_read={} values_read={} values_written={} updates={} skipped={}/{}",
         r.metrics.iterations,
@@ -194,13 +214,24 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         Some(s) => parse_list(s)?,
         None => AcceleratorKind::all().to_vec(),
     };
-    let graphs: Vec<DatasetId> = match flag_value(args, "--graphs") {
-        Some(s) => parse_list(s)?,
-        None => vec![DatasetId::Sd, DatasetId::Db, DatasetId::Yt, DatasetId::Wt],
-    };
     let problems: Vec<ProblemKind> = match flag_value(args, "--problems") {
         Some(s) => parse_list(s)?,
         None => vec![ProblemKind::Bfs],
+    };
+    // Graphs go through the workload parser so the synthetic aliases
+    // (rmat-small) are valid here too, weighted when any problem
+    // needs weights.
+    let weighted = problems.iter().any(|p| p.weighted());
+    let workloads: Vec<Workload> = match flag_value(args, "--graphs") {
+        Some(s) => s
+            .split(',')
+            .filter(|p| !p.is_empty())
+            .map(|n| parse_workload(n, weighted))
+            .collect::<Result<_>>()?,
+        None => [DatasetId::Sd, DatasetId::Db, DatasetId::Yt, DatasetId::Wt]
+            .into_iter()
+            .map(Workload::Named)
+            .collect(),
     };
     let drams: Vec<MemTech> = match flag_value(args, "--drams") {
         Some(s) => parse_list(s)?,
@@ -221,7 +252,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     };
     let mut sweep = Sweep::new()
         .accelerators(accels)
-        .graphs(graphs)
+        .workloads(workloads)
         .problems(problems)
         .mem_techs(drams)
         .channels(channels)
@@ -276,41 +307,160 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_trace(args: &[String]) -> Result<()> {
-    use graphmem::accel::build;
-    use graphmem::dram::{ChannelMode, MemorySystem};
+/// A CLI workload: any Tab. 2 dataset name, or the `rmat-small` alias
+/// (a scale-10, edge-factor-8 Graph500 R-MAT — small enough for
+/// instant pattern analysis). Weighted problems get deterministic
+/// random weights, like the named datasets.
+fn parse_workload(name: &str, weighted: bool) -> Result<Workload> {
+    if let Ok(id) = name.parse::<DatasetId>() {
+        return Ok(Workload::Named(id));
+    }
+    match name.to_ascii_lowercase().as_str() {
+        "rmat-small" => {
+            let mut g = rmat::generate(RmatParams::graph500(10, 8, 0x5A));
+            if weighted {
+                g = g.with_random_weights(0x77EE, 64.0);
+            }
+            Ok(Workload::custom("rmat-small", g))
+        }
+        _ => bail!(
+            "unknown graph {name:?} (expected one of: {} or rmat-small)",
+            datasets::dataset_names().join(" ")
+        ),
+    }
+}
 
+/// Build the spec shared by `trace` and `analyze` live runs. The
+/// builder validates `--channels` against both the accelerator's
+/// multi-channel capability and the DRAM technology's Tab. 3 maximum
+/// (`MemTech::max_channels`).
+fn spec_from_args(args: &[String], patterns: bool) -> Result<SimSpec> {
     let (accel, graph, problem) = match (args.first(), args.get(1), args.get(2)) {
         (Some(a), Some(g), Some(p)) => (a, g, p),
-        _ => bail!("usage: graphmem trace <accel> <graph> <problem> --out <file>"),
+        _ => bail!("usage: graphmem <trace|analyze> <accel> <graph> <problem> [options]"),
     };
-    let out = flag_value(args, "--out").unwrap_or("trace.txt");
     let kind: AcceleratorKind = parse_arg(accel)?;
-    let graph: DatasetId = parse_arg(graph)?;
     let problem: ProblemKind = parse_arg(problem)?;
+    let workload = parse_workload(graph, problem.weighted())?;
     let mem: MemTech = parse_arg(flag_value(args, "--dram").unwrap_or("ddr4"))?;
-    let g = if problem.weighted() {
-        graph.load_weighted()
+    let channels: usize = flag_value(args, "--channels").unwrap_or("1").parse()?;
+    let cfg = if has_flag(args, "--no-opt") {
+        AcceleratorConfig::baseline()
     } else {
-        graph.load()
+        AcceleratorConfig::all_optimizations()
     };
-    let p = GraphProblem::new(problem, &g);
-    let cfg = AcceleratorConfig::all_optimizations();
-    let mode = if kind.multi_channel() {
-        ChannelMode::Region
-    } else {
-        ChannelMode::InterleaveLine
-    };
-    let mut mem = MemorySystem::with_mode(mem.spec(1), mode);
-    mem.enable_trace();
-    let mut a = build(kind, &g, &cfg);
-    let r = a.run(&p, &mut mem);
+    Ok(SimSpec::builder()
+        .accelerator(kind)
+        .workload(workload)
+        .problem(problem)
+        .mem(mem)
+        .channels(channels)
+        .config(cfg)
+        .patterns(patterns)
+        .build()?)
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let out = flag_value(args, "--out").unwrap_or("trace.txt");
+    let spec = spec_from_args(args, false)?;
+    let (r, events) = spec.run_traced();
     let f = std::fs::File::create(out)?;
-    let n = mem.write_trace(std::io::BufWriter::new(f))?;
+    let mut w = std::io::BufWriter::new(f);
+    // Header records the organization so `analyze --trace` needs no
+    // flags to reproduce the in-sim analysis.
+    write_meta(
+        &mut w,
+        &TraceMeta {
+            dram: spec.mem().name().to_string(),
+            channels: spec.channels(),
+            mode: spec.channel_mode(),
+        },
+    )?;
+    let n = write_events(&mut w, &events)?;
     println!(
-        "wrote {n} requests to {out} ({} iterations, sim {:.5}s)",
-        r.metrics.iterations, r.seconds
+        "wrote {n} requests to {out} ({}, {} channel(s), {} iterations, sim {:.5}s)",
+        spec.label(),
+        spec.channels(),
+        r.metrics.iterations,
+        r.seconds
     );
+    Ok(())
+}
+
+fn cmd_analyze(args: &[String]) -> Result<()> {
+    let csv = has_flag(args, "--csv");
+    let (label, summary) = if let Some(path) = flag_value(args, "--trace") {
+        // Offline mode: re-analyze an existing trace file. The
+        // organization comes from the file's header when present;
+        // explicit flags override it (headerless traces default to
+        // ddr4 x1 interleave).
+        let text = std::fs::read_to_string(path)?;
+        let meta = parse_meta(&text);
+        let mem: MemTech = match flag_value(args, "--dram") {
+            Some(s) => parse_arg(s)?,
+            None => match &meta {
+                Some(m) => parse_arg(&m.dram)?,
+                None => MemTech::Ddr4,
+            },
+        };
+        let channels: usize = match flag_value(args, "--channels") {
+            Some(s) => s.parse()?,
+            None => meta.as_ref().map(|m| m.channels).unwrap_or(1),
+        };
+        if channels == 0 || channels > mem.max_channels() {
+            bail!(
+                "--channels must be in 1..={} for {mem} (Tab. 3 / Fig. 12)",
+                mem.max_channels()
+            );
+        }
+        let mode = match flag_value(args, "--mode") {
+            Some("interleave") => ChannelMode::InterleaveLine,
+            Some("region") => ChannelMode::Region,
+            Some(other) => bail!("bad --mode {other:?} (interleave|region)"),
+            None => meta
+                .as_ref()
+                .map(|m| m.mode)
+                .unwrap_or(ChannelMode::InterleaveLine),
+        };
+        let events = parse_events(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        // A trace records which channel each request routed to; the
+        // analysis is only meaningful under the same organization.
+        if let Some(max_ch) = events.iter().map(|e| e.channel).max() {
+            if max_ch >= channels {
+                bail!(
+                    "{path} contains events for channel {max_ch} but --channels is {channels}; \
+                     re-run with the trace's organization (--channels {} or more, and --mode \
+                     region for HitGraph/ThunderGP traces)",
+                    max_ch + 1
+                );
+            }
+        }
+        let mut analyzer = AccessPatternAnalyzer::new(mem.spec(channels), mode);
+        for ev in &events {
+            analyzer.observe(ev);
+        }
+        (
+            format!("{path} ({mem}x{channels}, {} events)", events.len()),
+            analyzer.finish(),
+        )
+    } else {
+        // Live mode: run the spec with the analyzer attached.
+        let spec = spec_from_args(args, true)?;
+        let r = spec.run();
+        println!("{}", r.summary());
+        let summary = r
+            .patterns
+            .expect("patterns(true) specs always attach a summary");
+        (spec.label(), summary)
+    };
+    for t in pattern_tables(&label, &summary) {
+        if csv {
+            println!("# {}", t.title);
+            println!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+    }
     Ok(())
 }
 

@@ -1,6 +1,9 @@
 //! Report generation: aligned text tables, CSV emit, and the figure
-//! series formatters used by the bench harness and the CLI.
+//! series formatters used by the bench harness and the CLI —
+//! including the access-pattern tables of [`pattern`].
 
+pub mod pattern;
 pub mod table;
 
+pub use pattern::{channel_table, pattern_tables, region_table, reuse_table};
 pub use table::Table;

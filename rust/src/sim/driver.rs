@@ -215,6 +215,7 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
                     addr,
                     kind: phase.streams[s].kind,
                     tag: tag(s, idx),
+                    region: phase.streams[s].class.region(),
                 },
                 arrival,
             );
@@ -324,6 +325,10 @@ mod tests {
         assert_eq!(t.requests, 8);
         assert_eq!(m.stats().writes, 4);
         assert_eq!(m.stats().reads, 4);
+        // The driver stamps each request with its stream's region.
+        use crate::trace::Region;
+        assert_eq!(m.stats().region_requests(Region::Edges), 4);
+        assert_eq!(m.stats().region_requests(Region::Vertices), 4);
     }
 
     #[test]

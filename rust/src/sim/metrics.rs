@@ -3,6 +3,7 @@
 //! roll-up of Fig. 11(b).
 
 use crate::dram::DramStats;
+use crate::trace::AccessPatternSummary;
 
 /// Raw counters accumulated by an accelerator model during a run.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -45,6 +46,10 @@ pub struct SimReport {
     /// Aggregate data-bus utilization (Fig. 11(b)).
     pub bus_utilization: f64,
     pub channels: usize,
+    /// Access-pattern summary — present when the spec was built with
+    /// `SimSpecBuilder::patterns(true)` (filled in by `SimSpec::run`;
+    /// the accelerator models themselves leave it `None`).
+    pub patterns: Option<AccessPatternSummary>,
 }
 
 impl SimReport {
@@ -146,6 +151,7 @@ mod tests {
             bytes_total: 64_000_000,
             bus_utilization: 0.42,
             channels: 1,
+            patterns: None,
         }
     }
 

@@ -26,6 +26,7 @@ use crate::dram::{ChannelMode, MemTech, MemorySystem};
 use crate::graph::datasets::DatasetId;
 use crate::graph::EdgeList;
 use crate::sim::metrics::SimReport;
+use crate::trace::{AccessPatternAnalyzer, TraceEvent};
 use std::fmt;
 use std::hash::{Hash, Hasher};
 use std::sync::Arc;
@@ -247,6 +248,10 @@ pub struct SimSpec {
     mem: MemTech,
     channels: usize,
     config: AcceleratorConfig,
+    /// Collect an access-pattern summary during the run. Part of the
+    /// spec's identity (memoized with- and without-analysis runs never
+    /// alias).
+    patterns: bool,
 }
 
 impl SimSpec {
@@ -278,6 +283,30 @@ impl SimSpec {
         &self.config
     }
 
+    /// Whether this spec collects an access-pattern summary.
+    pub fn patterns_enabled(&self) -> bool {
+        self.patterns
+    }
+
+    /// How this accelerator places data across channels: the
+    /// multi-channel designs (HitGraph, ThunderGP) own per-channel
+    /// regions; the single-channel designs stripe line-interleaved.
+    pub fn channel_mode(&self) -> ChannelMode {
+        if self.accelerator.multi_channel() {
+            ChannelMode::Region
+        } else {
+            ChannelMode::InterleaveLine
+        }
+    }
+
+    /// An [`AccessPatternAnalyzer`] configured exactly as this spec's
+    /// in-simulation analysis: feed it the events of a trace produced
+    /// by [`SimSpec::run_traced`] and it yields the same summary that
+    /// `.patterns(true)` attaches to the report.
+    pub fn pattern_analyzer(&self) -> AccessPatternAnalyzer {
+        AccessPatternAnalyzer::new(self.mem.spec(self.channels), self.channel_mode())
+    }
+
     /// Compact human label, e.g. `AccuGraph/lj/BFS/ddr4x1`.
     pub fn label(&self) -> String {
         format!(
@@ -291,21 +320,38 @@ impl SimSpec {
     }
 
     /// Execute the simulation. Infallible: every invalid combination
-    /// was rejected by [`SimSpecBuilder::build`].
+    /// was rejected by [`SimSpecBuilder::build`]. When the spec was
+    /// built with `.patterns(true)`, the returned report carries an
+    /// [`crate::trace::AccessPatternSummary`] in
+    /// [`SimReport::patterns`].
     pub fn run(&self) -> SimReport {
+        self.run_inner(false).0
+    }
+
+    /// Like [`SimSpec::run`], but records every issued request and
+    /// returns the issue-order trace alongside the report (the
+    /// `graphmem trace` / `graphmem analyze --trace` substrate).
+    pub fn run_traced(&self) -> (SimReport, Vec<TraceEvent>) {
+        let (report, trace) = self.run_inner(true);
+        (report, trace.unwrap_or_default())
+    }
+
+    fn run_inner(&self, record_trace: bool) -> (SimReport, Option<Vec<TraceEvent>>) {
         let g = self.workload.resolve(self.problem.weighted());
         let spec = self.mem.spec(self.channels);
-        // HitGraph/ThunderGP place data per channel (region mode); the
-        // single-channel accelerators see one region either way.
-        let mode = if self.accelerator.multi_channel() {
-            ChannelMode::Region
-        } else {
-            ChannelMode::InterleaveLine
-        };
         let p = GraphProblem::new(self.problem, &g);
         let mut accel = build(self.accelerator, &g, &self.config);
-        let mut mem = MemorySystem::with_mode(spec, mode);
-        accel.run(&p, &mut mem)
+        let mut mem = MemorySystem::with_mode(spec, self.channel_mode());
+        if record_trace {
+            mem.enable_trace();
+        }
+        if self.patterns {
+            mem.attach_analyzer();
+        }
+        let mut report = accel.run(&p, &mut mem);
+        report.patterns = mem.take_pattern_summary();
+        let trace = mem.take_trace();
+        (report, trace)
     }
 }
 
@@ -326,6 +372,7 @@ pub struct SimSpecBuilder {
     /// name, then a default" must not stay poisoned.
     deferred_dataset: Option<SpecError>,
     deferred_mem: Option<SpecError>,
+    patterns: bool,
 }
 
 impl SimSpecBuilder {
@@ -416,6 +463,35 @@ impl SimSpecBuilder {
         self
     }
 
+    /// Collect an access-pattern summary during the run (off by
+    /// default — the streaming analyzer costs a few percent of
+    /// simulation time). The summary arrives on
+    /// [`SimReport::patterns`]:
+    ///
+    /// ```
+    /// use graphmem::accel::AcceleratorKind;
+    /// use graphmem::algo::problem::ProblemKind;
+    /// use graphmem::graph::DatasetId;
+    /// use graphmem::sim::SimSpec;
+    /// use graphmem::trace::Region;
+    ///
+    /// let report = SimSpec::builder()
+    ///     .accelerator(AcceleratorKind::ThunderGp)
+    ///     .graph(DatasetId::Sd)
+    ///     .problem(ProblemKind::Bfs)
+    ///     .patterns(true)
+    ///     .build()
+    ///     .unwrap()
+    ///     .run();
+    /// let summary = report.patterns.as_ref().unwrap();
+    /// assert!(summary.region(Region::Edges).seq_fraction() > 0.5);
+    /// assert!(summary.region(Region::Updates).requests() > 0);
+    /// ```
+    pub fn patterns(mut self, on: bool) -> Self {
+        self.patterns = on;
+        self
+    }
+
     /// Validate and freeze. Every unsupported combination is rejected
     /// here, before any simulation work.
     pub fn build(self) -> Result<SimSpec, SpecError> {
@@ -472,6 +548,7 @@ impl SimSpecBuilder {
             mem,
             channels,
             config,
+            patterns: self.patterns,
         })
     }
 }
@@ -612,6 +689,22 @@ mod tests {
             .problem(ProblemKind::Sssp)
             .build();
         assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn patterns_opt_in_attaches_summary() {
+        let plain = base().build().unwrap();
+        assert!(!plain.patterns_enabled());
+        assert!(plain.run().patterns.is_none());
+        let spec = base().patterns(true).build().unwrap();
+        assert!(spec.patterns_enabled());
+        let r = spec.run();
+        let s = r.patterns.as_ref().unwrap();
+        // The analyzer sees every enqueued request; the controller
+        // services each exactly once.
+        assert_eq!(s.total_requests(), r.dram.requests());
+        // The flag is part of the spec's identity (memoization key).
+        assert_ne!(plain, spec);
     }
 
     #[test]

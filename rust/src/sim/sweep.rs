@@ -165,6 +165,7 @@ pub struct Sweep {
     configs: Vec<AcceleratorConfig>,
     skip_unsupported: bool,
     threads: Option<usize>,
+    patterns: bool,
 }
 
 impl Sweep {
@@ -181,6 +182,7 @@ impl Sweep {
             configs: vec![AcceleratorConfig::default()],
             skip_unsupported: false,
             threads: None,
+            patterns: false,
         }
     }
 
@@ -235,6 +237,16 @@ impl Sweep {
         self
     }
 
+    /// Collect an access-pattern summary for every point (see
+    /// `SimSpecBuilder::patterns`): each run's
+    /// [`SimReport::patterns`] is then populated, so a sweep can
+    /// compare patterns across accelerators × memories without
+    /// writing trace files.
+    pub fn collect_patterns(mut self) -> Self {
+        self.patterns = true;
+        self
+    }
+
     /// The validated cartesian product. With
     /// [`Sweep::skip_unsupported`], invalid points are filtered;
     /// otherwise the first invalid combination aborts with its
@@ -272,6 +284,7 @@ impl Sweep {
                                     .mem(mem)
                                     .channels(ch)
                                     .config(cfg.clone())
+                                    .patterns(self.patterns)
                                     .build();
                                 match built {
                                     Ok(spec) => specs.push(spec),
@@ -373,6 +386,21 @@ mod tests {
         let b = session.run(&spec);
         assert_eq!(session.cached_runs(), 1);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sweep_collects_patterns_when_asked() {
+        let session = Session::new();
+        let runs = quick_sweep().collect_patterns().run_with(&session).unwrap();
+        assert_eq!(runs.len(), 2);
+        for run in &runs {
+            let s = run.report.patterns.as_ref().expect("summary attached");
+            assert_eq!(s.total_requests(), run.report.dram.requests());
+        }
+        // Without the toggle no summary is attached (distinct specs,
+        // so the memo cache cannot hand a pattern run back).
+        let plain = quick_sweep().run_with(&session).unwrap();
+        assert!(plain.iter().all(|r| r.report.patterns.is_none()));
     }
 
     #[test]

@@ -1,0 +1,597 @@
+//! Streaming access-pattern analyzers: per-region traffic accounting,
+//! sequential / strided / random classification with run lengths,
+//! per-channel reuse-interval and row-locality histograms — the
+//! quantities behind the paper's Figs. 8–11 discussion.
+//!
+//! The analyzer consumes [`TraceEvent`]s **in issue order** and never
+//! looks at controller scheduling. Row locality is therefore computed
+//! under an in-order, open-page, single-row-buffer-per-bank model: it
+//! is a property of the *request pattern* itself, independent of
+//! FR-FCFS reordering. The controller-measured mix stays available in
+//! [`crate::dram::DramStats`]; comparing the two shows how much the
+//! scheduler recovers. Because the analyzer only depends on the event
+//! stream, analyzing a live simulation and re-analyzing its written
+//! trace file produce bit-identical summaries.
+
+use super::record::{Region, TraceEvent};
+use crate::dram::{AddrMap, AddressMapper, ChannelMode, DramSpec, MemKind, CACHE_LINE};
+use std::collections::HashMap;
+
+/// Power-of-two bucketed histogram: bucket 0 holds value 0, bucket
+/// `k >= 1` holds values in `[2^(k-1), 2^k)`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Histogram {
+    /// Bucket counts; only grown, never shrunk, so two identical
+    /// streams produce structurally equal histograms.
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+}
+
+impl Histogram {
+    pub fn record(&mut self, value: u64) {
+        let bucket = if value == 0 {
+            0
+        } else {
+            64 - value.leading_zeros() as usize
+        };
+        if self.counts.len() <= bucket {
+            self.counts.resize(bucket + 1, 0);
+        }
+        self.counts[bucket] += 1;
+        self.total += 1;
+        self.sum += value;
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Bucket counts, lowest bucket first (`buckets()[0]` = exact
+    /// zeros, `buckets()[k]` = values in `[2^(k-1), 2^k)`).
+    pub fn buckets(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Upper bound (exclusive) of bucket `k`.
+    pub fn bucket_limit(k: usize) -> u64 {
+        if k == 0 {
+            1
+        } else {
+            1u64 << k
+        }
+    }
+}
+
+/// How one access relates to the previous access of its region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StepClass {
+    Sequential,
+    Strided,
+    Random,
+}
+
+/// Per-region accumulation state.
+#[derive(Clone, Debug, Default)]
+struct RegionState {
+    reads: u64,
+    writes: u64,
+    sequential: u64,
+    strided: u64,
+    random: u64,
+    last_addr: Option<u64>,
+    last_delta: Option<i64>,
+    /// Length of the current maximal sequential run.
+    run_len: u64,
+    run_lengths: Histogram,
+}
+
+impl RegionState {
+    fn observe(&mut self, addr: u64, kind: MemKind) {
+        if kind == MemKind::Write {
+            self.writes += 1;
+        } else {
+            self.reads += 1;
+        }
+        let class = match self.last_addr {
+            None => StepClass::Random,
+            Some(prev) => {
+                let delta = addr.wrapping_sub(prev) as i64;
+                let class = if delta == CACHE_LINE as i64 {
+                    StepClass::Sequential
+                } else if delta != 0 && self.last_delta == Some(delta) {
+                    StepClass::Strided
+                } else {
+                    StepClass::Random
+                };
+                self.last_delta = Some(delta);
+                class
+            }
+        };
+        self.last_addr = Some(addr);
+        match class {
+            StepClass::Sequential => {
+                self.sequential += 1;
+                self.run_len += 1;
+            }
+            StepClass::Strided | StepClass::Random => {
+                if class == StepClass::Strided {
+                    self.strided += 1;
+                } else {
+                    self.random += 1;
+                }
+                // A non-sequential step ends the current run.
+                if self.run_len > 0 {
+                    self.run_lengths.record(self.run_len);
+                }
+                self.run_len = 1;
+            }
+        }
+    }
+
+    fn finish_runs(&mut self) {
+        if self.run_len > 0 {
+            self.run_lengths.record(self.run_len);
+            self.run_len = 0;
+        }
+    }
+}
+
+/// Per-channel accumulation state.
+#[derive(Clone, Debug, Default)]
+struct ChannelState {
+    reads: u64,
+    writes: u64,
+    row_hits: u64,
+    row_misses: u64,
+    row_conflicts: u64,
+    reuse: Histogram,
+    /// line -> sequence number of its last access on this channel.
+    last_seen: HashMap<u64, u64>,
+    seq: u64,
+}
+
+/// Streaming analyzer. Construct with the memory organization the
+/// events were generated against (row geometry and channel routing
+/// must match for the row-locality and per-channel numbers to mean
+/// anything), feed every event through [`AccessPatternAnalyzer::observe`],
+/// then call [`AccessPatternAnalyzer::finish`].
+pub struct AccessPatternAnalyzer {
+    mapper: AddressMapper,
+    mode: ChannelMode,
+    channels: usize,
+    channel_bytes: u64,
+    banks_per_channel: usize,
+    /// Open row per (channel, flat bank) under the in-order model.
+    open_rows: Vec<Option<u64>>,
+    regions: Vec<RegionState>,
+    chans: Vec<ChannelState>,
+    region_row: Vec<[u64; 3]>, // [hit, miss, conflict] per region
+}
+
+impl AccessPatternAnalyzer {
+    /// `spec.channels` and `mode` must match the memory system that
+    /// produced (or will produce) the events. Uses the default
+    /// `RoBaRaCoCh` address mapping; systems running a policy-ablation
+    /// mapping must use [`AccessPatternAnalyzer::with_addr_map`].
+    pub fn new(spec: DramSpec, mode: ChannelMode) -> AccessPatternAnalyzer {
+        Self::with_addr_map(spec, mode, AddrMap::default())
+    }
+
+    /// Like [`AccessPatternAnalyzer::new`] with an explicit physical
+    /// address mapping (must match the controller's
+    /// `DramPolicy::addr_map` for the row-locality numbers to mean
+    /// anything).
+    pub fn with_addr_map(
+        spec: DramSpec,
+        mode: ChannelMode,
+        addr_map: AddrMap,
+    ) -> AccessPatternAnalyzer {
+        let channels = spec.channels.max(1);
+        // Events carry global addresses; rows are decoded from the
+        // channel-local address exactly as MemorySystem rewrites it.
+        let local = spec.with_channels(1);
+        AccessPatternAnalyzer {
+            mapper: AddressMapper::with_map(&local, addr_map),
+            mode,
+            channels,
+            channel_bytes: spec.channel_bytes,
+            banks_per_channel: spec.banks_per_channel(),
+            open_rows: vec![None; channels * spec.banks_per_channel()],
+            regions: vec![RegionState::default(); Region::COUNT],
+            chans: vec![ChannelState::default(); channels],
+            region_row: vec![[0; 3]; Region::COUNT],
+        }
+    }
+
+    /// Consume one event (events must arrive in issue order).
+    ///
+    /// # Panics
+    ///
+    /// If `ev.channel` is outside this analyzer's channel count —
+    /// a summary over mismatched organizations would be silently
+    /// wrong, so the mismatch is rejected loudly. CLI paths validate
+    /// first and report a friendly error.
+    pub fn observe(&mut self, ev: &TraceEvent) {
+        assert!(
+            ev.channel < self.channels,
+            "trace event on channel {} but the analyzer was built for {} channel(s); \
+             construct it with the organization that produced the trace",
+            ev.channel,
+            self.channels
+        );
+        let ch = ev.channel;
+        self.regions[ev.region.index()].observe(ev.addr, ev.kind);
+
+        // In-order open-page row model (channel-local rewrite shared
+        // with MemorySystem::enqueue via ChannelMode::local_addr).
+        let d = self
+            .mapper
+            .decode(self.mode.local_addr(ev.addr, self.channels, self.channel_bytes));
+        let slot = ch * self.banks_per_channel + d.flat_bank;
+        let outcome = match self.open_rows[slot] {
+            Some(row) if row == d.row => 0, // hit
+            None => 1,                      // miss
+            Some(_) => 2,                   // conflict
+        };
+        self.open_rows[slot] = Some(d.row);
+        self.region_row[ev.region.index()][outcome] += 1;
+
+        let c = &mut self.chans[ch];
+        if ev.kind == MemKind::Write {
+            c.writes += 1;
+        } else {
+            c.reads += 1;
+        }
+        match outcome {
+            0 => c.row_hits += 1,
+            1 => c.row_misses += 1,
+            _ => c.row_conflicts += 1,
+        }
+
+        // Reuse interval: accesses on this channel since this line was
+        // last touched (an LRU-stack-distance upper bound).
+        let line = ev.addr / CACHE_LINE;
+        if let Some(prev) = c.last_seen.insert(line, c.seq) {
+            c.reuse.record(c.seq - prev);
+        }
+        c.seq += 1;
+    }
+
+    /// Flush run-length state and produce the summary.
+    pub fn finish(mut self) -> AccessPatternSummary {
+        let mut regions = Vec::with_capacity(Region::COUNT);
+        for r in Region::all() {
+            let mut st = std::mem::take(&mut self.regions[r.index()]);
+            st.finish_runs();
+            let [h, m, c] = self.region_row[r.index()];
+            regions.push(RegionSummary {
+                region: r,
+                reads: st.reads,
+                writes: st.writes,
+                bytes: (st.reads + st.writes) * CACHE_LINE,
+                sequential: st.sequential,
+                strided: st.strided,
+                random: st.random,
+                row_hits: h,
+                row_misses: m,
+                row_conflicts: c,
+                run_lengths: st.run_lengths,
+            });
+        }
+        let channels = self
+            .chans
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| ChannelSummary {
+                channel: i,
+                reads: c.reads,
+                writes: c.writes,
+                row_hits: c.row_hits,
+                row_misses: c.row_misses,
+                row_conflicts: c.row_conflicts,
+                distinct_lines: c.last_seen.len() as u64,
+                reuse: c.reuse,
+            })
+            .collect();
+        AccessPatternSummary { regions, channels }
+    }
+
+    /// Convenience: run a whole event stream through a fresh analyzer.
+    pub fn analyze<'a>(
+        spec: DramSpec,
+        mode: ChannelMode,
+        events: impl IntoIterator<Item = &'a TraceEvent>,
+    ) -> AccessPatternSummary {
+        let mut a = AccessPatternAnalyzer::new(spec, mode);
+        for ev in events {
+            a.observe(ev);
+        }
+        a.finish()
+    }
+}
+
+/// Aggregated pattern statistics for one [`Region`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RegionSummary {
+    pub region: Region,
+    pub reads: u64,
+    pub writes: u64,
+    /// Bytes moved (requests × cache line).
+    pub bytes: u64,
+    /// Accesses continuing a +1-line sequential walk.
+    pub sequential: u64,
+    /// Accesses repeating the previous non-unit stride.
+    pub strided: u64,
+    /// Everything else (including each region's first access).
+    pub random: u64,
+    /// Row outcomes under the in-order open-page model.
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    /// Lengths of maximal sequential runs (isolated accesses count as
+    /// runs of length 1).
+    pub run_lengths: Histogram,
+}
+
+impl RegionSummary {
+    pub fn requests(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    /// Fraction of accesses classified sequential.
+    pub fn seq_fraction(&self) -> f64 {
+        let n = self.requests();
+        if n == 0 {
+            0.0
+        } else {
+            self.sequential as f64 / n as f64
+        }
+    }
+
+    /// (hit, miss, conflict) fractions under the in-order model.
+    pub fn row_mix(&self) -> (f64, f64, f64) {
+        let n = self.requests().max(1) as f64;
+        (
+            self.row_hits as f64 / n,
+            self.row_misses as f64 / n,
+            self.row_conflicts as f64 / n,
+        )
+    }
+
+    /// Mean maximal-sequential-run length.
+    pub fn mean_run_length(&self) -> f64 {
+        self.run_lengths.mean()
+    }
+}
+
+/// Aggregated pattern statistics for one memory channel.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChannelSummary {
+    pub channel: usize,
+    pub reads: u64,
+    pub writes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    /// Distinct cache lines touched (footprint in lines).
+    pub distinct_lines: u64,
+    /// Reuse intervals: same-channel accesses between two touches of
+    /// the same line.
+    pub reuse: Histogram,
+}
+
+impl ChannelSummary {
+    pub fn requests(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    /// (hit, miss, conflict) fractions under the in-order model.
+    pub fn row_mix(&self) -> (f64, f64, f64) {
+        let n = self.requests().max(1) as f64;
+        (
+            self.row_hits as f64 / n,
+            self.row_misses as f64 / n,
+            self.row_conflicts as f64 / n,
+        )
+    }
+}
+
+/// The full access-pattern summary of one run (or one trace file):
+/// per-region and per-channel roll-ups. Attach to a simulation via
+/// `SimSpecBuilder::patterns(true)`; it then arrives on
+/// `SimReport::patterns`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AccessPatternSummary {
+    /// One entry per [`Region`], in [`Region::all`] order (zero-filled
+    /// for regions the run never touched).
+    pub regions: Vec<RegionSummary>,
+    /// One entry per channel.
+    pub channels: Vec<ChannelSummary>,
+}
+
+impl AccessPatternSummary {
+    /// The summary for one region.
+    pub fn region(&self, r: Region) -> &RegionSummary {
+        &self.regions[r.index()]
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.regions.iter().map(|r| r.requests()).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.regions.iter().map(|r| r.bytes).sum()
+    }
+
+    /// The region moving the most bytes.
+    pub fn dominant_region(&self) -> Region {
+        self.regions
+            .iter()
+            .max_by_key(|r| r.bytes)
+            .map(|r| r.region)
+            .unwrap_or(Region::Payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::MemTech;
+
+    fn ev(addr: u64, region: Region, kind: MemKind, channel: usize) -> TraceEvent {
+        TraceEvent {
+            addr,
+            kind,
+            region,
+            arrival: 0,
+            channel,
+        }
+    }
+
+    fn analyzer1() -> AccessPatternAnalyzer {
+        AccessPatternAnalyzer::new(MemTech::Ddr4.spec(1), ChannelMode::InterleaveLine)
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::default();
+        for v in [0, 1, 1, 2, 3, 4, 7, 8, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 9);
+        assert_eq!(h.buckets()[0], 1); // the zero
+        assert_eq!(h.buckets()[1], 2); // 1, 1
+        assert_eq!(h.buckets()[2], 2); // 2, 3
+        assert_eq!(h.buckets()[3], 2); // 4, 7
+        assert_eq!(h.buckets()[4], 1); // 8
+        assert_eq!(h.buckets()[10], 1); // 1000 in [512, 1024)
+        assert!((h.mean() - (1 + 1 + 2 + 3 + 4 + 7 + 8 + 1000) as f64 / 9.0).abs() < 1e-9);
+        assert_eq!(Histogram::bucket_limit(0), 1);
+        assert_eq!(Histogram::bucket_limit(4), 16);
+    }
+
+    #[test]
+    fn sequential_stream_classified() {
+        let mut a = analyzer1();
+        for i in 0..10u64 {
+            a.observe(&ev(i * CACHE_LINE, Region::Edges, MemKind::Read, 0));
+        }
+        let s = a.finish();
+        let r = s.region(Region::Edges);
+        assert_eq!(r.reads, 10);
+        assert_eq!(r.sequential, 9);
+        assert_eq!(r.random, 1); // the first access
+        assert_eq!(r.strided, 0);
+        // One maximal run of length 10.
+        assert_eq!(r.run_lengths.count(), 1);
+        assert!((r.mean_run_length() - 10.0).abs() < 1e-9);
+        // Sequential within one 8 KiB row: 1 miss, 9 hits in-order.
+        assert_eq!(r.row_misses, 1);
+        assert_eq!(r.row_hits, 9);
+    }
+
+    #[test]
+    fn strided_stream_classified() {
+        let mut a = analyzer1();
+        for i in 0..6u64 {
+            a.observe(&ev(i * 4 * CACHE_LINE, Region::Vertices, MemKind::Read, 0));
+        }
+        let s = a.finish();
+        let r = s.region(Region::Vertices);
+        // first access random, second establishes the stride (random),
+        // remaining four repeat it.
+        assert_eq!(r.random, 2);
+        assert_eq!(r.strided, 4);
+        assert_eq!(r.sequential, 0);
+    }
+
+    #[test]
+    fn random_stream_classified() {
+        let mut a = analyzer1();
+        let addrs = [0u64, 1 << 20, 1 << 14, 3 << 22, 1 << 9, 5 << 19];
+        for &addr in &addrs {
+            a.observe(&ev(addr, Region::Updates, MemKind::Write, 0));
+        }
+        let s = a.finish();
+        let r = s.region(Region::Updates);
+        assert_eq!(r.writes, 6);
+        assert_eq!(r.random, 6);
+        assert_eq!(r.sequential + r.strided, 0);
+        // All isolated: six runs of length 1.
+        assert_eq!(r.run_lengths.count(), 6);
+        assert!((r.mean_run_length() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regions_tracked_independently() {
+        let mut a = analyzer1();
+        // Interleave two sequential streams; each stays sequential in
+        // its own region even though the merged address stream is not.
+        for i in 0..8u64 {
+            a.observe(&ev(i * CACHE_LINE, Region::Edges, MemKind::Read, 0));
+            a.observe(&ev((1 << 24) + i * CACHE_LINE, Region::Vertices, MemKind::Read, 0));
+        }
+        let s = a.finish();
+        assert_eq!(s.region(Region::Edges).sequential, 7);
+        assert_eq!(s.region(Region::Vertices).sequential, 7);
+        assert_eq!(s.region(Region::Updates).requests(), 0);
+        assert_eq!(s.total_requests(), 16);
+        assert_eq!(s.total_bytes(), 16 * CACHE_LINE);
+    }
+
+    #[test]
+    fn reuse_intervals_per_channel() {
+        let mut a = analyzer1();
+        // touch line 0, then 3 other lines, then line 0 again ->
+        // reuse interval 4.
+        for &addr in &[0u64, 64, 128, 192, 0] {
+            a.observe(&ev(addr, Region::Edges, MemKind::Read, 0));
+        }
+        let s = a.finish();
+        let c = &s.channels[0];
+        assert_eq!(c.requests(), 5);
+        assert_eq!(c.distinct_lines, 4);
+        assert_eq!(c.reuse.count(), 1);
+        assert!((c.reuse.mean() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn channels_rolled_up_separately() {
+        let spec = MemTech::Ddr4.spec(2);
+        let mut a = AccessPatternAnalyzer::new(spec, ChannelMode::InterleaveLine);
+        for i in 0..8u64 {
+            let addr = i * CACHE_LINE;
+            a.observe(&ev(addr, Region::Edges, MemKind::Read, (i % 2) as usize));
+        }
+        let s = a.finish();
+        assert_eq!(s.channels.len(), 2);
+        assert_eq!(s.channels[0].requests(), 4);
+        assert_eq!(s.channels[1].requests(), 4);
+    }
+
+    #[test]
+    fn conflict_detected_on_row_alternation() {
+        let spec = MemTech::Ddr4.spec(1);
+        let stride = spec.lines_per_row() * spec.banks_per_channel() as u64 * CACHE_LINE;
+        let mut a = AccessPatternAnalyzer::new(spec, ChannelMode::InterleaveLine);
+        for i in 0..6u64 {
+            a.observe(&ev((i % 2) * stride, Region::Payload, MemKind::Read, 0));
+        }
+        let s = a.finish();
+        let r = s.region(Region::Payload);
+        assert_eq!(r.row_misses, 1);
+        assert_eq!(r.row_conflicts, 5);
+        assert_eq!(s.dominant_region(), Region::Payload);
+    }
+}

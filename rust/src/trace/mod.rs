@@ -1,0 +1,63 @@
+//! Memory-access-pattern tracing and analysis — the subsystem that
+//! turns raw request streams into the insights the paper is about
+//! (Figs. 8–11): *which data structure* causes the traffic, *how
+//! sequential* it is, and *how it behaves against the row buffers*.
+//!
+//! Three layers:
+//!
+//! * [`Region`] / [`TraceEvent`] ([`record`]) — every off-chip request
+//!   carries a region tag (edges / vertices / updates / payload)
+//!   stamped by the accelerator models at issue time, plus the text
+//!   trace format for writing and re-reading event streams.
+//! * [`AccessPatternAnalyzer`] ([`analysis`]) — a streaming analyzer
+//!   over issue-order events: per-region request/byte counts,
+//!   sequential-vs-strided-vs-random classification with maximal-run
+//!   lengths, and per-channel reuse-interval and row-locality
+//!   histograms. The same analyzer runs inside a live simulation
+//!   (attach via `SimSpecBuilder::patterns(true)`) or over a trace
+//!   file (`graphmem analyze --trace`), and produces bit-identical
+//!   [`AccessPatternSummary`] values for the same event stream.
+//! * Consumers — [`crate::sim::SimReport::patterns`] carries the
+//!   summary through [`crate::sim::Session`] sweeps, and
+//!   [`crate::report::pattern_tables`] renders the paper-style tables.
+//!
+//! # Example
+//!
+//! Feed a synthetic sequential edge stream through the analyzer:
+//!
+//! ```
+//! use graphmem::dram::{ChannelMode, MemKind, MemTech};
+//! use graphmem::trace::{AccessPatternAnalyzer, Region, TraceEvent};
+//!
+//! let mut analyzer =
+//!     AccessPatternAnalyzer::new(MemTech::Ddr4.spec(1), ChannelMode::InterleaveLine);
+//! for i in 0..64u64 {
+//!     analyzer.observe(&TraceEvent {
+//!         addr: i * 64,
+//!         kind: MemKind::Read,
+//!         region: Region::Edges,
+//!         arrival: i,
+//!         channel: 0,
+//!     });
+//! }
+//! let summary = analyzer.finish();
+//! let edges = summary.region(Region::Edges);
+//! assert_eq!(edges.reads, 64);
+//! assert!(edges.seq_fraction() > 0.9); // 63 of 64 accesses continue the walk
+//! let (hit, _, _) = edges.row_mix();
+//! assert!(hit > 0.9); // one 8 KiB row miss, then row hits
+//! ```
+//!
+//! To get the same summary from a full simulation instead, build the
+//! spec with `.patterns(true)` and read `SimReport::patterns` — see
+//! [`crate::sim::spec::SimSpecBuilder::patterns`].
+
+pub mod analysis;
+pub mod record;
+
+pub use analysis::{
+    AccessPatternAnalyzer, AccessPatternSummary, ChannelSummary, Histogram, RegionSummary,
+};
+pub use record::{
+    parse_events, parse_line, parse_meta, write_events, write_meta, Region, TraceEvent, TraceMeta,
+};

@@ -1,0 +1,342 @@
+//! Structured trace records: the [`Region`] tag and the [`TraceEvent`]
+//! that every off-chip request carries, plus the text trace format.
+//!
+//! Events are stamped at request *issue* time by the accelerator
+//! models (each [`crate::accel::stream::LineStream`] declares what data
+//! structure it reads, and the phase driver maps that onto a region),
+//! so an analysis never has to reverse-engineer address ranges to know
+//! which data structure a request belongs to — the attribution the
+//! paper performs for Figs. 8–11.
+//!
+//! The text format extends the seed's Ramulator-style trace with a
+//! region column:
+//!
+//! ```text
+//! <hex addr> <R|W> <arrival cycle> <channel> <region>
+//! ```
+//!
+//! [`parse_events`] also accepts the old four-column form (region
+//! defaults to [`Region::Payload`]) so pre-existing trace files stay
+//! readable.
+
+use crate::dram::{ChannelMode, MemKind};
+use std::fmt;
+
+/// Which logical data structure a request belongs to — the paper's
+/// traffic-attribution axis (edges vs. vertex values vs. update sets
+/// vs. auxiliary payload such as CSR pointers and shard metadata).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Region {
+    /// Edge / neighbor arrays (sorted edge lists, in-CSR neighbors,
+    /// shard edge blocks).
+    Edges,
+    /// Vertex values: prefetches, random source-value reads, value
+    /// write-backs.
+    Vertices,
+    /// Update sets of the 2-phase systems (scatter writes, apply
+    /// reads).
+    Updates,
+    /// Everything else an accelerator keeps off-chip: CSR row
+    /// pointers, shard descriptors, other metadata.
+    #[default]
+    Payload,
+}
+
+impl Region {
+    /// Number of regions (array-sized per-region counters use this).
+    pub const COUNT: usize = 4;
+
+    /// All regions, in display order.
+    pub const fn all() -> [Region; Region::COUNT] {
+        [Region::Edges, Region::Vertices, Region::Updates, Region::Payload]
+    }
+
+    /// Dense index in `0..Region::COUNT`.
+    pub fn index(self) -> usize {
+        match self {
+            Region::Edges => 0,
+            Region::Vertices => 1,
+            Region::Updates => 2,
+            Region::Payload => 3,
+        }
+    }
+
+    /// Short lowercase name (the trace-file column).
+    pub fn name(self) -> &'static str {
+        match self {
+            Region::Edges => "edges",
+            Region::Vertices => "vertices",
+            Region::Updates => "updates",
+            Region::Payload => "payload",
+        }
+    }
+}
+
+impl fmt::Display for Region {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Region {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "edges" => Ok(Region::Edges),
+            "vertices" => Ok(Region::Vertices),
+            "updates" => Ok(Region::Updates),
+            "payload" => Ok(Region::Payload),
+            other => Err(format!(
+                "unknown region {other:?} (edges|vertices|updates|payload)"
+            )),
+        }
+    }
+}
+
+/// One issued off-chip request, as the analyzers see it: the global
+/// (pre-routing) byte address, direction, region tag, arrival cycle at
+/// the controller, and the channel it routed to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Global byte address (cache-line aligned).
+    pub addr: u64,
+    pub kind: MemKind,
+    pub region: Region,
+    /// Cycle the request became visible to the memory controller.
+    pub arrival: u64,
+    /// Channel the address routed to.
+    pub channel: usize,
+}
+
+/// Memory-organization metadata for a trace file. Written as a `#`
+/// comment header by `graphmem trace` so `graphmem analyze --trace`
+/// can reconstruct the organization without the user re-specifying
+/// `--dram/--channels/--mode`; old traces without a header still
+/// parse (the flags then choose the organization).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceMeta {
+    /// Memory technology name (`MemTech` short name, e.g. `ddr4`).
+    pub dram: String,
+    pub channels: usize,
+    pub mode: ChannelMode,
+}
+
+/// Marker prefix of the metadata header line.
+pub const META_PREFIX: &str = "# graphmem-trace";
+
+/// Write the metadata header (one comment line).
+pub fn write_meta(mut w: impl std::io::Write, meta: &TraceMeta) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "{META_PREFIX} dram={} channels={} mode={}",
+        meta.dram,
+        meta.channels,
+        match meta.mode {
+            ChannelMode::Region => "region",
+            ChannelMode::InterleaveLine => "interleave",
+        }
+    )
+}
+
+/// Extract the metadata header, if the text starts with one (comment
+/// lines before the first event are scanned; event lines end the
+/// search).
+pub fn parse_meta(text: &str) -> Option<TraceMeta> {
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if !line.starts_with('#') {
+            return None; // first data line — no header present
+        }
+        let Some(rest) = line.strip_prefix(META_PREFIX) else {
+            continue; // unrelated comment
+        };
+        let (mut dram, mut channels, mut mode) = (None, None, None);
+        for kv in rest.split_whitespace() {
+            let Some((k, v)) = kv.split_once('=') else {
+                continue;
+            };
+            match k {
+                "dram" => dram = Some(v.to_string()),
+                "channels" => channels = v.parse::<usize>().ok(),
+                "mode" => {
+                    mode = match v {
+                        "region" => Some(ChannelMode::Region),
+                        "interleave" => Some(ChannelMode::InterleaveLine),
+                        _ => None,
+                    }
+                }
+                _ => {}
+            }
+        }
+        return Some(TraceMeta {
+            dram: dram?,
+            channels: channels?,
+            mode: mode?,
+        });
+    }
+    None
+}
+
+/// Write events in the text trace format; returns the line count.
+pub fn write_events(mut w: impl std::io::Write, events: &[TraceEvent]) -> std::io::Result<u64> {
+    for e in events {
+        writeln!(
+            w,
+            "0x{:x} {} {} {} {}",
+            e.addr,
+            if e.kind == MemKind::Write { "W" } else { "R" },
+            e.arrival,
+            e.channel,
+            e.region
+        )?;
+    }
+    Ok(events.len() as u64)
+}
+
+/// Parse one trace line (4- or 5-column form). Empty lines and `#`
+/// comments yield `Ok(None)`.
+pub fn parse_line(line: &str) -> Result<Option<TraceEvent>, String> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let addr_s = parts.next().ok_or("missing address")?;
+    let kind_s = parts.next().ok_or("missing R|W column")?;
+    let arrival_s = parts.next().ok_or("missing arrival column")?;
+    let channel_s = parts.next().ok_or("missing channel column")?;
+    let region_s = parts.next(); // optional 5th column
+    if parts.next().is_some() {
+        return Err(format!("too many columns in {line:?}"));
+    }
+    let addr_digits = addr_s.strip_prefix("0x").unwrap_or(addr_s);
+    let addr = u64::from_str_radix(addr_digits, 16)
+        .map_err(|e| format!("bad address {addr_s:?}: {e}"))?;
+    let kind = match kind_s {
+        "R" | "r" => MemKind::Read,
+        "W" | "w" => MemKind::Write,
+        other => return Err(format!("bad kind {other:?} (expected R or W)")),
+    };
+    let arrival: u64 = arrival_s
+        .parse()
+        .map_err(|e| format!("bad arrival {arrival_s:?}: {e}"))?;
+    let channel: usize = channel_s
+        .parse()
+        .map_err(|e| format!("bad channel {channel_s:?}: {e}"))?;
+    let region = match region_s {
+        Some(s) => s.parse::<Region>()?,
+        None => Region::Payload,
+    };
+    Ok(Some(TraceEvent {
+        addr,
+        kind,
+        region,
+        arrival,
+        channel,
+    }))
+}
+
+/// Parse a whole trace text (as written by [`write_events`] or the
+/// seed's `MemorySystem::write_trace`). Errors carry 1-based line
+/// numbers.
+pub fn parse_events(text: &str) -> Result<Vec<TraceEvent>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(ev) = parse_line(line).map_err(|e| format!("line {}: {e}", i + 1))? {
+            out.push(ev);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(addr: u64, region: Region) -> TraceEvent {
+        TraceEvent {
+            addr,
+            kind: MemKind::Read,
+            region,
+            arrival: 7,
+            channel: 1,
+        }
+    }
+
+    #[test]
+    fn region_round_trips() {
+        for (i, r) in Region::all().into_iter().enumerate() {
+            assert_eq!(r.index(), i);
+            assert_eq!(r.name().parse::<Region>().unwrap(), r);
+            assert_eq!(r.to_string(), r.name());
+        }
+        assert!("heap".parse::<Region>().is_err());
+    }
+
+    #[test]
+    fn text_format_round_trips() {
+        let events = vec![
+            ev(0x40, Region::Edges),
+            TraceEvent {
+                addr: 0x1000,
+                kind: MemKind::Write,
+                region: Region::Updates,
+                arrival: 123,
+                channel: 3,
+            },
+        ];
+        let mut buf = Vec::new();
+        assert_eq!(write_events(&mut buf, &events).unwrap(), 2);
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("0x40 R 7 1 edges"), "{text}");
+        assert!(text.contains("0x1000 W 123 3 updates"), "{text}");
+        assert_eq!(parse_events(&text).unwrap(), events);
+    }
+
+    #[test]
+    fn four_column_form_defaults_to_payload() {
+        let evs = parse_events("0x40 W 5 1\n").unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].region, Region::Payload);
+        assert_eq!(evs[0].kind, MemKind::Write);
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let evs = parse_events("# header\n\n0x0 R 0 0 vertices\n").unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].region, Region::Vertices);
+    }
+
+    #[test]
+    fn meta_header_round_trips() {
+        let meta = TraceMeta {
+            dram: "hbm".to_string(),
+            channels: 8,
+            mode: ChannelMode::Region,
+        };
+        let mut buf = Vec::new();
+        write_meta(&mut buf, &meta).unwrap();
+        write_events(&mut buf, &[ev(0x40, Region::Edges)]).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(parse_meta(&text).unwrap(), meta);
+        // The header is a comment: event parsing is unaffected.
+        assert_eq!(parse_events(&text).unwrap().len(), 1);
+        // Headerless / data-first traces yield no meta.
+        assert_eq!(parse_meta("0x0 R 0 0 edges\n"), None);
+        assert_eq!(parse_meta("# some other comment\n0x0 R 0 0\n"), None);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_events("0x0 R 0 0\n0xzz R 0 0\n").unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
+        assert!(parse_line("0x0 X 0 0").is_err());
+        assert!(parse_line("0x0 R 0 0 edges extra").is_err());
+        assert!(parse_line("0x0 R nope 0").is_err());
+    }
+}

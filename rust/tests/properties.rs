@@ -14,6 +14,7 @@ use graphmem::graph::Csr;
 use graphmem::partition::interval_shard::{stride_permutation, IntervalShardPartitioning};
 use graphmem::partition::{HorizontalPartitioning, VerticalPartitioning};
 use graphmem::sim::run_phase;
+use graphmem::trace::Region;
 use graphmem::util::proptest::check;
 use graphmem::util::rng::Rng;
 
@@ -45,6 +46,7 @@ fn prop_dram_every_request_completes_once() {
                     addr: rng.next_below(span) * 64,
                     kind: if rng.chance(0.3) { MemKind::Write } else { MemKind::Read },
                     tag,
+                    region: Region::all()[(tag % 4) as usize],
                 },
                 rng.next_below(1000),
             );
@@ -66,6 +68,14 @@ fn prop_dram_every_request_completes_once() {
         if s.requests() != n {
             return Err(format!("requests {} != {}", s.requests(), n));
         }
+        let region_total: u64 = Region::all().iter().map(|&r| s.region_requests(r)).sum();
+        if region_total != s.requests() {
+            return Err(format!(
+                "region accounting {} != requests {}",
+                region_total,
+                s.requests()
+            ));
+        }
         Ok(())
     });
 }
@@ -81,6 +91,7 @@ fn prop_dram_latency_at_least_cas_plus_burst() {
                 addr: rng.next_below(1 << 20) * 64,
                 kind: MemKind::Read,
                 tag: 0,
+                region: Region::Edges,
             },
             arrival,
         );
