@@ -19,7 +19,7 @@
 //! values changed in the previous iteration.
 
 use super::config::{AcceleratorConfig, Optimization};
-use super::stream::{element_lines, seq_lines, LineStream, Merge, Phase, StreamClass};
+use super::stream::{LineSource, LineStream, Merge, Phase, StreamClass};
 use super::Accelerator;
 use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
@@ -133,7 +133,10 @@ impl Accelerator for AccuGraph {
                     let ph = Phase::single(
                         StreamClass::Prefetch,
                         MemKind::Read,
-                        seq_lines(self.val_base + interval.start as u64 * 4, interval.len() as u64 * 4),
+                        LineSource::seq(
+                            self.val_base + interval.start as u64 * 4,
+                            interval.len() as u64 * 4,
+                        ),
                         window,
                     );
                     metrics.values_read += interval.len() as u64;
@@ -194,24 +197,23 @@ impl Accelerator for AccuGraph {
                 let s_vals = LineStream::independent(
                     StreamClass::Values,
                     MemKind::Read,
-                    seq_lines(self.val_base, n as u64 * 4),
+                    LineSource::seq(self.val_base, n as u64 * 4),
                 );
                 let s_ptrs = LineStream::independent(
                     StreamClass::Pointers,
                     MemKind::Read,
-                    seq_lines(self.ptr_base[q], (n as u64 + 1) * 4),
+                    LineSource::seq(self.ptr_base[q], (n as u64 + 1) * 4),
                 );
-                let nbr_lines = seq_lines(self.nbr_base[q], m_q as u64 * 4);
-                let num_nbr_lines = nbr_lines.len();
-                let s_nbrs =
-                    LineStream::independent(StreamClass::Edges, MemKind::Read, nbr_lines);
+                let nbr_src = LineSource::seq(self.nbr_base[q], m_q as u64 * 4);
+                let num_nbr_lines = nbr_src.len();
+                let s_nbrs = LineStream::independent(StreamClass::Edges, MemKind::Read, nbr_src);
                 // Writes chained to the neighbor line that produced them.
-                let write_lines = element_lines(self.val_base, 4, write_dsts.iter().copied());
-                // element_lines merges adjacent same-line writes; map the
+                let write_src = LineSource::gather(self.val_base, 4, write_dsts.iter().copied());
+                // The gather merges adjacent same-line writes; map the
                 // *merged* lines back onto neighbor-line fanouts.
                 let mut fanout = vec![0u32; num_nbr_lines];
                 {
-                    let mut li = 0usize; // index into write_lines
+                    let mut li = 0usize; // index into the merged write lines
                     let mut prev_line = u64::MAX;
                     for (w, &pos) in write_nbr_pos.iter().enumerate() {
                         let line = (self.val_base + write_dsts[w] * 4) / CACHE_LINE * CACHE_LINE;
@@ -223,12 +225,12 @@ impl Accelerator for AccuGraph {
                         fanout[nbr_line.min(num_nbr_lines.saturating_sub(1))] += 1;
                         li += 1;
                     }
-                    debug_assert_eq!(li, write_lines.len());
+                    debug_assert_eq!(li, write_src.len());
                 }
                 let s_writes = LineStream::chained(
                     StreamClass::Writes,
                     MemKind::Write,
-                    write_lines,
+                    write_src,
                     2, // neighbors stream index below
                     fanout,
                 );

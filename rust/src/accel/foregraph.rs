@@ -16,7 +16,7 @@
 //! skew.
 
 use super::config::{AcceleratorConfig, Optimization};
-use super::stream::{seq_lines, LineStream, Merge, Phase, StreamClass};
+use super::stream::{LineSource, LineStream, Merge, Phase, StreamClass};
 use super::Accelerator;
 use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
@@ -175,7 +175,7 @@ impl Accelerator for ForeGraph {
                     pre_streams.push(LineStream::independent(
                         StreamClass::Prefetch,
                         MemKind::Read,
-                        seq_lines(self.val_base + iv.start as u64 * 4, iv.len() as u64 * 4),
+                        LineSource::seq(self.val_base + iv.start as u64 * 4, iv.len() as u64 * 4),
                     ));
                     metrics.values_read += iv.len() as u64;
                 }
@@ -232,7 +232,7 @@ impl Accelerator for ForeGraph {
                     streams.push(LineStream::independent(
                         StreamClass::Prefetch,
                         MemKind::Read,
-                        seq_lines(self.val_base + jv.start as u64 * 4, jv.len() as u64 * 4),
+                        LineSource::seq(self.val_base + jv.start as u64 * 4, jv.len() as u64 * 4),
                     ));
                     metrics.values_read += jv.len() as u64;
                     let edge_merge;
@@ -248,7 +248,7 @@ impl Accelerator for ForeGraph {
                         streams.push(LineStream::independent(
                             StreamClass::Edges,
                             MemKind::Read,
-                            seq_lines(self.shard_base[live[0]][j], bytes),
+                            LineSource::seq(self.shard_base[live[0]][j], bytes),
                         ));
                         edge_merge = Merge::Leaf(1);
                     } else {
@@ -260,7 +260,7 @@ impl Accelerator for ForeGraph {
                             streams.push(LineStream::independent(
                                 StreamClass::Edges,
                                 MemKind::Read,
-                                seq_lines(
+                                LineSource::seq(
                                     self.shard_base[i][j],
                                     len * IntervalShardPartitioning::EDGE_BYTES,
                                 ),
@@ -282,7 +282,7 @@ impl Accelerator for ForeGraph {
                     let wb = Phase::single(
                         StreamClass::Writes,
                         MemKind::Write,
-                        seq_lines(self.val_base + jv.start as u64 * 4, jv.len() as u64 * 4),
+                        LineSource::seq(self.val_base + jv.start as u64 * 4, jv.len() as u64 * 4),
                         window,
                     );
                     metrics.values_written += jv.len() as u64;

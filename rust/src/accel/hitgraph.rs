@@ -16,7 +16,7 @@
 //! active-vertex bitmap.
 
 use super::config::{AcceleratorConfig, Optimization};
-use super::stream::{element_lines, seq_lines, LineStream, Merge, Phase, StreamClass};
+use super::stream::{seq_lines, Fanout, LineSource, LineStream, Merge, Phase, StreamClass};
 use super::Accelerator;
 use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
@@ -252,32 +252,28 @@ impl Accelerator for HitGraph {
 
                     // Streams: value prefetch -> edges -> update writes.
                     let base = streams.len();
-                    let pre_lines = seq_lines(self.val_addr(mem, q), iv.len() as u64 * 4);
-                    let npre = pre_lines.len();
+                    let pre_src = LineSource::seq(self.val_addr(mem, q), iv.len() as u64 * 4);
+                    let npre = pre_src.len();
                     streams.push(LineStream::independent(
                         StreamClass::Prefetch,
                         MemKind::Read,
-                        pre_lines,
+                        pre_src,
                     ));
-                    let edge_lines = seq_lines(self.edge_addr(mem, q), m_q as u64 * self.edge_bytes);
-                    let nedge = edge_lines.len();
+                    let edge_src =
+                        LineSource::seq(self.edge_addr(mem, q), m_q as u64 * self.edge_bytes);
+                    let nedge = edge_src.len();
                     // edges chained to the *last* prefetch completion
                     // ("after all requests are produced, the prefetch
                     // step triggers the edge reading step")
-                    let mut pre_fan = vec![0u32; npre];
-                    if npre > 0 {
-                        *pre_fan.last_mut().unwrap() = nedge as u32;
-                    }
-                    let edges_independent = npre == 0;
-                    streams.push(if edges_independent {
-                        LineStream::independent(StreamClass::Edges, MemKind::Read, edge_lines)
+                    streams.push(if npre == 0 {
+                        LineStream::independent(StreamClass::Edges, MemKind::Read, edge_src)
                     } else {
                         LineStream::chained(
                             StreamClass::Edges,
                             MemKind::Read,
-                            edge_lines,
+                            edge_src,
                             base,
-                            pre_fan,
+                            Fanout::AfterLast(nedge as u32),
                         )
                     });
                     // Update writes: routed via crossbar to per-partition
@@ -387,14 +383,17 @@ impl Accelerator for HitGraph {
                     metrics.values_written += write_dsts.len() as u64;
 
                     let base = streams.len();
-                    let pre_lines = seq_lines(self.val_addr(mem, q), iv.len() as u64 * 4);
-                    let npre = pre_lines.len();
+                    let pre_src = LineSource::seq(self.val_addr(mem, q), iv.len() as u64 * 4);
+                    let npre = pre_src.len();
                     streams.push(LineStream::independent(
                         StreamClass::Prefetch,
                         MemKind::Read,
-                        pre_lines,
+                        pre_src,
                     ));
-                    // read the used prefix of each producer's block
+                    // read the used prefix of each producer's block —
+                    // a concatenation of short runs across producer
+                    // blocks, kept explicit (the escape hatch; size is
+                    // O(updates this wave), not O(|E|))
                     let mut upd_lines: Vec<u64> = Vec::new();
                     for q2 in 0..k {
                         let used = queue_seg[q][q2];
@@ -404,10 +403,6 @@ impl Accelerator for HitGraph {
                         }
                     }
                     let nupd = upd_lines.len();
-                    let mut pre_fan = vec![0u32; npre];
-                    if npre > 0 {
-                        *pre_fan.last_mut().unwrap() = nupd as u32;
-                    }
                     streams.push(if npre == 0 {
                         LineStream::independent(StreamClass::Updates, MemKind::Read, upd_lines)
                     } else {
@@ -416,12 +411,12 @@ impl Accelerator for HitGraph {
                             MemKind::Read,
                             upd_lines,
                             base,
-                            pre_fan,
+                            Fanout::AfterLast(nupd as u32),
                         )
                     });
                     // value writes chained to the update read lines
                     let val_addr = self.val_addr(mem, q);
-                    let wlines = element_lines(val_addr, 4, write_dsts.iter().copied());
+                    let wsrc = LineSource::gather(val_addr, 4, write_dsts.iter().copied());
                     let mut wfan = vec![0u32; nupd];
                     {
                         let mut prev = u64::MAX;
@@ -439,7 +434,7 @@ impl Accelerator for HitGraph {
                         streams.push(LineStream::chained(
                             StreamClass::Writes,
                             MemKind::Write,
-                            wlines,
+                            wsrc,
                             base + 1,
                             wfan,
                         ));

@@ -2,14 +2,62 @@
 //! request streams with callbacks, round-robin and priority mergers,
 //! and the *cache line* and *filter* memory access abstractions.
 //!
-//! An accelerator phase is a set of [`LineStream`]s — precomputed
-//! cache-line request sequences — wired together by chaining
-//! (stream B's requests are released by completions of stream A:
-//! the paper's "callbacks") and drained through a merge tree that
-//! mirrors the accelerator's on-chip arbiters.
+//! An accelerator phase is a set of [`LineStream`]s — cache-line
+//! request sequences — wired together by chaining (stream B's requests
+//! are released by completions of stream A: the paper's "callbacks")
+//! and drained through a merge tree that mirrors the accelerator's
+//! on-chip arbiters.
+//!
+//! # Zero-materialization sources
+//!
+//! A stream's addresses are described by a [`LineSource`], not stored:
+//! the i-th line address is *computed* on demand. A sequential scan
+//! over a gigabyte of edges is two `u64`s ([`LineSource::Seq`]), not a
+//! 16-million-entry `Vec` — per-run stream memory is O(partitions +
+//! irregular gathers) instead of O(|E|), and the simulator's working
+//! set stays O(window) for the sequential traffic that dominates
+//! graph accelerators (the whole point of the paper's cache-line
+//! abstraction). Only genuinely irregular traffic pays for storage:
+//! [`LineSource::Gather`] keeps one `u32` index per emitted line, and
+//! [`LineSource::Explicit`] remains as the escape hatch (and as the
+//! reference implementation the equivalence tests compare against —
+//! see [`Phase::materialized`]).
+//!
+//! Chained-release fan-outs get the same treatment via [`Fanout`]:
+//! the ubiquitous "everything releases when the parent finishes"
+//! pattern is [`Fanout::AfterLast`] (one integer), uniform per-parent
+//! releases are [`Fanout::Uniform`], and only irregular callbacks
+//! store a per-parent vector.
+//!
+//! ```
+//! use graphmem::accel::stream::{LineSource, LineStream, Merge, Phase, StreamClass};
+//! use graphmem::dram::MemKind;
+//!
+//! // Gather: vertex-value lines for an irregular index set, merging
+//! // *adjacent* same-line accesses exactly like the materialized
+//! // `element_lines` helper (a line revisited later is re-requested).
+//! let src = LineSource::gather(0, 4, [0u64, 1, 2, 100, 0]);
+//! assert_eq!(src.len(), 3); // lines 0x0, 0x180, 0x0
+//! assert_eq!(src.line(1), 0x180);
+//! assert_eq!(src.heap_bytes(), 12); // three u32 indices
+//!
+//! // A sequential scan costs no heap at all, however large.
+//! let seq = LineSource::seq(0, 1 << 30);
+//! assert_eq!(seq.len(), (1 << 30) / 64);
+//! assert_eq!(seq.heap_bytes(), 0);
+//!
+//! let phase = Phase {
+//!     streams: vec![LineStream::independent(StreamClass::Values, MemKind::Read, src)],
+//!     merge: Merge::Leaf(0),
+//!     window: 8,
+//! };
+//! assert_eq!(phase.total_requests(), 3);
+//! assert_eq!(phase.stream_bytes(), 12);
+//! ```
 
 use crate::dram::{MemKind, CACHE_LINE};
 use crate::trace::Region;
+use std::sync::Arc;
 
 /// Identifies what a stream models. The phase driver maps it onto a
 /// [`Region`] tag stamped on every issued request, which is how the
@@ -44,32 +92,234 @@ impl StreamClass {
     }
 }
 
-/// A precomputed sequence of cache-line requests.
+/// A cache-line address sequence in descriptor form: `line(i)` yields
+/// the i-th 64 B-aligned address on demand, nothing is materialized.
+///
+/// All variants index in O(1); [`LineSource::heap_bytes`] is the
+/// stream-memory accounting the perf benches report.
+#[derive(Clone, Debug)]
+pub enum LineSource {
+    /// Lines covering the byte range `[base, base + bytes)` — a
+    /// sequential array scan through the cache-line abstraction
+    /// (the descriptor form of [`seq_lines`]).
+    Seq { base: u64, bytes: u64 },
+    /// `count` lines at `base + i * stride` (each mapped to its
+    /// cache line). `Seq` with stride = [`CACHE_LINE`] is the common
+    /// case; this generalizes to bank-walking and row-walking probes.
+    Strided { base: u64, stride: u64, count: u64 },
+    /// Element-indexed accesses `base + indices[i] * elem_bytes`, one
+    /// kept index per emitted line (adjacent same-line accesses were
+    /// merged at construction — the descriptor form of
+    /// [`element_lines`]). `Arc` so cloning a phase never copies the
+    /// index set.
+    Gather {
+        indices: Arc<[u32]>,
+        elem_bytes: u64,
+        base: u64,
+    },
+    /// Escape hatch: explicitly materialized line addresses. Used for
+    /// genuinely irregular cross-structure traffic and by
+    /// [`Phase::materialized`] as the reference path the equivalence
+    /// suite compares descriptors against.
+    Explicit(Vec<u64>),
+}
+
+impl LineSource {
+    /// Sequential scan of `[base, base + bytes)`.
+    pub fn seq(base: u64, bytes: u64) -> LineSource {
+        LineSource::Seq { base, bytes }
+    }
+
+    /// `count` accesses at `base + i * stride`.
+    pub fn strided(base: u64, stride: u64, count: u64) -> LineSource {
+        LineSource::Strided { base, stride, count }
+    }
+
+    /// Element-indexed gather `base + idx * elem_bytes`, merging
+    /// *adjacent* requests to the same line (the cache-line
+    /// abstraction merges consecutive duplicates only — a repeated
+    /// line after other traffic is requested again). Keeps the first
+    /// index of every merged run, so `line(i)` reproduces exactly the
+    /// sequence [`element_lines`] would materialize.
+    pub fn gather(
+        base: u64,
+        elem_bytes: u64,
+        indices: impl IntoIterator<Item = u64>,
+    ) -> LineSource {
+        let mut kept: Vec<u32> = Vec::new();
+        let mut last_line = u64::MAX;
+        for idx in indices {
+            let line = (base + idx * elem_bytes) / CACHE_LINE * CACHE_LINE;
+            if line != last_line {
+                last_line = line;
+                kept.push(u32::try_from(idx).expect("gather index exceeds u32"));
+            }
+        }
+        LineSource::Gather {
+            indices: kept.into(),
+            elem_bytes,
+            base,
+        }
+    }
+
+    /// Number of line requests this source yields.
+    pub fn len(&self) -> usize {
+        match self {
+            LineSource::Seq { base, bytes } => {
+                if *bytes == 0 {
+                    0
+                } else {
+                    let first = base / CACHE_LINE;
+                    let last = (base + bytes - 1) / CACHE_LINE;
+                    (last - first + 1) as usize
+                }
+            }
+            LineSource::Strided { count, .. } => *count as usize,
+            LineSource::Gather { indices, .. } => indices.len(),
+            LineSource::Explicit(lines) => lines.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The i-th line address (64 B aligned). O(1) for every variant.
+    #[inline]
+    pub fn line(&self, i: usize) -> u64 {
+        match self {
+            LineSource::Seq { base, .. } => (base / CACHE_LINE + i as u64) * CACHE_LINE,
+            LineSource::Strided { base, stride, .. } => {
+                (base + i as u64 * stride) / CACHE_LINE * CACHE_LINE
+            }
+            LineSource::Gather {
+                indices,
+                elem_bytes,
+                base,
+            } => (base + indices[i] as u64 * elem_bytes) / CACHE_LINE * CACHE_LINE,
+            LineSource::Explicit(lines) => lines[i],
+        }
+    }
+
+    /// Heap bytes this descriptor holds onto (the stream-memory
+    /// accounting): 0 for the closed-form variants, 4 B per kept
+    /// gather index, 8 B per explicit line.
+    pub fn heap_bytes(&self) -> u64 {
+        match self {
+            LineSource::Seq { .. } | LineSource::Strided { .. } => 0,
+            LineSource::Gather { indices, .. } => indices.len() as u64 * 4,
+            LineSource::Explicit(lines) => lines.len() as u64 * 8,
+        }
+    }
+
+    /// Materialize every line address (test/reference path).
+    pub fn materialize(&self) -> Vec<u64> {
+        (0..self.len()).map(|i| self.line(i)).collect()
+    }
+}
+
+impl From<Vec<u64>> for LineSource {
+    fn from(lines: Vec<u64>) -> LineSource {
+        LineSource::Explicit(lines)
+    }
+}
+
+/// Compressed chained-release fan-out: how many child requests each
+/// parent completion releases.
+#[derive(Clone, Debug)]
+pub enum Fanout {
+    /// Every parent completion releases `k` requests.
+    Uniform(u32),
+    /// The *last* parent completion releases all `n` requests — the
+    /// barrier pattern ("after all requests are produced, the prefetch
+    /// step triggers the edge reading step"). O(1) instead of a
+    /// zeros-then-n vector.
+    AfterLast(u32),
+    /// Irregular: `v[i]` requests release on parent completion `i`;
+    /// `v.len()` must equal the parent stream's length.
+    PerParent(Vec<u32>),
+}
+
+impl Fanout {
+    /// Requests released by parent completion `i` (of `parent_len`).
+    #[inline]
+    pub fn released_by(&self, i: usize, parent_len: usize) -> u32 {
+        match self {
+            Fanout::Uniform(k) => *k,
+            Fanout::AfterLast(n) => {
+                if i + 1 == parent_len {
+                    *n
+                } else {
+                    0
+                }
+            }
+            Fanout::PerParent(v) => v[i],
+        }
+    }
+
+    /// Total requests released across all `parent_len` completions.
+    pub fn total(&self, parent_len: usize) -> u64 {
+        match self {
+            Fanout::Uniform(k) => *k as u64 * parent_len as u64,
+            Fanout::AfterLast(n) => {
+                if parent_len == 0 {
+                    0
+                } else {
+                    *n as u64
+                }
+            }
+            Fanout::PerParent(v) => v.iter().map(|&f| f as u64).sum(),
+        }
+    }
+
+    /// Heap bytes held by this fan-out representation.
+    pub fn heap_bytes(&self) -> u64 {
+        match self {
+            Fanout::Uniform(_) | Fanout::AfterLast(_) => 0,
+            Fanout::PerParent(v) => v.len() as u64 * 4,
+        }
+    }
+}
+
+impl From<Vec<u32>> for Fanout {
+    fn from(v: Vec<u32>) -> Fanout {
+        Fanout::PerParent(v)
+    }
+}
+
+/// A cache-line request stream in descriptor form.
 #[derive(Clone, Debug)]
 pub struct LineStream {
-    /// 64 B-aligned line addresses, in program order.
-    pub lines: Vec<u64>,
+    /// Where the 64 B-aligned line addresses come from, in program
+    /// order (computed on demand — see [`LineSource`]).
+    pub source: LineSource,
     pub kind: MemKind,
     pub class: StreamClass,
     /// `Some(parent)`: requests are released by the parent stream's
-    /// completions — `fanout[i]` requests become available when the
-    /// parent's `i`-th request completes (the callback mechanism).
-    /// `None`: all requests available at phase start.
+    /// completions — [`Fanout::released_by`]`(i)` requests become
+    /// available when the parent's `i`-th request completes (the
+    /// callback mechanism). `None`: all requests available at phase
+    /// start.
     pub chained_to: Option<usize>,
-    /// Only for chained streams; `fanout.len()` must equal the parent
-    /// stream's `lines.len()` and `sum(fanout) == lines.len()`.
-    pub fanout: Vec<u32>,
+    /// Release schedule; only meaningful for chained streams, where
+    /// its total over the parent's length must equal this stream's
+    /// length.
+    pub fanout: Fanout,
 }
 
 impl LineStream {
     /// Independent (unchained) stream.
-    pub fn independent(class: StreamClass, kind: MemKind, lines: Vec<u64>) -> Self {
+    pub fn independent(
+        class: StreamClass,
+        kind: MemKind,
+        source: impl Into<LineSource>,
+    ) -> Self {
         LineStream {
-            lines,
+            source: source.into(),
             kind,
             class,
             chained_to: None,
-            fanout: Vec::new(),
+            fanout: Fanout::Uniform(0),
         }
     }
 
@@ -77,13 +327,30 @@ impl LineStream {
     pub fn chained(
         class: StreamClass,
         kind: MemKind,
-        lines: Vec<u64>,
+        source: impl Into<LineSource>,
         parent: usize,
-        fanout: Vec<u32>,
+        fanout: impl Into<Fanout>,
     ) -> Self {
-        debug_assert_eq!(fanout.iter().map(|&f| f as usize).sum::<usize>(), lines.len());
+        let source = source.into();
+        let fanout = fanout.into();
+        match &fanout {
+            Fanout::PerParent(v) => debug_assert_eq!(
+                v.iter().map(|&f| f as usize).sum::<usize>(),
+                source.len(),
+                "per-parent fanout must release exactly the stream"
+            ),
+            Fanout::AfterLast(n) => debug_assert_eq!(
+                *n as usize,
+                source.len(),
+                "AfterLast fanout must release exactly the stream"
+            ),
+            // Uniform totals depend on the parent's length, which is
+            // unknown here; `run_phase` debug-asserts every chained
+            // stream's fanout total against its length at phase start.
+            Fanout::Uniform(_) => {}
+        }
         LineStream {
-            lines,
+            source,
             kind,
             class,
             chained_to: Some(parent),
@@ -91,8 +358,24 @@ impl LineStream {
         }
     }
 
+    /// Number of line requests in the stream.
+    pub fn len(&self) -> usize {
+        self.source.len()
+    }
+
     pub fn is_empty(&self) -> bool {
-        self.lines.is_empty()
+        self.source.is_empty()
+    }
+
+    /// The i-th line address.
+    #[inline]
+    pub fn line(&self, i: usize) -> u64 {
+        self.source.line(i)
+    }
+
+    /// Heap bytes held by this stream's descriptors (source + fanout).
+    pub fn heap_bytes(&self) -> u64 {
+        self.source.heap_bytes() + self.fanout.heap_bytes()
     }
 }
 
@@ -133,52 +416,89 @@ pub struct Phase {
 impl Phase {
     /// Single independent sequential stream — the most common phase
     /// shape (prefetches, write-backs).
-    pub fn single(class: StreamClass, kind: MemKind, lines: Vec<u64>, window: usize) -> Phase {
+    pub fn single(
+        class: StreamClass,
+        kind: MemKind,
+        source: impl Into<LineSource>,
+        window: usize,
+    ) -> Phase {
         Phase {
-            streams: vec![LineStream::independent(class, kind, lines)],
+            streams: vec![LineStream::independent(class, kind, source)],
             merge: Merge::Leaf(0),
             window,
         }
     }
 
     pub fn total_requests(&self) -> usize {
-        self.streams.iter().map(|s| s.lines.len()).sum()
+        self.streams.iter().map(|s| s.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.streams.iter().all(|s| s.is_empty())
     }
+
+    /// Heap bytes held by all stream descriptors of this phase — the
+    /// peak address-stream memory a run of this phase needs. Zero for
+    /// purely sequential phases regardless of how many lines they
+    /// touch.
+    pub fn stream_bytes(&self) -> u64 {
+        self.streams.iter().map(|s| s.heap_bytes()).sum()
+    }
+
+    /// The same phase with every source materialized to
+    /// [`LineSource::Explicit`] and every fan-out expanded to
+    /// [`Fanout::PerParent`] — the reference path the equivalence
+    /// suite runs against descriptor execution (results must be
+    /// bit-identical).
+    pub fn materialized(&self) -> Phase {
+        let streams = self
+            .streams
+            .iter()
+            .map(|s| LineStream {
+                source: LineSource::Explicit(s.source.materialize()),
+                kind: s.kind,
+                class: s.class,
+                chained_to: s.chained_to,
+                fanout: match s.chained_to {
+                    None => Fanout::Uniform(0),
+                    Some(p) => {
+                        let plen = self.streams[p].len();
+                        Fanout::PerParent(
+                            (0..plen).map(|i| s.fanout.released_by(i, plen)).collect(),
+                        )
+                    }
+                },
+            })
+            .collect();
+        Phase {
+            streams,
+            merge: self.merge.clone(),
+            window: self.window,
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Cache-line access abstraction (§3.2.1): merge adjacent requests to
-// the same cache line into one.
+// the same cache line into one. Materializing helpers — kept as the
+// reference implementations of `LineSource::Seq` / `LineSource::Gather`
+// and for tests that want literal address vectors.
 // ---------------------------------------------------------------------------
 
 /// Lines covering the byte range `[base, base + bytes)` — a sequential
-/// array scan through the cache-line abstraction.
+/// array scan through the cache-line abstraction. Materialized form of
+/// [`LineSource::seq`].
 pub fn seq_lines(base: u64, bytes: u64) -> Vec<u64> {
-    if bytes == 0 {
-        return Vec::new();
-    }
-    let first = base / CACHE_LINE;
-    let last = (base + bytes - 1) / CACHE_LINE;
-    (first..=last).map(|l| l * CACHE_LINE).collect()
+    LineSource::seq(base, bytes).materialize()
 }
 
 /// Lines for element-indexed accesses `base + idx * elem_bytes`,
 /// merging *adjacent* requests to the same line (the abstraction
 /// merges consecutive duplicates only — a repeated line after other
-/// traffic is requested again).
+/// traffic is requested again). Materialized form of
+/// [`LineSource::gather`].
 pub fn element_lines(base: u64, elem_bytes: u64, indices: impl IntoIterator<Item = u64>) -> Vec<u64> {
-    let mut out: Vec<u64> = Vec::new();
-    for idx in indices {
-        let line = (base + idx * elem_bytes) / CACHE_LINE * CACHE_LINE;
-        if out.last() != Some(&line) {
-            out.push(line);
-        }
-    }
-    out
+    LineSource::gather(base, elem_bytes, indices).materialize()
 }
 
 /// Number of lines a sequential scan of `bytes` bytes touches.
@@ -200,6 +520,16 @@ mod tests {
     }
 
     #[test]
+    fn seq_source_indexes_like_materialized() {
+        for (base, bytes) in [(0u64, 64u64), (0, 65), (60, 8), (128, 0), (100, 1), (4096, 777)] {
+            let src = LineSource::seq(base, bytes);
+            assert_eq!(src.materialize(), seq_lines(base, bytes), "{base}/{bytes}");
+            assert_eq!(src.len(), seq_lines(base, bytes).len());
+            assert_eq!(src.heap_bytes(), 0);
+        }
+    }
+
+    #[test]
     fn element_lines_merge_adjacent_only() {
         // 4-byte elements, indices 0,1,2 -> same line merged
         assert_eq!(element_lines(0, 4, [0, 1, 2]), vec![0]);
@@ -207,6 +537,44 @@ mod tests {
         assert_eq!(element_lines(0, 4, [0, 16, 0]), vec![0, 64, 0]);
         // empty
         assert_eq!(element_lines(0, 4, []), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn gather_source_indexes_like_materialized() {
+        let idx = [0u64, 1, 2, 16, 0, 5, 1000, 1001];
+        let src = LineSource::gather(128, 4, idx.iter().copied());
+        assert_eq!(src.materialize(), element_lines(128, 4, idx.iter().copied()));
+        assert_eq!(src.heap_bytes(), src.len() as u64 * 4);
+    }
+
+    #[test]
+    fn strided_source_walks_stride() {
+        let src = LineSource::strided(0, 8192, 4);
+        assert_eq!(src.len(), 4);
+        assert_eq!(src.materialize(), vec![0, 8192, 16384, 24576]);
+        assert_eq!(src.heap_bytes(), 0);
+        // unaligned strides map onto their cache line
+        let off = LineSource::strided(32, 100, 3);
+        assert_eq!(off.materialize(), vec![0, 128, 192]);
+    }
+
+    #[test]
+    fn fanout_representations_agree() {
+        let plen = 5;
+        let uni = Fanout::Uniform(2);
+        assert_eq!(uni.total(plen), 10);
+        assert_eq!(uni.released_by(3, plen), 2);
+        let last = Fanout::AfterLast(7);
+        assert_eq!(last.total(plen), 7);
+        assert_eq!(
+            (0..plen).map(|i| last.released_by(i, plen)).collect::<Vec<_>>(),
+            vec![0, 0, 0, 0, 7]
+        );
+        let per = Fanout::PerParent(vec![1, 0, 3]);
+        assert_eq!(per.total(3), 4);
+        assert_eq!(per.released_by(2, 3), 3);
+        assert_eq!(uni.heap_bytes() + last.heap_bytes(), 0);
+        assert_eq!(per.heap_bytes(), 12);
     }
 
     #[test]
@@ -219,17 +587,70 @@ mod tests {
             0,
             vec![2, 0, 2],
         );
-        assert_eq!(s.fanout.len(), parent_completions);
-        assert_eq!(s.fanout.iter().sum::<u32>(), 4);
+        match &s.fanout {
+            Fanout::PerParent(v) => {
+                assert_eq!(v.len(), parent_completions);
+                assert_eq!(v.iter().sum::<u32>(), 4);
+            }
+            other => panic!("expected PerParent, got {other:?}"),
+        }
     }
 
     #[test]
     fn phase_helpers() {
-        let p = Phase::single(StreamClass::Prefetch, MemKind::Read, seq_lines(0, 4096), 16);
+        let p = Phase::single(StreamClass::Prefetch, MemKind::Read, LineSource::seq(0, 4096), 16);
         assert_eq!(p.total_requests(), 64);
         assert!(!p.is_empty());
-        let empty = Phase::single(StreamClass::Prefetch, MemKind::Read, vec![], 16);
+        assert_eq!(p.stream_bytes(), 0);
+        let empty = Phase::single(StreamClass::Prefetch, MemKind::Read, Vec::<u64>::new(), 16);
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn stream_bytes_independent_of_sequential_length() {
+        // The acceptance property: a sequential-only phase holds O(1)
+        // descriptor memory no matter how many edges it scans.
+        let small =
+            Phase::single(StreamClass::Edges, MemKind::Read, LineSource::seq(0, 1 << 12), 32);
+        let huge =
+            Phase::single(StreamClass::Edges, MemKind::Read, LineSource::seq(0, 1 << 38), 32);
+        assert_eq!(small.stream_bytes(), 0);
+        assert_eq!(huge.stream_bytes(), 0);
+        assert_eq!(huge.total_requests(), (1usize << 38) / 64);
+    }
+
+    #[test]
+    fn materialized_phase_matches_descriptors() {
+        let parent = LineStream::independent(
+            StreamClass::Edges,
+            MemKind::Read,
+            LineSource::seq(0, 4 * 64),
+        );
+        let child = LineStream::chained(
+            StreamClass::Writes,
+            MemKind::Write,
+            LineSource::gather(1 << 20, 4, [0u64, 16, 32, 48]),
+            0,
+            Fanout::AfterLast(4),
+        );
+        let phase = Phase {
+            streams: vec![parent, child],
+            merge: Merge::prio([1, 0]),
+            window: 8,
+        };
+        let m = phase.materialized();
+        for (a, b) in phase.streams.iter().zip(&m.streams) {
+            assert_eq!(a.source.materialize(), b.source.materialize());
+            assert_eq!(a.len(), b.len());
+            let plen = phase.streams[0].len();
+            for i in 0..plen {
+                assert_eq!(
+                    a.fanout.released_by(i, plen),
+                    b.fanout.released_by(i, plen)
+                );
+            }
+        }
+        assert!(m.stream_bytes() >= phase.stream_bytes());
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! scheduling by predicted execution time.
 
 use super::config::{AcceleratorConfig, Optimization};
-use super::stream::{element_lines, seq_lines, LineStream, Merge, Phase, StreamClass};
+use super::stream::{Fanout, LineSource, LineStream, Merge, Phase, StreamClass};
 use super::Accelerator;
 use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
@@ -150,40 +150,42 @@ impl Accelerator for ThunderGp {
 
                     let base = streams.len();
                     // 1) prefetch destination interval values
-                    let pre_lines = seq_lines(
+                    let pre_src = LineSource::seq(
                         region + self.val_base + iv.start as u64 * 4,
                         iv.len() as u64 * 4,
                     );
-                    let npre = pre_lines.len();
+                    let npre = pre_src.len();
                     streams.push(LineStream::independent(
                         StreamClass::Prefetch,
                         MemKind::Read,
-                        pre_lines,
+                        pre_src,
                     ));
                     // 2) chunk edges, chained to the prefetch end
-                    let edge_lines = seq_lines(
+                    let edge_src = LineSource::seq(
                         region + self.edge_base[q][chunk_idx],
                         chunk.len() as u64 * self.edge_bytes,
                     );
-                    let nedge = edge_lines.len();
-                    let mut pre_fan = vec![0u32; npre];
-                    if npre > 0 {
-                        *pre_fan.last_mut().unwrap() = nedge as u32;
-                    }
+                    let nedge = edge_src.len();
                     streams.push(if npre == 0 {
-                        LineStream::independent(StreamClass::Edges, MemKind::Read, edge_lines)
+                        LineStream::independent(StreamClass::Edges, MemKind::Read, edge_src)
                     } else {
-                        LineStream::chained(StreamClass::Edges, MemKind::Read, edge_lines, base, pre_fan)
+                        LineStream::chained(
+                            StreamClass::Edges,
+                            MemKind::Read,
+                            edge_src,
+                            base,
+                            Fanout::AfterLast(nedge as u32),
+                        )
                     });
                     // 3) source value loads: semi-sequential (sorted by
                     // src); the vertex value buffer filters duplicates.
-                    let src_lines = element_lines(
+                    let src_src = LineSource::gather(
                         region + self.val_base,
                         4,
                         chunk.iter().map(|e| e.src as u64),
                     );
-                    metrics.values_read += src_lines.len() as u64 * (CACHE_LINE / 4);
-                    let nsrc = src_lines.len();
+                    metrics.values_read += src_src.len() as u64 * (CACHE_LINE / 4);
+                    let nsrc = src_src.len();
                     // distribute src-line releases over edge lines
                     let mut efan = vec![0u32; nedge];
                     if nedge > 0 {
@@ -203,12 +205,12 @@ impl Accelerator for ThunderGp {
                         debug_assert_eq!(li, nsrc);
                     }
                     streams.push(if nedge == 0 {
-                        LineStream::independent(StreamClass::Values, MemKind::Read, src_lines)
+                        LineStream::independent(StreamClass::Values, MemKind::Read, src_src)
                     } else {
                         LineStream::chained(
                             StreamClass::Values,
                             MemKind::Read,
-                            src_lines,
+                            src_src,
                             base + 1,
                             efan,
                         )
@@ -216,8 +218,8 @@ impl Accelerator for ThunderGp {
                     // 4) update write-back: n_q values sequential, after
                     // edge reading finishes — chain to last src load (or
                     // edge line when no src loads).
-                    let upd_lines =
-                        seq_lines(region + self.upd_base[q], iv.len() as u64 * 4);
+                    let upd_src = LineSource::seq(region + self.upd_base[q], iv.len() as u64 * 4);
+                    let nupd = upd_src.len();
                     metrics.updates_rw += iv.len() as u64;
                     let (parent, plen) = if nsrc > 0 {
                         (base + 2, nsrc)
@@ -225,21 +227,19 @@ impl Accelerator for ThunderGp {
                         (base + 1, nedge)
                     };
                     if plen > 0 {
-                        let mut fan = vec![0u32; plen];
-                        *fan.last_mut().unwrap() = upd_lines.len() as u32;
                         streams.push(LineStream::chained(
                             StreamClass::Updates,
                             MemKind::Write,
-                            upd_lines,
+                            upd_src,
                             parent,
-                            fan,
+                            Fanout::AfterLast(nupd as u32),
                         ));
                         pe_trees.push(Merge::prio([base + 3, base + 2, base + 1, base]));
                     } else {
                         streams.push(LineStream::independent(
                             StreamClass::Updates,
                             MemKind::Write,
-                            upd_lines,
+                            upd_src,
                         ));
                         pe_trees.push(Merge::prio([base + 3, base]));
                     }
@@ -289,29 +289,28 @@ impl Accelerator for ThunderGp {
                     streams.push(LineStream::independent(
                         StreamClass::Updates,
                         MemKind::Read,
-                        seq_lines(region + self.upd_base[q], iv.len() as u64 * 4),
+                        LineSource::seq(region + self.upd_base[q], iv.len() as u64 * 4),
                     ));
                 }
-                let nread = seq_lines(self.upd_base[q], iv.len() as u64 * 4).len();
+                let nread = LineSource::seq(self.upd_base[q], iv.len() as u64 * 4).len();
                 let mut trees: Vec<Merge> = reads.iter().map(|&i| Merge::Leaf(i)).collect();
                 for pe in 0..channels {
                     let region = mem.region_base(pe);
-                    let wlines = seq_lines(
+                    let wsrc = LineSource::seq(
                         region + self.val_base + iv.start as u64 * 4,
                         iv.len() as u64 * 4,
                     );
                     // barrier: writes released by the end of this
                     // channel's update read stream
-                    let mut fan = vec![0u32; nread];
                     if nread > 0 {
-                        *fan.last_mut().unwrap() = wlines.len() as u32;
+                        let nw = wsrc.len();
                         let idx = streams.len();
                         streams.push(LineStream::chained(
                             StreamClass::Writes,
                             MemKind::Write,
-                            wlines,
+                            wsrc,
                             reads[pe],
-                            fan,
+                            Fanout::AfterLast(nw as u32),
                         ));
                         trees.push(Merge::Leaf(idx));
                     }

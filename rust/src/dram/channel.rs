@@ -86,6 +86,10 @@ pub struct Channel {
     last_write_data_end: u64,
     next_refresh: u64,
     queue: Vec<Queued>,
+    /// Cached minimum arrival over `queue` (`None` when empty).
+    /// Maintained incrementally: an enqueue can only lower it (O(1));
+    /// servicing removes a request, forcing one window-bounded rescan.
+    earliest: Option<u64>,
     seq: u64,
     pub stats: DramStats,
 }
@@ -118,6 +122,7 @@ impl Channel {
             last_write_data_end: 0,
             next_refresh: spec.speed.trefi,
             queue: Vec::with_capacity(64),
+            earliest: None,
             seq: 0,
             stats: DramStats::default(),
         }
@@ -146,16 +151,20 @@ impl Channel {
             arrival,
             seq: self.seq,
         });
+        self.earliest = Some(match self.earliest {
+            Some(e) => e.min(arrival),
+            None => arrival,
+        });
         self.seq += 1;
     }
 
     /// Earliest arrival among queued requests (scheduling horizon).
-    /// One linear scan — the queue is window-bounded (tens of
-    /// entries), and measurements showed incremental caching loses to
-    /// the scan (the serviced request is usually the minimum, forcing
-    /// a recompute almost every time).
-    pub fn earliest_arrival(&mut self) -> Option<u64> {
-        self.queue.iter().map(|q| q.arrival).min()
+    /// O(1): the minimum is cached — enqueues lower it in place, and
+    /// [`Channel::service_one`] rescans the (window-bounded) queue
+    /// only after it removes a request. The [`super::MemorySystem`]
+    /// completion heap keys on this value.
+    pub fn earliest_arrival(&self) -> Option<u64> {
+        self.earliest
     }
 
     /// FR-FCFS pick: prefer the oldest *row-hit* request among those
@@ -259,6 +268,7 @@ impl Channel {
         let horizon = self.earliest_arrival()?;
         let idx = self.pick(horizon)?;
         let q = self.queue.swap_remove(idx);
+        self.earliest = self.queue.iter().map(|r| r.arrival).min();
         let sp = self.spec.speed;
         let d = q.decoded;
         let t0 = q.arrival;

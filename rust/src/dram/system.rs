@@ -12,6 +12,8 @@ use super::channel::{Channel, Serviced};
 use super::spec::{DramPolicy, DramSpec};
 use super::stats::DramStats;
 use crate::trace::{AccessPatternAnalyzer, AccessPatternSummary, Region, TraceEvent};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Read or write.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -77,6 +79,13 @@ pub struct MemorySystem {
     mode: ChannelMode,
     policy: DramPolicy,
     channels: Vec<Channel>,
+    /// Event queue over per-channel earliest arrivals, with lazy
+    /// invalidation: an entry `(a, ch)` is live iff channel `ch`'s
+    /// cached earliest arrival is still exactly `a`. Invariant: every
+    /// non-empty channel has a live entry, so a pop-until-live loop
+    /// finds the global minimum in O(log C) instead of scanning every
+    /// channel queue per serviced request.
+    arrivals: BinaryHeap<Reverse<(u64, usize)>>,
     trace: Option<Vec<TraceEvent>>,
     analyzer: Option<AccessPatternAnalyzer>,
 }
@@ -100,6 +109,7 @@ impl MemorySystem {
             channels: (0..spec.channels)
                 .map(|_| Channel::with_policy(spec.with_channels(1), policy))
                 .collect(),
+            arrivals: BinaryHeap::new(),
             trace: None,
             analyzer: None,
         }
@@ -199,7 +209,15 @@ impl MemorySystem {
                 .local_addr(req.addr, self.channels.len(), self.spec.channel_bytes),
             ..req
         };
+        let before = self.channels[ch].earliest_arrival();
         self.channels[ch].enqueue(local, arrival);
+        let after = self.channels[ch].earliest_arrival();
+        // A new heap entry is needed only when the channel's minimum
+        // actually moved (first request, or an earlier arrival): the
+        // previous live entry covers every other case.
+        if after != before {
+            self.arrivals.push(Reverse((arrival, ch)));
+        }
     }
 
     /// Total queued requests.
@@ -212,12 +230,60 @@ impl MemorySystem {
         self.channels[ch].pending()
     }
 
+    /// Pop stale heap entries until the top is live; returns the
+    /// channel holding the globally-earliest arrival (ties broken by
+    /// channel index, matching a linear scan) without removing its
+    /// entry. `None` when every channel is idle.
+    fn earliest_channel(&mut self) -> Option<(u64, usize)> {
+        while let Some(&Reverse((a, ch))) = self.arrivals.peek() {
+            if self.channels[ch].earliest_arrival() == Some(a) {
+                return Some((a, ch));
+            }
+            self.arrivals.pop(); // stale: the channel moved on
+        }
+        None
+    }
+
+    /// Service the live entry found by [`MemorySystem::earliest_channel`].
+    fn service_channel(&mut self, ch: usize) -> ReqToken {
+        self.arrivals.pop();
+        let Serviced {
+            tag,
+            kind,
+            done_at,
+            outcome: _,
+        } = self.channels[ch]
+            .service_one()
+            .expect("live heap entry implies a non-empty channel");
+        if let Some(next) = self.channels[ch].earliest_arrival() {
+            self.arrivals.push(Reverse((next, ch)));
+        }
+        ReqToken {
+            tag,
+            kind,
+            channel: ch,
+            done_at,
+        }
+    }
+
     /// Service one request from the channel whose oldest work is
     /// earliest (global-time approximation); returns its completion.
+    /// O(log channels) via the incrementally-maintained arrival heap.
     pub fn service_one(&mut self) -> Option<ReqToken> {
+        let (_, ch) = self.earliest_channel()?;
+        Some(self.service_channel(ch))
+    }
+
+    /// Reference completion selection: a linear scan over every
+    /// channel queue per request — the pre-heap implementation, kept
+    /// for equivalence tests and as the `perf_hotpath` baseline
+    /// comparison. Selects exactly the request
+    /// [`MemorySystem::service_one`] would (min arrival, ties by
+    /// channel index); the two can be freely interleaved.
+    pub fn service_one_scan(&mut self) -> Option<ReqToken> {
         let ch = self
             .channels
-            .iter_mut()
+            .iter()
             .enumerate()
             .filter_map(|(i, c)| c.earliest_arrival().map(|a| (a, i)))
             .min()
@@ -228,6 +294,11 @@ impl MemorySystem {
             done_at,
             outcome: _,
         } = self.channels[ch].service_one()?;
+        // Keep the heap invariant: the channel's old live entry is now
+        // stale (lazily discarded); publish its new minimum.
+        if let Some(next) = self.channels[ch].earliest_arrival() {
+            self.arrivals.push(Reverse((next, ch)));
+        }
         Some(ReqToken {
             tag,
             kind,
@@ -236,14 +307,30 @@ impl MemorySystem {
         })
     }
 
+    /// Batch servicing: complete every queued request whose selection
+    /// arrival is `<= horizon`, invoking `on_token` per completion in
+    /// exactly the order [`MemorySystem::service_one`] would have
+    /// produced. Returns the latest completion cycle seen (0 if none
+    /// serviced). `horizon = u64::MAX` drains everything — the phase
+    /// driver uses that to retire a phase's tail in one call instead
+    /// of ping-ponging per request.
+    pub fn service_until(&mut self, horizon: u64, mut on_token: impl FnMut(ReqToken)) -> u64 {
+        let mut last = 0;
+        while let Some((a, ch)) = self.earliest_channel() {
+            if a > horizon {
+                break;
+            }
+            let tok = self.service_channel(ch);
+            last = last.max(tok.done_at);
+            on_token(tok);
+        }
+        last
+    }
+
     /// Drain everything; returns the completion time of the last
     /// request (makespan in cycles).
     pub fn drain(&mut self) -> u64 {
-        let mut last = 0;
-        while let Some(t) = self.service_one() {
-            last = last.max(t.done_at);
-        }
-        last
+        self.service_until(u64::MAX, |_| {})
     }
 
     /// Current makespan across channels.
@@ -377,6 +464,146 @@ mod tests {
         assert_eq!(count, 64);
         assert_eq!(sys.channel_stats(0).requests(), 32);
         assert_eq!(sys.channel_stats(1).requests(), 32);
+    }
+
+    #[test]
+    fn service_until_matches_service_one_order() {
+        // The batch API must produce exactly the per-request sequence.
+        let mk = || {
+            let mut sys = MemorySystem::new(DramSpec::ddr4_2400(2));
+            let mut rng = crate::util::rng::Rng::new(42);
+            for i in 0..200u64 {
+                sys.enqueue(
+                    MemRequest {
+                        addr: rng.next_below(1 << 20) * CACHE_LINE,
+                        kind: MemKind::Read,
+                        tag: i,
+                        region: Region::Edges,
+                    },
+                    rng.next_below(5_000),
+                );
+            }
+            sys
+        };
+        let mut one = mk();
+        let mut seq_tags = Vec::new();
+        let mut last_one = 0;
+        while let Some(t) = one.service_one() {
+            seq_tags.push(t.tag);
+            last_one = last_one.max(t.done_at);
+        }
+        let mut batch = mk();
+        let mut batch_tags = Vec::new();
+        let last_batch = batch.service_until(u64::MAX, |t| batch_tags.push(t.tag));
+        assert_eq!(seq_tags, batch_tags);
+        assert_eq!(last_one, last_batch);
+        assert_eq!(one.stats(), batch.stats());
+    }
+
+    #[test]
+    fn service_until_respects_horizon() {
+        let mut sys = MemorySystem::new(DramSpec::ddr4_2400(1));
+        for i in 0..10u64 {
+            sys.enqueue(
+                MemRequest {
+                    addr: i * CACHE_LINE,
+                    kind: MemKind::Read,
+                    tag: i,
+                    region: Region::Edges,
+                },
+                i * 1_000,
+            );
+        }
+        let mut served = 0u64;
+        sys.service_until(4_999, |_| served += 1);
+        assert_eq!(served, 5, "only arrivals <= horizon are retired");
+        assert_eq!(sys.pending(), 5);
+        assert!(sys.drain() > 0);
+        assert_eq!(sys.pending(), 0);
+    }
+
+    #[test]
+    fn heap_and_scan_selection_identical() {
+        let mk = || {
+            let mut sys = MemorySystem::new(DramSpec::ddr4_2400(4));
+            let mut rng = crate::util::rng::Rng::new(7);
+            for i in 0..300u64 {
+                sys.enqueue(
+                    MemRequest {
+                        addr: rng.next_below(1 << 22) * CACHE_LINE,
+                        kind: MemKind::Read,
+                        tag: i,
+                        region: Region::Edges,
+                    },
+                    rng.next_below(10_000),
+                );
+            }
+            sys
+        };
+        let mut heap = mk();
+        let mut scan = mk();
+        loop {
+            let a = heap.service_one();
+            let b = scan.service_one_scan();
+            match (a, b) {
+                (None, None) => break,
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.tag, b.tag);
+                    assert_eq!(a.channel, b.channel);
+                    assert_eq!(a.done_at, b.done_at);
+                }
+                _ => panic!("one path finished early"),
+            }
+        }
+        assert_eq!(heap.stats(), scan.stats());
+        // Interleaving both selectors on one system stays consistent.
+        let mut both = mk();
+        let mut n = 0;
+        loop {
+            let t = if n % 2 == 0 {
+                both.service_one()
+            } else {
+                both.service_one_scan()
+            };
+            if t.is_none() {
+                break;
+            }
+            n += 1;
+        }
+        assert_eq!(n, 300);
+    }
+
+    #[test]
+    fn interleaved_enqueue_service_keeps_heap_live() {
+        // Exercises lazy invalidation: enqueues that lower the minimum,
+        // enqueues that don't, and services that leave duplicates.
+        let mut sys = MemorySystem::new(DramSpec::ddr4_2400(2));
+        let mut next_tag = 0u64;
+        let mut enq = |sys: &mut MemorySystem, addr: u64, at: u64| {
+            sys.enqueue(
+                MemRequest {
+                    addr,
+                    kind: MemKind::Read,
+                    tag: next_tag,
+                    region: Region::Vertices,
+                },
+                at,
+            );
+            next_tag += 1;
+        };
+        enq(&mut sys, 0, 100);
+        enq(&mut sys, 64, 100);
+        enq(&mut sys, 0, 50); // lowers channel 0's min
+        assert!(sys.service_one().is_some());
+        enq(&mut sys, 128, 10); // channel 0 again, below everything
+        enq(&mut sys, 192, 500);
+        let mut count = 0;
+        while sys.service_one().is_some() {
+            count += 1;
+        }
+        assert_eq!(count, 4);
+        assert_eq!(sys.stats().requests(), 5);
+        assert_eq!(sys.pending(), 0);
     }
 
     #[test]

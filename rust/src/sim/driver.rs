@@ -7,9 +7,31 @@
 //! dependencies" — chained streams release on parent completion, and
 //! everything else is limited only by the window and the merge
 //! arbiter.
+//!
+//! The hot path is allocation-free and event-driven:
+//!
+//! * stream addresses come from [`LineSource`] descriptors, so
+//!   readiness checks index the next line in O(1) (the channel of the
+//!   next line is cached per stream and refreshed only when the
+//!   cursor advances);
+//! * completions are consumed in batches — after a window fill, the
+//!   driver keeps servicing until a completion actually frees a slot
+//!   some stream is waiting on or releases a chained request whose
+//!   channel has capacity, instead of re-walking the merge tree after
+//!   every single completion;
+//! * once every request has been issued, the remaining in-flight tail
+//!   is retired with one [`MemorySystem::service_until`] call.
+//!
+//! All of this is perf-only: issue order, arrival times and service
+//! order are bit-identical to the naive per-request loop (the
+//! equivalence suite enforces it via
+//! [`set_materialize_streams`]).
+//!
+//! [`LineSource`]: crate::accel::stream::LineSource
 
-use crate::accel::stream::{Merge, Phase};
+use crate::accel::stream::{Fanout, Merge, Phase};
 use crate::dram::{MemRequest, MemorySystem};
+use std::cell::Cell;
 use std::collections::VecDeque;
 
 /// Per-phase execution telemetry.
@@ -20,12 +42,26 @@ pub struct PhaseTelemetry {
     pub end_cycle: u64,
 }
 
-/// Per-stream execution state.
+/// Per-stream execution state: a cursor over the line source plus the
+/// release bookkeeping for chained streams.
 struct StreamState {
+    /// Requests issued so far (cursor into the line source).
     issued: usize,
-    /// Release times of not-yet-issued requests (chained streams).
-    pending_release: VecDeque<u64>,
+    /// Stream length (cached; sources compute it on demand).
+    len: usize,
+    /// Requests released so far (`len` for independent streams; grows
+    /// with parent completions for chained ones). `issued < available`
+    /// means the stream has an issuable request pending.
+    available: usize,
+    /// Release times of released-but-unissued requests, run-length
+    /// encoded as `(release_cycle, count)` — a barrier fan-out is one
+    /// run, not N queue entries.
+    pending_release: VecDeque<(u64, u32)>,
     independent: bool,
+    /// Channel of the next line (`line(issued)`); valid while
+    /// `issued < len`. Cached so the merge tree's readiness probe is
+    /// O(1) with no address computation.
+    next_ch: usize,
 }
 
 /// Arena form of the merge tree. Children lists are stored separately
@@ -129,18 +165,51 @@ fn untag(t: u64) -> (usize, usize) {
     ((t >> 40) as usize, (t & 0xFF_FFFF_FFFF) as usize)
 }
 
+thread_local! {
+    /// Test/validation hook (see [`set_materialize_streams`]).
+    static MATERIALIZE_STREAMS: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Validation hook for the zero-materialization refactor: while set on
+/// this thread, every [`run_phase`] first expands the phase through
+/// [`Phase::materialized`] (explicit address vectors, per-parent
+/// fan-out vectors) and executes that instead. Descriptor and
+/// materialized execution are required to be bit-identical — cycle
+/// counts, DRAM stats, traces and pattern summaries — which the
+/// `stream_equivalence` integration suite asserts by flipping this
+/// switch around full simulations. Returns the previous value.
+pub fn set_materialize_streams(on: bool) -> bool {
+    MATERIALIZE_STREAMS.with(|c| c.replace(on))
+}
+
 /// Execute one phase starting at cycle `start`; returns telemetry with
 /// the completion cycle of the phase's last request (`start` if the
 /// phase is empty).
 pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTelemetry {
+    if MATERIALIZE_STREAMS.with(|c| c.get()) {
+        let materialized = phase.materialized();
+        // Drop the flag around the nested call so it can't recurse.
+        set_materialize_streams(false);
+        let t = run_phase(mem, &materialized, start);
+        set_materialize_streams(true);
+        return t;
+    }
+
     let n = phase.streams.len();
+    let nch = mem.num_channels();
     let mut state: Vec<StreamState> = phase
         .streams
         .iter()
-        .map(|s| StreamState {
-            issued: 0,
-            pending_release: VecDeque::new(),
-            independent: s.chained_to.is_none(),
+        .map(|s| {
+            let len = s.len();
+            StreamState {
+                issued: 0,
+                len,
+                available: if s.chained_to.is_none() { len } else { 0 },
+                pending_release: VecDeque::new(),
+                independent: s.chained_to.is_none(),
+                next_ch: if len > 0 { mem.channel_of(s.line(0)) } else { 0 },
+            }
         })
         .collect();
     // Children per parent stream.
@@ -149,10 +218,17 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
         if let Some(p) = s.chained_to {
             assert!(p < n, "chained_to out of range");
             assert_ne!(p, i, "stream cannot chain to itself");
-            assert_eq!(
-                s.fanout.len(),
-                phase.streams[p].lines.len(),
-                "fanout must cover every parent completion"
+            if let Fanout::PerParent(v) = &s.fanout {
+                assert_eq!(
+                    v.len(),
+                    phase.streams[p].len(),
+                    "fanout must cover every parent completion"
+                );
+            }
+            debug_assert_eq!(
+                s.fanout.total(phase.streams[p].len()),
+                s.len() as u64,
+                "stream {i}: fanout must release exactly the stream"
             );
             children[p].push(i);
         }
@@ -162,10 +238,21 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
 
     // The window is a per-channel (per memory port) limit: each PE
     // drives its own channel independently.
-    let nch = mem.num_channels();
-    let _ = nch;
     let mut in_flight = vec![0usize; nch];
     let mut slot_free_at = vec![start; nch];
+    // Streams with an issuable (released, unissued) request, counted
+    // per target channel. At a fill-loop fixpoint every such stream is
+    // window-blocked, so a completion can only unblock the fill loop
+    // if it frees a slot on a channel with waiters (or releases a
+    // chained request onto a channel with capacity) — anything else
+    // can be serviced back-to-back without re-walking the merge tree.
+    let mut waiting = vec![0usize; nch];
+    for st in &state {
+        if st.available > 0 {
+            waiting[st.next_ch] += 1;
+        }
+    }
+    let mut remaining: usize = state.iter().map(|st| st.len).sum();
     let mut total_in_flight = 0usize;
     let mut telemetry = PhaseTelemetry::default();
     let mut end = start;
@@ -175,21 +262,13 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
         loop {
             let picked = {
                 let state_ref = &state;
-                let streams = &phase.streams;
                 let inflight_ref = &in_flight;
                 let window = phase.window;
-                let mem_ref: &MemorySystem = mem;
                 let ready = move |s: usize| -> bool {
                     let st = &state_ref[s];
-                    if st.issued >= streams[s].lines.len() {
-                        return false;
-                    }
-                    if !(st.independent || !st.pending_release.is_empty()) {
-                        return false;
-                    }
-                    // target channel must have window capacity
-                    let ch = mem_ref.channel_of(streams[s].lines[st.issued]);
-                    inflight_ref[ch] < window
+                    st.issued < st.available
+                        && st.issued < st.len
+                        && inflight_ref[st.next_ch] < window
                 };
                 arena.pick(root, &ready)
             };
@@ -199,10 +278,18 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
             let release = if st.independent {
                 start
             } else {
-                st.pending_release.pop_front().unwrap()
+                let run = st.pending_release.front_mut().unwrap();
+                let t = run.0;
+                run.1 -= 1;
+                if run.1 == 0 {
+                    st.pending_release.pop_front();
+                }
+                t
             };
-            let addr = phase.streams[s].lines[idx];
-            let ch = mem.channel_of(addr);
+            let stream = &phase.streams[s];
+            let addr = stream.line(idx);
+            let ch = st.next_ch;
+            debug_assert_eq!(ch, mem.channel_of(addr));
             // A request cannot arrive before its data dependency is
             // met, nor before its port had a free slot.
             let arrival = release.max(if in_flight[ch] + 1 == phase.window {
@@ -213,13 +300,30 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
             mem.enqueue(
                 MemRequest {
                     addr,
-                    kind: phase.streams[s].kind,
+                    kind: stream.kind,
                     tag: tag(s, idx),
-                    region: phase.streams[s].class.region(),
+                    region: stream.class.region(),
                 },
                 arrival,
             );
             st.issued += 1;
+            remaining -= 1;
+            // Advance the cursor's cached channel and the per-channel
+            // waiter counts.
+            if st.issued < st.len {
+                let nc = mem.channel_of(stream.line(st.issued));
+                st.next_ch = nc;
+                if st.issued < st.available {
+                    if nc != ch {
+                        waiting[ch] -= 1;
+                        waiting[nc] += 1;
+                    }
+                } else {
+                    waiting[ch] -= 1; // out of released requests
+                }
+            } else {
+                waiting[ch] -= 1; // stream exhausted
+            }
             in_flight[ch] += 1;
             total_in_flight += 1;
             telemetry.requests += 1;
@@ -229,19 +333,48 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
             break; // nothing issued and nothing issuable -> done
         }
 
-        let tok = mem
-            .service_one()
-            .expect("in-flight requests must be serviceable");
-        in_flight[tok.channel] -= 1;
-        total_in_flight -= 1;
-        slot_free_at[tok.channel] = tok.done_at;
-        end = end.max(tok.done_at);
-        let (s, idx) = untag(tok.tag);
-        // Release chained children.
-        for &c in &children[s] {
-            let f = phase.streams[c].fanout[idx];
-            for _ in 0..f {
-                state[c].pending_release.push_back(tok.done_at);
+        if remaining == 0 {
+            // Everything is issued: no completion can release or
+            // unblock anything the fill loop cares about. Retire the
+            // in-flight tail in one batch call.
+            end = end.max(mem.service_until(u64::MAX, |_| {}));
+            break;
+        }
+
+        // Event-driven servicing: keep completing requests until one
+        // of them can actually unblock an issue.
+        loop {
+            let tok = mem
+                .service_one()
+                .expect("in-flight requests must be serviceable");
+            in_flight[tok.channel] -= 1;
+            total_in_flight -= 1;
+            slot_free_at[tok.channel] = tok.done_at;
+            end = end.max(tok.done_at);
+            let (s, idx) = untag(tok.tag);
+            // A freed slot matters iff some stream is waiting on this
+            // channel's window.
+            let mut unblocked = waiting[tok.channel] > 0;
+            // Release chained children.
+            let parent_len = phase.streams[s].len();
+            for &c in &children[s] {
+                let f = phase.streams[c].fanout.released_by(idx, parent_len);
+                if f == 0 {
+                    continue;
+                }
+                let st = &mut state[c];
+                if st.issued == st.available && st.issued < st.len {
+                    // The release turns this stream issuable.
+                    waiting[st.next_ch] += 1;
+                    if in_flight[st.next_ch] < phase.window {
+                        unblocked = true;
+                    }
+                }
+                st.available += f as usize;
+                st.pending_release.push_back((tok.done_at, f));
+            }
+            if total_in_flight == 0 || unblocked {
+                break;
             }
         }
     }
@@ -249,11 +382,9 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
     // Sanity: every request issued and completed.
     for (i, st) in state.iter().enumerate() {
         debug_assert_eq!(
-            st.issued,
-            phase.streams[i].lines.len(),
+            st.issued, st.len,
             "stream {i} stuck: issued {} of {} (broken chain?)",
-            st.issued,
-            phase.streams[i].lines.len()
+            st.issued, st.len
         );
     }
 
@@ -264,7 +395,7 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accel::stream::{seq_lines, LineStream, Merge, Phase, StreamClass};
+    use crate::accel::stream::{seq_lines, LineSource, LineStream, Merge, Phase, StreamClass};
     use crate::dram::{DramSpec, MemKind};
 
     fn mem() -> MemorySystem {
@@ -274,7 +405,7 @@ mod tests {
     #[test]
     fn empty_phase_is_noop() {
         let mut m = mem();
-        let p = Phase::single(StreamClass::Values, MemKind::Read, vec![], 8);
+        let p = Phase::single(StreamClass::Values, MemKind::Read, Vec::<u64>::new(), 8);
         let t = run_phase(&mut m, &p, 100);
         assert_eq!(t.requests, 0);
         assert_eq!(t.end_cycle, 100);
@@ -283,7 +414,12 @@ mod tests {
     #[test]
     fn sequential_phase_completes_all() {
         let mut m = mem();
-        let p = Phase::single(StreamClass::Values, MemKind::Read, seq_lines(0, 64 * 256), 16);
+        let p = Phase::single(
+            StreamClass::Values,
+            MemKind::Read,
+            LineSource::seq(0, 64 * 256),
+            16,
+        );
         let t = run_phase(&mut m, &p, 0);
         assert_eq!(t.requests, 256);
         assert_eq!(m.stats().requests(), 256);
@@ -293,9 +429,10 @@ mod tests {
     #[test]
     fn phases_compose_in_time() {
         let mut m = mem();
-        let p1 = Phase::single(StreamClass::Values, MemKind::Read, seq_lines(0, 4096), 8);
+        let p1 = Phase::single(StreamClass::Values, MemKind::Read, LineSource::seq(0, 4096), 8);
         let t1 = run_phase(&mut m, &p1, 0);
-        let p2 = Phase::single(StreamClass::Writes, MemKind::Write, seq_lines(8192, 4096), 8);
+        let p2 =
+            Phase::single(StreamClass::Writes, MemKind::Write, LineSource::seq(8192, 4096), 8);
         let t2 = run_phase(&mut m, &p2, t1.end_cycle);
         assert!(t2.end_cycle > t1.end_cycle);
     }
@@ -307,12 +444,12 @@ mod tests {
         let parent = LineStream::independent(
             StreamClass::Edges,
             MemKind::Read,
-            seq_lines(0, 4 * 64),
+            LineSource::seq(0, 4 * 64),
         );
         let child = LineStream::chained(
             StreamClass::Writes,
             MemKind::Write,
-            seq_lines(1 << 20, 4 * 64),
+            LineSource::seq(1 << 20, 4 * 64),
             0,
             vec![1, 1, 1, 1],
         );
@@ -335,12 +472,12 @@ mod tests {
     fn chained_fanout_zero_and_many() {
         let mut m = mem();
         let parent =
-            LineStream::independent(StreamClass::Edges, MemKind::Read, seq_lines(0, 3 * 64));
+            LineStream::independent(StreamClass::Edges, MemKind::Read, LineSource::seq(0, 3 * 64));
         // completion 0 releases 0, completion 1 releases 3, completion 2 releases 1
         let child = LineStream::chained(
             StreamClass::Updates,
             MemKind::Write,
-            seq_lines(1 << 20, 4 * 64),
+            LineSource::seq(1 << 20, 4 * 64),
             0,
             vec![0, 3, 1],
         );
@@ -356,18 +493,19 @@ mod tests {
     #[test]
     fn two_level_chain_completes() {
         let mut m = mem();
-        let a = LineStream::independent(StreamClass::Edges, MemKind::Read, seq_lines(0, 2 * 64));
+        let a =
+            LineStream::independent(StreamClass::Edges, MemKind::Read, LineSource::seq(0, 2 * 64));
         let b = LineStream::chained(
             StreamClass::Updates,
             MemKind::Read,
-            seq_lines(1 << 20, 2 * 64),
+            LineSource::seq(1 << 20, 2 * 64),
             0,
             vec![1, 1],
         );
         let c = LineStream::chained(
             StreamClass::Writes,
             MemKind::Write,
-            seq_lines(1 << 22, 2 * 64),
+            LineSource::seq(1 << 22, 2 * 64),
             1,
             vec![1, 1],
         );
@@ -384,11 +522,12 @@ mod tests {
     #[test]
     fn round_robin_alternates_streams() {
         let mut m = mem();
-        let a = LineStream::independent(StreamClass::Values, MemKind::Read, seq_lines(0, 512));
+        let a =
+            LineStream::independent(StreamClass::Values, MemKind::Read, LineSource::seq(0, 512));
         let b = LineStream::independent(
             StreamClass::Pointers,
             MemKind::Read,
-            seq_lines(1 << 21, 512),
+            LineSource::seq(1 << 21, 512),
         );
         let phase = Phase {
             streams: vec![a, b],
@@ -403,7 +542,7 @@ mod tests {
     fn nested_merge_tree() {
         let mut m = mem();
         let mk = |base: u64| {
-            LineStream::independent(StreamClass::Values, MemKind::Read, seq_lines(base, 256))
+            LineStream::independent(StreamClass::Values, MemKind::Read, LineSource::seq(base, 256))
         };
         let phase = Phase {
             streams: vec![mk(0), mk(1 << 20), mk(1 << 21), mk(1 << 22)],
@@ -424,7 +563,7 @@ mod tests {
         // stride of one full row (8 KiB) walks the banks (RoBaRaCoCh:
         // bank bits sit right above the column bits), so bank-level
         // parallelism is available when the window allows it
-        let lines: Vec<u64> = (0..128u64).map(|i| i * 8192).collect();
+        let lines = LineSource::strided(0, 8192, 128);
         let p1 = Phase::single(StreamClass::Values, MemKind::Read, lines.clone(), 1);
         let p16 = Phase::single(StreamClass::Values, MemKind::Read, lines, 16);
         let t1 = run_phase(&mut m1, &p1, 0);
@@ -435,6 +574,41 @@ mod tests {
             t1.end_cycle,
             t16.end_cycle
         );
+    }
+
+    #[test]
+    fn materialize_hook_is_bit_identical() {
+        // Seq parent releasing one gather-line per completion
+        // (Uniform) — exercises every descriptor the models emit.
+        let gather = LineSource::gather(1 << 20, 64, (0..40u64).map(|i| i * 7 % 97));
+        assert_eq!(gather.len(), 40, "distinct 64 B elements never merge");
+        let build = || Phase {
+            streams: vec![
+                LineStream::independent(
+                    StreamClass::Edges,
+                    MemKind::Read,
+                    LineSource::seq(0, 40 * 64),
+                ),
+                LineStream::chained(
+                    StreamClass::Writes,
+                    MemKind::Write,
+                    gather.clone(),
+                    0,
+                    crate::accel::stream::Fanout::Uniform(1),
+                ),
+            ],
+            merge: Merge::prio([1, 0]),
+            window: 8,
+        };
+        let mut m_desc = mem();
+        let t_desc = run_phase(&mut m_desc, &build(), 0);
+        let mut m_mat = mem();
+        let prev = set_materialize_streams(true);
+        let t_mat = run_phase(&mut m_mat, &build(), 0);
+        set_materialize_streams(prev);
+        assert_eq!(t_desc.requests, t_mat.requests);
+        assert_eq!(t_desc.end_cycle, t_mat.end_cycle);
+        assert_eq!(m_desc.stats(), m_mat.stats());
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod metrics;
 pub mod spec;
 pub mod sweep;
 
-pub use driver::{run_phase, PhaseTelemetry};
+pub use driver::{run_phase, set_materialize_streams, PhaseTelemetry};
 pub use metrics::{RunMetrics, SimReport};
 pub use spec::{SimSpec, SimSpecBuilder, SpecError, Workload};
 pub use sweep::{Session, Sweep, SweepRun};
