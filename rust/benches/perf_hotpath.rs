@@ -5,27 +5,35 @@
 //!   heap.
 //! * Phase-driver throughput (merge tree + window + chaining on top of
 //!   the DRAM model), descriptor streams vs the materialized escape
-//!   hatch — the zero-materialization refactor's headline numbers.
+//!   hatch — the zero-materialization refactor's headline numbers —
+//!   plus per-call vs arena-reused scratch (`driver.scratch_fresh` /
+//!   `driver.scratch_reuse`).
 //! * End-to-end simulation throughput (HitGraph BFS on a mid-size
 //!   graph, simulated requests per wall-second).
+//! * Program-cache amortization (`sweep.mem_axis_amortized.*`): one
+//!   workload across a memory-technology × channel-count sweep,
+//!   fresh-compile vs the session's shared program cache side by side
+//!   — reports asserted bit-identical in-run, and the cached pass
+//!   must run ≥2× fewer compile passes.
 //! * Golden engines: native vs XLA/PJRT per-iteration latency.
 //!
 //! Output: human-readable lines on stdout, plus machine-readable JSON
 //! lines (one object per bench: name, requests, wall seconds,
-//! requests/s, peak stream bytes) written to the file named by
+//! requests/s, peak stream bytes, optional per-bench extras like
+//! `programs_compiled`/`programs_reused`) written to the file named by
 //! `GRAPHMEM_BENCH_JSON` or `--json <path>` (replacing its contents). `GRAPHMEM_SCOPE=quick`
 //! shrinks every size so CI can smoke-run the whole file in seconds;
 //! the committed `BENCH_hotpath.json` at the repo root records the
 //! full-scope baseline schema (refresh it with
 //! `cargo bench --bench perf_hotpath` on a quiet machine).
 
-use graphmem::accel::stream::{LineSource, Phase, StreamClass};
+use graphmem::accel::stream::{Fanout, LineSource, LineStream, Merge, Phase, StreamClass};
 use graphmem::accel::{build, AcceleratorConfig, AcceleratorKind};
 use graphmem::algo::problem::{GraphProblem, ProblemKind};
-use graphmem::dram::{ChannelMode, DramSpec, MemKind, MemRequest, MemorySystem};
+use graphmem::dram::{ChannelMode, DramSpec, MemKind, MemRequest, MemTech, MemorySystem};
 use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
 use graphmem::graph::rmat::{generate, RmatParams};
-use graphmem::sim::run_phase;
+use graphmem::sim::{run_phase, run_phase_with, PhaseScratch, Session, Sweep, Workload};
 use graphmem::util::rng::Rng;
 use std::io::Write;
 
@@ -41,6 +49,9 @@ struct BenchRow {
     requests: u64,
     wall_s: f64,
     peak_stream_bytes: u64,
+    /// Additional per-bench counters, appended verbatim to the JSON
+    /// object (e.g. program-cache compile/reuse counts).
+    extras: Vec<(&'static str, u64)>,
 }
 
 impl BenchRow {
@@ -54,10 +65,15 @@ impl BenchRow {
 
     /// Hand-rolled JSON (the offline registry has no serde).
     fn json(&self) -> String {
-        format!(
-            "{{\"bench\":\"{}\",\"requests\":{},\"wall_s\":{:.6},\"req_per_s\":{:.1},\"peak_stream_bytes\":{}}}",
+        let mut s = format!(
+            "{{\"bench\":\"{}\",\"requests\":{},\"wall_s\":{:.6},\"req_per_s\":{:.1},\"peak_stream_bytes\":{}",
             self.name, self.requests, self.wall_s, self.req_per_s(), self.peak_stream_bytes
-        )
+        );
+        for (k, v) in &self.extras {
+            s.push_str(&format!(",\"{k}\":{v}"));
+        }
+        s.push('}');
+        s
     }
 }
 
@@ -67,15 +83,31 @@ struct Reporter {
 
 impl Reporter {
     fn record(&mut self, name: &str, requests: u64, wall_s: f64, peak_stream_bytes: u64) {
-        println!(
-            "{name}: {:.2} M req/s ({requests} requests in {wall_s:.3}s, stream bytes {peak_stream_bytes})",
+        self.record_with(name, requests, wall_s, peak_stream_bytes, Vec::new());
+    }
+
+    fn record_with(
+        &mut self,
+        name: &str,
+        requests: u64,
+        wall_s: f64,
+        peak_stream_bytes: u64,
+        extras: Vec<(&'static str, u64)>,
+    ) {
+        print!(
+            "{name}: {:.2} M req/s ({requests} requests in {wall_s:.3}s, stream bytes {peak_stream_bytes}",
             requests as f64 / wall_s.max(1e-12) / 1e6,
         );
+        for (k, v) in &extras {
+            print!(", {k} {v}");
+        }
+        println!(")");
         self.rows.push(BenchRow {
             name: name.to_string(),
             requests,
             wall_s,
             peak_stream_bytes,
+            extras,
         });
     }
 
@@ -298,7 +330,7 @@ fn bench_phase_driver(rep: &mut Reporter) {
                 graphmem::accel::stream::Fanout::Uniform(1),
             ),
         ],
-        merge: graphmem::accel::stream::Merge::prio([1, 0]),
+        merge: graphmem::accel::stream::Merge::prio([1, 0]).into(),
         window: 32,
     };
     let peak = phase.stream_bytes();
@@ -331,6 +363,128 @@ fn bench_end_to_end_sim(rep: &mut Reporter) {
         r.dram.requests(),
         dt,
         0,
+    );
+}
+
+/// Arena-reused scratch vs per-call allocation across many small
+/// phases — the shape accelerator runs actually produce (one phase
+/// per partition per iteration). End cycles are asserted identical.
+fn bench_driver_scratch(rep: &mut Reporter) {
+    let spec = DramSpec::ddr4_2400(2);
+    let phases_n: usize = if quick_scope() { 512 } else { 4096 };
+    let phases: Vec<Phase> = (0..phases_n)
+        .map(|i| {
+            let base = (i as u64) << 20;
+            let parent = LineStream::independent(
+                StreamClass::Edges,
+                MemKind::Read,
+                LineSource::seq(base, 48 * 64),
+            );
+            let gather =
+                LineSource::gather(1 << 34, 4, (0..24u64).map(|j| (j * 37 + i as u64) % 4096));
+            let released = gather.len() as u32;
+            let child = LineStream::chained(
+                StreamClass::Writes,
+                MemKind::Write,
+                gather,
+                0,
+                Fanout::AfterLast(released),
+            );
+            Phase {
+                streams: vec![parent, child],
+                merge: Merge::prio([1, 0]).into(),
+                window: 16,
+            }
+        })
+        .collect();
+    let requests: u64 = phases.iter().map(|p| p.total_requests() as u64).sum();
+
+    let mut mem = MemorySystem::new(spec);
+    let mut end_fresh = 0u64;
+    let dt_fresh = time(|| {
+        let mut c = 0;
+        for ph in &phases {
+            c = run_phase(&mut mem, ph, c).end_cycle;
+        }
+        end_fresh = c;
+    });
+    rep.record("driver.scratch_fresh", requests, dt_fresh, 0);
+
+    let mut mem = MemorySystem::new(spec);
+    let mut scratch = PhaseScratch::new();
+    let mut end_shared = 0u64;
+    let dt_shared = time(|| {
+        let mut c = 0;
+        for ph in &phases {
+            c = run_phase_with(&mut mem, ph, c, &mut scratch).end_cycle;
+        }
+        end_shared = c;
+    });
+    assert_eq!(end_fresh, end_shared, "scratch reuse must be bit-identical");
+    rep.record("driver.scratch_reuse", requests, dt_shared, 0);
+}
+
+/// The paper's sweep shape: one workload across memory technologies ×
+/// channel counts. Fresh-compile (one program compile per point, the
+/// pre-refactor behavior) vs a session's shared program cache (one
+/// compile per channel count), side by side on the same spec list.
+/// Reports must be bit-identical; the cached pass must compile ≥2×
+/// fewer programs.
+fn bench_sweep_mem_axis(rep: &mut Reporter) {
+    let scale = if quick_scope() { 9 } else { 12 };
+    let g = generate(RmatParams::graph500(scale, 8, 0xA5));
+    let sweep = Sweep::new()
+        .accelerators([AcceleratorKind::ThunderGp])
+        .workloads([Workload::custom("mem-axis", g)])
+        .problems([ProblemKind::Bfs])
+        .mem_techs([MemTech::Ddr3, MemTech::Ddr4, MemTech::Hbm])
+        .channels([1, 2, 4, 8])
+        .configs([AcceleratorConfig::all_optimizations()])
+        .skip_unsupported(); // DDR3/DDR4 cap at 4 channels
+    let specs = sweep.specs().expect("sweep axes are non-empty");
+
+    // Fresh: every point compiles its own program (SimSpec::run).
+    let mut fresh = Vec::with_capacity(specs.len());
+    let dt_fresh = time(|| {
+        for s in &specs {
+            fresh.push(s.run());
+        }
+    });
+    let requests: u64 = fresh.iter().map(|r| r.dram.requests()).sum();
+    rep.record_with(
+        "sweep.mem_axis_amortized.fresh",
+        requests,
+        dt_fresh,
+        0,
+        vec![("compile_passes", specs.len() as u64)],
+    );
+
+    // Cached: one serial session; programs shared across the mem axis.
+    let session = Session::new();
+    let mut cached = Vec::with_capacity(specs.len());
+    let dt_cached = time(|| {
+        for s in &specs {
+            cached.push(session.run(s));
+        }
+    });
+    assert_eq!(fresh, cached, "program cache must be bit-identical");
+    let st = session.stats();
+    assert!(
+        st.programs_compiled * 2 <= specs.len(),
+        "expected >=2x fewer compile passes: {} compiles for {} points",
+        st.programs_compiled,
+        specs.len()
+    );
+    assert!(st.programs_reused >= 1, "cache must see reuse");
+    rep.record_with(
+        "sweep.mem_axis_amortized.cached",
+        requests,
+        dt_cached,
+        0,
+        vec![
+            ("compile_passes", st.programs_compiled as u64),
+            ("programs_reused", st.programs_reused as u64),
+        ],
     );
 }
 
@@ -382,7 +536,9 @@ fn main() {
     let mut rep = Reporter { rows: Vec::new() };
     bench_dram_channel(&mut rep);
     bench_phase_driver(&mut rep);
+    bench_driver_scratch(&mut rep);
     bench_end_to_end_sim(&mut rep);
+    bench_sweep_mem_axis(&mut rep);
     bench_engines(&mut rep);
     rep.flush(json_path.as_deref());
 }

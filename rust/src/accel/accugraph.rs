@@ -17,6 +17,13 @@
 //!
 //! `Skip.` (partition skipping) drops partitions none of whose source
 //! values changed in the previous iteration.
+//!
+//! The model is split compile/execute (see [`crate::accel::program`]):
+//! [`AccuGraphProgram`] holds everything iteration-invariant — the
+//! partitioning, the address layout, the per-partition prefetch
+//! phases and the three invariant Phase-B streams plus their shared
+//! merge tree — while [`AccuGraphProgram::execute`] builds only the
+//! value-dependent write stream per partition per iteration.
 
 use super::config::{AcceleratorConfig, Optimization};
 use super::stream::{LineSource, LineStream, Merge, Phase, StreamClass};
@@ -25,26 +32,41 @@ use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
 use crate::graph::EdgeList;
 use crate::partition::horizontal::HorizontalInCsr;
-use crate::sim::driver::run_phase;
+use crate::sim::driver::{run_phase_with, PhaseScratch};
 use crate::sim::metrics::{RunMetrics, SimReport};
+use std::sync::Arc;
 
-/// AccuGraph simulator instance.
-pub struct AccuGraph {
+/// Compiled AccuGraph program: the memory-independent,
+/// iteration-invariant artifacts, built once per (workload, config)
+/// and replayed by every execution.
+pub struct AccuGraphProgram {
     part: HorizontalInCsr,
     n: usize,
     m: usize,
     cfg: AcceleratorConfig,
-    /// Base byte addresses of the data structures (plain adjacent
-    /// arrays, §2.2).
+    /// Base byte address of the vertex value array (plain adjacent
+    /// arrays, §2.2); the write-back gather targets it.
     val_base: u64,
-    ptr_base: Vec<u64>,
-    nbr_base: Vec<u64>,
-    /// Edge weights are not supported (Tab. 1: BFS, PR, WCC only).
-    weighted: bool,
+    /// Per-partition Phase A: the source-value prefetch, complete and
+    /// replayed by reference.
+    prefetch: Vec<Phase>,
+    /// Per-partition invariant Phase-B streams: destination values,
+    /// CSR pointers, neighbors (stream indices 0, 1, 2).
+    body: Vec<[LineStream; 3]>,
+    /// Cache-line count of each partition's neighbor stream (the
+    /// write fan-out's domain).
+    nbr_lines: Vec<usize>,
+    /// Shared Phase-B arbiter: writes > neighbors > RR(values,
+    /// pointers) — identical for every partition.
+    merge: Arc<Merge>,
 }
 
-impl AccuGraph {
-    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+impl AccuGraphProgram {
+    /// Compile the iteration-invariant phase skeletons. This is the
+    /// expensive part of instantiating the model (partitioning the
+    /// graph into in-CSR partitions); nothing here depends on the
+    /// memory technology or on problem values.
+    pub fn compile(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
         let part = HorizontalInCsr::new(g, cfg.bram_values);
         let n = g.num_vertices;
         let val_base = 0u64;
@@ -60,34 +82,70 @@ impl AccuGraph {
             cursor +=
                 (part.neighbors[q].len() as u64 * 4 + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
         }
-        AccuGraph {
+
+        let window = cfg.window;
+        let mut prefetch = Vec::with_capacity(part.num_partitions());
+        let mut body = Vec::with_capacity(part.num_partitions());
+        let mut nbr_lines = Vec::with_capacity(part.num_partitions());
+        for q in 0..part.num_partitions() {
+            let interval = part.intervals[q];
+            prefetch.push(Phase::single(
+                StreamClass::Prefetch,
+                MemKind::Read,
+                LineSource::seq(
+                    val_base + interval.start as u64 * 4,
+                    interval.len() as u64 * 4,
+                ),
+                window,
+            ));
+            let m_q = part.neighbors[q].len();
+            let s_vals = LineStream::independent(
+                StreamClass::Values,
+                MemKind::Read,
+                LineSource::seq(val_base, n as u64 * 4),
+            );
+            let s_ptrs = LineStream::independent(
+                StreamClass::Pointers,
+                MemKind::Read,
+                LineSource::seq(ptr_base[q], (n as u64 + 1) * 4),
+            );
+            let nbr_src = LineSource::seq(nbr_base[q], m_q as u64 * 4);
+            nbr_lines.push(nbr_src.len());
+            let s_nbrs = LineStream::independent(StreamClass::Edges, MemKind::Read, nbr_src);
+            body.push([s_vals, s_ptrs, s_nbrs]);
+        }
+        // Priority: writes > neighbors > RR(values, pointers)
+        let merge = Arc::new(Merge::Priority(vec![
+            Merge::Leaf(3),
+            Merge::Leaf(2),
+            Merge::RoundRobin(vec![Merge::Leaf(0), Merge::Leaf(1)]),
+        ]));
+
+        AccuGraphProgram {
             part,
             n,
             m: g.num_edges(),
             cfg: cfg.clone(),
             val_base,
-            ptr_base,
-            nbr_base,
-            weighted: g.weighted,
+            prefetch,
+            body,
+            nbr_lines,
+            merge,
         }
     }
 
     pub fn num_partitions(&self) -> usize {
         self.part.num_partitions()
     }
-}
 
-impl Accelerator for AccuGraph {
-    fn name(&self) -> &'static str {
-        "AccuGraph"
-    }
-
-    fn run(&mut self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+    /// Execute the compiled program against a problem and a memory
+    /// system. Value-dependent state (frontiers, accumulators, the
+    /// write-back streams) is built here, against the cached skeleton.
+    pub fn execute(&self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
         assert!(
             !p.kind.weighted(),
             "AccuGraph does not support weighted problems (Tab. 1)"
         );
-        let _ = self.weighted;
         let n = self.n;
         let k = self.part.num_partitions();
         let skip = self.cfg.has(Optimization::PartitionSkipping);
@@ -105,6 +163,7 @@ impl Accelerator for AccuGraph {
         // For add-problems (PR/SpMV) updates must read a frozen
         // snapshot; min-problems propagate immediately.
         let immediate = p.kind.reduces_with_min();
+        let mut scratch = PhaseScratch::new();
 
         loop {
             metrics.iterations += 1;
@@ -130,17 +189,9 @@ impl Accelerator for AccuGraph {
                 // --- Phase A: prefetch source values of interval q ---
                 let do_prefetch = !(pref_skip && on_chip == Some(q));
                 if do_prefetch {
-                    let ph = Phase::single(
-                        StreamClass::Prefetch,
-                        MemKind::Read,
-                        LineSource::seq(
-                            self.val_base + interval.start as u64 * 4,
-                            interval.len() as u64 * 4,
-                        ),
-                        window,
-                    );
                     metrics.values_read += interval.len() as u64;
-                    cursor = run_phase(mem, &ph, cursor).end_cycle;
+                    cursor = run_phase_with(mem, &self.prefetch[q], cursor, &mut scratch)
+                        .end_cycle;
                 }
                 on_chip = Some(q);
 
@@ -193,20 +244,9 @@ impl Accelerator for AccuGraph {
                 metrics.values_read += n as u64; // destination values
                 metrics.values_written += write_dsts.len() as u64;
 
-                // --- Phase B: values + pointers (RR) | neighbors | writes ---
-                let s_vals = LineStream::independent(
-                    StreamClass::Values,
-                    MemKind::Read,
-                    LineSource::seq(self.val_base, n as u64 * 4),
-                );
-                let s_ptrs = LineStream::independent(
-                    StreamClass::Pointers,
-                    MemKind::Read,
-                    LineSource::seq(self.ptr_base[q], (n as u64 + 1) * 4),
-                );
-                let nbr_src = LineSource::seq(self.nbr_base[q], m_q as u64 * 4);
-                let num_nbr_lines = nbr_src.len();
-                let s_nbrs = LineStream::independent(StreamClass::Edges, MemKind::Read, nbr_src);
+                // --- Phase B: cached skeleton + dynamic write stream ---
+                let [s_vals, s_ptrs, s_nbrs] = &self.body[q];
+                let num_nbr_lines = self.nbr_lines[q];
                 // Writes chained to the neighbor line that produced them.
                 let write_src = LineSource::gather(self.val_base, 4, write_dsts.iter().copied());
                 // The gather merges adjacent same-line writes; map the
@@ -231,20 +271,15 @@ impl Accelerator for AccuGraph {
                     StreamClass::Writes,
                     MemKind::Write,
                     write_src,
-                    2, // neighbors stream index below
+                    2, // neighbors stream index
                     fanout,
                 );
                 let phase = Phase {
-                    streams: vec![s_vals, s_ptrs, s_nbrs, s_writes],
-                    // Priority: writes > neighbors > RR(values, pointers)
-                    merge: Merge::Priority(vec![
-                        Merge::Leaf(3),
-                        Merge::Leaf(2),
-                        Merge::RoundRobin(vec![Merge::Leaf(0), Merge::Leaf(1)]),
-                    ]),
+                    streams: vec![s_vals.clone(), s_ptrs.clone(), s_nbrs.clone(), s_writes],
+                    merge: Arc::clone(&self.merge),
                     window,
                 };
-                cursor = run_phase(mem, &phase, cursor).end_cycle;
+                cursor = run_phase_with(mem, &phase, cursor, &mut scratch).end_cycle;
             }
 
             // Apply accumulated values for add-problems.
@@ -283,6 +318,35 @@ impl Accelerator for AccuGraph {
             // Filled in by SimSpec::run when pattern analysis is on.
             patterns: None,
         }
+    }
+}
+
+/// AccuGraph simulator instance: a handle on a compiled
+/// [`AccuGraphProgram`]. (Cross-thread program sharing happens one
+/// level up, via `Arc<PhaseProgram>`.)
+pub struct AccuGraph {
+    program: AccuGraphProgram,
+}
+
+impl AccuGraph {
+    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+        AccuGraph {
+            program: AccuGraphProgram::compile(g, cfg),
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.program.num_partitions()
+    }
+}
+
+impl Accelerator for AccuGraph {
+    fn name(&self) -> &'static str {
+        "AccuGraph"
+    }
+
+    fn run(&mut self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.program.execute(p, mem)
     }
 }
 
@@ -387,5 +451,19 @@ mod tests {
             "CSR should be < 8 B/edge on dense graphs, got {}",
             r.bytes_per_edge()
         );
+    }
+
+    #[test]
+    fn shared_program_executions_are_independent() {
+        // Two executions of one compiled program (fresh memory each)
+        // must be identical — execute holds no mutable program state.
+        let g = erdos_renyi(600, 3600, 6);
+        let program = AccuGraphProgram::compile(&g, &AcceleratorConfig::default());
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let mut m1 = MemorySystem::new(DramSpec::ddr4_2400(1));
+        let mut m2 = MemorySystem::new(DramSpec::ddr4_2400(1));
+        let r1 = program.execute(&p, &mut m1);
+        let r2 = program.execute(&p, &mut m2);
+        assert_eq!(r1, r2);
     }
 }

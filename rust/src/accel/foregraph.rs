@@ -14,6 +14,15 @@
 //! `Skip.` skips shards with unchanged source intervals, `Map.`
 //! renames vertices into constant-stride intervals to fight partition
 //! skew.
+//!
+//! Split compile/execute (see [`crate::accel::program`]):
+//! [`ForeGraphProgram`] owns the partitioning, the (optional) stride
+//! permutation, the shard address layout, the per-interval prefetch
+//! streams and write-back phases, and the small family of merge trees
+//! the model ever uses — all iteration-invariant. Execution assembles
+//! phases from those cached pieces; only the *composition* (which
+//! shards are live, which intervals are skipped) is decided per
+//! iteration.
 
 use super::config::{AcceleratorConfig, Optimization};
 use super::stream::{LineSource, LineStream, Merge, Phase, StreamClass};
@@ -22,11 +31,12 @@ use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
 use crate::graph::EdgeList;
 use crate::partition::interval_shard::{stride_permutation, IntervalShardPartitioning};
-use crate::sim::driver::run_phase;
+use crate::sim::driver::{run_phase_with, PhaseScratch};
 use crate::sim::metrics::{RunMetrics, SimReport};
+use std::sync::Arc;
 
-/// ForeGraph simulator instance.
-pub struct ForeGraph {
+/// Compiled ForeGraph program (iteration-invariant artifacts).
+pub struct ForeGraphProgram {
     part: IntervalShardPartitioning,
     /// Permutation applied to the graph (stride mapping), if any:
     /// `perm[original] = renamed`.
@@ -34,13 +44,25 @@ pub struct ForeGraph {
     n: usize,
     m: usize,
     cfg: AcceleratorConfig,
-    val_base: u64,
     /// Base address of shard (i, j)'s edge array.
     shard_base: Vec<Vec<u64>>,
+    /// Per-interval value prefetch stream (used both as the source
+    /// prefetch of the PE group and as the destination prefetch of
+    /// the shard phase — the construction is identical).
+    pre_stream: Vec<LineStream>,
+    /// Per-interval destination write-back phase.
+    writeback: Vec<Phase>,
+    /// `rr_merge[k-1]`: round-robin over `k` group prefetch streams.
+    rr_merge: Vec<Arc<Merge>>,
+    /// Shuffled-edge arbiter: Priority(dst prefetch, zipped stream).
+    prio_single: Arc<Merge>,
+    /// `prio_rr[c-1]`: Priority(dst prefetch, RR over `c` live shard
+    /// streams at indices 1..=c).
+    prio_rr: Vec<Arc<Merge>>,
 }
 
-impl ForeGraph {
-    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+impl ForeGraphProgram {
+    pub fn compile(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
         let interval = cfg.foregraph_interval;
         let (graph, perm) = if cfg.has(Optimization::StrideMapping) {
             let q = (g.num_vertices + interval - 1) / interval.max(1);
@@ -52,6 +74,7 @@ impl ForeGraph {
         let part = IntervalShardPartitioning::new(&graph, interval);
         let n = g.num_vertices;
         let q = part.num_intervals();
+        let val_base = 0u64;
         let mut cursor = (n as u64 * 4 + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
         let mut shard_base = vec![vec![0u64; q]; q];
         for i in 0..q {
@@ -61,14 +84,48 @@ impl ForeGraph {
                 cursor += (bytes + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
             }
         }
-        ForeGraph {
+
+        let window = cfg.window;
+        let pes = cfg.num_pes.max(1);
+        let mut pre_stream = Vec::with_capacity(q);
+        let mut writeback = Vec::with_capacity(q);
+        for i in 0..q {
+            let iv = part.intervals[i];
+            pre_stream.push(LineStream::independent(
+                StreamClass::Prefetch,
+                MemKind::Read,
+                LineSource::seq(val_base + iv.start as u64 * 4, iv.len() as u64 * 4),
+            ));
+            writeback.push(Phase::single(
+                StreamClass::Writes,
+                MemKind::Write,
+                LineSource::seq(val_base + iv.start as u64 * 4, iv.len() as u64 * 4),
+                window,
+            ));
+        }
+        let rr_merge = (1..=pes).map(|k| Arc::new(Merge::rr(0..k))).collect();
+        let prio_single = Arc::new(Merge::Priority(vec![Merge::Leaf(0), Merge::Leaf(1)]));
+        let prio_rr = (1..=pes)
+            .map(|c| {
+                Arc::new(Merge::Priority(vec![
+                    Merge::Leaf(0),
+                    Merge::RoundRobin((1..=c).map(Merge::Leaf).collect()),
+                ]))
+            })
+            .collect();
+
+        ForeGraphProgram {
             part,
             perm,
             n,
             m: g.num_edges(),
             cfg: cfg.clone(),
-            val_base: 0,
             shard_base,
+            pre_stream,
+            writeback,
+            rr_merge,
+            prio_single,
+            prio_rr,
         }
     }
 
@@ -90,14 +147,8 @@ impl ForeGraph {
             }
         }
     }
-}
 
-impl Accelerator for ForeGraph {
-    fn name(&self) -> &'static str {
-        "ForeGraph"
-    }
-
-    fn run(&mut self, p0: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+    pub fn execute(&self, p0: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
         assert!(
             !p0.kind.weighted(),
             "ForeGraph does not support weighted problems (Tab. 1)"
@@ -138,6 +189,7 @@ impl Accelerator for ForeGraph {
         let mut metrics = RunMetrics::default();
         let mut cursor = 0u64;
         let max_iters = p.kind.fixed_iterations().unwrap_or(u32::MAX);
+        let mut scratch = PhaseScratch::new();
 
         loop {
             metrics.iterations += 1;
@@ -171,21 +223,16 @@ impl Accelerator for ForeGraph {
                 // --- Source interval prefetches (one per active PE) ---
                 let mut pre_streams = Vec::new();
                 for &i in &group {
-                    let iv = self.part.intervals[i];
-                    pre_streams.push(LineStream::independent(
-                        StreamClass::Prefetch,
-                        MemKind::Read,
-                        LineSource::seq(self.val_base + iv.start as u64 * 4, iv.len() as u64 * 4),
-                    ));
-                    metrics.values_read += iv.len() as u64;
+                    pre_streams.push(self.pre_stream[i].clone());
+                    metrics.values_read += self.part.intervals[i].len() as u64;
                 }
                 let k = pre_streams.len();
                 let pre_phase = Phase {
                     streams: pre_streams,
-                    merge: Merge::rr(0..k),
+                    merge: Arc::clone(&self.rr_merge[k - 1]),
                     window,
                 };
-                cursor = run_phase(mem, &pre_phase, cursor).end_cycle;
+                cursor = run_phase_with(mem, &pre_phase, cursor, &mut scratch).end_cycle;
 
                 // --- Per destination interval: prefetch, edges, write ---
                 for j in 0..q {
@@ -229,13 +276,9 @@ impl Accelerator for ForeGraph {
                     // unshuffled -> plain sum, streams merged round-robin.
                     let mut streams = Vec::new();
                     // dst interval prefetch first
-                    streams.push(LineStream::independent(
-                        StreamClass::Prefetch,
-                        MemKind::Read,
-                        LineSource::seq(self.val_base + jv.start as u64 * 4, jv.len() as u64 * 4),
-                    ));
+                    streams.push(self.pre_stream[j].clone());
                     metrics.values_read += jv.len() as u64;
-                    let edge_merge;
+                    let merge;
                     if shuf {
                         let max_len = live
                             .iter()
@@ -250,13 +293,11 @@ impl Accelerator for ForeGraph {
                             MemKind::Read,
                             LineSource::seq(self.shard_base[live[0]][j], bytes),
                         ));
-                        edge_merge = Merge::Leaf(1);
+                        merge = Arc::clone(&self.prio_single);
                     } else {
-                        let mut leaves = Vec::new();
                         for &i in &live {
                             let len = self.part.shards[i][j].len() as u64;
                             metrics.edges_read += len;
-                            leaves.push(Merge::Leaf(streams.len()));
                             streams.push(LineStream::independent(
                                 StreamClass::Edges,
                                 MemKind::Read,
@@ -266,27 +307,22 @@ impl Accelerator for ForeGraph {
                                 ),
                             ));
                         }
-                        edge_merge = Merge::RoundRobin(leaves);
+                        merge = Arc::clone(&self.prio_rr[live.len() - 1]);
                     }
                     // Edge streams wait on the dst prefetch? Fig. 5 reads
                     // edges after the interval prefetch; model via
                     // priority: prefetch first, then edges.
                     let phase = Phase {
-                        merge: Merge::Priority(vec![Merge::Leaf(0), edge_merge]),
                         streams,
+                        merge,
                         window,
                     };
-                    cursor = run_phase(mem, &phase, cursor).end_cycle;
+                    cursor = run_phase_with(mem, &phase, cursor, &mut scratch).end_cycle;
 
                     // Destination interval written back sequentially.
-                    let wb = Phase::single(
-                        StreamClass::Writes,
-                        MemKind::Write,
-                        LineSource::seq(self.val_base + jv.start as u64 * 4, jv.len() as u64 * 4),
-                        window,
-                    );
                     metrics.values_written += jv.len() as u64;
-                    cursor = run_phase(mem, &wb, cursor).end_cycle;
+                    cursor =
+                        run_phase_with(mem, &self.writeback[j], cursor, &mut scratch).end_cycle;
                 }
             }
 
@@ -326,6 +362,41 @@ impl Accelerator for ForeGraph {
             // Filled in by SimSpec::run when pattern analysis is on.
             patterns: None,
         }
+    }
+}
+
+/// ForeGraph simulator instance: a handle on a compiled
+/// [`ForeGraphProgram`]. (Cross-thread program sharing happens one
+/// level up, via `Arc<PhaseProgram>`.)
+pub struct ForeGraph {
+    program: ForeGraphProgram,
+}
+
+impl ForeGraph {
+    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+        ForeGraph {
+            program: ForeGraphProgram::compile(g, cfg),
+        }
+    }
+
+    pub fn num_intervals(&self) -> usize {
+        self.program.num_intervals()
+    }
+
+    /// Undo the stride permutation on a value vector (for result
+    /// verification).
+    pub fn unpermute(&self, values: &[f32]) -> Vec<f32> {
+        self.program.unpermute(values)
+    }
+}
+
+impl Accelerator for ForeGraph {
+    fn name(&self) -> &'static str {
+        "ForeGraph"
+    }
+
+    fn run(&mut self, p0: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.program.execute(p0, mem)
     }
 }
 
@@ -429,7 +500,7 @@ mod tests {
         let g = preferential_attachment(1000, 4, 5);
         let cfg = AcceleratorConfig::default().with(Optimization::StrideMapping);
         let fg = ForeGraph::new(&g, &cfg);
-        let perm = fg.perm.clone().unwrap();
+        let perm = fg.program.perm.clone().unwrap();
         let renamed_vals: Vec<f32> = {
             // value[renamed] = original index as f32
             let mut v = vec![0f32; 1000];

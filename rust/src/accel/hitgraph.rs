@@ -14,6 +14,15 @@
 //! combining), `Cmb.` update combining (same-destination updates merge
 //! in the shuffle, `u < |V| x p`), `Filt.` update filtering by the
 //! active-vertex bitmap.
+//!
+//! Split compile/execute (see [`crate::accel::program`]):
+//! [`HitGraphProgram`] owns the partitioning (including the `Sort`
+//! pass — the expensive compile step), the partition→channel
+//! assignment and the flattened *channel-local* address tables; only
+//! the region bases of the concrete [`MemorySystem`] are added at
+//! execute time, so one compiled program serves every memory
+//! technology. Scatter/gather wave phases stay dynamic — their
+//! composition (active partitions, queue contents) is value-dependent.
 
 use super::config::{AcceleratorConfig, Optimization};
 use super::stream::{seq_lines, Fanout, LineSource, LineStream, Merge, Phase, StreamClass};
@@ -23,34 +32,29 @@ use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
 use crate::graph::edgelist::Edge;
 use crate::graph::EdgeList;
 use crate::partition::horizontal::HorizontalPartitioning;
-use crate::sim::driver::run_phase;
+use crate::sim::driver::{run_phase_with, PhaseScratch};
 use crate::sim::metrics::{RunMetrics, SimReport};
 
-/// Per-channel address map.
-struct ChannelLayout {
-    /// Vertex values of the partitions owned by this channel.
-    val_base: u64,
-    /// Edge arrays, per owned partition (indexed by local slot).
-    edge_base: Vec<u64>,
-    /// Update queues, per owned partition.
-    upd_base: Vec<u64>,
-}
-
-/// HitGraph simulator instance.
-pub struct HitGraph {
+/// Compiled HitGraph program (iteration- and memory-invariant
+/// artifacts; addresses are channel-local until execute adds the
+/// memory system's region bases).
+pub struct HitGraphProgram {
     part: HorizontalPartitioning,
     n: usize,
     m: usize,
     cfg: AcceleratorConfig,
-    /// partition -> channel, partition -> local slot on that channel.
+    /// partition -> owning channel.
     chan_of: Vec<usize>,
-    slot_of: Vec<usize>,
-    layout: Vec<ChannelLayout>,
     edge_bytes: u64,
+    /// Channel-local byte addresses, per partition: value array,
+    /// edge array, update-queue block.
+    val_local: Vec<u64>,
+    edge_local: Vec<u64>,
+    upd_local: Vec<u64>,
 }
 
-impl HitGraph {
-    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+impl HitGraphProgram {
+    pub fn compile(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
         // At least one partition per channel, so every PE has work
         // (HitGraph assigns partitions to channels beforehand).
         let channels_wanted = cfg.channels.max(1);
@@ -64,50 +68,50 @@ impl HitGraph {
         let k = part.num_partitions();
         let channels = cfg.channels.max(1);
         let chan_of: Vec<usize> = (0..k).map(|q| q % channels).collect();
-        let mut slot_of = vec![0usize; k];
-        let mut next_slot = vec![0usize; channels];
-        for q in 0..k {
-            slot_of[q] = next_slot[chan_of[q]];
-            next_slot[chan_of[q]] += 1;
-        }
         let edge_bytes = g.edge_bytes();
         // Channel-local layout: values, then edges, then update queues.
-        let mut layout = Vec::with_capacity(channels);
+        // Flattened to per-partition local addresses.
+        let mut val_region_base = vec![0u64; channels];
+        let mut edge_local = vec![0u64; k];
+        let mut upd_local = vec![0u64; k];
+        let block_records = 2 * g.num_edges() as u64 / ((k * k) as u64).max(1) + 64;
         for c in 0..channels {
             let owned: Vec<usize> = (0..k).filter(|&q| chan_of[q] == c).collect();
             let mut cursor = 0u64;
-            let val_base = cursor;
+            val_region_base[c] = cursor;
             let vals: u64 = owned.iter().map(|&q| part.intervals[q].len() as u64).sum();
             cursor += (vals * 4 + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
-            let mut edge_base = Vec::new();
             for &q in &owned {
-                edge_base.push(cursor);
+                edge_local[q] = cursor;
                 let bytes = part.edges[q].len() as u64 * edge_bytes;
                 cursor += (bytes + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
             }
-            let mut upd_base = Vec::new();
             // one block per producing partition per destination queue
-            let block_records = 2 * g.num_edges() as u64 / ((k * k) as u64).max(1) + 64;
-            for &_q in &owned {
-                upd_base.push(cursor);
+            for &q in &owned {
+                upd_local[q] = cursor;
                 let bytes = block_records * 8 * k as u64;
                 cursor += (bytes + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
             }
-            layout.push(ChannelLayout {
-                val_base,
-                edge_base,
-                upd_base,
-            });
         }
-        HitGraph {
+        // Per-partition value addresses: each channel's value region
+        // holds its owned partitions' intervals back to back.
+        let mut val_local = vec![0u64; k];
+        let mut val_offset = val_region_base;
+        for q in 0..k {
+            let c = chan_of[q];
+            val_local[q] = val_offset[c];
+            val_offset[c] += part.intervals[q].len() as u64 * 4;
+        }
+        HitGraphProgram {
             part,
             n: g.num_vertices,
             m: g.num_edges(),
             cfg: cfg.clone(),
             chan_of,
-            slot_of,
-            layout,
             edge_bytes,
+            val_local,
+            edge_local,
+            upd_local,
         }
     }
 
@@ -118,23 +122,15 @@ impl HitGraph {
     /// Global address of partition `q`'s value array (within its
     /// channel's region).
     fn val_addr(&self, mem: &MemorySystem, q: usize) -> u64 {
-        let c = self.chan_of[q];
-        // values of partitions with smaller slot on the same channel
-        let offset: u64 = (0..q)
-            .filter(|&r| self.chan_of[r] == c)
-            .map(|r| self.part.intervals[r].len() as u64 * 4)
-            .sum();
-        mem.region_base(c) + self.layout[c].val_base + offset
+        mem.region_base(self.chan_of[q]) + self.val_local[q]
     }
 
     fn edge_addr(&self, mem: &MemorySystem, q: usize) -> u64 {
-        let c = self.chan_of[q];
-        mem.region_base(c) + self.layout[c].edge_base[self.slot_of[q]]
+        mem.region_base(self.chan_of[q]) + self.edge_local[q]
     }
 
     fn upd_addr(&self, mem: &MemorySystem, q: usize) -> u64 {
-        let c = self.chan_of[q];
-        mem.region_base(c) + self.layout[c].upd_base[self.slot_of[q]]
+        mem.region_base(self.chan_of[q]) + self.upd_local[q]
     }
 
     /// Update queues are blocked per *producing* partition so that
@@ -152,14 +148,8 @@ impl HitGraph {
         let block = self.upd_block_records();
         self.upd_addr(mem, j) + (q as u64 * block + rec.min(block - 1)) * 8
     }
-}
 
-impl Accelerator for HitGraph {
-    fn name(&self) -> &'static str {
-        "HitGraph"
-    }
-
-    fn run(&mut self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+    pub fn execute(&self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
         let n = self.n;
         let k = self.part.num_partitions();
         let channels = self.cfg.channels.max(1).min(mem.num_channels());
@@ -175,6 +165,7 @@ impl Accelerator for HitGraph {
         let mut cursor = 0u64;
         let max_iters = p.kind.fixed_iterations().unwrap_or(u32::MAX);
         let per = self.part.intervals.first().map_or(1, |i| i.len().max(1));
+        let mut scratch = PhaseScratch::new();
 
         loop {
             metrics.iterations += 1;
@@ -318,10 +309,10 @@ impl Accelerator for HitGraph {
                 }
                 let phase = Phase {
                     streams,
-                    merge: Merge::RoundRobin(pe_trees),
+                    merge: Merge::RoundRobin(pe_trees).into(),
                     window,
                 };
-                cursor = run_phase(mem, &phase, cursor).end_cycle;
+                cursor = run_phase_with(mem, &phase, cursor, &mut scratch).end_cycle;
             }
             // Reset updates_rw double-count (we add reads below).
 
@@ -445,10 +436,10 @@ impl Accelerator for HitGraph {
                 }
                 let phase = Phase {
                     streams,
-                    merge: Merge::RoundRobin(pe_trees),
+                    merge: Merge::RoundRobin(pe_trees).into(),
                     window,
                 };
-                cursor = run_phase(mem, &phase, cursor).end_cycle;
+                cursor = run_phase_with(mem, &phase, cursor, &mut scratch).end_cycle;
             }
 
             prev_changed = changed_now;
@@ -475,6 +466,35 @@ impl Accelerator for HitGraph {
             // Filled in by SimSpec::run when pattern analysis is on.
             patterns: None,
         }
+    }
+}
+
+/// HitGraph simulator instance: a handle on a compiled
+/// [`HitGraphProgram`]. (Cross-thread program sharing happens one
+/// level up, via `Arc<PhaseProgram>`.)
+pub struct HitGraph {
+    program: HitGraphProgram,
+}
+
+impl HitGraph {
+    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+        HitGraph {
+            program: HitGraphProgram::compile(g, cfg),
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.program.num_partitions()
+    }
+}
+
+impl Accelerator for HitGraph {
+    fn name(&self) -> &'static str {
+        "HitGraph"
+    }
+
+    fn run(&mut self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.program.execute(p, mem)
     }
 }
 
@@ -594,5 +614,23 @@ mod tests {
         let r = acc.run(&p, &mut mem);
         assert_eq!(r.metrics.iterations, golden.iterations);
         let _ = values_agree(ProblemKind::Wcc, &golden.values, &golden.values);
+    }
+
+    #[test]
+    fn program_relocates_across_memory_technologies() {
+        // One compiled program, executed on DDR4 and on HBM (different
+        // region bases): both must complete every request; the HBM run
+        // must not alias DDR4 addressing (distinct stats are expected,
+        // identical request counts are required).
+        let g = erdos_renyi(1200, 7200, 7);
+        let cfg = AcceleratorConfig::all_optimizations().with_channels(2);
+        let program = HitGraphProgram::compile(&g, &cfg);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let mut m_ddr = MemorySystem::with_mode(DramSpec::ddr4_2400(2), ChannelMode::Region);
+        let mut m_hbm = MemorySystem::with_mode(DramSpec::hbm_1000(2), ChannelMode::Region);
+        let r_ddr = program.execute(&p, &mut m_ddr);
+        let r_hbm = program.execute(&p, &mut m_hbm);
+        assert_eq!(r_ddr.metrics, r_hbm.metrics);
+        assert_eq!(r_ddr.dram.requests(), r_hbm.dram.requests());
     }
 }

@@ -13,11 +13,18 @@
 //! data-faithful) while emitting the off-chip request streams of
 //! Figs. 4–7 through the [`stream`] vocabulary, co-simulated against
 //! the DRAM model by [`crate::sim::driver`].
+//!
+//! Every model is split compile/execute: the [`program`] layer holds
+//! the memory-independent, iteration-invariant artifacts
+//! ([`PhaseProgram`]), built once per (accelerator, workload,
+//! weightedness, config) and replayed by `Arc` reference — see
+//! [`crate::sim::Session`]'s program cache.
 
 pub mod accugraph;
 pub mod config;
 pub mod foregraph;
 pub mod hitgraph;
+pub mod program;
 pub mod stream;
 pub mod thundergp;
 
@@ -25,6 +32,7 @@ pub use accugraph::AccuGraph;
 pub use config::{AcceleratorConfig, AcceleratorKind, Optimization};
 pub use foregraph::ForeGraph;
 pub use hitgraph::HitGraph;
+pub use program::PhaseProgram;
 pub use thundergp::ThunderGp;
 
 use crate::algo::problem::GraphProblem;

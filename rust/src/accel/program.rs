@@ -1,0 +1,199 @@
+//! Compile-once phase programs: the compile/execute split of the
+//! accelerator models.
+//!
+//! Simulating one spec breaks into two very different kinds of work:
+//!
+//! * **Compile** — everything that depends only on (accelerator,
+//!   workload, configuration) plus the problem's *weightedness* (the
+//!   12 B vs 8 B edge layout): partitioning the graph (incl.
+//!   `Sort`/`Map.` passes), laying out the data structures, building
+//!   the [`LineSource`] descriptors, the compressed [`Fanout`] release
+//!   schedules and the merge trees. This is memory-independent and
+//!   iteration-invariant.
+//! * **Execute** — everything value- or memory-dependent: running the
+//!   algorithm semantics, building the dynamic streams (BFS frontier
+//!   write-backs, AccuGraph skip decisions, HitGraph update queues)
+//!   against the cached skeleton, and driving the phases through a
+//!   concrete [`MemorySystem`].
+//!
+//! A [`PhaseProgram`] is the compile half, frozen. It is immutable and
+//! `Send + Sync`, so a sweep shares one compiled program across worker
+//! threads by `Arc` — [`crate::sim::Session`] keys its program cache
+//! on the memory-independent sub-key of a spec
+//! ([`crate::sim::SimSpec::program_key`]), which is how a
+//! `mem_techs × channels × problems` sweep compiles each workload
+//! once per channel count and reuses it across every memory
+//! technology and problem kind.
+//! Multi-channel programs store *channel-relative* addresses and are
+//! relocated onto the concrete system's region bases at execute time
+//! ([`LineSource::rebase`]), which is what makes one program valid
+//! for both DDR4 and HBM region layouts.
+//!
+//! What is deliberately **not** cached: anything derived from problem
+//! values. Frontier-dependent gathers, update-queue contents and skip
+//! decisions are rebuilt every iteration — caching them would bake
+//! one execution's data into another's. Execution is bit-identical to
+//! a fresh compile (`tests/program_cache.rs` and the
+//! `stream_equivalence` suite assert reports, traces and pattern
+//! summaries are equal).
+//!
+//! ```
+//! use graphmem::accel::AcceleratorKind;
+//! use graphmem::algo::problem::ProblemKind;
+//! use graphmem::graph::DatasetId;
+//! use graphmem::sim::SimSpec;
+//!
+//! let spec = SimSpec::builder()
+//!     .accelerator(AcceleratorKind::AccuGraph)
+//!     .graph(DatasetId::Sd)
+//!     .problem(ProblemKind::Bfs)
+//!     .build()
+//!     .unwrap();
+//! // Compile once, execute twice: bit-identical to fresh compiles.
+//! let program = spec.compile_program();
+//! let a = spec.run_with_program(&program);
+//! let b = spec.run_with_program(&program);
+//! assert_eq!(a, b);
+//! assert_eq!(a, spec.run()); // fresh compile agrees too
+//! ```
+//!
+//! [`LineSource`]: crate::accel::stream::LineSource
+//! [`LineSource::rebase`]: crate::accel::stream::LineSource::rebase
+//! [`Fanout`]: crate::accel::stream::Fanout
+
+use super::accugraph::AccuGraphProgram;
+use super::config::{AcceleratorConfig, AcceleratorKind};
+use super::foregraph::ForeGraphProgram;
+use super::hitgraph::HitGraphProgram;
+use super::thundergp::ThunderGpProgram;
+use crate::algo::problem::GraphProblem;
+use crate::dram::MemorySystem;
+use crate::graph::EdgeList;
+use crate::sim::metrics::SimReport;
+use crate::sim::spec::ProgramKey;
+
+/// A compiled, reusable phase program for one accelerator model (see
+/// the [module docs](self)). Build with [`PhaseProgram::compile`],
+/// replay with [`PhaseProgram::execute`] as many times as needed —
+/// executions are independent and bit-identical.
+pub struct PhaseProgram {
+    kind: AcceleratorKind,
+    model: Model,
+    /// The spec sub-key this program was compiled for — stamped by
+    /// [`crate::sim::SimSpec::compile_program`] so
+    /// `run_with_program` can reject a program/spec mismatch (a
+    /// program compiled for a different workload or config would
+    /// otherwise silently simulate the wrong graph under this spec's
+    /// label). `None` for hand-compiled programs, which still carry
+    /// the O(1) structural stamp below.
+    key: Option<ProgramKey>,
+    /// Structural stamp of the compile inputs, recorded for *every*
+    /// program (incl. hand-compiled ones): checked by
+    /// `run_with_program` so a program for a different-shaped graph
+    /// or configuration cannot silently execute under the wrong spec.
+    graph_vertices: usize,
+    graph_edges: usize,
+    graph_weighted: bool,
+    config: AcceleratorConfig,
+}
+
+enum Model {
+    AccuGraph(AccuGraphProgram),
+    ForeGraph(ForeGraphProgram),
+    HitGraph(HitGraphProgram),
+    ThunderGp(ThunderGpProgram),
+}
+
+impl PhaseProgram {
+    /// Compile the iteration-invariant, memory-independent artifacts
+    /// for `kind` on this workload + configuration. This is the
+    /// expensive half of a simulation (partitioning, sorting,
+    /// renaming, descriptor construction).
+    pub fn compile(kind: AcceleratorKind, g: &EdgeList, cfg: &AcceleratorConfig) -> PhaseProgram {
+        let model = match kind {
+            AcceleratorKind::AccuGraph => Model::AccuGraph(AccuGraphProgram::compile(g, cfg)),
+            AcceleratorKind::ForeGraph => Model::ForeGraph(ForeGraphProgram::compile(g, cfg)),
+            AcceleratorKind::HitGraph => Model::HitGraph(HitGraphProgram::compile(g, cfg)),
+            AcceleratorKind::ThunderGp => Model::ThunderGp(ThunderGpProgram::compile(g, cfg)),
+        };
+        PhaseProgram {
+            kind,
+            model,
+            key: None,
+            graph_vertices: g.num_vertices,
+            graph_edges: g.num_edges(),
+            graph_weighted: g.weighted,
+            config: cfg.clone(),
+        }
+    }
+
+    /// O(1) structural guard: does this program's compile input match
+    /// the given graph + configuration? (Counts, weightedness and the
+    /// full config — not a content digest; the
+    /// [`crate::sim::SimSpec::compile_program`] path additionally
+    /// carries the exact [`ProgramKey`], incl. workload identity.)
+    pub fn compiled_for(&self, g: &EdgeList, cfg: &AcceleratorConfig) -> bool {
+        self.graph_vertices == g.num_vertices
+            && self.graph_edges == g.num_edges()
+            && self.graph_weighted == g.weighted
+            && self.config == *cfg
+    }
+
+    /// Stamp the spec sub-key this program was compiled from (see
+    /// [`crate::sim::SimSpec::compile_program`]).
+    pub(crate) fn with_key(mut self, key: ProgramKey) -> PhaseProgram {
+        self.key = Some(key);
+        self
+    }
+
+    /// The spec sub-key this program was compiled for, when known.
+    pub fn key(&self) -> Option<&ProgramKey> {
+        self.key.as_ref()
+    }
+
+    pub fn kind(&self) -> AcceleratorKind {
+        self.kind
+    }
+
+    /// Execute the program against a problem instance and a memory
+    /// system. Value-dependent streams are built per call; the
+    /// compiled skeleton is only read, so `&self` — any number of
+    /// executions (incl. concurrent ones on separate memory systems)
+    /// share one program.
+    pub fn execute(&self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        match &self.model {
+            Model::AccuGraph(m) => m.execute(p, mem),
+            Model::ForeGraph(m) => m.execute(p, mem),
+            Model::HitGraph(m) => m.execute(p, mem),
+            Model::ThunderGp(m) => m.execute(p, mem),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::problem::ProblemKind;
+    use crate::dram::{ChannelMode, DramSpec};
+    use crate::graph::synthetic::erdos_renyi;
+
+    #[test]
+    fn compile_dispatches_every_kind() {
+        let g = erdos_renyi(400, 2400, 0xC0);
+        for kind in AcceleratorKind::all() {
+            let cfg = AcceleratorConfig::default();
+            let program = PhaseProgram::compile(kind, &g, &cfg);
+            assert_eq!(program.kind(), kind);
+            let p = GraphProblem::new(ProblemKind::Bfs, &g);
+            let mode = if kind.multi_channel() {
+                ChannelMode::Region
+            } else {
+                ChannelMode::InterleaveLine
+            };
+            let mut mem = MemorySystem::with_mode(DramSpec::ddr4_2400(1), mode);
+            let r = program.execute(&p, &mut mem);
+            assert!(r.cycles > 0);
+            assert_eq!(r.accelerator, kind.name());
+        }
+    }
+}

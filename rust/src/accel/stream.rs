@@ -48,7 +48,7 @@
 //!
 //! let phase = Phase {
 //!     streams: vec![LineStream::independent(StreamClass::Values, MemKind::Read, src)],
-//!     merge: Merge::Leaf(0),
+//!     merge: Merge::Leaf(0).into(),
 //!     window: 8,
 //! };
 //! assert_eq!(phase.total_requests(), 3);
@@ -212,6 +212,47 @@ impl LineSource {
         }
     }
 
+    /// The same source with every address shifted by `delta` bytes —
+    /// how a compiled program's channel-relative descriptors are
+    /// relocated onto a concrete memory system's region bases (see
+    /// [`crate::accel::program`]). Cheap for every variant: `Gather`
+    /// shares its index set through the `Arc`; only the `Explicit`
+    /// escape hatch pays a copy.
+    ///
+    /// `delta` must be cache-line aligned, so that line boundaries —
+    /// and therefore adjacent-line merging and line counts — are
+    /// preserved: `rebased.line(i) == self.line(i) + delta` for all i.
+    pub fn rebase(&self, delta: u64) -> LineSource {
+        debug_assert_eq!(
+            delta % CACHE_LINE,
+            0,
+            "rebase must preserve cache-line boundaries"
+        );
+        match self {
+            LineSource::Seq { base, bytes } => LineSource::Seq {
+                base: base + delta,
+                bytes: *bytes,
+            },
+            LineSource::Strided { base, stride, count } => LineSource::Strided {
+                base: base + delta,
+                stride: *stride,
+                count: *count,
+            },
+            LineSource::Gather {
+                indices,
+                elem_bytes,
+                base,
+            } => LineSource::Gather {
+                indices: Arc::clone(indices),
+                elem_bytes: *elem_bytes,
+                base: base + delta,
+            },
+            LineSource::Explicit(lines) => {
+                LineSource::Explicit(lines.iter().map(|a| a + delta).collect())
+            }
+        }
+    }
+
     /// Materialize every line address (test/reference path).
     pub fn materialize(&self) -> Vec<u64> {
         (0..self.len()).map(|i| self.line(i)).collect()
@@ -236,8 +277,10 @@ pub enum Fanout {
     /// zeros-then-n vector.
     AfterLast(u32),
     /// Irregular: `v[i]` requests release on parent completion `i`;
-    /// `v.len()` must equal the parent stream's length.
-    PerParent(Vec<u32>),
+    /// `v.len()` must equal the parent stream's length. `Arc` so a
+    /// compiled program's release schedule is replayed by reference —
+    /// cloning the fan-out never copies the vector.
+    PerParent(Arc<[u32]>),
 }
 
 impl Fanout {
@@ -283,7 +326,7 @@ impl Fanout {
 
 impl From<Vec<u32>> for Fanout {
     fn from(v: Vec<u32>) -> Fanout {
-        Fanout::PerParent(v)
+        Fanout::PerParent(v.into())
     }
 }
 
@@ -405,10 +448,14 @@ impl Merge {
 
 /// One phase of accelerator execution: streams + merge tree + the
 /// outstanding-request window of the PE's memory port.
+///
+/// The merge tree is held by `Arc`: a compiled program (see
+/// [`crate::accel::program`]) builds each arbiter tree once and every
+/// per-iteration phase assembly replays it by reference.
 #[derive(Clone, Debug)]
 pub struct Phase {
     pub streams: Vec<LineStream>,
-    pub merge: Merge,
+    pub merge: Arc<Merge>,
     /// Maximum requests in flight.
     pub window: usize,
 }
@@ -424,7 +471,7 @@ impl Phase {
     ) -> Phase {
         Phase {
             streams: vec![LineStream::independent(class, kind, source)],
-            merge: Merge::Leaf(0),
+            merge: Arc::new(Merge::Leaf(0)),
             window,
         }
     }
@@ -472,7 +519,7 @@ impl Phase {
             .collect();
         Phase {
             streams,
-            merge: self.merge.clone(),
+            merge: Arc::clone(&self.merge),
             window: self.window,
         }
     }
@@ -570,7 +617,7 @@ mod tests {
             (0..plen).map(|i| last.released_by(i, plen)).collect::<Vec<_>>(),
             vec![0, 0, 0, 0, 7]
         );
-        let per = Fanout::PerParent(vec![1, 0, 3]);
+        let per = Fanout::PerParent(vec![1, 0, 3].into());
         assert_eq!(per.total(3), 4);
         assert_eq!(per.released_by(2, 3), 3);
         assert_eq!(uni.heap_bytes() + last.heap_bytes(), 0);
@@ -635,7 +682,7 @@ mod tests {
         );
         let phase = Phase {
             streams: vec![parent, child],
-            merge: Merge::prio([1, 0]),
+            merge: Merge::prio([1, 0]).into(),
             window: 8,
         };
         let m = phase.materialized();

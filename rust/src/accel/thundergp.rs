@@ -13,6 +13,16 @@
 //!
 //! Optimization (§4.5): `Schd.` — greedy offline chunk-to-channel
 //! scheduling by predicted execution time.
+//!
+//! Split compile/execute (see [`crate::accel::program`]): ThunderGP's
+//! request streams are *entirely* value-independent, so
+//! [`ThunderGpProgram`] compiles the per-chunk source-value
+//! [`LineSource::Gather`] descriptors and their edge-line release
+//! fan-outs once (the seed rebuilt both — an O(|E|) pass with two
+//! allocations per chunk — every iteration), in channel-relative
+//! form; execution instantiates each partition's scatter and apply
+//! phase once per run against the concrete memory system's region
+//! bases and replays them by reference across iterations.
 
 use super::config::{AcceleratorConfig, Optimization};
 use super::stream::{Fanout, LineSource, LineStream, Merge, Phase, StreamClass};
@@ -22,15 +32,16 @@ use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
 use crate::graph::edgelist::Edge;
 use crate::graph::EdgeList;
 use crate::partition::vertical::VerticalPartitioning;
-use crate::sim::driver::run_phase;
+use crate::sim::driver::{run_phase_with, PhaseScratch};
 use crate::sim::metrics::{RunMetrics, SimReport};
 
-/// ThunderGP simulator instance.
-pub struct ThunderGp {
+/// Compiled ThunderGP program (iteration- and memory-invariant
+/// artifacts; addresses are channel-relative until execute adds the
+/// region bases).
+pub struct ThunderGpProgram {
     part: VerticalPartitioning,
     /// chunk -> channel assignment per partition (`Schd.` reorders it).
     chunk_channel: Vec<Vec<usize>>,
-    n: usize,
     m: usize,
     cfg: AcceleratorConfig,
     /// Channel-local bases: full value copy, per-partition chunk edges,
@@ -39,10 +50,17 @@ pub struct ThunderGp {
     edge_base: Vec<Vec<u64>>, // [q][chunk]
     upd_base: Vec<u64>,       // [q]
     edge_bytes: u64,
+    /// Per (partition, chunk): source-value gather descriptor
+    /// (channel-relative; `rebase` relocates it) — the semi-sequential
+    /// src loads through the duplicate-filtering value buffer.
+    src_gather: Vec<Vec<LineSource>>,
+    /// Per (partition, chunk): how many src-value lines each edge
+    /// line's completion releases.
+    src_fanout: Vec<Vec<Fanout>>,
 }
 
-impl ThunderGp {
-    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+impl ThunderGpProgram {
+    pub fn compile(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
         let channels = cfg.channels.max(1);
         let part = VerticalPartitioning::new(g, cfg.bram_values, channels);
         let chunk_channel = if cfg.has(Optimization::ChunkScheduling) {
@@ -75,34 +93,226 @@ impl ThunderGp {
             let bytes = part.intervals[q].len() as u64 * 4;
             cursor += (bytes + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
         }
-        ThunderGp {
+
+        // Per-chunk source gathers + edge-line release schedules. The
+        // line-merge pattern is computed channel-relative; region
+        // bases are cache-line aligned, so relocation preserves it.
+        let mut src_gather = Vec::with_capacity(part.num_partitions());
+        let mut src_fanout = Vec::with_capacity(part.num_partitions());
+        for q in 0..part.num_partitions() {
+            let mut gathers = Vec::with_capacity(part.chunks[q].len());
+            let mut fanouts = Vec::with_capacity(part.chunks[q].len());
+            for (c, chunk) in part.chunks[q].iter().enumerate() {
+                let src = LineSource::gather(val_base, 4, chunk.iter().map(|e| e.src as u64));
+                let nsrc = src.len();
+                let nedge =
+                    LineSource::seq(edge_base[q][c], chunk.len() as u64 * edge_bytes).len();
+                let mut efan = vec![0u32; nedge];
+                if nedge > 0 {
+                    let edges_per_line = (CACHE_LINE / edge_bytes).max(1) as usize;
+                    let mut prev = u64::MAX;
+                    let mut li = 0usize;
+                    for (ei, e) in chunk.iter().enumerate() {
+                        let line = (val_base + e.src as u64 * 4) / CACHE_LINE * CACHE_LINE;
+                        if line != prev {
+                            prev = line;
+                            let el = ei / edges_per_line;
+                            efan[el.min(nedge - 1)] += 1;
+                            li += 1;
+                        }
+                    }
+                    debug_assert_eq!(li, nsrc);
+                }
+                gathers.push(src);
+                fanouts.push(Fanout::PerParent(efan.into()));
+            }
+            src_gather.push(gathers);
+            src_fanout.push(fanouts);
+        }
+
+        ThunderGpProgram {
             part,
             chunk_channel,
-            n,
             m: g.num_edges(),
             cfg: cfg.clone(),
             val_base,
             edge_base,
             upd_base,
             edge_bytes,
+            src_gather,
+            src_fanout,
         }
     }
 
     pub fn num_partitions(&self) -> usize {
         self.part.num_partitions()
     }
-}
 
-impl Accelerator for ThunderGp {
-    fn name(&self) -> &'static str {
-        "ThunderGP"
+    /// The chunk each PE (= channel) of partition `q` processes under
+    /// the (possibly `Schd.`-reordered) assignment.
+    fn pe_chunks(&self, q: usize, channels: usize) -> Vec<usize> {
+        (0..channels.min(self.part.chunks[q].len()))
+            .map(|pe| {
+                self.chunk_channel[q]
+                    .iter()
+                    .position(|&ch| ch == pe)
+                    .unwrap_or(pe.min(self.part.chunks[q].len() - 1))
+            })
+            .collect()
     }
 
-    fn run(&mut self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
-        let _n = self.n;
+    /// Instantiate partition `q`'s scatter-gather phase against the
+    /// concrete memory system (adds region bases to the compiled
+    /// channel-relative descriptors). Iteration-invariant: built once
+    /// per run, replayed every iteration.
+    fn scatter_phase(&self, q: usize, pe_chunks: &[usize], mem: &MemorySystem) -> Phase {
+        let iv = self.part.intervals[q];
+        let window = self.cfg.window;
+        let mut streams: Vec<LineStream> = Vec::new();
+        let mut pe_trees: Vec<Merge> = Vec::new();
+        for (pe, &chunk_idx) in pe_chunks.iter().enumerate() {
+            let chunk: &[Edge] = &self.part.chunks[q][chunk_idx];
+            let region = mem.region_base(pe);
+            let base = streams.len();
+            // 1) prefetch destination interval values
+            let pre_src = LineSource::seq(
+                region + self.val_base + iv.start as u64 * 4,
+                iv.len() as u64 * 4,
+            );
+            let npre = pre_src.len();
+            streams.push(LineStream::independent(
+                StreamClass::Prefetch,
+                MemKind::Read,
+                pre_src,
+            ));
+            // 2) chunk edges, chained to the prefetch end
+            let edge_src = LineSource::seq(
+                region + self.edge_base[q][chunk_idx],
+                chunk.len() as u64 * self.edge_bytes,
+            );
+            let nedge = edge_src.len();
+            streams.push(if npre == 0 {
+                LineStream::independent(StreamClass::Edges, MemKind::Read, edge_src)
+            } else {
+                LineStream::chained(
+                    StreamClass::Edges,
+                    MemKind::Read,
+                    edge_src,
+                    base,
+                    Fanout::AfterLast(nedge as u32),
+                )
+            });
+            // 3) source value loads: the compiled gather, relocated
+            // onto this channel's region; released by edge lines.
+            let src_src = self.src_gather[q][chunk_idx].rebase(region);
+            let nsrc = src_src.len();
+            streams.push(if nedge == 0 {
+                LineStream::independent(StreamClass::Values, MemKind::Read, src_src)
+            } else {
+                LineStream::chained(
+                    StreamClass::Values,
+                    MemKind::Read,
+                    src_src,
+                    base + 1,
+                    self.src_fanout[q][chunk_idx].clone(),
+                )
+            });
+            // 4) update write-back: n_q values sequential, after
+            // edge reading finishes — chain to last src load (or
+            // edge line when no src loads).
+            let upd_src = LineSource::seq(region + self.upd_base[q], iv.len() as u64 * 4);
+            let nupd = upd_src.len();
+            let (parent, plen) = if nsrc > 0 {
+                (base + 2, nsrc)
+            } else {
+                (base + 1, nedge)
+            };
+            if plen > 0 {
+                streams.push(LineStream::chained(
+                    StreamClass::Updates,
+                    MemKind::Write,
+                    upd_src,
+                    parent,
+                    Fanout::AfterLast(nupd as u32),
+                ));
+                pe_trees.push(Merge::prio([base + 3, base + 2, base + 1, base]));
+            } else {
+                streams.push(LineStream::independent(
+                    StreamClass::Updates,
+                    MemKind::Write,
+                    upd_src,
+                ));
+                pe_trees.push(Merge::prio([base + 3, base]));
+            }
+        }
+        Phase {
+            streams,
+            merge: Merge::RoundRobin(pe_trees).into(),
+            window,
+        }
+    }
+
+    /// Instantiate partition `q`'s apply phase: read update sets from
+    /// all channels, write the combined value back to every channel's
+    /// copy. Also iteration-invariant.
+    fn apply_phase(&self, q: usize, channels: usize, mem: &MemorySystem) -> Phase {
+        let iv = self.part.intervals[q];
+        let window = self.cfg.window;
+        let mut streams: Vec<LineStream> = Vec::new();
+        let mut reads = Vec::new();
+        for pe in 0..channels {
+            let region = mem.region_base(pe);
+            reads.push(streams.len());
+            streams.push(LineStream::independent(
+                StreamClass::Updates,
+                MemKind::Read,
+                LineSource::seq(region + self.upd_base[q], iv.len() as u64 * 4),
+            ));
+        }
+        let nread = LineSource::seq(self.upd_base[q], iv.len() as u64 * 4).len();
+        let mut trees: Vec<Merge> = reads.iter().map(|&i| Merge::Leaf(i)).collect();
+        for pe in 0..channels {
+            let region = mem.region_base(pe);
+            let wsrc = LineSource::seq(
+                region + self.val_base + iv.start as u64 * 4,
+                iv.len() as u64 * 4,
+            );
+            // barrier: writes released by the end of this
+            // channel's update read stream
+            if nread > 0 {
+                let nw = wsrc.len();
+                let idx = streams.len();
+                streams.push(LineStream::chained(
+                    StreamClass::Writes,
+                    MemKind::Write,
+                    wsrc,
+                    reads[pe],
+                    Fanout::AfterLast(nw as u32),
+                ));
+                trees.push(Merge::Leaf(idx));
+            }
+        }
+        Phase {
+            streams,
+            merge: Merge::RoundRobin(trees).into(),
+            window,
+        }
+    }
+
+    pub fn execute(&self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
         let k = self.part.num_partitions();
         let channels = self.cfg.channels.max(1).min(mem.num_channels());
-        let window = self.cfg.window;
+        let mut scratch = PhaseScratch::new();
+
+        // Every request stream of this model is value-independent:
+        // instantiate each partition's phases once, replay per
+        // iteration.
+        let pe_chunks: Vec<Vec<usize>> = (0..k).map(|q| self.pe_chunks(q, channels)).collect();
+        let scatter_phases: Vec<Phase> = (0..k)
+            .map(|q| self.scatter_phase(q, &pe_chunks[q], mem))
+            .collect();
+        let apply_phases: Vec<Phase> =
+            (0..k).map(|q| self.apply_phase(q, channels, mem)).collect();
 
         let mut values = p.init_values();
         let mut metrics = RunMetrics::default();
@@ -126,18 +336,8 @@ impl Accelerator for ThunderGp {
             for q in 0..k {
                 metrics.processed += 1;
                 let iv = self.part.intervals[q];
-                let mut streams: Vec<LineStream> = Vec::new();
-                let mut pe_trees: Vec<Merge> = Vec::new();
-                for pe in 0..channels.min(self.part.chunks[q].len()) {
-                    // chunk handled by channel `pe` under the schedule
-                    let chunk_idx = self
-                        .chunk_channel[q]
-                        .iter()
-                        .position(|&ch| ch == pe)
-                        .unwrap_or(pe.min(self.part.chunks[q].len() - 1));
+                for (pe, &chunk_idx) in pe_chunks[q].iter().enumerate() {
                     let chunk: &[Edge] = &self.part.chunks[q][chunk_idx];
-                    let region = mem.region_base(pe);
-
                     // Algorithm: accumulate into this channel's partial.
                     for e in chunk {
                         let u = p.combine(e.src, values[e.src as usize], e.weight);
@@ -147,109 +347,11 @@ impl Accelerator for ThunderGp {
                     }
                     metrics.edges_read += chunk.len() as u64;
                     metrics.values_read += iv.len() as u64; // dst prefetch
-
-                    let base = streams.len();
-                    // 1) prefetch destination interval values
-                    let pre_src = LineSource::seq(
-                        region + self.val_base + iv.start as u64 * 4,
-                        iv.len() as u64 * 4,
-                    );
-                    let npre = pre_src.len();
-                    streams.push(LineStream::independent(
-                        StreamClass::Prefetch,
-                        MemKind::Read,
-                        pre_src,
-                    ));
-                    // 2) chunk edges, chained to the prefetch end
-                    let edge_src = LineSource::seq(
-                        region + self.edge_base[q][chunk_idx],
-                        chunk.len() as u64 * self.edge_bytes,
-                    );
-                    let nedge = edge_src.len();
-                    streams.push(if npre == 0 {
-                        LineStream::independent(StreamClass::Edges, MemKind::Read, edge_src)
-                    } else {
-                        LineStream::chained(
-                            StreamClass::Edges,
-                            MemKind::Read,
-                            edge_src,
-                            base,
-                            Fanout::AfterLast(nedge as u32),
-                        )
-                    });
-                    // 3) source value loads: semi-sequential (sorted by
-                    // src); the vertex value buffer filters duplicates.
-                    let src_src = LineSource::gather(
-                        region + self.val_base,
-                        4,
-                        chunk.iter().map(|e| e.src as u64),
-                    );
-                    metrics.values_read += src_src.len() as u64 * (CACHE_LINE / 4);
-                    let nsrc = src_src.len();
-                    // distribute src-line releases over edge lines
-                    let mut efan = vec![0u32; nedge];
-                    if nedge > 0 {
-                        let edges_per_line = (CACHE_LINE / self.edge_bytes).max(1) as usize;
-                        let mut prev = u64::MAX;
-                        let mut li = 0usize;
-                        for (ei, e) in chunk.iter().enumerate() {
-                            let line = (region + self.val_base + e.src as u64 * 4) / CACHE_LINE
-                                * CACHE_LINE;
-                            if line != prev {
-                                prev = line;
-                                let el = ei / edges_per_line;
-                                efan[el.min(nedge - 1)] += 1;
-                                li += 1;
-                            }
-                        }
-                        debug_assert_eq!(li, nsrc);
-                    }
-                    streams.push(if nedge == 0 {
-                        LineStream::independent(StreamClass::Values, MemKind::Read, src_src)
-                    } else {
-                        LineStream::chained(
-                            StreamClass::Values,
-                            MemKind::Read,
-                            src_src,
-                            base + 1,
-                            efan,
-                        )
-                    });
-                    // 4) update write-back: n_q values sequential, after
-                    // edge reading finishes — chain to last src load (or
-                    // edge line when no src loads).
-                    let upd_src = LineSource::seq(region + self.upd_base[q], iv.len() as u64 * 4);
-                    let nupd = upd_src.len();
+                    metrics.values_read +=
+                        self.src_gather[q][chunk_idx].len() as u64 * (CACHE_LINE / 4);
                     metrics.updates_rw += iv.len() as u64;
-                    let (parent, plen) = if nsrc > 0 {
-                        (base + 2, nsrc)
-                    } else {
-                        (base + 1, nedge)
-                    };
-                    if plen > 0 {
-                        streams.push(LineStream::chained(
-                            StreamClass::Updates,
-                            MemKind::Write,
-                            upd_src,
-                            parent,
-                            Fanout::AfterLast(nupd as u32),
-                        ));
-                        pe_trees.push(Merge::prio([base + 3, base + 2, base + 1, base]));
-                    } else {
-                        streams.push(LineStream::independent(
-                            StreamClass::Updates,
-                            MemKind::Write,
-                            upd_src,
-                        ));
-                        pe_trees.push(Merge::prio([base + 3, base]));
-                    }
                 }
-                let phase = Phase {
-                    streams,
-                    merge: Merge::RoundRobin(pe_trees),
-                    window,
-                };
-                cursor = run_phase(mem, &phase, cursor).end_cycle;
+                cursor = run_phase_with(mem, &scatter_phases[q], cursor, &mut scratch).end_cycle;
             }
 
             // ----------------- Apply, one phase per partition ----------
@@ -279,48 +381,7 @@ impl Accelerator for ThunderGp {
                 metrics.updates_rw += iv.len() as u64 * channels as u64;
                 metrics.values_read += iv.len() as u64 * channels as u64;
 
-                // Streams: read update sets from all channels, write the
-                // combined value back to every channel's copy.
-                let mut streams: Vec<LineStream> = Vec::new();
-                let mut reads = Vec::new();
-                for pe in 0..channels {
-                    let region = mem.region_base(pe);
-                    reads.push(streams.len());
-                    streams.push(LineStream::independent(
-                        StreamClass::Updates,
-                        MemKind::Read,
-                        LineSource::seq(region + self.upd_base[q], iv.len() as u64 * 4),
-                    ));
-                }
-                let nread = LineSource::seq(self.upd_base[q], iv.len() as u64 * 4).len();
-                let mut trees: Vec<Merge> = reads.iter().map(|&i| Merge::Leaf(i)).collect();
-                for pe in 0..channels {
-                    let region = mem.region_base(pe);
-                    let wsrc = LineSource::seq(
-                        region + self.val_base + iv.start as u64 * 4,
-                        iv.len() as u64 * 4,
-                    );
-                    // barrier: writes released by the end of this
-                    // channel's update read stream
-                    if nread > 0 {
-                        let nw = wsrc.len();
-                        let idx = streams.len();
-                        streams.push(LineStream::chained(
-                            StreamClass::Writes,
-                            MemKind::Write,
-                            wsrc,
-                            reads[pe],
-                            Fanout::AfterLast(nw as u32),
-                        ));
-                        trees.push(Merge::Leaf(idx));
-                    }
-                }
-                let phase = Phase {
-                    streams,
-                    merge: Merge::RoundRobin(trees),
-                    window,
-                };
-                cursor = run_phase(mem, &phase, cursor).end_cycle;
+                cursor = run_phase_with(mem, &apply_phases[q], cursor, &mut scratch).end_cycle;
             }
 
             if metrics.iterations >= max_iters {
@@ -346,6 +407,35 @@ impl Accelerator for ThunderGp {
             // Filled in by SimSpec::run when pattern analysis is on.
             patterns: None,
         }
+    }
+}
+
+/// ThunderGP simulator instance: a handle on a compiled
+/// [`ThunderGpProgram`]. (Cross-thread program sharing happens one
+/// level up, via `Arc<PhaseProgram>`.)
+pub struct ThunderGp {
+    program: ThunderGpProgram,
+}
+
+impl ThunderGp {
+    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+        ThunderGp {
+            program: ThunderGpProgram::compile(g, cfg),
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.program.num_partitions()
+    }
+}
+
+impl Accelerator for ThunderGp {
+    fn name(&self) -> &'static str {
+        "ThunderGP"
+    }
+
+    fn run(&mut self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.program.execute(p, mem)
     }
 }
 
@@ -429,5 +519,30 @@ mod tests {
         let golden = run_golden(&p, &g, Propagation::TwoPhase);
         let r = run_ch(&g, ProblemKind::Sssp, 1, &AcceleratorConfig::default());
         assert_eq!(r.metrics.iterations, golden.iterations);
+    }
+
+    #[test]
+    fn compiled_gathers_match_inline_construction() {
+        // The compile-time src gathers, relocated by the region base,
+        // must reproduce exactly what building against the absolute
+        // addresses would (the seed's per-iteration construction).
+        let g = erdos_renyi(900, 5400, 8);
+        let cfg = AcceleratorConfig::default().with_channels(2);
+        let prog = ThunderGpProgram::compile(&g, &cfg);
+        let mem = MemorySystem::with_mode(DramSpec::hbm_1000(2), ChannelMode::Region);
+        for q in 0..prog.num_partitions() {
+            for (c, chunk) in prog.part.chunks[q].iter().enumerate() {
+                for pe in 0..2 {
+                    let region = mem.region_base(pe);
+                    let inline = LineSource::gather(
+                        region + prog.val_base,
+                        4,
+                        chunk.iter().map(|e| e.src as u64),
+                    );
+                    let compiled = prog.src_gather[q][c].rebase(region);
+                    assert_eq!(inline.materialize(), compiled.materialize());
+                }
+            }
+        }
     }
 }

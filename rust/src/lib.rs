@@ -21,7 +21,10 @@
 //!   AccuGraph, HitGraph, ForeGraph, ThunderGP, with every optimization
 //!   the paper ablates (prefetch/partition/shard skipping, edge
 //!   shuffling, stride mapping, edge sorting, update combining, update
-//!   filtering, chunk scheduling).
+//!   filtering, chunk scheduling). Each model is split compile/execute:
+//!   [`accel::program::PhaseProgram`] freezes the iteration-invariant,
+//!   memory-independent artifacts once per workload and is replayed by
+//!   `Arc` reference across sweeps.
 //! * [`trace`] — the access-pattern analysis subsystem: every off-chip
 //!   request carries a [`trace::Region`] tag (edges / vertices /
 //!   updates / payload) stamped at issue time, and the streaming

@@ -87,7 +87,9 @@ fn print_help() {
          USAGE:\n  graphmem list\n  graphmem datasets\n  \
          graphmem run <accel> <graph> <problem> [--dram ddr3|ddr4|hbm] [--channels N] [--no-opt]\n  \
          graphmem sweep [--accels a,b,..] [--graphs g,..] [--problems p,..] [--drams d,..]\n  \
-         \x20            [--channels n,..] [--threads N] [--no-opt] [--skip-unsupported]\n  \
+         \x20            [--channels n,..] [--threads N] [--no-opt] [--skip-unsupported] [--stats]\n  \
+         \x20            (--stats prints the session's cache summary: phase programs\n  \
+         \x20             compiled/reused, sim runs executed/memoized)\n  \
          graphmem trace <accel> <graph> <problem> [--dram ddr3|ddr4|hbm] [--channels N] [--out <file>]\n  \
          \x20            (issue-order request trace; --channels is validated against the DRAM's\n  \
          \x20             Tab. 3 maximum: 4 for DDR3/DDR4, 8 for HBM)\n  \
@@ -299,6 +301,17 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    if has_flag(args, "--stats") {
+        let st = session.stats();
+        println!(
+            "cache: programs {} compiled / {} reused; sim runs {} executed / {} memoized / {} duplicate-waits",
+            st.programs_compiled,
+            st.programs_reused,
+            st.sim_runs,
+            st.memo_hits,
+            st.duplicate_waits
+        );
+    }
     eprintln!(
         "{} runs ({} distinct simulations) in {wall:.2}s wall",
         runs.len(),

@@ -20,7 +20,14 @@
 //!   channel has capacity, instead of re-walking the merge tree after
 //!   every single completion;
 //! * once every request has been issued, the remaining in-flight tail
-//!   is retired with one [`MemorySystem::service_until`] call.
+//!   is retired with one [`MemorySystem::service_until`] call;
+//! * all per-phase working state (stream cursors, children adjacency,
+//!   the merge-tree arena, per-channel window accounting) lives in a
+//!   reusable [`PhaseScratch`] arena — a simulation allocates it once
+//!   and threads it through every [`run_phase_with`] call, so
+//!   steady-state phase execution performs no heap allocation at all
+//!   (the compiled-program layer, [`crate::accel::program`], does
+//!   exactly this).
 //!
 //! All of this is perf-only: issue order, arrival times and service
 //! order are bit-identical to the naive per-request loop (the
@@ -44,6 +51,7 @@ pub struct PhaseTelemetry {
 
 /// Per-stream execution state: a cursor over the line source plus the
 /// release bookkeeping for chained streams.
+#[derive(Default)]
 struct StreamState {
     /// Requests issued so far (cursor into the line source).
     issued: usize,
@@ -67,11 +75,16 @@ struct StreamState {
 /// Arena form of the merge tree. Children lists are stored separately
 /// from the (mutable) round-robin rotation state so `pick` can walk
 /// the tree without cloning — it runs once per issued request and is
-/// on the simulator's hot path.
+/// on the simulator's hot path. Node slots are pooled: `reset` keeps
+/// every allocation (including the per-node child lists) for the next
+/// phase, so rebuilding the arena is allocation-free once warm.
+#[derive(Default)]
 struct MergeArena {
     kinds: Vec<NodeKind>,
-    children: Vec<Vec<usize>>,
     rot: Vec<usize>,
+    /// `children[i]` is live for `i < kinds.len()`; slots beyond that
+    /// are retained capacity from earlier (larger) phases.
+    children: Vec<Vec<usize>>,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq)]
@@ -82,37 +95,46 @@ enum NodeKind {
 }
 
 impl MergeArena {
-    fn build(m: &Merge) -> (MergeArena, usize) {
-        let mut arena = MergeArena {
-            kinds: Vec::new(),
-            children: Vec::new(),
-            rot: Vec::new(),
-        };
-        let root = arena.add(m);
-        (arena, root)
+    /// Forget the previous phase's tree but keep every buffer.
+    fn reset(&mut self) {
+        self.kinds.clear();
+        self.rot.clear();
     }
 
+    /// Claim the next node slot, reusing its pooled child list.
+    fn alloc(&mut self, kind: NodeKind) -> usize {
+        let id = self.kinds.len();
+        self.kinds.push(kind);
+        self.rot.push(0);
+        if id == self.children.len() {
+            self.children.push(Vec::new());
+        } else {
+            self.children[id].clear();
+        }
+        id
+    }
+
+    /// Add a merge (sub)tree; returns its node id. Parents are
+    /// allocated before their children — node numbering does not
+    /// affect pick order, which follows the tree structure.
     fn add(&mut self, m: &Merge) -> usize {
         match m {
-            Merge::Leaf(s) => {
-                self.kinds.push(NodeKind::Leaf(*s));
-                self.children.push(Vec::new());
-                self.rot.push(0);
-                self.kinds.len() - 1
-            }
+            Merge::Leaf(s) => self.alloc(NodeKind::Leaf(*s)),
             Merge::RoundRobin(ch) => {
-                let kids: Vec<usize> = ch.iter().map(|c| self.add(c)).collect();
-                self.kinds.push(NodeKind::RoundRobin);
-                self.children.push(kids);
-                self.rot.push(0);
-                self.kinds.len() - 1
+                let id = self.alloc(NodeKind::RoundRobin);
+                for c in ch {
+                    let kid = self.add(c);
+                    self.children[id].push(kid);
+                }
+                id
             }
             Merge::Priority(ch) => {
-                let kids: Vec<usize> = ch.iter().map(|c| self.add(c)).collect();
-                self.kinds.push(NodeKind::Priority);
-                self.children.push(kids);
-                self.rot.push(0);
-                self.kinds.len() - 1
+                let id = self.alloc(NodeKind::Priority);
+                for c in ch {
+                    let kid = self.add(c);
+                    self.children[id].push(kid);
+                }
+                id
             }
         }
     }
@@ -182,38 +204,89 @@ pub fn set_materialize_streams(on: bool) -> bool {
     MATERIALIZE_STREAMS.with(|c| c.replace(on))
 }
 
+/// Reusable per-phase working state: stream cursors (with their
+/// release deques), the children adjacency of the chain graph, the
+/// merge-tree arena and the per-channel in-flight/waiting/slot
+/// bookkeeping. Allocate one per simulation and thread it through
+/// [`run_phase_with`]: every buffer is retained between phases, so
+/// once the largest phase shape has been seen, phase execution
+/// performs zero heap allocations (the `driver.scratch_reuse` bench
+/// row and the `driver_scratch` integration test measure exactly
+/// this). [`run_phase`] remains as the allocate-per-call convenience
+/// wrapper.
+#[derive(Default)]
+pub struct PhaseScratch {
+    states: Vec<StreamState>,
+    children: Vec<Vec<usize>>,
+    arena: MergeArena,
+    in_flight: Vec<usize>,
+    slot_free_at: Vec<u64>,
+    waiting: Vec<usize>,
+}
+
+impl PhaseScratch {
+    pub fn new() -> PhaseScratch {
+        PhaseScratch::default()
+    }
+}
+
 /// Execute one phase starting at cycle `start`; returns telemetry with
 /// the completion cycle of the phase's last request (`start` if the
-/// phase is empty).
+/// phase is empty). Allocates a fresh [`PhaseScratch`] per call — use
+/// [`run_phase_with`] on the hot path.
 pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTelemetry {
+    run_phase_with(mem, phase, start, &mut PhaseScratch::new())
+}
+
+/// [`run_phase`] with caller-owned scratch state; bit-identical to it
+/// in every observable (issue order, arrivals, stats), allocation-free
+/// at steady state.
+pub fn run_phase_with(
+    mem: &mut MemorySystem,
+    phase: &Phase,
+    start: u64,
+    scratch: &mut PhaseScratch,
+) -> PhaseTelemetry {
     if MATERIALIZE_STREAMS.with(|c| c.get()) {
         let materialized = phase.materialized();
         // Drop the flag around the nested call so it can't recurse.
         set_materialize_streams(false);
-        let t = run_phase(mem, &materialized, start);
+        let t = run_phase_with(mem, &materialized, start, scratch);
         set_materialize_streams(true);
         return t;
     }
 
     let n = phase.streams.len();
     let nch = mem.num_channels();
-    let mut state: Vec<StreamState> = phase
-        .streams
-        .iter()
-        .map(|s| {
-            let len = s.len();
-            StreamState {
-                issued: 0,
-                len,
-                available: if s.chained_to.is_none() { len } else { 0 },
-                pending_release: VecDeque::new(),
-                independent: s.chained_to.is_none(),
-                next_ch: if len > 0 { mem.channel_of(s.line(0)) } else { 0 },
-            }
-        })
-        .collect();
+    let PhaseScratch {
+        states,
+        children,
+        arena,
+        in_flight,
+        slot_free_at,
+        waiting,
+    } = scratch;
+    while states.len() < n {
+        states.push(StreamState::default());
+    }
+    let state = &mut states[..n];
+    for (st, s) in state.iter_mut().zip(&phase.streams) {
+        let len = s.len();
+        st.issued = 0;
+        st.len = len;
+        st.available = if s.chained_to.is_none() { len } else { 0 };
+        st.pending_release.clear();
+        st.independent = s.chained_to.is_none();
+        st.next_ch = if len > 0 { mem.channel_of(s.line(0)) } else { 0 };
+    }
     // Children per parent stream.
-    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    while children.len() < n {
+        children.push(Vec::new());
+    }
+    let children = &mut children[..n];
+    for c in children.iter_mut() {
+        c.clear();
+    }
     for (i, s) in phase.streams.iter().enumerate() {
         if let Some(p) = s.chained_to {
             assert!(p < n, "chained_to out of range");
@@ -234,20 +307,24 @@ pub fn run_phase(mem: &mut MemorySystem, phase: &Phase, start: u64) -> PhaseTele
         }
     }
 
-    let (mut arena, root) = MergeArena::build(&phase.merge);
+    arena.reset();
+    let root = arena.add(&phase.merge);
 
     // The window is a per-channel (per memory port) limit: each PE
     // drives its own channel independently.
-    let mut in_flight = vec![0usize; nch];
-    let mut slot_free_at = vec![start; nch];
+    in_flight.clear();
+    in_flight.resize(nch, 0);
+    slot_free_at.clear();
+    slot_free_at.resize(nch, start);
     // Streams with an issuable (released, unissued) request, counted
     // per target channel. At a fill-loop fixpoint every such stream is
     // window-blocked, so a completion can only unblock the fill loop
     // if it frees a slot on a channel with waiters (or releases a
     // chained request onto a channel with capacity) — anything else
     // can be serviced back-to-back without re-walking the merge tree.
-    let mut waiting = vec![0usize; nch];
-    for st in &state {
+    waiting.clear();
+    waiting.resize(nch, 0);
+    for st in state.iter() {
         if st.available > 0 {
             waiting[st.next_ch] += 1;
         }
@@ -455,7 +532,7 @@ mod tests {
         );
         let phase = Phase {
             streams: vec![parent, child],
-            merge: Merge::prio([1, 0]), // writes prioritized, as in AccuGraph
+            merge: Merge::prio([1, 0]).into(), // writes prioritized, as in AccuGraph
             window: 8,
         };
         let t = run_phase(&mut m, &phase, 0);
@@ -483,7 +560,7 @@ mod tests {
         );
         let phase = Phase {
             streams: vec![parent, child],
-            merge: Merge::prio([0, 1]),
+            merge: Merge::prio([0, 1]).into(),
             window: 4,
         };
         let t = run_phase(&mut m, &phase, 0);
@@ -511,7 +588,7 @@ mod tests {
         );
         let phase = Phase {
             streams: vec![a, b, c],
-            merge: Merge::prio([2, 1, 0]),
+            merge: Merge::prio([2, 1, 0]).into(),
             window: 4,
         };
         let t = run_phase(&mut m, &phase, 0);
@@ -531,7 +608,7 @@ mod tests {
         );
         let phase = Phase {
             streams: vec![a, b],
-            merge: Merge::rr([0, 1]),
+            merge: Merge::rr([0, 1]).into(),
             window: 2,
         };
         let t = run_phase(&mut m, &phase, 0);
@@ -549,7 +626,8 @@ mod tests {
             merge: Merge::Priority(vec![
                 Merge::Leaf(3),
                 Merge::RoundRobin(vec![Merge::Leaf(0), Merge::Leaf(1), Merge::Leaf(2)]),
-            ]),
+            ])
+            .into(),
             window: 4,
         };
         let t = run_phase(&mut m, &phase, 0);
@@ -597,7 +675,7 @@ mod tests {
                     crate::accel::stream::Fanout::Uniform(1),
                 ),
             ],
-            merge: Merge::prio([1, 0]),
+            merge: Merge::prio([1, 0]).into(),
             window: 8,
         };
         let mut m_desc = mem();
@@ -609,6 +687,73 @@ mod tests {
         assert_eq!(t_desc.requests, t_mat.requests);
         assert_eq!(t_desc.end_cycle, t_mat.end_cycle);
         assert_eq!(m_desc.stats(), m_mat.stats());
+    }
+
+    #[test]
+    fn shared_scratch_is_bit_identical_across_phase_shapes() {
+        // One scratch arena reused across phases of different stream
+        // counts, chain shapes and merge trees must produce exactly
+        // the per-call results (fresh scratch every time).
+        let shapes: Vec<Phase> = vec![
+            Phase::single(StreamClass::Values, MemKind::Read, LineSource::seq(0, 4096), 8),
+            Phase {
+                streams: vec![
+                    LineStream::independent(
+                        StreamClass::Edges,
+                        MemKind::Read,
+                        LineSource::seq(0, 8 * 64),
+                    ),
+                    LineStream::chained(
+                        StreamClass::Writes,
+                        MemKind::Write,
+                        LineSource::gather(1 << 20, 4, [0u64, 31, 2, 77, 3]),
+                        0,
+                        Fanout::AfterLast(5),
+                    ),
+                ],
+                merge: Merge::prio([1, 0]).into(),
+                window: 4,
+            },
+            Phase {
+                streams: vec![
+                    LineStream::independent(
+                        StreamClass::Values,
+                        MemKind::Read,
+                        LineSource::seq(0, 512),
+                    ),
+                    LineStream::independent(
+                        StreamClass::Pointers,
+                        MemKind::Read,
+                        LineSource::seq(1 << 21, 512),
+                    ),
+                    LineStream::independent(
+                        StreamClass::Edges,
+                        MemKind::Read,
+                        LineSource::seq(1 << 22, 512),
+                    ),
+                ],
+                merge: Merge::rr([0, 1, 2]).into(),
+                window: 2,
+            },
+        ];
+        let mut m_fresh = mem();
+        let mut m_shared = mem();
+        let mut scratch = PhaseScratch::new();
+        let mut c_fresh = 0;
+        let mut c_shared = 0;
+        // Two passes so the second pass replays shapes against a
+        // fully warmed scratch.
+        for _ in 0..2 {
+            for ph in &shapes {
+                let a = run_phase(&mut m_fresh, ph, c_fresh);
+                let b = run_phase_with(&mut m_shared, ph, c_shared, &mut scratch);
+                assert_eq!(a.requests, b.requests);
+                assert_eq!(a.end_cycle, b.end_cycle);
+                c_fresh = a.end_cycle;
+                c_shared = b.end_cycle;
+            }
+        }
+        assert_eq!(m_fresh.stats(), m_shared.stats());
     }
 
     #[test]
@@ -626,7 +771,7 @@ mod tests {
         );
         let phase = Phase {
             streams: vec![parent, child],
-            merge: Merge::prio([0, 1]),
+            merge: Merge::prio([0, 1]).into(),
             window: 4,
         };
         run_phase(&mut m, &phase, 0);

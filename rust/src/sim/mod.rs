@@ -9,16 +9,21 @@
 //!   combinations are rejected at build time; a built spec always
 //!   simulates.
 //! * [`sweep`] — [`Sweep`] (cartesian axes) and [`Session`] (shared
-//!   lock-striped memo cache + parallel batch execution).
+//!   lock-striped memo cache + compiled-program cache + parallel
+//!   batch execution; see [`crate::accel::program`] for the
+//!   compile/execute split).
 //! * [`driver`] / [`metrics`] — the phase-level co-simulation engine
-//!   and the metric set the specs produce.
+//!   (with its reusable [`PhaseScratch`] arena) and the metric set
+//!   the specs produce.
 
 pub mod driver;
 pub mod metrics;
 pub mod spec;
 pub mod sweep;
 
-pub use driver::{run_phase, set_materialize_streams, PhaseTelemetry};
+pub use driver::{
+    run_phase, run_phase_with, set_materialize_streams, PhaseScratch, PhaseTelemetry,
+};
 pub use metrics::{RunMetrics, SimReport};
-pub use spec::{SimSpec, SimSpecBuilder, SpecError, Workload};
-pub use sweep::{Session, Sweep, SweepRun};
+pub use spec::{ProgramKey, SimSpec, SimSpecBuilder, SpecError, Workload};
+pub use sweep::{Session, SessionStats, Sweep, SweepRun};

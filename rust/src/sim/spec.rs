@@ -20,7 +20,7 @@
 //! ([`Workload::Custom`]) — custom graphs flow through the same
 //! builder, validation and cache as the benchmark set.
 
-use crate::accel::{build, AcceleratorConfig, AcceleratorKind};
+use crate::accel::{AcceleratorConfig, AcceleratorKind, PhaseProgram};
 use crate::algo::problem::{GraphProblem, ProblemKind};
 use crate::dram::{ChannelMode, MemTech, MemorySystem};
 use crate::graph::datasets::DatasetId;
@@ -319,13 +319,55 @@ impl SimSpec {
         )
     }
 
+    /// The memory-independent sub-key of this spec: exactly what
+    /// [`SimSpec::compile_program`] consumes. Specs that differ only
+    /// in memory technology, pattern collection, or the *kind* of
+    /// problem (compilation reads just the weighted-variant graph,
+    /// never the algorithm) share a key — and therefore share one
+    /// compiled [`PhaseProgram`] in a [`super::sweep::Session`]'s
+    /// program cache. The channel count participates through the
+    /// normalized config (multi-channel partitioning depends on it).
+    pub fn program_key(&self) -> ProgramKey {
+        ProgramKey {
+            accelerator: self.accelerator,
+            workload: self.workload.clone(),
+            weighted: self.problem.weighted(),
+            config: self.config.clone(),
+        }
+    }
+
+    /// Compile this spec's [`PhaseProgram`]: the iteration-invariant,
+    /// memory-independent half of the simulation (partitioning,
+    /// layout, stream descriptors, merge trees). The result is
+    /// immutable and `Send + Sync` — share it across threads and
+    /// replay it with [`SimSpec::run_with_program`].
+    pub fn compile_program(&self) -> Arc<PhaseProgram> {
+        let g = self.workload.resolve(self.problem.weighted());
+        Arc::new(
+            PhaseProgram::compile(self.accelerator, &g, &self.config)
+                .with_key(self.program_key()),
+        )
+    }
+
     /// Execute the simulation. Infallible: every invalid combination
     /// was rejected by [`SimSpecBuilder::build`]. When the spec was
     /// built with `.patterns(true)`, the returned report carries an
     /// [`crate::trace::AccessPatternSummary`] in
-    /// [`SimReport::patterns`].
+    /// [`SimReport::patterns`]. Compiles a fresh program per call;
+    /// [`super::sweep::Session::run`] amortizes compilation across a
+    /// sweep instead.
     pub fn run(&self) -> SimReport {
         self.run_inner(false).0
+    }
+
+    /// [`SimSpec::run`] against a pre-compiled program (see
+    /// [`SimSpec::compile_program`]); bit-identical to a fresh
+    /// compile. The program must stem from a spec with the same
+    /// [`SimSpec::program_key`] — a mismatch panics (a program
+    /// compiled for a different workload/config would otherwise
+    /// silently simulate the wrong graph under this spec's label).
+    pub fn run_with_program(&self, program: &PhaseProgram) -> SimReport {
+        self.run_with_program_inner(program, false).0
     }
 
     /// Like [`SimSpec::run`], but records every issued request and
@@ -337,10 +379,39 @@ impl SimSpec {
     }
 
     fn run_inner(&self, record_trace: bool) -> (SimReport, Option<Vec<TraceEvent>>) {
+        let program = self.compile_program();
+        self.run_with_program_inner(&program, record_trace)
+    }
+
+    fn run_with_program_inner(
+        &self,
+        program: &PhaseProgram,
+        record_trace: bool,
+    ) -> (SimReport, Option<Vec<TraceEvent>>) {
+        assert_eq!(
+            program.kind(),
+            self.accelerator,
+            "program compiled for a different accelerator"
+        );
+        if let Some(key) = program.key() {
+            assert!(
+                *key == self.program_key(),
+                "program/spec mismatch: the program was compiled for a different \
+                 workload/problem/config than {}",
+                self.label()
+            );
+        }
         let g = self.workload.resolve(self.problem.weighted());
+        // Structural guard for hand-compiled programs too (key-less):
+        // graph shape, weightedness and configuration must match.
+        assert!(
+            program.compiled_for(&g, &self.config),
+            "program/spec mismatch: the program was compiled for a different \
+             graph shape or configuration than {}",
+            self.label()
+        );
         let spec = self.mem.spec(self.channels);
         let p = GraphProblem::new(self.problem, &g);
-        let mut accel = build(self.accelerator, &g, &self.config);
         let mut mem = MemorySystem::with_mode(spec, self.channel_mode());
         if record_trace {
             mem.enable_trace();
@@ -348,11 +419,28 @@ impl SimSpec {
         if self.patterns {
             mem.attach_analyzer();
         }
-        let mut report = accel.run(&p, &mut mem);
+        let mut report = program.execute(&p, &mut mem);
         report.patterns = mem.take_pattern_summary();
         let trace = mem.take_trace();
         (report, trace)
     }
+}
+
+/// The memory-independent sub-key of a [`SimSpec`] — the program-cache
+/// key of [`super::sweep::Session`]. Everything
+/// [`SimSpec::compile_program`] reads, nothing it doesn't: memory
+/// technology, the `patterns` toggle and the problem *kind* are
+/// deliberately absent (compilation consumes only the
+/// weighted-or-not variant of the graph plus the configuration), so
+/// `mem_techs` and `problems` sweep axes share compiled programs.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ProgramKey {
+    pub accelerator: AcceleratorKind,
+    pub workload: Workload,
+    /// Whether the weighted variant of the workload is compiled
+    /// against (12 B edges vs 8 B — changes layouts and line counts).
+    pub weighted: bool,
+    pub config: AcceleratorConfig,
 }
 
 /// Fluent builder for [`SimSpec`]; all validation happens in
@@ -705,6 +793,38 @@ mod tests {
         assert_eq!(s.total_requests(), r.dram.requests());
         // The flag is part of the spec's identity (memoization key).
         assert_ne!(plain, spec);
+    }
+
+    #[test]
+    fn program_key_ignores_mem_tech_and_patterns() {
+        let a = base().mem(MemTech::Ddr4).build().unwrap();
+        let b = base().mem(MemTech::Hbm).build().unwrap();
+        assert_ne!(a, b, "specs differ");
+        assert_eq!(a.program_key(), b.program_key(), "programs shared");
+        let c = base().patterns(true).build().unwrap();
+        assert_eq!(a.program_key(), c.program_key());
+        // The problem *kind* does not split the key (compilation only
+        // reads the weighted-variant graph)...
+        let pr = base().problem(ProblemKind::PageRank).build().unwrap();
+        assert_eq!(a.program_key(), pr.program_key());
+        // ...but weightedness does (12 B vs 8 B edge layouts).
+        let sssp = base().problem(ProblemKind::Sssp).build().unwrap();
+        assert_ne!(a.program_key(), sssp.program_key());
+        // The channel count splits the key: multi-channel partitioning
+        // (and the normalized config) depend on it.
+        let d = base().channels(2).build().unwrap();
+        assert_ne!(a.program_key(), d.program_key());
+    }
+
+    #[test]
+    fn run_with_program_matches_fresh_compile() {
+        let spec = base().patterns(true).build().unwrap();
+        let program = spec.compile_program();
+        let cached = spec.run_with_program(&program);
+        let fresh = spec.run();
+        assert_eq!(cached, fresh);
+        // Replays of one program are independent.
+        assert_eq!(spec.run_with_program(&program), cached);
     }
 
     #[test]

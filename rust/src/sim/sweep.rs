@@ -7,6 +7,21 @@
 //! threads. The simulator is deterministic, so parallel execution
 //! yields reports identical to the serial path.
 //!
+//! Two layers of caching, both compute-once (an in-progress gate per
+//! key makes racing workers wait instead of duplicating work):
+//!
+//! * **Report memo** — every distinct spec simulates at most once per
+//!   session, even when a parallel batch contains duplicates.
+//! * **Program cache** — compiled [`PhaseProgram`]s keyed on the
+//!   memory-independent sub-key of a spec
+//!   ([`SimSpec::program_key`]), so a `mem_techs × channels` sweep
+//!   compiles each workload once per channel count and shares the
+//!   program across memory technologies and worker threads by `Arc`.
+//!
+//! [`Session::stats`] reports both layers' traffic (programs
+//! compiled/reused, runs executed/memoized/duplicate-waited); the CLI
+//! surfaces it behind `graphmem sweep --stats`.
+//!
 //! [`Sweep`] declares experiment axes (accelerators × workloads ×
 //! problems × memory technologies × channel counts × configurations),
 //! takes their cartesian product and executes it through a session:
@@ -18,19 +33,20 @@
 //! use graphmem::graph::DatasetId;
 //! use graphmem::sim::Sweep;
 //!
-//! let runs = Sweep::new()
+//! let specs = Sweep::new()
 //!     .accelerators(AcceleratorKind::all())
 //!     .graphs([DatasetId::Sd])
 //!     .problems([ProblemKind::Bfs])
 //!     .mem_techs([MemTech::Ddr4, MemTech::Hbm])
-//!     .run()
+//!     .specs()
 //!     .unwrap();
-//! assert_eq!(runs.len(), 8);
+//! assert_eq!(specs.len(), 8);
+//! // `.run()` / `.run_with(&session)` executes the product.
 //! ```
 
 use super::metrics::SimReport;
-use super::spec::{SimSpec, SpecError, Workload};
-use crate::accel::{AcceleratorConfig, AcceleratorKind};
+use super::spec::{ProgramKey, SimSpec, SpecError, Workload};
+use crate::accel::{AcceleratorConfig, AcceleratorKind, PhaseProgram};
 use crate::algo::problem::ProblemKind;
 use crate::dram::MemTech;
 use crate::graph::datasets::DatasetId;
@@ -38,27 +54,207 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of independent cache shards; keeps lock contention low when
 /// many worker threads publish results concurrently.
 const CACHE_SHARDS: usize = 16;
 
+/// How a [`OnceMap::get_or_compute`] call was satisfied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fetch {
+    /// This call ran the computation.
+    Computed,
+    /// The value was already cached.
+    Hit,
+    /// Another thread was computing it; this call waited for it.
+    Waited,
+}
+
+enum GateState<V> {
+    Pending,
+    Done(V),
+    /// The computing thread panicked; waiters retry (and one of them
+    /// becomes the new computer).
+    Cancelled,
+}
+
+/// One in-progress computation: waiters block on the condvar until
+/// the computing thread publishes (or cancels).
+struct Gate<V> {
+    state: Mutex<GateState<V>>,
+    cv: Condvar,
+}
+
+struct OnceShard<K, V> {
+    done: HashMap<K, V>,
+    running: HashMap<K, Arc<Gate<V>>>,
+}
+
+/// Lock-striped compute-once map: for any key, the computation runs
+/// exactly once per map, concurrent callers for the same key wait on
+/// its gate instead of duplicating the work.
+struct OnceMap<K, V> {
+    shards: Vec<Mutex<OnceShard<K, V>>>,
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> OnceMap<K, V> {
+    fn new() -> OnceMap<K, V> {
+        OnceMap {
+            shards: (0..CACHE_SHARDS)
+                .map(|_| {
+                    Mutex::new(OnceShard {
+                        done: HashMap::new(),
+                        running: HashMap::new(),
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<OnceShard<K, V>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % CACHE_SHARDS]
+    }
+
+    /// Cached values across all shards.
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().done.len()).sum()
+    }
+
+    fn get_or_compute(&self, key: &K, mut f: impl FnMut() -> V) -> (V, Fetch) {
+        loop {
+            enum Role<V> {
+                Compute(Arc<Gate<V>>),
+                Wait(Arc<Gate<V>>),
+            }
+            let role = {
+                let mut shard = self.shard(key).lock().unwrap();
+                if let Some(v) = shard.done.get(key) {
+                    return (v.clone(), Fetch::Hit);
+                }
+                match shard.running.get(key) {
+                    Some(gate) => Role::Wait(Arc::clone(gate)),
+                    None => {
+                        let gate = Arc::new(Gate {
+                            state: Mutex::new(GateState::Pending),
+                            cv: Condvar::new(),
+                        });
+                        shard.running.insert(key.clone(), Arc::clone(&gate));
+                        Role::Compute(gate)
+                    }
+                }
+            };
+            match role {
+                Role::Compute(gate) => {
+                    // Compute outside every lock. If `f` panics, the
+                    // guard cancels the gate so waiters retry rather
+                    // than hang.
+                    struct Cancel<'a, K: Hash + Eq + Clone, V: Clone> {
+                        map: &'a OnceMap<K, V>,
+                        key: &'a K,
+                        gate: &'a Arc<Gate<V>>,
+                        armed: bool,
+                    }
+                    impl<K: Hash + Eq + Clone, V: Clone> Drop for Cancel<'_, K, V> {
+                        fn drop(&mut self) {
+                            if !self.armed {
+                                return;
+                            }
+                            let mut shard = self.map.shard(self.key).lock().unwrap();
+                            shard.running.remove(self.key);
+                            drop(shard);
+                            *self.gate.state.lock().unwrap() = GateState::Cancelled;
+                            self.gate.cv.notify_all();
+                        }
+                    }
+                    let value = {
+                        let mut guard = Cancel {
+                            map: self,
+                            key,
+                            gate: &gate,
+                            armed: true,
+                        };
+                        let v = f();
+                        guard.armed = false;
+                        v
+                    };
+                    {
+                        let mut shard = self.shard(key).lock().unwrap();
+                        shard.done.insert(key.clone(), value.clone());
+                        shard.running.remove(key);
+                    }
+                    *gate.state.lock().unwrap() = GateState::Done(value.clone());
+                    gate.cv.notify_all();
+                    return (value, Fetch::Computed);
+                }
+                Role::Wait(gate) => {
+                    let mut st = gate.state.lock().unwrap();
+                    loop {
+                        match &*st {
+                            GateState::Done(v) => return (v.clone(), Fetch::Waited),
+                            GateState::Cancelled => break,
+                            GateState::Pending => {}
+                        }
+                        st = gate.cv.wait(st).unwrap();
+                    }
+                    // Cancelled: fall through and retry from the top.
+                }
+            }
+        }
+    }
+}
+
+/// A point-in-time snapshot of a [`Session`]'s cache traffic (see
+/// [`Session::stats`]). The accounting identity holds at any quiet
+/// point: every [`Session::run`] call is exactly one of
+/// `sim_runs` (executed), `memo_hits` (served from cache) or
+/// `duplicate_waits` (waited on a concurrent duplicate).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Distinct simulations executed (== [`Session::cached_runs`]).
+    pub sim_runs: usize,
+    /// Runs served straight from the report memo.
+    pub memo_hits: usize,
+    /// Runs that waited for a concurrent duplicate to finish instead
+    /// of simulating the same spec twice.
+    pub duplicate_waits: usize,
+    /// Phase programs compiled (distinct [`SimSpec::program_key`]s).
+    pub programs_compiled: usize,
+    /// Program-cache hits (incl. waits on a concurrent compile).
+    pub programs_reused: usize,
+}
+
 /// Shared memoizing simulation session: run any number of specs
 /// (serially or in parallel) and every distinct [`SimSpec`] simulates
-/// at most once per session.
+/// at most once per session — racing duplicates wait on an
+/// in-progress gate instead of simulating twice. A second cache layer
+/// holds compiled [`PhaseProgram`]s keyed on
+/// [`SimSpec::program_key`], shared across memory technologies and
+/// worker threads.
 pub struct Session {
-    shards: Vec<Mutex<HashMap<SimSpec, SimReport>>>,
+    reports: OnceMap<SimSpec, SimReport>,
+    programs: OnceMap<ProgramKey, Arc<PhaseProgram>>,
     /// Worker threads used by [`Session::run_all`]; `None` = derive
     /// from the machine.
     threads: Option<usize>,
+    memo_hits: AtomicUsize,
+    duplicate_waits: AtomicUsize,
+    programs_compiled: AtomicUsize,
+    programs_reused: AtomicUsize,
 }
 
 impl Session {
     pub fn new() -> Session {
         Session {
-            shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            reports: OnceMap::new(),
+            programs: OnceMap::new(),
             threads: None,
+            memo_hits: AtomicUsize::new(0),
+            duplicate_waits: AtomicUsize::new(0),
+            programs_compiled: AtomicUsize::new(0),
+            programs_reused: AtomicUsize::new(0),
         }
     }
 
@@ -68,26 +264,38 @@ impl Session {
         self
     }
 
-    fn shard(&self, spec: &SimSpec) -> &Mutex<HashMap<SimSpec, SimReport>> {
-        let mut h = DefaultHasher::new();
-        spec.hash(&mut h);
-        &self.shards[(h.finish() as usize) % CACHE_SHARDS]
+    /// The compiled program for `spec`, from the session's program
+    /// cache (compiling on first use). Also the pre-warm hook: call
+    /// this ahead of time and subsequent runs of any spec sharing the
+    /// [`SimSpec::program_key`] skip compilation.
+    pub fn program_for(&self, spec: &SimSpec) -> Arc<PhaseProgram> {
+        let key = spec.program_key();
+        let (program, how) = self.programs.get_or_compute(&key, || spec.compile_program());
+        match how {
+            Fetch::Computed => self.programs_compiled.fetch_add(1, Ordering::Relaxed),
+            Fetch::Hit | Fetch::Waited => self.programs_reused.fetch_add(1, Ordering::Relaxed),
+        };
+        program
     }
 
-    /// Run one spec (or fetch its memoized report).
+    /// Run one spec (or fetch its memoized report). Concurrent calls
+    /// with the same spec simulate once: later callers wait on the
+    /// first one's gate ([`SessionStats::duplicate_waits`]).
     pub fn run(&self, spec: &SimSpec) -> SimReport {
-        if let Some(hit) = self.shard(spec).lock().unwrap().get(spec) {
-            return hit.clone();
+        let (report, how) = self.reports.get_or_compute(spec, || {
+            let program = self.program_for(spec);
+            spec.run_with_program(&program)
+        });
+        match how {
+            Fetch::Computed => {}
+            Fetch::Hit => {
+                self.memo_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            Fetch::Waited => {
+                self.duplicate_waits.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        // Simulate outside the lock; a racing duplicate computes the
-        // same deterministic report, and the first insert wins.
-        let report = spec.run();
-        self.shard(spec)
-            .lock()
-            .unwrap()
-            .entry(spec.clone())
-            .or_insert(report)
-            .clone()
+        report
     }
 
     /// Run a batch of specs across worker threads; the result vector
@@ -124,7 +332,18 @@ impl Session {
 
     /// Number of distinct simulations materialized so far.
     pub fn cached_runs(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.reports.len()
+    }
+
+    /// Snapshot of the session's cache traffic.
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            sim_runs: self.reports.len(),
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
+            duplicate_waits: self.duplicate_waits.load(Ordering::Relaxed),
+            programs_compiled: self.programs_compiled.load(Ordering::Relaxed),
+            programs_reused: self.programs_reused.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -305,7 +524,8 @@ impl Sweep {
         self.run_with(&Session::new())
     }
 
-    /// Execute against a shared session (reusing its memoized runs).
+    /// Execute against a shared session (reusing its memoized runs
+    /// and compiled programs).
     pub fn run_with(&self, session: &Session) -> Result<Vec<SweepRun>, SpecError> {
         let specs = self.specs()?;
         let reports = match self.threads {
@@ -386,6 +606,69 @@ mod tests {
         let b = session.run(&spec);
         assert_eq!(session.cached_runs(), 1);
         assert_eq!(a, b);
+        let st = session.stats();
+        assert_eq!(st.sim_runs, 1);
+        assert_eq!(st.memo_hits, 1);
+        assert_eq!(st.duplicate_waits, 0);
+        assert_eq!(st.programs_compiled, 1);
+    }
+
+    #[test]
+    fn duplicate_specs_in_a_batch_simulate_once() {
+        // 16 copies of one spec across 8 workers: the in-progress
+        // gate guarantees exactly one simulation; every other call is
+        // either a memo hit or a duplicate wait. The accounting
+        // identity `sim_runs + memo_hits + duplicate_waits == calls`
+        // holds regardless of scheduling.
+        let session = Session::new();
+        let spec = SimSpec::builder()
+            .accelerator(AcceleratorKind::HitGraph)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::Bfs)
+            .build()
+            .unwrap();
+        let specs = vec![spec.clone(); 16];
+        let reports = session.run_batch(&specs, 8);
+        assert_eq!(reports.len(), 16);
+        for r in &reports {
+            assert_eq!(r, &reports[0]);
+        }
+        assert_eq!(session.cached_runs(), 1, "duplicates must not simulate");
+        let st = session.stats();
+        assert_eq!(st.sim_runs, 1);
+        assert_eq!(
+            st.sim_runs + st.memo_hits + st.duplicate_waits,
+            16,
+            "every run call accounted for: {st:?}"
+        );
+        // Exactly one compile; the program cache never saw a second
+        // distinct key.
+        assert_eq!(st.programs_compiled, 1);
+    }
+
+    #[test]
+    fn program_cache_shared_across_mem_axis() {
+        // DDR4 and HBM points share one compiled program (the key is
+        // memory-independent); distinct channel counts do not.
+        let session = Session::new();
+        let mk = |mem: MemTech, ch: usize| {
+            SimSpec::builder()
+                .accelerator(AcceleratorKind::ThunderGp)
+                .graph(DatasetId::Sd)
+                .problem(ProblemKind::Bfs)
+                .mem(mem)
+                .channels(ch)
+                .build()
+                .unwrap()
+        };
+        session.run(&mk(MemTech::Ddr4, 2));
+        session.run(&mk(MemTech::Hbm, 2));
+        let st = session.stats();
+        assert_eq!(st.sim_runs, 2, "different mem techs simulate separately");
+        assert_eq!(st.programs_compiled, 1, "but compile once");
+        assert_eq!(st.programs_reused, 1);
+        session.run(&mk(MemTech::Hbm, 4));
+        assert_eq!(session.stats().programs_compiled, 2, "channels split the key");
     }
 
     #[test]
@@ -398,9 +681,15 @@ mod tests {
             assert_eq!(s.total_requests(), run.report.dram.requests());
         }
         // Without the toggle no summary is attached (distinct specs,
-        // so the memo cache cannot hand a pattern run back).
+        // so the memo cache cannot hand a pattern run back)... while
+        // the *program* cache does carry over: the pattern toggle is
+        // not part of the program key.
         let plain = quick_sweep().run_with(&session).unwrap();
         assert!(plain.iter().all(|r| r.report.patterns.is_none()));
+        let st = session.stats();
+        assert_eq!(st.sim_runs, 4);
+        assert_eq!(st.programs_compiled, 2, "pattern toggle must not recompile");
+        assert_eq!(st.programs_reused, 2);
     }
 
     #[test]

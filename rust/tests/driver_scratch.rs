@@ -1,0 +1,109 @@
+//! Steady-state allocation accounting for the phase driver's scratch
+//! arena — the acceptance property of the compile-once/arena-reuse
+//! refactor: once warm, [`run_phase_with`] must execute a phase with
+//! **zero** heap allocations (stream cursors, children adjacency,
+//! merge arena and per-channel vectors all live in the reused
+//! [`PhaseScratch`]; the memory system's queues retain their
+//! capacity).
+//!
+//! The whole file is a single `#[test]` on purpose: the counting
+//! `#[global_allocator]` is process-wide, and a lone test keeps the
+//! measurement window free of concurrent test-thread traffic.
+//!
+//! [`run_phase_with`]: graphmem::sim::run_phase_with
+//! [`PhaseScratch`]: graphmem::sim::PhaseScratch
+
+use graphmem::accel::stream::{Fanout, LineSource, LineStream, Merge, Phase, StreamClass};
+use graphmem::dram::{DramSpec, MemKind, MemorySystem};
+use graphmem::sim::{run_phase_with, PhaseScratch};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// System allocator with an allocation-event counter (alloc, realloc
+/// and alloc_zeroed all count; dealloc is free).
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+#[test]
+fn run_phase_with_is_allocation_free_after_warmup() {
+    let mut mem = MemorySystem::new(DramSpec::ddr4_2400(2));
+    let mut scratch = PhaseScratch::new();
+
+    // A representative phase: chained pair, gather child, nested
+    // merge — everything the accelerator models exercise, built once
+    // outside the measurement window.
+    let gather = LineSource::gather(1 << 24, 4, (0..48u64).map(|j| (j * 29) % 2048));
+    let released = gather.len() as u32;
+    let phase = Phase {
+        streams: vec![
+            LineStream::independent(
+                StreamClass::Values,
+                MemKind::Read,
+                LineSource::seq(0, 64 * 64),
+            ),
+            LineStream::independent(
+                StreamClass::Edges,
+                MemKind::Read,
+                LineSource::seq(1 << 22, 96 * 64),
+            ),
+            LineStream::chained(
+                StreamClass::Writes,
+                MemKind::Write,
+                gather,
+                1,
+                Fanout::AfterLast(released),
+            ),
+        ],
+        merge: Merge::Priority(vec![
+            Merge::Leaf(2),
+            Merge::RoundRobin(vec![Merge::Leaf(0), Merge::Leaf(1)]),
+        ])
+        .into(),
+        window: 16,
+    };
+
+    // Warm up: grows the scratch pools, the channel queues and the
+    // arrival heap to their steady-state capacities.
+    let mut cursor = 0u64;
+    for _ in 0..3 {
+        cursor = run_phase_with(&mut mem, &phase, cursor, &mut scratch).end_cycle;
+    }
+
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    for _ in 0..16 {
+        cursor = run_phase_with(&mut mem, &phase, cursor, &mut scratch).end_cycle;
+    }
+    let after = ALLOC_EVENTS.load(Ordering::SeqCst);
+    assert!(cursor > 0);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state phase execution must not allocate ({} events in 16 phases)",
+        after - before
+    );
+}

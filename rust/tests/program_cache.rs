@@ -1,0 +1,185 @@
+//! Equivalence suite for the compile-once program cache: running a
+//! spec through a pre-compiled [`PhaseProgram`] — whether handed in
+//! directly or served from a [`Session`]'s program cache — must be
+//! *bit-identical* to a fresh compile-and-run: same cycles, same
+//! `DramStats`, same traces, same pattern summaries. Only compilation
+//! work may be saved.
+//!
+//! [`PhaseProgram`]: graphmem::accel::PhaseProgram
+//! [`Session`]: graphmem::sim::Session
+
+use graphmem::accel::AcceleratorKind;
+use graphmem::algo::problem::ProblemKind;
+use graphmem::dram::MemTech;
+use graphmem::graph::synthetic::{erdos_renyi, grid_2d};
+use graphmem::sim::{Session, SimSpec, Workload};
+
+fn spec(
+    kind: AcceleratorKind,
+    workload: Workload,
+    problem: ProblemKind,
+    mem: MemTech,
+    channels: usize,
+) -> SimSpec {
+    SimSpec::builder()
+        .accelerator(kind)
+        .workload(workload)
+        .problem(problem)
+        .mem(mem)
+        .channels(channels)
+        .patterns(true)
+        .build()
+        .unwrap()
+}
+
+/// All four accelerators × iterative (PageRank) and frontier (BFS)
+/// problems: a cold session and a session whose program cache was
+/// pre-warmed must both reproduce the fresh-compile report exactly —
+/// cycles, `DramStats`, metrics and pattern summaries (all compared
+/// through `SimReport`'s full `PartialEq`).
+#[test]
+fn cold_and_prewarmed_sessions_match_fresh_compile() {
+    for kind in AcceleratorKind::all() {
+        for problem in [ProblemKind::PageRank, ProblemKind::Bfs] {
+            let w = Workload::custom("er-pc", erdos_renyi(600, 3600, 0xCAFE));
+            let s = spec(kind, w, problem, MemTech::Ddr4, 1);
+            let fresh = s.run();
+
+            let cold = Session::new();
+            let r_cold = cold.run(&s);
+            assert_eq!(fresh, r_cold, "cold session diverged for {}", s.label());
+            assert_eq!(cold.stats().programs_compiled, 1);
+
+            let warm = Session::new();
+            let _program = warm.program_for(&s); // pre-warm
+            assert_eq!(warm.stats().programs_compiled, 1);
+            let r_warm = warm.run(&s);
+            let st = warm.stats();
+            assert!(
+                st.programs_reused >= 1,
+                "pre-warmed program must be reused for {}",
+                s.label()
+            );
+            assert_eq!(st.programs_compiled, 1, "run must not recompile");
+            assert_eq!(fresh, r_warm, "warm session diverged for {}", s.label());
+        }
+    }
+}
+
+/// The mem-axis sharing property: DDR4 and HBM points at the same
+/// channel count share one compiled program, and both still match
+/// their own fresh-compile reports (the channel-relative program is
+/// correctly relocated onto each technology's region bases).
+#[test]
+fn shared_program_across_mem_techs_is_bit_identical() {
+    for kind in [AcceleratorKind::HitGraph, AcceleratorKind::ThunderGp] {
+        let w = Workload::custom("er-mem", erdos_renyi(800, 4800, 0x7A7A));
+        let s_ddr = spec(kind, w.clone(), ProblemKind::Bfs, MemTech::Ddr4, 2);
+        let s_hbm = spec(kind, w.clone(), ProblemKind::Bfs, MemTech::Hbm, 2);
+        assert_eq!(s_ddr.program_key(), s_hbm.program_key());
+
+        let session = Session::new();
+        let r_ddr = session.run(&s_ddr);
+        let r_hbm = session.run(&s_hbm);
+        let st = session.stats();
+        assert_eq!(st.programs_compiled, 1, "{kind}: one compile for both techs");
+        assert_eq!(st.programs_reused, 1);
+        assert_eq!(r_ddr, s_ddr.run(), "{kind}: DDR4 diverged from fresh");
+        assert_eq!(r_hbm, s_hbm.run(), "{kind}: HBM diverged from fresh");
+    }
+}
+
+/// Direct program handoff: `run_with_program` with a separately
+/// compiled program equals `run`, including for the weighted 12 B
+/// edge layout (SSSP) and a deterministic grid workload.
+#[test]
+fn run_with_program_matches_run_for_weighted_and_grid() {
+    let weighted = erdos_renyi(500, 3000, 0x90).with_random_weights(5, 9.0);
+    let cases = vec![
+        spec(
+            AcceleratorKind::HitGraph,
+            Workload::custom("erw-pc", weighted),
+            ProblemKind::Sssp,
+            MemTech::Ddr4,
+            1,
+        ),
+        spec(
+            AcceleratorKind::AccuGraph,
+            Workload::custom("grid-pc", grid_2d(20, 20)),
+            ProblemKind::Wcc,
+            MemTech::Ddr4,
+            1,
+        ),
+    ];
+    for s in cases {
+        let program = s.compile_program();
+        let a = s.run_with_program(&program);
+        let b = s.run();
+        assert_eq!(a, b, "{}", s.label());
+        // A program is reusable: second replay identical.
+        assert_eq!(s.run_with_program(&program), a, "{}", s.label());
+    }
+}
+
+/// Handing a program compiled for a different workload to
+/// `run_with_program` must panic, not silently simulate the wrong
+/// graph — the key stamped by `compile_program` is checked in release
+/// builds too. (Same accelerator kind and same graph *shape*, so only
+/// the key can catch it; hand-compiled key-less programs are covered
+/// by the O(1) structural guard, tested below.)
+#[test]
+#[should_panic(expected = "program/spec mismatch")]
+fn mismatched_program_is_rejected() {
+    let s_a = spec(
+        AcceleratorKind::AccuGraph,
+        Workload::custom("graph-a", erdos_renyi(300, 1800, 1)),
+        ProblemKind::Bfs,
+        MemTech::Ddr4,
+        1,
+    );
+    let s_b = spec(
+        AcceleratorKind::AccuGraph,
+        Workload::custom("graph-b", erdos_renyi(300, 1800, 2)),
+        ProblemKind::Bfs,
+        MemTech::Ddr4,
+        1,
+    );
+    let program_a = s_a.compile_program();
+    let _ = s_b.run_with_program(&program_a);
+}
+
+/// The structural guard catches key-less, hand-compiled programs when
+/// the graph shape differs.
+#[test]
+#[should_panic(expected = "program/spec mismatch")]
+fn mismatched_hand_compiled_program_is_rejected() {
+    use graphmem::accel::{AcceleratorConfig, PhaseProgram};
+    let graph_a = erdos_renyi(300, 1800, 1);
+    let cfg = AcceleratorConfig::default();
+    let program_a = PhaseProgram::compile(AcceleratorKind::AccuGraph, &graph_a, &cfg);
+    let s_b = spec(
+        AcceleratorKind::AccuGraph,
+        Workload::custom("graph-b", erdos_renyi(400, 2000, 2)),
+        ProblemKind::Bfs,
+        MemTech::Ddr4,
+        1,
+    );
+    let _ = s_b.run_with_program(&program_a);
+}
+
+/// One program replayed concurrently from many worker threads (the
+/// sweep shape) must give every thread the serial answer.
+#[test]
+fn concurrent_replays_of_one_program_are_deterministic() {
+    let w = Workload::custom("er-par", erdos_renyi(700, 4200, 0x41));
+    let session = Session::new();
+    let specs: Vec<SimSpec> = [MemTech::Ddr3, MemTech::Ddr4, MemTech::Hbm]
+        .into_iter()
+        .map(|mem| spec(AcceleratorKind::ThunderGp, w.clone(), ProblemKind::Bfs, mem, 2))
+        .collect();
+    let parallel = session.run_batch(&specs, 3);
+    assert_eq!(session.stats().programs_compiled, 1);
+    for (s, r) in specs.iter().zip(&parallel) {
+        assert_eq!(r, &s.run(), "{}", s.label());
+    }
+}

@@ -21,7 +21,7 @@ use graphmem::algo::problem::ProblemKind;
 use graphmem::dram::{DramSpec, MemKind, MemTech, MemorySystem};
 use graphmem::graph::synthetic::{erdos_renyi, grid_2d};
 use graphmem::graph::EdgeList;
-use graphmem::sim::{run_phase, set_materialize_streams, SimSpec, Workload};
+use graphmem::sim::{run_phase, set_materialize_streams, Session, SimSpec, Workload};
 use graphmem::util::rng::Rng;
 
 /// Run `spec` once through descriptors and once through materialized
@@ -140,7 +140,7 @@ fn prop_random_phases_bit_identical() {
             MemKind::Write,
             child_src,
             0,
-            Fanout::PerParent(fanout),
+            Fanout::PerParent(fanout.into()),
         );
         let window = 1 + rng.next_below(32) as usize;
         let merge = if rng.chance(0.5) {
@@ -150,7 +150,7 @@ fn prop_random_phases_bit_identical() {
         };
         let phase = Phase {
             streams: vec![parent, child],
-            merge,
+            merge: merge.into(),
             window,
         };
         let start = rng.next_below(100_000);
@@ -168,6 +168,34 @@ fn prop_random_phases_bit_identical() {
         assert_eq!(m_desc.stats(), m_mat.stats());
         assert_eq!(t_desc.requests, parent_lines + child_total as u64);
     }
+}
+
+/// Compile-once equivalence sweep: for every accelerator × problem,
+/// a session-cached program run, a fresh compile-and-run, and the
+/// materialized (seed-representation) reference path must all agree
+/// bit-for-bit — the program cache is perf-only, like the descriptor
+/// refactor it extends.
+#[test]
+fn cached_programs_bit_identical_to_fresh_and_materialized() {
+    let session = Session::new();
+    for kind in AcceleratorKind::all() {
+        for problem in [ProblemKind::Bfs, ProblemKind::PageRank] {
+            let s = spec(
+                kind,
+                Workload::custom("er-cache", erdos_renyi(500, 3000, 0x3D)),
+                problem,
+                1,
+            );
+            let fresh = s.run();
+            let cached = session.run(&s);
+            let prev = set_materialize_streams(true);
+            let materialized = s.run();
+            set_materialize_streams(prev);
+            assert_eq!(fresh, cached, "cache diverged for {}", s.label());
+            assert_eq!(fresh, materialized, "reference diverged for {}", s.label());
+        }
+    }
+    assert!(session.stats().programs_compiled >= 1);
 }
 
 /// The acceptance property for stream memory: a sequential-only phase
