@@ -15,6 +15,10 @@
 //!   fresh-compile vs the session's shared program cache side by side
 //!   — reports asserted bit-identical in-run, and the cached pass
 //!   must run ≥2× fewer compile passes.
+//! * On-chip vertex buffer (`onchip.{off,vertex_cache}`): AccuGraph ×
+//!   lj streaming-only vs with the paper's vertex array modelled —
+//!   the cached row is asserted in-run to issue strictly fewer DRAM
+//!   requests and to report ≥1 hit (`onchip_hits` JSON extra).
 //! * Golden engines: native vs XLA/PJRT per-iteration latency.
 //!
 //! Output: human-readable lines on stdout, plus machine-readable JSON
@@ -33,7 +37,9 @@ use graphmem::algo::problem::{GraphProblem, ProblemKind};
 use graphmem::dram::{ChannelMode, DramSpec, MemKind, MemRequest, MemTech, MemorySystem};
 use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
 use graphmem::graph::rmat::{generate, RmatParams};
-use graphmem::sim::{run_phase, run_phase_with, PhaseScratch, Session, Sweep, Workload};
+use graphmem::graph::DatasetId;
+use graphmem::onchip::OnChipConfig;
+use graphmem::sim::{run_phase, run_phase_with, PhaseScratch, Session, SimSpec, Sweep, Workload};
 use graphmem::util::rng::Rng;
 use std::io::Write;
 
@@ -488,6 +494,66 @@ fn bench_sweep_mem_axis(rep: &mut Reporter) {
     );
 }
 
+/// On-chip vertex buffer (the PR-5 tentpole): AccuGraph × lj with the
+/// paper's vertex array modelled vs streaming-only, side by side. The
+/// cached row must issue strictly fewer DRAM requests and report at
+/// least one hit (CI's bench-smoke greps `onchip_hits` so the buffer
+/// cannot silently regress to always-miss).
+fn bench_onchip(rep: &mut Reporter) {
+    let problem = if quick_scope() { ProblemKind::PageRank } else { ProblemKind::Bfs };
+    let mk = |onchip: Option<OnChipConfig>| {
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .graph(DatasetId::Lj)
+            .problem(problem)
+            .config(AcceleratorConfig::all_optimizations())
+            .onchip(onchip)
+            .build()
+            .expect("AccuGraph x lj is a valid spec")
+    };
+    let off_spec = mk(None);
+    let mut off = None;
+    let dt_off = time(|| off = Some(off_spec.run()));
+    let off = off.unwrap();
+    rep.record_with(
+        "onchip.off",
+        off.dram.requests(),
+        dt_off,
+        0,
+        vec![("dram_requests", off.dram.requests())],
+    );
+
+    let cache = OnChipConfig::default_for(
+        AcceleratorKind::AccuGraph,
+        off_spec.config(),
+    )
+    .expect("AccuGraph has a default vertex array");
+    let on_spec = mk(Some(cache));
+    let mut on = None;
+    let dt_on = time(|| on = Some(on_spec.run()));
+    let on = on.unwrap();
+    let stats = on.onchip.as_ref().expect("onchip specs attach counters");
+    assert!(
+        on.dram.requests() < off.dram.requests(),
+        "vertex cache must issue strictly fewer DRAM requests: {} !< {}",
+        on.dram.requests(),
+        off.dram.requests()
+    );
+    assert!(stats.hits_total() >= 1, "the vertex array must hit at least once");
+    rep.record_with(
+        "onchip.vertex_cache",
+        on.dram.requests(),
+        dt_on,
+        0,
+        vec![
+            ("dram_requests", on.dram.requests()),
+            ("onchip_hits", stats.hits_total()),
+            ("onchip_misses", stats.misses_total()),
+            ("onchip_fills", stats.fills_total()),
+        ],
+    );
+}
+
 fn bench_engines(rep: &mut Reporter) {
     let scale = if quick_scope() { 9 } else { 11 };
     let g = generate(RmatParams::graph500(scale, 12, 42));
@@ -539,6 +605,7 @@ fn main() {
     bench_driver_scratch(&mut rep);
     bench_end_to_end_sim(&mut rep);
     bench_sweep_mem_axis(&mut rep);
+    bench_onchip(&mut rep);
     bench_engines(&mut rep);
     rep.flush(json_path.as_deref());
 }

@@ -31,8 +31,9 @@ use super::Accelerator;
 use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
 use crate::graph::EdgeList;
+use crate::onchip::OnChipBuffer;
 use crate::partition::horizontal::HorizontalInCsr;
-use crate::sim::driver::{run_phase_with, PhaseScratch};
+use crate::sim::driver::{run_phase_onchip, PhaseScratch};
 use crate::sim::metrics::{RunMetrics, SimReport};
 use std::sync::Arc;
 
@@ -142,6 +143,19 @@ impl AccuGraphProgram {
     /// system. Value-dependent state (frontiers, accumulators, the
     /// write-back streams) is built here, against the cached skeleton.
     pub fn execute(&self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.execute_onchip(p, mem, None)
+    }
+
+    /// [`AccuGraphProgram::execute`] with an optional on-chip buffer
+    /// consulted on every request (see [`crate::onchip`]) — this is
+    /// where the model's on-chip vertex array stops being a fiction:
+    /// vertex-value hits retire in BRAM instead of going to DRAM.
+    pub fn execute_onchip(
+        &self,
+        p: &GraphProblem,
+        mem: &mut MemorySystem,
+        mut onchip: Option<&mut OnChipBuffer>,
+    ) -> SimReport {
         assert!(
             !p.kind.weighted(),
             "AccuGraph does not support weighted problems (Tab. 1)"
@@ -190,8 +204,14 @@ impl AccuGraphProgram {
                 let do_prefetch = !(pref_skip && on_chip == Some(q));
                 if do_prefetch {
                     metrics.values_read += interval.len() as u64;
-                    cursor = run_phase_with(mem, &self.prefetch[q], cursor, &mut scratch)
-                        .end_cycle;
+                    cursor = run_phase_onchip(
+                        mem,
+                        &self.prefetch[q],
+                        cursor,
+                        &mut scratch,
+                        onchip.as_deref_mut(),
+                    )
+                    .end_cycle;
                 }
                 on_chip = Some(q);
 
@@ -279,7 +299,9 @@ impl AccuGraphProgram {
                     merge: Arc::clone(&self.merge),
                     window,
                 };
-                cursor = run_phase_with(mem, &phase, cursor, &mut scratch).end_cycle;
+                cursor =
+                    run_phase_onchip(mem, &phase, cursor, &mut scratch, onchip.as_deref_mut())
+                        .end_cycle;
             }
 
             // Apply accumulated values for add-problems.
@@ -315,8 +337,10 @@ impl AccuGraphProgram {
             channels: mem.num_channels(),
             metrics,
             dram,
-            // Filled in by SimSpec::run when pattern analysis is on.
+            // Filled in by SimSpec::run when pattern analysis /
+            // on-chip buffering is configured.
             patterns: None,
+            onchip: None,
         }
     }
 }

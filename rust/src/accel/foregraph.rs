@@ -30,8 +30,9 @@ use super::Accelerator;
 use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
 use crate::graph::EdgeList;
+use crate::onchip::OnChipBuffer;
 use crate::partition::interval_shard::{stride_permutation, IntervalShardPartitioning};
-use crate::sim::driver::{run_phase_with, PhaseScratch};
+use crate::sim::driver::{run_phase_onchip, PhaseScratch};
 use crate::sim::metrics::{RunMetrics, SimReport};
 use std::sync::Arc;
 
@@ -149,6 +150,19 @@ impl ForeGraphProgram {
     }
 
     pub fn execute(&self, p0: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.execute_onchip(p0, mem, None)
+    }
+
+    /// [`ForeGraphProgram::execute`] with an optional on-chip buffer
+    /// (see [`crate::onchip`]) — models the BRAM interval cache:
+    /// interval-value hits (source/destination prefetches, write-backs
+    /// of recently prefetched intervals) retire on chip.
+    pub fn execute_onchip(
+        &self,
+        p0: &GraphProblem,
+        mem: &mut MemorySystem,
+        mut onchip: Option<&mut OnChipBuffer>,
+    ) -> SimReport {
         assert!(
             !p0.kind.weighted(),
             "ForeGraph does not support weighted problems (Tab. 1)"
@@ -232,7 +246,9 @@ impl ForeGraphProgram {
                     merge: Arc::clone(&self.rr_merge[k - 1]),
                     window,
                 };
-                cursor = run_phase_with(mem, &pre_phase, cursor, &mut scratch).end_cycle;
+                cursor =
+                    run_phase_onchip(mem, &pre_phase, cursor, &mut scratch, onchip.as_deref_mut())
+                        .end_cycle;
 
                 // --- Per destination interval: prefetch, edges, write ---
                 for j in 0..q {
@@ -317,12 +333,20 @@ impl ForeGraphProgram {
                         merge,
                         window,
                     };
-                    cursor = run_phase_with(mem, &phase, cursor, &mut scratch).end_cycle;
+                    cursor =
+                        run_phase_onchip(mem, &phase, cursor, &mut scratch, onchip.as_deref_mut())
+                            .end_cycle;
 
                     // Destination interval written back sequentially.
                     metrics.values_written += jv.len() as u64;
-                    cursor =
-                        run_phase_with(mem, &self.writeback[j], cursor, &mut scratch).end_cycle;
+                    cursor = run_phase_onchip(
+                        mem,
+                        &self.writeback[j],
+                        cursor,
+                        &mut scratch,
+                        onchip.as_deref_mut(),
+                    )
+                    .end_cycle;
                 }
             }
 
@@ -359,8 +383,10 @@ impl ForeGraphProgram {
             channels: mem.num_channels(),
             metrics,
             dram,
-            // Filled in by SimSpec::run when pattern analysis is on.
+            // Filled in by SimSpec::run when pattern analysis /
+            // on-chip buffering is configured.
             patterns: None,
+            onchip: None,
         }
     }
 }

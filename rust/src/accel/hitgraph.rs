@@ -31,8 +31,9 @@ use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
 use crate::graph::edgelist::Edge;
 use crate::graph::EdgeList;
+use crate::onchip::OnChipBuffer;
 use crate::partition::horizontal::HorizontalPartitioning;
-use crate::sim::driver::{run_phase_with, PhaseScratch};
+use crate::sim::driver::{run_phase_onchip, PhaseScratch};
 use crate::sim::metrics::{RunMetrics, SimReport};
 
 /// Compiled HitGraph program (iteration- and memory-invariant
@@ -150,6 +151,20 @@ impl HitGraphProgram {
     }
 
     pub fn execute(&self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.execute_onchip(p, mem, None)
+    }
+
+    /// [`HitGraphProgram::execute`] with an optional on-chip buffer
+    /// (see [`crate::onchip`]). HitGraph is a streaming design — its
+    /// paper-faithful default is *no* buffer — but the hook makes the
+    /// what-if ("what would a vertex cache buy a 2-phase system?")
+    /// sweepable.
+    pub fn execute_onchip(
+        &self,
+        p: &GraphProblem,
+        mem: &mut MemorySystem,
+        mut onchip: Option<&mut OnChipBuffer>,
+    ) -> SimReport {
         let n = self.n;
         let k = self.part.num_partitions();
         let channels = self.cfg.channels.max(1).min(mem.num_channels());
@@ -312,7 +327,9 @@ impl HitGraphProgram {
                     merge: Merge::RoundRobin(pe_trees).into(),
                     window,
                 };
-                cursor = run_phase_with(mem, &phase, cursor, &mut scratch).end_cycle;
+                cursor =
+                    run_phase_onchip(mem, &phase, cursor, &mut scratch, onchip.as_deref_mut())
+                        .end_cycle;
             }
             // Reset updates_rw double-count (we add reads below).
 
@@ -439,7 +456,9 @@ impl HitGraphProgram {
                     merge: Merge::RoundRobin(pe_trees).into(),
                     window,
                 };
-                cursor = run_phase_with(mem, &phase, cursor, &mut scratch).end_cycle;
+                cursor =
+                    run_phase_onchip(mem, &phase, cursor, &mut scratch, onchip.as_deref_mut())
+                        .end_cycle;
             }
 
             prev_changed = changed_now;
@@ -463,8 +482,10 @@ impl HitGraphProgram {
             channels: mem.num_channels(),
             metrics,
             dram,
-            // Filled in by SimSpec::run when pattern analysis is on.
+            // Filled in by SimSpec::run when pattern analysis /
+            // on-chip buffering is configured.
             patterns: None,
+            onchip: None,
         }
     }
 }

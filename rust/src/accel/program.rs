@@ -69,6 +69,7 @@ use super::thundergp::ThunderGpProgram;
 use crate::algo::problem::GraphProblem;
 use crate::dram::MemorySystem;
 use crate::graph::EdgeList;
+use crate::onchip::OnChipBuffer;
 use crate::sim::metrics::SimReport;
 use crate::sim::spec::ProgramKey;
 
@@ -161,11 +162,26 @@ impl PhaseProgram {
     /// executions (incl. concurrent ones on separate memory systems)
     /// share one program.
     pub fn execute(&self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.execute_onchip(p, mem, None)
+    }
+
+    /// [`PhaseProgram::execute`] with an optional on-chip buffer (see
+    /// [`crate::onchip`]): the phase driver consults it before every
+    /// request, so hits retire in BRAM and never reach `mem`. The
+    /// buffer is per-execution mutable state — the compiled program
+    /// itself stays immutable and shareable, which is why the buffer
+    /// is a parameter here rather than part of the program.
+    pub fn execute_onchip(
+        &self,
+        p: &GraphProblem,
+        mem: &mut MemorySystem,
+        onchip: Option<&mut OnChipBuffer>,
+    ) -> SimReport {
         match &self.model {
-            Model::AccuGraph(m) => m.execute(p, mem),
-            Model::ForeGraph(m) => m.execute(p, mem),
-            Model::HitGraph(m) => m.execute(p, mem),
-            Model::ThunderGp(m) => m.execute(p, mem),
+            Model::AccuGraph(m) => m.execute_onchip(p, mem, onchip),
+            Model::ForeGraph(m) => m.execute_onchip(p, mem, onchip),
+            Model::HitGraph(m) => m.execute_onchip(p, mem, onchip),
+            Model::ThunderGp(m) => m.execute_onchip(p, mem, onchip),
         }
     }
 }

@@ -31,8 +31,9 @@ use crate::algo::problem::GraphProblem;
 use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
 use crate::graph::edgelist::Edge;
 use crate::graph::EdgeList;
+use crate::onchip::OnChipBuffer;
 use crate::partition::vertical::VerticalPartitioning;
-use crate::sim::driver::{run_phase_with, PhaseScratch};
+use crate::sim::driver::{run_phase_onchip, PhaseScratch};
 use crate::sim::metrics::{RunMetrics, SimReport};
 
 /// Compiled ThunderGP program (iteration- and memory-invariant
@@ -300,6 +301,20 @@ impl ThunderGpProgram {
     }
 
     pub fn execute(&self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.execute_onchip(p, mem, None)
+    }
+
+    /// [`ThunderGpProgram::execute`] with an optional on-chip buffer
+    /// (see [`crate::onchip`]). ThunderGP is a streaming design whose
+    /// duplicate-filtering value buffer is already folded into the
+    /// compiled gathers — its paper-faithful default is *no* buffer —
+    /// but the hook makes BRAM what-ifs sweepable.
+    pub fn execute_onchip(
+        &self,
+        p: &GraphProblem,
+        mem: &mut MemorySystem,
+        mut onchip: Option<&mut OnChipBuffer>,
+    ) -> SimReport {
         let k = self.part.num_partitions();
         let channels = self.cfg.channels.max(1).min(mem.num_channels());
         let mut scratch = PhaseScratch::new();
@@ -351,7 +366,14 @@ impl ThunderGpProgram {
                         self.src_gather[q][chunk_idx].len() as u64 * (CACHE_LINE / 4);
                     metrics.updates_rw += iv.len() as u64;
                 }
-                cursor = run_phase_with(mem, &scatter_phases[q], cursor, &mut scratch).end_cycle;
+                cursor = run_phase_onchip(
+                    mem,
+                    &scatter_phases[q],
+                    cursor,
+                    &mut scratch,
+                    onchip.as_deref_mut(),
+                )
+                .end_cycle;
             }
 
             // ----------------- Apply, one phase per partition ----------
@@ -381,7 +403,14 @@ impl ThunderGpProgram {
                 metrics.updates_rw += iv.len() as u64 * channels as u64;
                 metrics.values_read += iv.len() as u64 * channels as u64;
 
-                cursor = run_phase_with(mem, &apply_phases[q], cursor, &mut scratch).end_cycle;
+                cursor = run_phase_onchip(
+                    mem,
+                    &apply_phases[q],
+                    cursor,
+                    &mut scratch,
+                    onchip.as_deref_mut(),
+                )
+                .end_cycle;
             }
 
             if metrics.iterations >= max_iters {
@@ -404,8 +433,10 @@ impl ThunderGpProgram {
             channels: mem.num_channels(),
             metrics,
             dram,
-            // Filled in by SimSpec::run when pattern analysis is on.
+            // Filled in by SimSpec::run when pattern analysis /
+            // on-chip buffering is configured.
             patterns: None,
+            onchip: None,
         }
     }
 }

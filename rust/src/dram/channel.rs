@@ -84,6 +84,8 @@ pub struct Channel {
     last_cas_was_write: bool,
     /// End of the last write burst (for tWTR).
     last_write_data_end: u64,
+    /// End of the last read burst (for the read→write bus turnaround).
+    last_read_data_end: u64,
     next_refresh: u64,
     queue: Vec<Queued>,
     /// Cached minimum arrival over `queue` (`None` when empty).
@@ -120,6 +122,7 @@ impl Channel {
             last_cas_group: 0,
             last_cas_was_write: false,
             last_write_data_end: 0,
+            last_read_data_end: 0,
             next_refresh: spec.speed.trefi,
             queue: Vec::with_capacity(64),
             earliest: None,
@@ -130,6 +133,44 @@ impl Channel {
 
     pub fn spec(&self) -> &DramSpec {
         &self.spec
+    }
+
+    /// Reconfigure in place for a (possibly different) spec/policy,
+    /// retaining the queue's and the bank vector's heap capacity —
+    /// the per-worker reuse hook behind
+    /// [`super::MemorySystem::reset`]. Logically identical to
+    /// `*self = Channel::with_policy(spec, policy)`.
+    pub(super) fn reset(&mut self, spec: DramSpec, policy: DramPolicy) {
+        self.spec = spec;
+        self.policy = policy;
+        self.mapper = AddressMapper::with_map(&spec, policy.addr_map);
+        self.banks.clear();
+        self.banks.resize(spec.banks_per_channel(), Bank::new());
+        self.ranks.truncate(spec.ranks);
+        for r in &mut self.ranks {
+            r.act_window.clear();
+            r.last_act_in_group.clear();
+            r.last_act_in_group.resize(spec.bank_groups, 0);
+            r.last_act = 0;
+        }
+        while self.ranks.len() < spec.ranks {
+            self.ranks.push(RankState {
+                act_window: VecDeque::with_capacity(4),
+                last_act_in_group: vec![0; spec.bank_groups],
+                last_act: 0,
+            });
+        }
+        self.next_burst = 0;
+        self.last_cas_time = 0;
+        self.last_cas_group = 0;
+        self.last_cas_was_write = false;
+        self.last_write_data_end = 0;
+        self.last_read_data_end = 0;
+        self.next_refresh = spec.speed.trefi;
+        self.queue.clear();
+        self.earliest = None;
+        self.seq = 0;
+        self.stats = DramStats::default();
     }
 
     /// Number of requests waiting.
@@ -252,10 +293,18 @@ impl Channel {
         if !is_write && self.last_cas_was_write {
             ct = ct.max(self.last_write_data_end + sp.twtr);
         }
-        // Read -> write: write command must not collide on the bus;
-        // handled by burst occupancy below, plus one-cycle bubble.
-        // Data-bus occupancy: burst start = CAS + CL/CWL must be >= next_burst.
         let lat = if is_write { sp.cwl } else { sp.cl };
+        // Read -> write turnaround: the write burst must not start the
+        // same cycle the preceding read burst ends — burst occupancy
+        // alone allows back-to-back bursts, so the one-cycle bus
+        // direction bubble is enforced explicitly here.
+        if is_write && !self.last_cas_was_write {
+            let min_burst_start = self.last_read_data_end + 1;
+            if min_burst_start > ct + lat {
+                ct = min_burst_start - lat;
+            }
+        }
+        // Data-bus occupancy: burst start = CAS + CL/CWL must be >= next_burst.
         if self.next_burst > ct + lat {
             ct = self.next_burst - lat;
         }
@@ -319,6 +368,8 @@ impl Channel {
         self.last_cas_was_write = is_write;
         if is_write {
             self.last_write_data_end = data_end;
+        } else {
+            self.last_read_data_end = data_end;
         }
 
         {
@@ -461,6 +512,88 @@ mod tests {
         // Miss: ACT + tRCD + CL + burst
         let sp = spec.speed;
         assert!(s.done_at >= 100 + sp.trcd + sp.cl + sp.burst);
+    }
+
+    #[test]
+    fn read_to_write_bus_turnaround_enforced() {
+        // Regression (PR 5): the read→write bubble the cas_ready
+        // comment promised was never added — a write burst could start
+        // the exact cycle the preceding read burst ended. The write's
+        // burst must now start at least one cycle after the read
+        // burst's end (pre-fix this asserts r.done_at + burst, which
+        // is one cycle short).
+        for spec in [DramSpec::ddr3_2133(1), DramSpec::ddr4_2400(1), DramSpec::hbm_1000(1)] {
+            let mut ch = Channel::new(spec);
+            ch.enqueue(read(0, 0), 0);
+            ch.enqueue(write(64, 1), 0); // same row: CAS-limited, not ACT-limited
+            let r = ch.service_one().unwrap();
+            assert_eq!(r.kind, MemKind::Read);
+            let w = ch.service_one().unwrap();
+            assert_eq!(w.kind, MemKind::Write);
+            assert!(
+                w.done_at >= r.done_at + spec.speed.burst + 1,
+                "{:?}: write burst [{}..{}] must not abut read burst end {}",
+                spec.standard,
+                w.done_at - spec.speed.burst,
+                w.done_at,
+                r.done_at
+            );
+        }
+    }
+
+    #[test]
+    fn write_to_write_needs_no_turnaround_bubble() {
+        // The bubble is a bus *direction* penalty: back-to-back write
+        // bursts may still abut. Cross bank groups so tCCD_S (= burst
+        // occupancy on DDR4) is the only CAS spacing in play.
+        let spec = DramSpec::ddr4_2400(1);
+        let far = spec.lines_per_row() * spec.ranks as u64 * spec.banks_per_group as u64
+            * CACHE_LINE; // next bank group under RoBaRaCoCh
+        let mut ch = Channel::new(spec);
+        ch.enqueue(write(0, 0), 0);
+        ch.enqueue(write(far, 1), 0);
+        let a = ch.service_one().unwrap();
+        let b = ch.service_one().unwrap();
+        assert_eq!(
+            b.done_at,
+            a.done_at + spec.speed.burst,
+            "same-direction bursts stay back to back"
+        );
+    }
+
+    #[test]
+    fn reset_matches_fresh_construction() {
+        // Drive traffic, reset to a different spec, and replay a
+        // workload against a genuinely fresh channel: every completion
+        // and the stats roll-up must be identical.
+        let mut reused = Channel::new(DramSpec::ddr4_2400(1));
+        for i in 0..64u64 {
+            reused.enqueue(read(i * CACHE_LINE, i), i * 3);
+        }
+        while reused.service_one().is_some() {}
+        let target = DramSpec::hbm_1000(1);
+        reused.reset(target, DramPolicy::default());
+        let mut fresh = Channel::new(target);
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        for i in 0..200u64 {
+            let addr = rng.next_below(1 << 20) * CACHE_LINE;
+            let at = rng.next_below(5_000);
+            let req = if i % 3 == 0 { write(addr, i) } else { read(addr, i) };
+            reused.enqueue(req, at);
+            fresh.enqueue(req, at);
+        }
+        loop {
+            match (reused.service_one(), fresh.service_one()) {
+                (None, None) => break,
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.tag, b.tag);
+                    assert_eq!(a.done_at, b.done_at);
+                    assert_eq!(a.outcome, b.outcome);
+                }
+                _ => panic!("one channel finished early"),
+            }
+        }
+        assert_eq!(reused.stats, fresh.stats);
     }
 
     #[test]

@@ -61,6 +61,16 @@ impl ChannelMode {
     /// space. The single definition shared by [`MemorySystem::enqueue`]
     /// and the trace analyzer — the bit-identical live-vs-trace
     /// analysis guarantee depends on both using exactly this rewrite.
+    ///
+    /// Region mode clamps the channel index exactly like
+    /// [`MemorySystem::channel_of`] and subtracts that channel's base.
+    /// (It used to wrap modulo `channel_bytes`, so an out-of-range
+    /// address like `100 * channel_bytes` silently aliased onto the
+    /// last channel's line 0 — colliding with a real address — while
+    /// routing clamped; the two now agree, distinct out-of-range
+    /// globals stay distinct, and [`MemorySystem::enqueue`]
+    /// additionally `debug_assert!`s that Region-mode addresses are in
+    /// range. In-range addresses are rewritten exactly as before.)
     #[inline]
     pub fn local_addr(self, addr: u64, channels: usize, channel_bytes: u64) -> u64 {
         match self {
@@ -68,7 +78,10 @@ impl ChannelMode {
                 let line = addr / super::CACHE_LINE / channels as u64;
                 line * super::CACHE_LINE
             }
-            ChannelMode::Region => addr % channel_bytes,
+            ChannelMode::Region => {
+                let ch = (addr / channel_bytes).min(channels as u64 - 1);
+                addr - ch * channel_bytes
+            }
         }
     }
 }
@@ -113,6 +126,30 @@ impl MemorySystem {
             trace: None,
             analyzer: None,
         }
+    }
+
+    /// Reconfigure in place for a (possibly different) spec / channel
+    /// mode / policy, retaining every channel's queue and bank
+    /// allocations — the per-worker reuse hook behind
+    /// [`crate::sim::RunScratch`]. Logically identical to
+    /// `*self = MemorySystem::with_mode_and_policy(spec, mode, policy)`
+    /// (tracing and the attached analyzer are dropped too); the sweep
+    /// equivalence tests assert bit-identical behavior.
+    pub fn reset(&mut self, spec: DramSpec, mode: ChannelMode, policy: DramPolicy) {
+        self.spec = spec;
+        self.mode = mode;
+        self.policy = policy;
+        let per = spec.with_channels(1);
+        self.channels.truncate(spec.channels);
+        for ch in &mut self.channels {
+            ch.reset(per, policy);
+        }
+        while self.channels.len() < spec.channels {
+            self.channels.push(Channel::with_policy(per, policy));
+        }
+        self.arrivals.clear();
+        self.trace = None;
+        self.analyzer = None;
     }
 
     /// Start recording every enqueued request (addresses are the
@@ -187,6 +224,15 @@ impl MemorySystem {
     /// Enqueue a request. The address is rewritten into the channel-
     /// local address space.
     pub fn enqueue(&mut self, req: MemRequest, arrival: u64) {
+        debug_assert!(
+            self.mode != ChannelMode::Region
+                || req.addr < self.spec.channel_bytes * self.channels.len() as u64,
+            "Region-mode address {:#x} outside the {}-channel address space \
+             ({:#x} bytes/channel)",
+            req.addr,
+            self.channels.len(),
+            self.spec.channel_bytes
+        );
         let ch = self.channel_of(req.addr);
         if self.trace.is_some() || self.analyzer.is_some() {
             let ev = TraceEvent {
@@ -440,6 +486,108 @@ mod tests {
         assert_eq!(sys.channel_of(3 * spec.channel_bytes + 4096), 3);
         // out-of-range clamps to the last channel
         assert_eq!(sys.channel_of(100 * spec.channel_bytes), 3);
+    }
+
+    #[test]
+    fn region_mode_out_of_range_no_longer_aliases() {
+        // Regression (PR 5): `channel_of` clamps out-of-range
+        // addresses to the last channel while `local_addr` wrapped
+        // them modulo `channel_bytes` — so 100 * channel_bytes landed
+        // on channel N-1's *line 0*, colliding with the genuine
+        // address 3 * channel_bytes. Both now clamp: distinct
+        // out-of-range globals rewrite to distinct local addresses,
+        // none of which collide with in-range ones.
+        let spec = DramSpec::ddr4_2400(4);
+        let cb = spec.channel_bytes;
+        let n = 4usize;
+        let local = |addr: u64| ChannelMode::Region.local_addr(addr, n, cb);
+        // In-range addresses are rewritten exactly as before (the
+        // in-sim bit-identity guarantee).
+        assert_eq!(local(0), 0);
+        assert_eq!(local(3 * cb + 4096), 4096);
+        // The seed bug: 100 * cb wrapped onto local 0 == local(3 * cb).
+        assert_ne!(local(100 * cb), local(3 * cb));
+        assert_eq!(local(100 * cb), 97 * cb);
+        // Distinct out-of-range globals stay distinct.
+        assert_ne!(local(100 * cb), local(101 * cb));
+        assert_ne!(local(100 * cb), local(100 * cb + CACHE_LINE));
+        // And routing agrees with the rewrite's clamped channel.
+        let sys = MemorySystem::with_mode(spec, ChannelMode::Region);
+        assert_eq!(sys.channel_of(100 * cb), 3);
+        assert_eq!(local(100 * cb), 100 * cb - 3 * cb);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "outside the")]
+    fn region_mode_enqueue_rejects_out_of_range_in_debug() {
+        let spec = DramSpec::ddr4_2400(2);
+        let mut sys = MemorySystem::with_mode(spec, ChannelMode::Region);
+        sys.enqueue(
+            MemRequest {
+                addr: 100 * spec.channel_bytes,
+                kind: MemKind::Read,
+                tag: 0,
+                region: Region::Vertices,
+            },
+            0,
+        );
+    }
+
+    #[test]
+    fn reset_system_matches_fresh_construction() {
+        // Drive a 2-channel DDR4 system, reset it to 4-channel HBM in
+        // Region mode, and replay a workload against a genuinely fresh
+        // system: identical completions and stats.
+        let mut reused = MemorySystem::new(DramSpec::ddr4_2400(2));
+        reused.enable_trace();
+        for i in 0..64u64 {
+            reused.enqueue(
+                MemRequest {
+                    addr: i * CACHE_LINE,
+                    kind: MemKind::Read,
+                    tag: i,
+                    region: Region::Edges,
+                },
+                0,
+            );
+        }
+        reused.drain();
+        let target = DramSpec::hbm_1000(4);
+        reused.reset(target, ChannelMode::Region, DramPolicy::default());
+        assert!(reused.trace().is_none(), "reset drops tracing state");
+        assert_eq!(reused.pending(), 0);
+        let mut fresh = MemorySystem::with_mode(target, ChannelMode::Region);
+        let mut rng = crate::util::rng::Rng::new(0x5E7);
+        for i in 0..300u64 {
+            let ch = rng.next_below(4);
+            let addr = ch * target.channel_bytes
+                + rng.next_below(1 << 20) * CACHE_LINE;
+            let req = MemRequest {
+                addr,
+                kind: if i % 4 == 0 { MemKind::Write } else { MemKind::Read },
+                tag: i,
+                region: Region::Updates,
+            };
+            let at = rng.next_below(10_000);
+            reused.enqueue(req, at);
+            fresh.enqueue(req, at);
+        }
+        loop {
+            match (reused.service_one(), fresh.service_one()) {
+                (None, None) => break,
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.tag, b.tag);
+                    assert_eq!(a.channel, b.channel);
+                    assert_eq!(a.done_at, b.done_at);
+                }
+                _ => panic!("one system finished early"),
+            }
+        }
+        assert_eq!(reused.stats(), fresh.stats());
+        // A reset to *fewer* channels shrinks the fan-out too.
+        reused.reset(DramSpec::ddr4_2400(1), ChannelMode::InterleaveLine, DramPolicy::default());
+        assert_eq!(reused.num_channels(), 1);
     }
 
     #[test]

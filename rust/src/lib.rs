@@ -32,6 +32,13 @@
 //!   (live simulations or written trace files — identical results)
 //!   into per-region traffic, sequentiality and row-locality
 //!   summaries: the paper's Figs. 8–11 analysis as a library.
+//! * [`onchip`] — the on-chip vertex-buffer (BRAM) model: a
+//!   configurable line-granular buffer (direct-mapped / set-associative
+//!   / scratchpad over a byte budget, per [`trace::Region`]) the phase
+//!   driver consults before every request — hits retire on chip and
+//!   never reach DRAM. Closes the loop on the analyzer's reuse
+//!   histograms: [`trace::RegionSummary::predicted_hit_rate`] predicts
+//!   the buffer's hit rate from a streaming-only run.
 //! * [`sim`] — the typed session API and the co-simulation engine:
 //!   [`sim::SimSpec`] describes one run (accelerator × workload ×
 //!   problem × memory technology × channels × configuration) with all
@@ -77,6 +84,7 @@ pub mod coordinator;
 pub mod dram;
 pub mod engine;
 pub mod graph;
+pub mod onchip;
 pub mod partition;
 pub mod report;
 pub mod runtime;

@@ -26,7 +26,8 @@ use graphmem::dram::{ChannelMode, MemTech};
 use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
 use graphmem::graph::rmat::{self, RmatParams};
 use graphmem::graph::{datasets, properties::GraphProperties, DatasetId};
-use graphmem::report::{pattern_tables, Table};
+use graphmem::onchip::OnChipConfig;
+use graphmem::report::{onchip_table, pattern_tables, Table};
 use graphmem::sim::{Session, SimSpec, SpecError, Sweep, Workload};
 use graphmem::trace::{
     parse_events, parse_meta, write_events, write_meta, AccessPatternAnalyzer, TraceMeta,
@@ -94,7 +95,10 @@ fn print_help() {
          \x20            (issue-order request trace; --channels is validated against the DRAM's\n  \
          \x20             Tab. 3 maximum: 4 for DDR3/DDR4, 8 for HBM)\n  \
          graphmem analyze <accel> <graph> <problem> [--dram d] [--channels N] [--no-opt] [--csv]\n  \
-         \x20            (per-region access-pattern tables from a live simulation)\n  \
+         \x20            [--onchip default|off|<bytes>]\n  \
+         \x20            (per-region access-pattern tables from a live simulation; --onchip\n  \
+         \x20             additionally models the accelerator's BRAM buffer and prints the\n  \
+         \x20             reuse-histogram-predicted vs simulated hit rate)\n  \
          graphmem analyze --trace <file> [--dram d] [--channels N] [--mode interleave|region] [--csv]\n  \
          \x20            (same analysis over a trace file; flags default to the file's header)\n  \
          graphmem report --exp <id|all> [--scope quick|standard|full] [--csv]\n  \
@@ -402,7 +406,14 @@ fn cmd_trace(args: &[String]) -> Result<()> {
 
 fn cmd_analyze(args: &[String]) -> Result<()> {
     let csv = has_flag(args, "--csv");
+    // One session so the base analysis run and the optional --onchip
+    // run share a single compiled phase program.
+    let session = Session::new();
+    let mut live_spec = None;
     let (label, summary) = if let Some(path) = flag_value(args, "--trace") {
+        if flag_value(args, "--onchip").is_some() {
+            bail!("--onchip needs a live simulation to model the buffer; drop --trace");
+        }
         // Offline mode: re-analyze an existing trace file. The
         // organization comes from the file's header when present;
         // explicit flags override it (headerless traces default to
@@ -459,12 +470,14 @@ fn cmd_analyze(args: &[String]) -> Result<()> {
     } else {
         // Live mode: run the spec with the analyzer attached.
         let spec = spec_from_args(args, true)?;
-        let r = spec.run();
+        let r = session.run(&spec);
         println!("{}", r.summary());
         let summary = r
             .patterns
             .expect("patterns(true) specs always attach a summary");
-        (spec.label(), summary)
+        let label = spec.label();
+        live_spec = Some((spec, r.dram));
+        (label, summary)
     };
     for t in pattern_tables(&label, &summary) {
         if csv {
@@ -472,6 +485,59 @@ fn cmd_analyze(args: &[String]) -> Result<()> {
             println!("{}", t.to_csv());
         } else {
             println!("{}", t.render());
+        }
+    }
+    // On-chip axis: re-run the same spec with a buffer modelled and
+    // close the loop — the reuse histograms above predict the hit
+    // rate, the second run measures it.
+    if let (Some((spec, dram_off)), Some(value)) = (live_spec, flag_value(args, "--onchip")) {
+        let cfg = match value {
+            "off" => return Ok(()), // explicit streaming-only: nothing to add
+            "default" => {
+                let Some(cfg) = OnChipConfig::default_for(spec.accelerator(), spec.config())
+                else {
+                    println!(
+                        "on-chip: {} is a streaming design with no default buffer; pass \
+                         `--onchip <bytes>` to model a vertex scratchpad anyway",
+                        spec.accelerator()
+                    );
+                    return Ok(());
+                };
+                cfg
+            }
+            bytes => OnChipConfig::vertex_cache(bytes.parse().map_err(|e| {
+                anyhow!("bad --onchip {bytes:?}: expected default|off|<BRAM bytes> ({e})")
+            })?),
+        };
+        let capacity_lines = cfg.capacity_lines();
+        let regions: Vec<_> = cfg.regions().to_vec();
+        // Second run: patterns off (the analysis above already ran);
+        // the session reuses the compiled program — the buffer and
+        // the patterns toggle are not part of the program key.
+        let on_spec = spec_from_args(args, false)?.with_onchip(Some(cfg))?;
+        let on = session.run(&on_spec);
+        let stats = on.onchip.expect("onchip specs always attach counters");
+        let t = onchip_table(&label, &stats);
+        if csv {
+            println!("# {}", t.title);
+            println!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+        for region in regions {
+            let reg = summary.region(region);
+            if reg.requests() == 0 {
+                continue;
+            }
+            println!(
+                "{region}: reuse-histogram predicted hit rate {:.1}% vs simulated {:.1}% \
+                 ({} lines); DRAM requests {} -> {}",
+                100.0 * reg.predicted_hit_rate(capacity_lines),
+                100.0 * stats.region_hit_rate(region),
+                capacity_lines,
+                dram_off.region_requests(region),
+                on.dram.region_requests(region),
+            );
         }
     }
     Ok(())

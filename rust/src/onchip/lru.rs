@@ -1,0 +1,178 @@
+//! O(1) LRU order over cache-line ids: a `HashMap` into an
+//! arena-allocated doubly-linked list. Backs the fully-associative
+//! [`super::Geometry::Scratchpad`] buffer, where a stamp-scan per
+//! eviction would cost O(capacity) on large BRAM budgets.
+
+use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+#[derive(Clone, Debug)]
+struct Node {
+    line: u64,
+    prev: usize,
+    next: usize,
+}
+
+/// Most-recent-first list of cache lines with O(1) touch / insert /
+/// evict. Node slots are pooled, so steady-state churn (insert one,
+/// evict one) performs no allocation beyond the map's own bookkeeping.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct Lru {
+    map: HashMap<u64, usize>,
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl Lru {
+    pub(crate) fn new() -> Lru {
+        Lru {
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    /// Lines currently held.
+    pub(crate) fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Is the list empty? (Companion of [`Lru::len`]; clippy insists.)
+    #[allow(dead_code)]
+    pub(crate) fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Is `line` present (without touching recency)?
+    #[cfg(test)]
+    pub(crate) fn contains(&self, line: u64) -> bool {
+        self.map.contains_key(&line)
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.nodes[idx].prev, self.nodes[idx].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.nodes[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.nodes[next].prev = prev;
+        }
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.nodes[idx].prev = NIL;
+        self.nodes[idx].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Move `line` to the most-recent position; returns whether it was
+    /// present.
+    pub(crate) fn touch(&mut self, line: u64) -> bool {
+        let Some(&idx) = self.map.get(&line) else {
+            return false;
+        };
+        if self.head != idx {
+            self.unlink(idx);
+            self.push_front(idx);
+        }
+        true
+    }
+
+    /// Insert `line` at the most-recent position (it must not already
+    /// be present). When the list already holds `cap` lines, the
+    /// least-recent line is evicted and returned.
+    pub(crate) fn insert(&mut self, line: u64, cap: u64) -> Option<u64> {
+        debug_assert!(!self.map.contains_key(&line), "insert of a present line");
+        debug_assert!(cap > 0, "zero-capacity buffers never fill");
+        let evicted = if self.len() as u64 >= cap {
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL);
+            let victim_line = self.nodes[victim].line;
+            self.unlink(victim);
+            self.map.remove(&victim_line);
+            self.free.push(victim);
+            Some(victim_line)
+        } else {
+            None
+        };
+        let idx = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot].line = line;
+                slot
+            }
+            None => {
+                self.nodes.push(Node {
+                    line,
+                    prev: NIL,
+                    next: NIL,
+                });
+                self.nodes.len() - 1
+            }
+        };
+        self.push_front(idx);
+        self.map.insert(line, idx);
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_touch_evict_in_lru_order() {
+        let mut l = Lru::new();
+        assert_eq!(l.insert(1, 2), None);
+        assert_eq!(l.insert(2, 2), None);
+        assert_eq!(l.len(), 2);
+        // 1 is least recent -> evicted by the third insert.
+        assert_eq!(l.insert(3, 2), Some(1));
+        assert!(!l.contains(1));
+        assert!(l.contains(2) && l.contains(3));
+        // Touch 2 so 3 becomes the victim.
+        assert!(l.touch(2));
+        assert!(!l.touch(99));
+        assert_eq!(l.insert(4, 2), Some(3));
+        assert!(l.contains(2) && l.contains(4));
+    }
+
+    #[test]
+    fn slots_are_pooled_across_evictions() {
+        let mut l = Lru::new();
+        for i in 0..100u64 {
+            l.insert(i, 4);
+        }
+        assert_eq!(l.len(), 4);
+        // 100 inserts through a 4-line list allocate at most 4 + 1
+        // node slots (the arena reuses freed slots).
+        assert!(l.nodes.len() <= 5, "node arena grew to {}", l.nodes.len());
+        for i in 96..100 {
+            assert!(l.contains(i));
+        }
+    }
+
+    #[test]
+    fn touch_head_is_noop_and_order_survives() {
+        let mut l = Lru::new();
+        l.insert(7, 3);
+        assert!(l.touch(7)); // head touch
+        l.insert(8, 3);
+        l.insert(9, 3);
+        assert_eq!(l.insert(10, 3), Some(7));
+    }
+}

@@ -1,0 +1,589 @@
+//! On-chip vertex-buffer (BRAM) model — the subsystem that closes the
+//! reuse-histogram loop.
+//!
+//! The paper's central finding is that the studied accelerators differ
+//! most in how they *avoid* DRAM traffic: AccuGraph holds vertex
+//! values in on-chip arrays, ForeGraph caches subgraph intervals in
+//! BRAM, while HitGraph and ThunderGP stream everything. Before this
+//! module, the simulator sent every vertex access to
+//! [`crate::dram::MemorySystem`], so the reuse-interval histograms the
+//! [`crate::trace`] analyzer computes measured a dimension nothing in
+//! the simulator acted on.
+//!
+//! An [`OnChipBuffer`] is consulted by the phase driver
+//! ([`crate::sim::driver::run_phase_onchip`]) *before* each line
+//! request is enqueued: **hits** are retired at a fixed on-chip
+//! latency and never reach the memory system; **misses** pass through
+//! unchanged and (for cached regions) fill the buffer. The model is
+//! line-granular over a BRAM byte budget with three geometries
+//! ([`Geometry`]) and caches a configurable set of [`Region`]s.
+//!
+//! Determinism: fills take effect at issue time (no
+//! miss-status-holding registers), eviction is LRU with stable
+//! tie-breaking, and a hit's completion time is
+//! `issue + hit_latency` — so a configured simulation is exactly as
+//! reproducible as an unconfigured one, and
+//! `OnChipConfig` with zero capacity is *bit-identical* to no buffer
+//! at all (asserted by `tests/onchip_equivalence.rs`).
+//!
+//! Closing the loop: the analyzer's per-region reuse histograms
+//! ([`crate::trace::RegionSummary::predicted_hit_rate`]) predict this
+//! buffer's hit rate from a streaming-only run — reuse distance ≤
+//! capacity-in-lines ⇒ predicted hit — and the equivalence suite
+//! cross-checks prediction against simulation.
+//!
+//! ```
+//! use graphmem::onchip::{Geometry, OnChipConfig};
+//! use graphmem::trace::Region;
+//!
+//! // AccuGraph's on-chip vertex array: a 64 KiB value scratchpad.
+//! let cfg = OnChipConfig::vertex_cache(64 * 1024);
+//! assert_eq!(cfg.capacity_lines(), 1024);
+//! assert_eq!(cfg.geometry(), Geometry::Scratchpad);
+//! assert!(cfg.caches(Region::Vertices) && !cfg.caches(Region::Edges));
+//! ```
+
+mod lru;
+
+use crate::accel::{AcceleratorConfig, AcceleratorKind};
+use crate::dram::{MemKind, CACHE_LINE};
+use crate::trace::Region;
+use lru::Lru;
+
+/// How the BRAM byte budget is organized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Geometry {
+    /// One way: each line maps to exactly one slot (`line % sets`).
+    DirectMapped,
+    /// `ways`-way set-associative with per-set LRU replacement.
+    SetAssociative { ways: usize },
+    /// Fully-associative LRU over the whole budget — the explicit
+    /// on-chip arrays of AccuGraph/ForeGraph, where the accelerator
+    /// controls placement and the budget is the only constraint.
+    Scratchpad,
+}
+
+/// Configuration of an on-chip buffer: which [`Region`]s it caches,
+/// the BRAM byte budget, the geometry, the fixed hit latency and the
+/// write-allocation policy.
+///
+/// Part of a [`crate::sim::SimSpec`]'s identity (memoized runs with
+/// different buffers never alias) but *not* of its
+/// [`crate::sim::SimSpec::program_key`]: the buffer only affects
+/// execution, never compilation, so a BRAM-size sweep shares one
+/// compiled program across every buffer configuration.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct OnChipConfig {
+    /// Cached regions, canonicalized (sorted, deduplicated) so the
+    /// derived `Hash`/`Eq` cannot be split by construction order.
+    regions: Vec<Region>,
+    capacity_bytes: u64,
+    geometry: Geometry,
+    hit_latency: u64,
+    write_allocate: bool,
+}
+
+impl OnChipConfig {
+    /// Default hit latency in DRAM-controller cycles: one BRAM access.
+    pub const DEFAULT_HIT_LATENCY: u64 = 1;
+
+    /// A buffer over `capacity_bytes` of BRAM caching `regions`.
+    /// Writes allocate by default (the modelled designs keep their
+    /// vertex values readable *and* writable on chip).
+    pub fn new(
+        capacity_bytes: u64,
+        geometry: Geometry,
+        regions: impl IntoIterator<Item = Region>,
+    ) -> OnChipConfig {
+        let mut regions: Vec<Region> = regions.into_iter().collect();
+        regions.sort_unstable();
+        regions.dedup();
+        OnChipConfig {
+            regions,
+            capacity_bytes,
+            geometry,
+            hit_latency: Self::DEFAULT_HIT_LATENCY,
+            write_allocate: true,
+        }
+    }
+
+    /// AccuGraph's on-chip vertex value array (§3.2.1): a
+    /// fully-associative scratchpad over the vertex region.
+    pub fn vertex_cache(capacity_bytes: u64) -> OnChipConfig {
+        OnChipConfig::new(capacity_bytes, Geometry::Scratchpad, [Region::Vertices])
+    }
+
+    /// ForeGraph's BRAM interval cache (§3.2.2): source + destination
+    /// interval values held on chip while a shard is processed. Same
+    /// mechanics as [`OnChipConfig::vertex_cache`] — interval values
+    /// *are* vertex values — sized for two intervals by
+    /// [`OnChipConfig::default_for`].
+    pub fn interval_cache(capacity_bytes: u64) -> OnChipConfig {
+        OnChipConfig::new(capacity_bytes, Geometry::Scratchpad, [Region::Vertices])
+    }
+
+    /// The paper-faithful default buffer for an accelerator, sized
+    /// from its [`AcceleratorConfig`] capacities:
+    ///
+    /// * AccuGraph — vertex array of `bram_values` 4 B values,
+    /// * ForeGraph — interval cache of 2 × `foregraph_interval` values
+    ///   (source + destination interval),
+    /// * HitGraph / ThunderGP — `None`: streaming designs whose value
+    ///   prefetches are already modelled as explicit request streams.
+    pub fn default_for(kind: AcceleratorKind, cfg: &AcceleratorConfig) -> Option<OnChipConfig> {
+        match kind {
+            AcceleratorKind::AccuGraph => {
+                Some(OnChipConfig::vertex_cache(cfg.bram_values as u64 * 4))
+            }
+            AcceleratorKind::ForeGraph => {
+                Some(OnChipConfig::interval_cache(2 * cfg.foregraph_interval as u64 * 4))
+            }
+            AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp => None,
+        }
+    }
+
+    /// Override the geometry.
+    pub fn with_geometry(mut self, geometry: Geometry) -> OnChipConfig {
+        self.geometry = geometry;
+        self
+    }
+
+    /// Override the fixed hit latency (cycles).
+    pub fn with_hit_latency(mut self, cycles: u64) -> OnChipConfig {
+        self.hit_latency = cycles;
+        self
+    }
+
+    /// Whether a write miss allocates the line (default: yes).
+    pub fn with_write_allocate(mut self, on: bool) -> OnChipConfig {
+        self.write_allocate = on;
+        self
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Budget in whole cache lines (the unit everything is tracked in).
+    pub fn capacity_lines(&self) -> u64 {
+        self.capacity_bytes / CACHE_LINE
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+
+    pub fn hit_latency(&self) -> u64 {
+        self.hit_latency
+    }
+
+    pub fn write_allocate(&self) -> bool {
+        self.write_allocate
+    }
+
+    /// Cached regions (sorted).
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+
+    /// Does this buffer cache `region`?
+    pub fn caches(&self, region: Region) -> bool {
+        self.regions.contains(&region)
+    }
+
+    /// Structural validity (checked by `SimSpecBuilder::build` so an
+    /// invalid buffer is rejected before any simulation).
+    pub fn validate(&self) -> Result<(), &'static str> {
+        if let Geometry::SetAssociative { ways: 0 } = self.geometry {
+            return Err("set-associative geometry needs at least 1 way");
+        }
+        if self.regions.is_empty() {
+            return Err("an on-chip buffer must cache at least one region");
+        }
+        Ok(())
+    }
+}
+
+/// Hit / miss / fill counters of one run's buffer, per [`Region`].
+/// Attached to [`crate::sim::SimReport::onchip`] when the spec carried
+/// an [`OnChipConfig`]. Accesses to regions the buffer does not cache
+/// bypass it entirely and are not counted here.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OnChipStats {
+    hits: [u64; Region::COUNT],
+    misses: [u64; Region::COUNT],
+    fills: [u64; Region::COUNT],
+    evictions: u64,
+    capacity_lines: u64,
+}
+
+impl OnChipStats {
+    pub fn region_hits(&self, r: Region) -> u64 {
+        self.hits[r.index()]
+    }
+
+    pub fn region_misses(&self, r: Region) -> u64 {
+        self.misses[r.index()]
+    }
+
+    pub fn region_fills(&self, r: Region) -> u64 {
+        self.fills[r.index()]
+    }
+
+    /// Accesses the buffer arbitrated for `r` (hits + misses).
+    pub fn region_accesses(&self, r: Region) -> u64 {
+        self.hits[r.index()] + self.misses[r.index()]
+    }
+
+    pub fn hits_total(&self) -> u64 {
+        self.hits.iter().sum()
+    }
+
+    pub fn misses_total(&self) -> u64 {
+        self.misses.iter().sum()
+    }
+
+    pub fn fills_total(&self) -> u64 {
+        self.fills.iter().sum()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// The buffer's capacity in lines (for hit-rate predictions).
+    pub fn capacity_lines(&self) -> u64 {
+        self.capacity_lines
+    }
+
+    /// Hit rate over one region's arbitrated accesses (0.0 when none).
+    pub fn region_hit_rate(&self, r: Region) -> f64 {
+        let n = self.region_accesses(r);
+        if n == 0 {
+            0.0
+        } else {
+            self.hits[r.index()] as f64 / n as f64
+        }
+    }
+
+    /// Hit rate over all arbitrated accesses (0.0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.hits_total() + self.misses_total();
+        if n == 0 {
+            0.0
+        } else {
+            self.hits_total() as f64 / n as f64
+        }
+    }
+}
+
+enum Storage {
+    /// Inert: zero capacity — every access misses, nothing fills.
+    Empty,
+    /// Direct-mapped / set-associative: per-slot tags with per-set LRU
+    /// stamps (`u64::MAX` tag = empty slot).
+    Sets {
+        sets: u64,
+        ways: usize,
+        tags: Vec<u64>,
+        stamps: Vec<u64>,
+        tick: u64,
+    },
+    /// Fully-associative scratchpad backed by the O(1) LRU list.
+    Scratchpad { lru: Lru, cap: u64 },
+}
+
+/// One run's buffer instance: the [`OnChipConfig`] plus the live tag
+/// state and counters. Created per simulation by
+/// [`crate::sim::SimSpec`] and threaded through the phase driver.
+pub struct OnChipBuffer {
+    cached: [bool; Region::COUNT],
+    hit_latency: u64,
+    write_allocate: bool,
+    storage: Storage,
+    stats: OnChipStats,
+}
+
+impl OnChipBuffer {
+    pub fn new(cfg: OnChipConfig) -> OnChipBuffer {
+        let cap = cfg.capacity_lines();
+        let storage = if cap == 0 {
+            Storage::Empty
+        } else {
+            match cfg.geometry {
+                Geometry::Scratchpad => Storage::Scratchpad {
+                    lru: Lru::new(),
+                    cap,
+                },
+                Geometry::DirectMapped => Storage::Sets {
+                    sets: cap,
+                    ways: 1,
+                    tags: vec![u64::MAX; cap as usize],
+                    stamps: vec![0; cap as usize],
+                    tick: 0,
+                },
+                Geometry::SetAssociative { ways } => {
+                    // A budget smaller than one set degrades to fewer
+                    // ways; leftover lines beyond sets*ways are unused.
+                    let ways = ways.min(cap as usize).max(1);
+                    let sets = (cap / ways as u64).max(1);
+                    let slots = (sets * ways as u64) as usize;
+                    Storage::Sets {
+                        sets,
+                        ways,
+                        tags: vec![u64::MAX; slots],
+                        stamps: vec![0; slots],
+                        tick: 0,
+                    }
+                }
+            }
+        };
+        OnChipBuffer {
+            cached: {
+                let mut m = [false; Region::COUNT];
+                for &r in cfg.regions() {
+                    m[r.index()] = true;
+                }
+                m
+            },
+            hit_latency: cfg.hit_latency,
+            write_allocate: cfg.write_allocate,
+            storage,
+            stats: OnChipStats {
+                capacity_lines: cap,
+                ..OnChipStats::default()
+            },
+        }
+    }
+
+    /// Arbitrate one line request issued at cycle `now`.
+    ///
+    /// * `Some(done_at)` — on-chip **hit**: the request is retired at
+    ///   `now + hit_latency` and must not be sent to the memory
+    ///   system.
+    /// * `None` — bypass (uncached region) or **miss**: the request
+    ///   proceeds to DRAM unchanged; a miss on a cached region has
+    ///   already filled the buffer (reads always, writes when
+    ///   write-allocate is on).
+    #[inline]
+    pub fn access(&mut self, addr: u64, kind: MemKind, region: Region, now: u64) -> Option<u64> {
+        if !self.cached[region.index()] {
+            return None;
+        }
+        let line = addr / CACHE_LINE;
+        if self.lookup_and_touch(line) {
+            self.stats.hits[region.index()] += 1;
+            return Some(now + self.hit_latency);
+        }
+        self.stats.misses[region.index()] += 1;
+        if kind == MemKind::Read || self.write_allocate {
+            if !matches!(self.storage, Storage::Empty) {
+                self.stats.fills[region.index()] += 1;
+            }
+            if self.fill(line) {
+                self.stats.evictions += 1;
+            }
+        }
+        None
+    }
+
+    fn lookup_and_touch(&mut self, line: u64) -> bool {
+        match &mut self.storage {
+            Storage::Empty => false,
+            Storage::Scratchpad { lru, .. } => lru.touch(line),
+            Storage::Sets {
+                sets,
+                ways,
+                tags,
+                stamps,
+                tick,
+            } => {
+                let base = (line % *sets) as usize * *ways;
+                for w in 0..*ways {
+                    if tags[base + w] == line {
+                        *tick += 1;
+                        stamps[base + w] = *tick;
+                        return true;
+                    }
+                }
+                false
+            }
+        }
+    }
+
+    /// Insert `line`; returns whether a valid line was evicted.
+    fn fill(&mut self, line: u64) -> bool {
+        match &mut self.storage {
+            Storage::Empty => false,
+            Storage::Scratchpad { lru, cap } => lru.insert(line, *cap).is_some(),
+            Storage::Sets {
+                sets,
+                ways,
+                tags,
+                stamps,
+                tick,
+            } => {
+                let base = (line % *sets) as usize * *ways;
+                // Empty way first; otherwise per-set LRU (lowest
+                // stamp; stamps are unique, so this is deterministic).
+                let mut victim = base;
+                let mut evict = true;
+                for w in 0..*ways {
+                    if tags[base + w] == u64::MAX {
+                        victim = base + w;
+                        evict = false;
+                        break;
+                    }
+                    if stamps[base + w] < stamps[victim] {
+                        victim = base + w;
+                    }
+                }
+                tags[victim] = line;
+                *tick += 1;
+                stamps[victim] = *tick;
+                evict
+            }
+        }
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> &OnChipStats {
+        &self.stats
+    }
+
+    /// Consume the buffer, yielding its counters (attached to the
+    /// report by `SimSpec::run`).
+    pub fn into_stats(self) -> OnChipStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read(buf: &mut OnChipBuffer, addr: u64) -> Option<u64> {
+        buf.access(addr, MemKind::Read, Region::Vertices, 100)
+    }
+
+    #[test]
+    fn scratchpad_hits_after_fill_at_fixed_latency() {
+        let mut b = OnChipBuffer::new(OnChipConfig::vertex_cache(4 * CACHE_LINE));
+        assert_eq!(read(&mut b, 0), None); // cold miss, fills
+        assert_eq!(read(&mut b, 0), Some(100 + OnChipConfig::DEFAULT_HIT_LATENCY));
+        assert_eq!(read(&mut b, 63), Some(101), "same line, any offset");
+        assert_eq!(b.stats().region_hits(Region::Vertices), 2);
+        assert_eq!(b.stats().region_misses(Region::Vertices), 1);
+        assert_eq!(b.stats().region_fills(Region::Vertices), 1);
+    }
+
+    #[test]
+    fn lru_eviction_over_capacity() {
+        let mut b = OnChipBuffer::new(OnChipConfig::vertex_cache(2 * CACHE_LINE));
+        read(&mut b, 0);
+        read(&mut b, 64);
+        read(&mut b, 128); // evicts line 0
+        assert_eq!(b.stats().evictions(), 1);
+        assert_eq!(read(&mut b, 0), None, "line 0 was evicted");
+        assert!(read(&mut b, 128).is_some());
+    }
+
+    #[test]
+    fn uncached_regions_bypass_without_counting() {
+        let mut b = OnChipBuffer::new(OnChipConfig::vertex_cache(4 * CACHE_LINE));
+        assert_eq!(b.access(0, MemKind::Read, Region::Edges, 0), None);
+        assert_eq!(b.access(0, MemKind::Read, Region::Edges, 0), None);
+        assert_eq!(b.stats().region_accesses(Region::Edges), 0);
+        assert_eq!(b.stats().hits_total() + b.stats().misses_total(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_is_inert() {
+        let mut b = OnChipBuffer::new(OnChipConfig::vertex_cache(0));
+        for _ in 0..5 {
+            assert_eq!(read(&mut b, 0), None);
+        }
+        assert_eq!(b.stats().hits_total(), 0);
+        assert_eq!(b.stats().fills_total(), 0);
+        assert_eq!(b.stats().misses_total(), 5);
+        assert_eq!(b.stats().capacity_lines(), 0);
+    }
+
+    #[test]
+    fn write_allocate_policy() {
+        let alloc = OnChipConfig::vertex_cache(4 * CACHE_LINE);
+        assert!(alloc.write_allocate());
+        let mut b = OnChipBuffer::new(alloc);
+        assert_eq!(b.access(0, MemKind::Write, Region::Vertices, 0), None);
+        assert!(b.access(0, MemKind::Read, Region::Vertices, 0).is_some());
+
+        let mut b = OnChipBuffer::new(
+            OnChipConfig::vertex_cache(4 * CACHE_LINE).with_write_allocate(false),
+        );
+        assert_eq!(b.access(0, MemKind::Write, Region::Vertices, 0), None);
+        assert_eq!(
+            b.access(0, MemKind::Read, Region::Vertices, 0),
+            None,
+            "no-allocate write must not fill"
+        );
+    }
+
+    #[test]
+    fn direct_mapped_conflicts_where_scratchpad_holds() {
+        // Two lines `capacity` apart collide direct-mapped but coexist
+        // in a scratchpad of the same budget.
+        let cap_lines = 8u64;
+        let bytes = cap_lines * CACHE_LINE;
+        let mut dm = OnChipBuffer::new(
+            OnChipConfig::vertex_cache(bytes).with_geometry(Geometry::DirectMapped),
+        );
+        let mut sp = OnChipBuffer::new(OnChipConfig::vertex_cache(bytes));
+        for b in [&mut dm, &mut sp] {
+            read(b, 0);
+            read(b, cap_lines * CACHE_LINE); // same set direct-mapped
+        }
+        assert_eq!(read(&mut dm, 0), None, "direct-mapped conflict evicted it");
+        assert!(read(&mut sp, 0).is_some(), "scratchpad keeps both");
+    }
+
+    #[test]
+    fn set_associative_ways_prevent_one_conflict() {
+        let cap_lines = 8u64;
+        let bytes = cap_lines * CACHE_LINE;
+        let mut sa = OnChipBuffer::new(
+            OnChipConfig::vertex_cache(bytes)
+                .with_geometry(Geometry::SetAssociative { ways: 2 }),
+        );
+        // sets = 4; lines 0 and 4 share set 0 but occupy both ways.
+        read(&mut sa, 0);
+        read(&mut sa, 4 * CACHE_LINE);
+        assert!(read(&mut sa, 0).is_some());
+        assert!(read(&mut sa, 4 * CACHE_LINE).is_some());
+        // A third same-set line evicts the LRU way (line 0).
+        read(&mut sa, 8 * CACHE_LINE);
+        assert_eq!(read(&mut sa, 0), None);
+    }
+
+    #[test]
+    fn config_canonicalizes_and_validates() {
+        let a = OnChipConfig::new(64, Geometry::Scratchpad, [Region::Updates, Region::Vertices]);
+        let b = OnChipConfig::new(64, Geometry::Scratchpad, [Region::Vertices, Region::Updates]);
+        assert_eq!(a, b, "region order must not split the identity");
+        assert!(a.validate().is_ok());
+        assert!(OnChipConfig::new(64, Geometry::SetAssociative { ways: 0 }, [Region::Vertices])
+            .validate()
+            .is_err());
+        assert!(OnChipConfig::new(64, Geometry::Scratchpad, []).validate().is_err());
+    }
+
+    #[test]
+    fn accelerator_defaults_match_the_paper() {
+        let cfg = AcceleratorConfig::default();
+        let accu = OnChipConfig::default_for(AcceleratorKind::AccuGraph, &cfg).unwrap();
+        assert_eq!(accu.capacity_bytes(), cfg.bram_values as u64 * 4);
+        let fore = OnChipConfig::default_for(AcceleratorKind::ForeGraph, &cfg).unwrap();
+        assert_eq!(fore.capacity_bytes(), 2 * cfg.foregraph_interval as u64 * 4);
+        assert!(OnChipConfig::default_for(AcceleratorKind::HitGraph, &cfg).is_none());
+        assert!(OnChipConfig::default_for(AcceleratorKind::ThunderGp, &cfg).is_none());
+    }
+}

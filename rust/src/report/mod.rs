@@ -5,5 +5,5 @@
 pub mod pattern;
 pub mod table;
 
-pub use pattern::{channel_table, pattern_tables, region_table, reuse_table};
+pub use pattern::{channel_table, onchip_table, pattern_tables, region_table, reuse_table};
 pub use table::Table;

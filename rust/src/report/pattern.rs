@@ -5,6 +5,7 @@
 //! reuse).
 
 use super::table::Table;
+use crate::onchip::OnChipStats;
 use crate::trace::{AccessPatternSummary, Histogram, Region};
 
 /// Percentage table cell: `part / whole` to one decimal, `-` for an
@@ -25,7 +26,7 @@ pub fn region_table(label: &str, s: &AccessPatternSummary) -> Table {
         format!("Access patterns by region — {label}"),
         &[
             "region", "reads", "writes", "bytes", "share%", "seq%", "strided%", "random%",
-            "run", "hit%", "miss%", "conf%",
+            "run", "hit%", "miss%", "conf%", "lines", "reuse",
         ],
     );
     let total_bytes = s.total_bytes();
@@ -48,8 +49,46 @@ pub fn region_table(label: &str, s: &AccessPatternSummary) -> Table {
             pct(reg.row_hits, n),
             pct(reg.row_misses, n),
             pct(reg.row_conflicts, n),
+            reg.distinct_lines.to_string(),
+            reg.reuse.count().to_string(),
         ]);
     }
+    t
+}
+
+/// On-chip buffer roll-up (see [`crate::onchip`]): per cached region,
+/// how much traffic the BRAM retired (hits) vs passed to DRAM
+/// (misses), plus fills. The companion of
+/// [`crate::trace::RegionSummary::predicted_hit_rate`] — the CLI's
+/// `analyze --onchip` prints both sides of the loop.
+pub fn onchip_table(label: &str, s: &OnChipStats) -> Table {
+    let mut t = Table::new(
+        format!(
+            "On-chip buffer ({} lines) — {label}",
+            s.capacity_lines()
+        ),
+        &["region", "hits", "misses", "fills", "hit%"],
+    );
+    for r in Region::all() {
+        let n = s.region_accesses(r);
+        if n == 0 {
+            continue;
+        }
+        t.row(vec![
+            r.name().to_string(),
+            s.region_hits(r).to_string(),
+            s.region_misses(r).to_string(),
+            s.region_fills(r).to_string(),
+            pct(s.region_hits(r), n),
+        ]);
+    }
+    t.row(vec![
+        "total".to_string(),
+        s.hits_total().to_string(),
+        s.misses_total().to_string(),
+        s.fills_total().to_string(),
+        pct(s.hits_total(), s.hits_total() + s.misses_total()),
+    ]);
     t
 }
 
@@ -180,5 +219,20 @@ mod tests {
     fn pct_handles_zero_denominator() {
         assert_eq!(pct(5, 0), "-");
         assert_eq!(pct(1, 4), "25.0");
+    }
+
+    #[test]
+    fn onchip_table_covers_cached_regions_plus_total() {
+        use crate::onchip::{OnChipBuffer, OnChipConfig};
+        let mut buf = OnChipBuffer::new(OnChipConfig::vertex_cache(4 * 64));
+        for addr in [0u64, 0, 64, 0] {
+            buf.access(addr, MemKind::Read, Region::Vertices, 0);
+        }
+        let t = onchip_table("test", buf.stats());
+        let txt = t.render();
+        assert!(txt.contains("vertices"), "{txt}");
+        assert!(txt.contains("total"), "{txt}");
+        assert!(!txt.contains("edges"), "uncached regions are omitted: {txt}");
+        assert_eq!(t.num_rows(), 2);
     }
 }

@@ -34,17 +34,34 @@
 //! equivalence suite enforces it via
 //! [`set_materialize_streams`]).
 //!
+//! # On-chip buffering
+//!
+//! [`run_phase_onchip`] additionally consults an
+//! [`OnChipBuffer`] *before* each request is enqueued: a hit is
+//! retired at the buffer's fixed latency and never reaches the
+//! [`MemorySystem`] — it occupies no window slot, and its completion
+//! releases chained children exactly as a DRAM completion would. A
+//! miss follows the unmodified path (and fills the buffer inside
+//! [`OnChipBuffer::access`]). Passing `None` is byte-for-byte the
+//! pre-buffer driver, which is what keeps default-off runs
+//! bit-identical (`tests/onchip_equivalence.rs`).
+//!
 //! [`LineSource`]: crate::accel::stream::LineSource
 
 use crate::accel::stream::{Fanout, Merge, Phase};
 use crate::dram::{MemRequest, MemorySystem};
+use crate::onchip::OnChipBuffer;
 use std::cell::Cell;
 use std::collections::VecDeque;
 
 /// Per-phase execution telemetry.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PhaseTelemetry {
+    /// Requests the phase retired (on-chip hits included).
     pub requests: u64,
+    /// The subset of `requests` retired by the on-chip buffer without
+    /// reaching the memory system.
+    pub onchip_hits: u64,
     /// Cycle at which the phase's last request completed.
     pub end_cycle: u64,
 }
@@ -247,11 +264,25 @@ pub fn run_phase_with(
     start: u64,
     scratch: &mut PhaseScratch,
 ) -> PhaseTelemetry {
+    run_phase_onchip(mem, phase, start, scratch, None)
+}
+
+/// [`run_phase_with`] with an optional on-chip buffer consulted before
+/// every enqueue (see the [module docs](self)). `None` is exactly
+/// [`run_phase_with`]; hits are retired at the buffer's latency and
+/// never reach `mem`.
+pub fn run_phase_onchip(
+    mem: &mut MemorySystem,
+    phase: &Phase,
+    start: u64,
+    scratch: &mut PhaseScratch,
+    mut onchip: Option<&mut OnChipBuffer>,
+) -> PhaseTelemetry {
     if MATERIALIZE_STREAMS.with(|c| c.get()) {
         let materialized = phase.materialized();
         // Drop the flag around the nested call so it can't recurse.
         set_materialize_streams(false);
-        let t = run_phase_with(mem, &materialized, start, scratch);
+        let t = run_phase_onchip(mem, &materialized, start, scratch, onchip);
         set_materialize_streams(true);
         return t;
     }
@@ -366,23 +397,33 @@ pub fn run_phase_with(
             let stream = &phase.streams[s];
             let addr = stream.line(idx);
             let ch = st.next_ch;
+            let parent_len = st.len;
             debug_assert_eq!(ch, mem.channel_of(addr));
-            // A request cannot arrive before its data dependency is
-            // met, nor before its port had a free slot.
-            let arrival = release.max(if in_flight[ch] + 1 == phase.window {
-                slot_free_at[ch]
-            } else {
-                start
-            });
-            mem.enqueue(
-                MemRequest {
-                    addr,
-                    kind: stream.kind,
-                    tag: tag(s, idx),
-                    region: stream.class.region(),
-                },
-                arrival,
-            );
+            // On-chip consult (tentpole): a hit is retired at the
+            // buffer's fixed latency and never reaches the memory
+            // system; the miss path below is the unmodified driver.
+            let onchip_done = match onchip.as_deref_mut() {
+                Some(buf) => buf.access(addr, stream.kind, stream.class.region(), release),
+                None => None,
+            };
+            if onchip_done.is_none() {
+                // A request cannot arrive before its data dependency
+                // is met, nor before its port had a free slot.
+                let arrival = release.max(if in_flight[ch] + 1 == phase.window {
+                    slot_free_at[ch]
+                } else {
+                    start
+                });
+                mem.enqueue(
+                    MemRequest {
+                        addr,
+                        kind: stream.kind,
+                        tag: tag(s, idx),
+                        region: stream.class.region(),
+                    },
+                    arrival,
+                );
+            }
             st.issued += 1;
             remaining -= 1;
             // Advance the cursor's cached channel and the per-channel
@@ -401,9 +442,32 @@ pub fn run_phase_with(
             } else {
                 waiting[ch] -= 1; // stream exhausted
             }
-            in_flight[ch] += 1;
-            total_in_flight += 1;
             telemetry.requests += 1;
+            match onchip_done {
+                None => {
+                    in_flight[ch] += 1;
+                    total_in_flight += 1;
+                }
+                Some(done) => {
+                    // The hit *is* this request's completion: release
+                    // chained children now, exactly as the service
+                    // loop below would on a DRAM completion.
+                    telemetry.onchip_hits += 1;
+                    end = end.max(done);
+                    for &c in &children[s] {
+                        let f = phase.streams[c].fanout.released_by(idx, parent_len);
+                        if f == 0 {
+                            continue;
+                        }
+                        let stc = &mut state[c];
+                        if stc.issued == stc.available && stc.issued < stc.len {
+                            waiting[stc.next_ch] += 1;
+                        }
+                        stc.available += f as usize;
+                        stc.pending_release.push_back((done, f));
+                    }
+                }
+            }
         }
 
         if total_in_flight == 0 {
@@ -754,6 +818,95 @@ mod tests {
             }
         }
         assert_eq!(m_fresh.stats(), m_shared.stats());
+    }
+
+    #[test]
+    fn onchip_hits_never_reach_the_memory_system() {
+        use crate::dram::CACHE_LINE;
+        use crate::onchip::{OnChipBuffer, OnChipConfig};
+        use crate::trace::Region;
+        let mut m = mem();
+        // The same 4 vertex lines read twice: second pass must hit.
+        let lines: Vec<u64> = [0u64, 1, 2, 3, 0, 1, 2, 3]
+            .iter()
+            .map(|i| i * CACHE_LINE)
+            .collect();
+        let phase = Phase::single(StreamClass::Values, MemKind::Read, lines, 8);
+        let mut buf = OnChipBuffer::new(OnChipConfig::vertex_cache(8 * CACHE_LINE));
+        let t = run_phase_onchip(&mut m, &phase, 0, &mut PhaseScratch::new(), Some(&mut buf));
+        assert_eq!(t.requests, 8, "all requests retired");
+        assert_eq!(t.onchip_hits, 4, "second pass hits on chip");
+        assert_eq!(m.stats().requests(), 4, "hits never reach DRAM");
+        assert_eq!(buf.stats().region_hits(Region::Vertices), 4);
+        assert_eq!(buf.stats().region_misses(Region::Vertices), 4);
+    }
+
+    #[test]
+    fn onchip_hit_releases_chained_children() {
+        use crate::dram::CACHE_LINE;
+        use crate::onchip::{OnChipBuffer, OnChipConfig};
+        let mut m = mem();
+        // Parent: 2 vertex reads of the SAME line (second hits on
+        // chip); child: 2 writes released one per parent completion.
+        // If hit completions failed to release children, the driver's
+        // exhaustion debug_assert (or a hang) would trip.
+        let parent = LineStream::independent(
+            StreamClass::Values,
+            MemKind::Read,
+            vec![0u64, 0u64],
+        );
+        let child = LineStream::chained(
+            StreamClass::Updates,
+            MemKind::Write,
+            LineSource::seq(1 << 20, 2 * CACHE_LINE),
+            0,
+            vec![1, 1],
+        );
+        let phase = Phase {
+            streams: vec![parent, child],
+            merge: Merge::prio([1, 0]).into(),
+            window: 4,
+        };
+        let mut buf = OnChipBuffer::new(OnChipConfig::vertex_cache(4 * CACHE_LINE));
+        let t = run_phase_onchip(&mut m, &phase, 0, &mut PhaseScratch::new(), Some(&mut buf));
+        assert_eq!(t.requests, 4);
+        assert_eq!(t.onchip_hits, 1);
+        assert_eq!(m.stats().writes, 2, "both children released and issued");
+        assert_eq!(m.stats().reads, 1, "one parent read hit on chip");
+    }
+
+    #[test]
+    fn onchip_none_is_the_plain_driver() {
+        let mut m_plain = mem();
+        let mut m_none = mem();
+        let phase = Phase::single(
+            StreamClass::Values,
+            MemKind::Read,
+            LineSource::seq(0, 64 * 64),
+            8,
+        );
+        let a = run_phase_with(&mut m_plain, &phase, 7, &mut PhaseScratch::new());
+        let b = run_phase_onchip(&mut m_none, &phase, 7, &mut PhaseScratch::new(), None);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.end_cycle, b.end_cycle);
+        assert_eq!(b.onchip_hits, 0);
+        assert_eq!(m_plain.stats(), m_none.stats());
+    }
+
+    #[test]
+    fn fully_onchip_phase_completes_without_dram() {
+        use crate::dram::CACHE_LINE;
+        use crate::onchip::{OnChipBuffer, OnChipConfig};
+        let mut m = mem();
+        let mut buf = OnChipBuffer::new(OnChipConfig::vertex_cache(2 * CACHE_LINE));
+        // Pre-warm line 0, then run a phase that only touches it.
+        buf.access(0, MemKind::Read, crate::trace::Region::Vertices, 0);
+        let phase = Phase::single(StreamClass::Values, MemKind::Read, vec![0u64, 0, 0], 4);
+        let t = run_phase_onchip(&mut m, &phase, 50, &mut PhaseScratch::new(), Some(&mut buf));
+        assert_eq!(t.requests, 3);
+        assert_eq!(t.onchip_hits, 3);
+        assert_eq!(m.stats().requests(), 0);
+        assert_eq!(t.end_cycle, 50 + OnChipConfig::DEFAULT_HIT_LATENCY);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! roll-up of Fig. 11(b).
 
 use crate::dram::DramStats;
+use crate::onchip::OnChipStats;
 use crate::trace::AccessPatternSummary;
 
 /// Raw counters accumulated by an accelerator model during a run.
@@ -50,6 +51,12 @@ pub struct SimReport {
     /// `SimSpecBuilder::patterns(true)` (filled in by `SimSpec::run`;
     /// the accelerator models themselves leave it `None`).
     pub patterns: Option<AccessPatternSummary>,
+    /// On-chip buffer counters — present when the spec carried an
+    /// [`crate::onchip::OnChipConfig`] (filled in by `SimSpec::run`;
+    /// the accelerator models themselves leave it `None`). With a
+    /// buffer configured, `dram` counts only the traffic that *missed*
+    /// on chip.
+    pub onchip: Option<OnChipStats>,
 }
 
 impl SimReport {
@@ -152,6 +159,7 @@ mod tests {
             bus_utilization: 0.42,
             channels: 1,
             patterns: None,
+            onchip: None,
         }
     }
 

@@ -22,8 +22,9 @@ pub mod spec;
 pub mod sweep;
 
 pub use driver::{
-    run_phase, run_phase_with, set_materialize_streams, PhaseScratch, PhaseTelemetry,
+    run_phase, run_phase_onchip, run_phase_with, set_materialize_streams, PhaseScratch,
+    PhaseTelemetry,
 };
 pub use metrics::{RunMetrics, SimReport};
-pub use spec::{ProgramKey, SimSpec, SimSpecBuilder, SpecError, Workload};
+pub use spec::{ProgramKey, RunScratch, SimSpec, SimSpecBuilder, SpecError, Workload};
 pub use sweep::{Session, SessionStats, Sweep, SweepRun};

@@ -22,9 +22,10 @@
 
 use crate::accel::{AcceleratorConfig, AcceleratorKind, PhaseProgram};
 use crate::algo::problem::{GraphProblem, ProblemKind};
-use crate::dram::{ChannelMode, MemTech, MemorySystem};
+use crate::dram::{ChannelMode, DramPolicy, MemTech, MemorySystem};
 use crate::graph::datasets::DatasetId;
 use crate::graph::EdgeList;
+use crate::onchip::{OnChipBuffer, OnChipConfig};
 use crate::sim::metrics::SimReport;
 use crate::trace::{AccessPatternAnalyzer, TraceEvent};
 use std::fmt;
@@ -176,6 +177,9 @@ pub enum SpecError {
     UnknownDataset(String),
     /// A DRAM technology name outside ddr3|ddr4|hbm.
     UnknownMemTech(String),
+    /// A structurally invalid on-chip buffer configuration (see
+    /// [`crate::onchip::OnChipConfig::validate`]).
+    OnChipInvalid(&'static str),
     /// A sweep axis was left empty.
     EmptyAxis(&'static str),
 }
@@ -226,6 +230,9 @@ impl fmt::Display for SpecError {
             SpecError::UnknownMemTech(name) => {
                 write!(f, "unknown DRAM type {name:?} (ddr3|ddr4|hbm)")
             }
+            SpecError::OnChipInvalid(why) => {
+                write!(f, "invalid on-chip buffer configuration: {why}")
+            }
             SpecError::EmptyAxis(axis) => {
                 write!(f, "sweep axis `{axis}` is empty — nothing to run")
             }
@@ -252,6 +259,10 @@ pub struct SimSpec {
     /// spec's identity (memoized with- and without-analysis runs never
     /// alias).
     patterns: bool,
+    /// On-chip buffer model consulted before every request (see
+    /// [`crate::onchip`]). Part of the spec's identity; `None` (the
+    /// default) is bit-identical to the pre-buffer simulator.
+    onchip: Option<OnChipConfig>,
 }
 
 impl SimSpec {
@@ -286,6 +297,21 @@ impl SimSpec {
     /// Whether this spec collects an access-pattern summary.
     pub fn patterns_enabled(&self) -> bool {
         self.patterns
+    }
+
+    /// The on-chip buffer configuration, if any.
+    pub fn onchip(&self) -> Option<&OnChipConfig> {
+        self.onchip.as_ref()
+    }
+
+    /// The same spec with a different on-chip buffer (validated) —
+    /// the hook for sweeping BRAM budgets over one base spec.
+    pub fn with_onchip(mut self, onchip: Option<OnChipConfig>) -> Result<SimSpec, SpecError> {
+        if let Some(cfg) = &onchip {
+            cfg.validate().map_err(SpecError::OnChipInvalid)?;
+        }
+        self.onchip = onchip;
+        Ok(self)
     }
 
     /// How this accelerator places data across channels: the
@@ -378,6 +404,30 @@ impl SimSpec {
         (report, trace.unwrap_or_default())
     }
 
+    /// [`SimSpec::run_with_program`] against a caller-owned, reusable
+    /// [`RunScratch`]: the scratch's [`MemorySystem`] is reset in
+    /// place instead of constructed per run — the last per-run
+    /// allocation of any size on the sweep hot path. Bit-identical to
+    /// [`SimSpec::run_with_program`] (asserted by the sweep
+    /// equivalence tests); [`super::sweep::Session`] threads one
+    /// scratch per worker thread through its batches.
+    pub fn run_with_program_scratch(
+        &self,
+        program: &PhaseProgram,
+        scratch: &mut RunScratch,
+    ) -> SimReport {
+        let dram = self.mem.spec(self.channels);
+        let mode = self.channel_mode();
+        let mem = match &mut scratch.mem {
+            Some(m) => {
+                m.reset(dram, mode, DramPolicy::default());
+                m
+            }
+            None => scratch.mem.insert(MemorySystem::with_mode(dram, mode)),
+        };
+        self.run_on(program, mem, false).0
+    }
+
     fn run_inner(&self, record_trace: bool) -> (SimReport, Option<Vec<TraceEvent>>) {
         let program = self.compile_program();
         self.run_with_program_inner(&program, record_trace)
@@ -386,6 +436,20 @@ impl SimSpec {
     fn run_with_program_inner(
         &self,
         program: &PhaseProgram,
+        record_trace: bool,
+    ) -> (SimReport, Option<Vec<TraceEvent>>) {
+        let mut mem =
+            MemorySystem::with_mode(self.mem.spec(self.channels), self.channel_mode());
+        self.run_on(program, &mut mem, record_trace)
+    }
+
+    /// Execute against an already-configured memory system (freshly
+    /// constructed or [`MemorySystem::reset`]). The single execution
+    /// path behind every `run*` entry point.
+    fn run_on(
+        &self,
+        program: &PhaseProgram,
+        mem: &mut MemorySystem,
         record_trace: bool,
     ) -> (SimReport, Option<Vec<TraceEvent>>) {
         assert_eq!(
@@ -410,19 +474,35 @@ impl SimSpec {
              graph shape or configuration than {}",
             self.label()
         );
-        let spec = self.mem.spec(self.channels);
         let p = GraphProblem::new(self.problem, &g);
-        let mut mem = MemorySystem::with_mode(spec, self.channel_mode());
         if record_trace {
             mem.enable_trace();
         }
         if self.patterns {
             mem.attach_analyzer();
         }
-        let mut report = program.execute(&p, &mut mem);
+        let mut onchip = self.onchip.as_ref().map(|c| OnChipBuffer::new(c.clone()));
+        let mut report = program.execute_onchip(&p, mem, onchip.as_mut());
         report.patterns = mem.take_pattern_summary();
+        report.onchip = onchip.map(OnChipBuffer::into_stats);
         let trace = mem.take_trace();
         (report, trace)
+    }
+}
+
+/// Reusable per-worker run state: one [`MemorySystem`] reset in place
+/// per run instead of constructed per spec (see
+/// [`SimSpec::run_with_program_scratch`]). Lazily initialized on first
+/// use; reconfigures itself across memory technologies, channel counts
+/// and channel modes while retaining queue and bank allocations.
+#[derive(Default)]
+pub struct RunScratch {
+    mem: Option<MemorySystem>,
+}
+
+impl RunScratch {
+    pub fn new() -> RunScratch {
+        RunScratch::default()
     }
 }
 
@@ -461,6 +541,12 @@ pub struct SimSpecBuilder {
     deferred_dataset: Option<SpecError>,
     deferred_mem: Option<SpecError>,
     patterns: bool,
+    onchip: Option<OnChipConfig>,
+    /// Resolve [`OnChipConfig::default_for`] at build time (when the
+    /// accelerator and configuration are known). Between
+    /// [`SimSpecBuilder::onchip`] and [`SimSpecBuilder::onchip_default`],
+    /// the later call wins.
+    onchip_default: bool,
 }
 
 impl SimSpecBuilder {
@@ -580,6 +666,53 @@ impl SimSpecBuilder {
         self
     }
 
+    /// Model an on-chip buffer (see [`crate::onchip`]): the phase
+    /// driver consults it before every request — hits retire at the
+    /// buffer's fixed latency and never reach DRAM. Part of the spec's
+    /// identity (memoized buffered and unbuffered runs never alias)
+    /// but **not** of [`SimSpec::program_key`]: the buffer affects
+    /// execution only, so BRAM-budget sweeps share one compiled
+    /// program. Default `None` keeps every report bit-identical to the
+    /// pre-buffer simulator.
+    ///
+    /// ```
+    /// use graphmem::accel::AcceleratorKind;
+    /// use graphmem::algo::problem::ProblemKind;
+    /// use graphmem::graph::DatasetId;
+    /// use graphmem::onchip::OnChipConfig;
+    /// use graphmem::sim::SimSpec;
+    /// use graphmem::trace::Region;
+    ///
+    /// // AccuGraph with its on-chip vertex array modelled: vertex
+    /// // hits retire in BRAM, so DRAM sees less vertex traffic.
+    /// let cached = SimSpec::builder()
+    ///     .accelerator(AcceleratorKind::AccuGraph)
+    ///     .graph(DatasetId::Sd)
+    ///     .problem(ProblemKind::Bfs)
+    ///     .onchip(OnChipConfig::vertex_cache(64 * 1024))
+    ///     .build()
+    ///     .unwrap()
+    ///     .run();
+    /// let stats = cached.onchip.as_ref().unwrap();
+    /// assert!(stats.region_hits(Region::Vertices) > 0);
+    /// assert!(cached.dram.region_requests(Region::Vertices) < stats.region_accesses(Region::Vertices));
+    /// ```
+    pub fn onchip(mut self, config: impl Into<Option<OnChipConfig>>) -> Self {
+        self.onchip = config.into();
+        self.onchip_default = false;
+        self
+    }
+
+    /// Use the accelerator's paper-faithful default buffer
+    /// ([`OnChipConfig::default_for`]), resolved at build time:
+    /// AccuGraph's vertex array, ForeGraph's interval cache, and no
+    /// buffer for the streaming designs (HitGraph, ThunderGP).
+    pub fn onchip_default(mut self) -> Self {
+        self.onchip = None;
+        self.onchip_default = true;
+        self
+    }
+
     /// Validate and freeze. Every unsupported combination is rejected
     /// here, before any simulation work.
     pub fn build(self) -> Result<SimSpec, SpecError> {
@@ -629,6 +762,14 @@ impl SimSpecBuilder {
         let mut config = config.with_channels(channels);
         config.optimizations.sort_unstable();
         config.optimizations.dedup();
+        let onchip = if self.onchip_default {
+            OnChipConfig::default_for(accelerator, &config)
+        } else {
+            self.onchip
+        };
+        if let Some(cfg) = &onchip {
+            cfg.validate().map_err(SpecError::OnChipInvalid)?;
+        }
         Ok(SimSpec {
             accelerator,
             workload,
@@ -637,6 +778,7 @@ impl SimSpecBuilder {
             channels,
             config,
             patterns: self.patterns,
+            onchip,
         })
     }
 }
@@ -830,6 +972,86 @@ mod tests {
     #[test]
     fn zero_channels_rejected() {
         assert_eq!(base().channels(0).build().unwrap_err(), SpecError::ZeroChannels);
+    }
+
+    #[test]
+    fn onchip_is_part_of_the_memo_key_but_not_the_program_key() {
+        use crate::onchip::OnChipConfig;
+        let plain = base().build().unwrap();
+        assert!(plain.onchip().is_none());
+        let cached = base().onchip(OnChipConfig::vertex_cache(4096)).build().unwrap();
+        assert!(cached.onchip().is_some());
+        // Buffered and unbuffered runs must never alias in the memo...
+        assert_ne!(plain, cached);
+        // ...while the compiled program is shared (the buffer affects
+        // execution only, never compilation).
+        assert_eq!(plain.program_key(), cached.program_key());
+        // Different budgets are distinct memo keys too.
+        let bigger = base().onchip(OnChipConfig::vertex_cache(8192)).build().unwrap();
+        assert_ne!(cached, bigger);
+    }
+
+    #[test]
+    fn onchip_default_resolves_per_accelerator() {
+        use crate::onchip::OnChipConfig;
+        let accu = base()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .onchip_default()
+            .build()
+            .unwrap();
+        let expected =
+            OnChipConfig::default_for(AcceleratorKind::AccuGraph, accu.config()).unwrap();
+        assert_eq!(accu.onchip(), Some(&expected));
+        // Streaming designs resolve to no buffer.
+        let hit = base().onchip_default().build().unwrap();
+        assert!(hit.onchip().is_none());
+        // An explicit buffer wins over the default request.
+        let explicit = base()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .onchip_default()
+            .onchip(OnChipConfig::vertex_cache(64))
+            .build()
+            .unwrap();
+        assert_eq!(explicit.onchip().unwrap().capacity_bytes(), 64);
+    }
+
+    #[test]
+    fn invalid_onchip_rejected_at_build() {
+        use crate::onchip::{Geometry, OnChipConfig};
+        use crate::trace::Region;
+        let bad = OnChipConfig::new(4096, Geometry::SetAssociative { ways: 0 }, [Region::Vertices]);
+        let err = base().onchip(bad.clone()).build().unwrap_err();
+        assert!(matches!(err, SpecError::OnChipInvalid(_)));
+        assert!(err.to_string().contains("on-chip"));
+        // ...and via the post-build hook too.
+        let spec = base().build().unwrap();
+        assert!(spec.with_onchip(Some(bad)).is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_spec_shapes() {
+        // One RunScratch reconfigured across accelerators, memory
+        // technologies, channel counts and channel modes must produce
+        // exactly the fresh-construction reports.
+        let mut scratch = RunScratch::new();
+        let specs = [
+            base().build().unwrap(),
+            base().mem(MemTech::Hbm).channels(4).build().unwrap(),
+            base()
+                .accelerator(AcceleratorKind::AccuGraph)
+                .graph(DatasetId::Sd)
+                .build()
+                .unwrap(),
+            base().mem(MemTech::Ddr3).build().unwrap(),
+        ];
+        for spec in &specs {
+            let program = spec.compile_program();
+            let fresh = spec.run_with_program(&program);
+            let reused = spec.run_with_program_scratch(&program, &mut scratch);
+            assert_eq!(fresh, reused, "scratch diverged for {}", spec.label());
+            // Replay on the warm scratch too.
+            assert_eq!(spec.run_with_program_scratch(&program, &mut scratch), fresh);
+        }
     }
 
     #[test]

@@ -23,8 +23,9 @@
 //! surfaces it behind `graphmem sweep --stats`.
 //!
 //! [`Sweep`] declares experiment axes (accelerators × workloads ×
-//! problems × memory technologies × channel counts × configurations),
-//! takes their cartesian product and executes it through a session:
+//! problems × memory technologies × channel counts × configurations ×
+//! on-chip buffers), takes their cartesian product and executes it
+//! through a session:
 //!
 //! ```
 //! use graphmem::accel::AcceleratorKind;
@@ -45,11 +46,12 @@
 //! ```
 
 use super::metrics::SimReport;
-use super::spec::{ProgramKey, SimSpec, SpecError, Workload};
+use super::spec::{ProgramKey, RunScratch, SimSpec, SpecError, Workload};
 use crate::accel::{AcceleratorConfig, AcceleratorKind, PhaseProgram};
 use crate::algo::problem::ProblemKind;
 use crate::dram::MemTech;
 use crate::graph::datasets::DatasetId;
+use crate::onchip::OnChipConfig;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -282,9 +284,19 @@ impl Session {
     /// with the same spec simulate once: later callers wait on the
     /// first one's gate ([`SessionStats::duplicate_waits`]).
     pub fn run(&self, spec: &SimSpec) -> SimReport {
+        self.run_scratch(spec, &mut RunScratch::new())
+    }
+
+    /// [`Session::run`] against a caller-owned [`RunScratch`]: a run
+    /// that actually simulates resets the scratch's `MemorySystem` in
+    /// place instead of constructing one — [`Session::run_batch`]
+    /// keeps one scratch per worker thread, eliminating the last
+    /// per-run allocation on the sweep hot path. Bit-identical to
+    /// [`Session::run`].
+    pub fn run_scratch(&self, spec: &SimSpec, scratch: &mut RunScratch) -> SimReport {
         let (report, how) = self.reports.get_or_compute(spec, || {
             let program = self.program_for(spec);
-            spec.run_with_program(&program)
+            spec.run_with_program_scratch(&program, scratch)
         });
         match how {
             Fetch::Computed => {}
@@ -316,11 +328,17 @@ impl Session {
             specs.iter().map(|_| Mutex::new(None)).collect();
         std::thread::scope(|scope| {
             for _ in 0..threads {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    let Some(spec) = specs.get(i) else { break };
-                    let report = self.run(spec);
-                    *slots[i].lock().unwrap() = Some(report);
+                scope.spawn(|| {
+                    // One reusable memory system per worker: every
+                    // simulation this worker executes resets it in
+                    // place instead of allocating a fresh one.
+                    let mut scratch = RunScratch::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(spec) = specs.get(i) else { break };
+                        let report = self.run_scratch(spec, &mut scratch);
+                        *slots[i].lock().unwrap() = Some(report);
+                    }
                 });
             }
         });
@@ -382,6 +400,7 @@ pub struct Sweep {
     mem_techs: Vec<MemTech>,
     channels: Vec<usize>,
     configs: Vec<AcceleratorConfig>,
+    onchips: Vec<Option<OnChipConfig>>,
     skip_unsupported: bool,
     threads: Option<usize>,
     patterns: bool,
@@ -399,6 +418,7 @@ impl Sweep {
             mem_techs: vec![MemTech::Ddr4],
             channels: vec![1],
             configs: vec![AcceleratorConfig::default()],
+            onchips: vec![None],
             skip_unsupported: false,
             threads: None,
             patterns: false,
@@ -439,6 +459,19 @@ impl Sweep {
 
     pub fn configs(mut self, configs: impl IntoIterator<Item = AcceleratorConfig>) -> Self {
         self.configs = configs.into_iter().collect();
+        self
+    }
+
+    /// On-chip buffer axis (the BRAM-size sweep the on-chip model
+    /// unlocks): each entry is one buffer configuration, `None` being
+    /// the streaming-only baseline. Defaults to `[None]`. All entries
+    /// share compiled programs — the buffer is not part of
+    /// [`SimSpec::program_key`].
+    pub fn onchip_configs(
+        mut self,
+        configs: impl IntoIterator<Item = Option<OnChipConfig>>,
+    ) -> Self {
+        self.onchips = configs.into_iter().collect();
         self
     }
 
@@ -489,6 +522,9 @@ impl Sweep {
         if self.configs.is_empty() {
             return Err(SpecError::EmptyAxis("configs"));
         }
+        if self.onchips.is_empty() {
+            return Err(SpecError::EmptyAxis("onchip"));
+        }
         let mut specs = Vec::new();
         for &kind in &self.accelerators {
             for workload in &self.workloads {
@@ -496,19 +532,22 @@ impl Sweep {
                     for &mem in &self.mem_techs {
                         for &ch in &self.channels {
                             for cfg in &self.configs {
-                                let built = SimSpec::builder()
-                                    .accelerator(kind)
-                                    .workload(workload.clone())
-                                    .problem(problem)
-                                    .mem(mem)
-                                    .channels(ch)
-                                    .config(cfg.clone())
-                                    .patterns(self.patterns)
-                                    .build();
-                                match built {
-                                    Ok(spec) => specs.push(spec),
-                                    Err(_) if self.skip_unsupported => {}
-                                    Err(e) => return Err(e),
+                                for onchip in &self.onchips {
+                                    let built = SimSpec::builder()
+                                        .accelerator(kind)
+                                        .workload(workload.clone())
+                                        .problem(problem)
+                                        .mem(mem)
+                                        .channels(ch)
+                                        .config(cfg.clone())
+                                        .patterns(self.patterns)
+                                        .onchip(onchip.clone())
+                                        .build();
+                                    match built {
+                                        Ok(spec) => specs.push(spec),
+                                        Err(_) if self.skip_unsupported => {}
+                                        Err(e) => return Err(e),
+                                    }
                                 }
                             }
                         }
@@ -690,6 +729,47 @@ mod tests {
         assert_eq!(st.sim_runs, 4);
         assert_eq!(st.programs_compiled, 2, "pattern toggle must not recompile");
         assert_eq!(st.programs_reused, 2);
+    }
+
+    #[test]
+    fn onchip_axis_sweeps_budgets_and_shares_programs() {
+        // The BRAM-size sweep the on-chip model unlocks: one workload,
+        // several budgets, a single compiled program across all of
+        // them (the buffer is not part of the program key).
+        let session = Session::new();
+        let runs = Sweep::new()
+            .accelerators([AcceleratorKind::AccuGraph])
+            .graphs([DatasetId::Sd])
+            .problems([ProblemKind::PageRank])
+            .onchip_configs([
+                None,
+                Some(OnChipConfig::vertex_cache(4 * 1024)),
+                Some(OnChipConfig::vertex_cache(64 * 1024)),
+            ])
+            .run_with(&session)
+            .unwrap();
+        assert_eq!(runs.len(), 3);
+        assert!(runs[0].report.onchip.is_none());
+        let small = runs[1].report.onchip.as_ref().unwrap();
+        let big = runs[2].report.onchip.as_ref().unwrap();
+        assert!(big.hits_total() >= small.hits_total(), "bigger budget, no fewer hits");
+        assert!(
+            runs[2].report.dram.requests() < runs[0].report.dram.requests(),
+            "a real budget must shed DRAM traffic"
+        );
+        let st = session.stats();
+        assert_eq!(st.sim_runs, 3);
+        assert_eq!(st.programs_compiled, 1, "budgets share one compiled program");
+        assert_eq!(st.programs_reused, 2);
+        // An empty axis is rejected like every other axis.
+        let err = Sweep::new()
+            .accelerators([AcceleratorKind::AccuGraph])
+            .graphs([DatasetId::Sd])
+            .problems([ProblemKind::Bfs])
+            .onchip_configs([])
+            .specs()
+            .unwrap_err();
+        assert_eq!(err, SpecError::EmptyAxis("onchip"));
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Streaming access-pattern analyzers: per-region traffic accounting,
 //! sequential / strided / random classification with run lengths,
-//! per-channel reuse-interval and row-locality histograms — the
-//! quantities behind the paper's Figs. 8–11 discussion.
+//! per-region and per-channel reuse-interval histograms and
+//! row-locality histograms — the quantities behind the paper's
+//! Figs. 8–11 discussion. The per-region reuse histograms additionally
+//! predict the hit rate of the on-chip buffer model
+//! ([`RegionSummary::predicted_hit_rate`] — see [`crate::onchip`]),
+//! closing the loop between measurement and simulation.
 //!
 //! The analyzer consumes [`TraceEvent`]s **in issue order** and never
 //! looks at controller scheduling. Row locality is therefore computed
@@ -94,6 +98,14 @@ struct RegionState {
     /// Length of the current maximal sequential run.
     run_len: u64,
     run_lengths: Histogram,
+    /// Region-local reuse intervals: same-region accesses between two
+    /// touches of the same cache line — the input a region-scoped
+    /// on-chip buffer model needs (see
+    /// [`RegionSummary::predicted_hit_rate`]).
+    reuse: Histogram,
+    /// line -> sequence number of its last access in this region.
+    last_seen: HashMap<u64, u64>,
+    seq: u64,
 }
 
 impl RegionState {
@@ -103,6 +115,11 @@ impl RegionState {
         } else {
             self.reads += 1;
         }
+        let line = addr / CACHE_LINE;
+        if let Some(prev) = self.last_seen.insert(line, self.seq) {
+            self.reuse.record(self.seq - prev);
+        }
+        self.seq += 1;
         let class = match self.last_addr {
             None => StepClass::Random,
             Some(prev) => {
@@ -287,6 +304,8 @@ impl AccessPatternAnalyzer {
                 row_misses: m,
                 row_conflicts: c,
                 run_lengths: st.run_lengths,
+                distinct_lines: st.last_seen.len() as u64,
+                reuse: st.reuse,
             });
         }
         let channels = self
@@ -342,11 +361,56 @@ pub struct RegionSummary {
     /// Lengths of maximal sequential runs (isolated accesses count as
     /// runs of length 1).
     pub run_lengths: Histogram,
+    /// Distinct cache lines this region touched (footprint in lines).
+    pub distinct_lines: u64,
+    /// Region-local reuse intervals: same-region accesses between two
+    /// touches of the same line. The first touch of a line records
+    /// nothing, so `reuse.count() == requests() - distinct_lines`.
+    pub reuse: Histogram,
 }
 
 impl RegionSummary {
     pub fn requests(&self) -> u64 {
         self.reads + self.writes
+    }
+
+    /// Predicted hits of a region-scoped on-chip buffer holding
+    /// `capacity_lines` lines (see [`crate::onchip`]): every recorded
+    /// reuse whose interval is at most the capacity is predicted to
+    /// hit; cold touches and further reuses are predicted misses.
+    ///
+    /// The interval is an *upper bound* on the LRU stack distance
+    /// (accesses counted, not distinct lines), so this is a lower
+    /// bound on a fully-associative LRU scratchpad's hits. Bucketing
+    /// is conservative too: a power-of-two bucket only counts when its
+    /// entire range fits the capacity. The bound is *exact* once the
+    /// capacity covers every recorded interval (capacity ≥ 2× the
+    /// region's accesses certainly does): then every reuse is both
+    /// predicted and simulated as a hit, and the cold touches are the
+    /// misses on both sides. Merely covering the footprint is not
+    /// enough — a line re-touched after many same-region accesses
+    /// records a large interval and is conservatively predicted to
+    /// miss even though an unevicted buffer would hit. The onchip
+    /// equivalence suite cross-checks prediction against simulation.
+    pub fn predicted_hits(&self, capacity_lines: u64) -> u64 {
+        self.reuse
+            .buckets()
+            .iter()
+            .enumerate()
+            .filter(|(k, _)| Histogram::bucket_limit(*k) - 1 <= capacity_lines)
+            .map(|(_, &count)| count)
+            .sum()
+    }
+
+    /// [`RegionSummary::predicted_hits`] over this region's accesses
+    /// (0.0 when the region saw no traffic).
+    pub fn predicted_hit_rate(&self, capacity_lines: u64) -> f64 {
+        let n = self.requests();
+        if n == 0 {
+            0.0
+        } else {
+            self.predicted_hits(capacity_lines) as f64 / n as f64
+        }
     }
 
     /// Fraction of accesses classified sequential.
@@ -564,6 +628,54 @@ mod tests {
         assert_eq!(c.distinct_lines, 4);
         assert_eq!(c.reuse.count(), 1);
         assert!((c.reuse.mean() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn region_reuse_intervals_count_region_local_accesses() {
+        let mut a = analyzer1();
+        // Vertex line 0, then 2 edge accesses (other region), then
+        // vertex line 64, then vertex line 0 again: the vertex-region
+        // interval is 2 (line 0 re-touched two vertex accesses later);
+        // the interleaved edge traffic does not inflate it.
+        a.observe(&ev(0, Region::Vertices, MemKind::Read, 0));
+        a.observe(&ev(1 << 20, Region::Edges, MemKind::Read, 0));
+        a.observe(&ev((1 << 20) + 64, Region::Edges, MemKind::Read, 0));
+        a.observe(&ev(64, Region::Vertices, MemKind::Read, 0));
+        a.observe(&ev(0, Region::Vertices, MemKind::Write, 0));
+        let s = a.finish();
+        let v = s.region(Region::Vertices);
+        assert_eq!(v.distinct_lines, 2);
+        assert_eq!(v.reuse.count(), 1);
+        assert!((v.reuse.mean() - 2.0).abs() < 1e-9);
+        assert_eq!(v.requests() - v.distinct_lines, v.reuse.count());
+        // Edges saw no reuse at all.
+        assert_eq!(s.region(Region::Edges).reuse.count(), 0);
+        assert_eq!(s.region(Region::Edges).distinct_lines, 2);
+    }
+
+    #[test]
+    fn predicted_hit_rate_from_region_reuse() {
+        let mut a = analyzer1();
+        // Two passes over 4 vertex lines: 4 cold touches + 4 reuses at
+        // interval 4.
+        for _ in 0..2 {
+            for line in 0..4u64 {
+                a.observe(&ev(line * CACHE_LINE, Region::Vertices, MemKind::Read, 0));
+            }
+        }
+        let s = a.finish();
+        let v = s.region(Region::Vertices);
+        assert_eq!(v.reuse.count(), 4);
+        // Capacity 7 lines covers the whole [4, 8) bucket -> all 4
+        // reuses predicted hits over 8 accesses.
+        assert_eq!(v.predicted_hits(7), 4);
+        assert!((v.predicted_hit_rate(7) - 0.5).abs() < 1e-9);
+        // Capacity 1 line: the [4, 8) bucket exceeds it -> no hits
+        // (conservative whole-bucket rule).
+        assert_eq!(v.predicted_hits(1), 0);
+        assert_eq!(v.predicted_hit_rate(1), 0.0);
+        // An untouched region predicts 0.0, not NaN.
+        assert_eq!(s.region(Region::Updates).predicted_hit_rate(1024), 0.0);
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //! * [`AccessPatternAnalyzer`] ([`analysis`]) — a streaming analyzer
 //!   over issue-order events: per-region request/byte counts,
 //!   sequential-vs-strided-vs-random classification with maximal-run
-//!   lengths, and per-channel reuse-interval and row-locality
+//!   lengths, per-region and per-channel reuse-interval histograms
+//!   (the region ones predict the [`crate::onchip`] buffer's hit rate
+//!   via [`RegionSummary::predicted_hit_rate`]), and row-locality
 //!   histograms. The same analyzer runs inside a live simulation
 //!   (attach via `SimSpecBuilder::patterns(true)`) or over a trace
 //!   file (`graphmem analyze --trace`), and produces bit-identical

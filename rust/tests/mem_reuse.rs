@@ -1,0 +1,88 @@
+//! Allocation accounting for the per-worker `MemorySystem` reuse (the
+//! ROADMAP's "last per-run allocation"): running a spec through a
+//! warmed [`RunScratch`] must allocate strictly less than constructing
+//! a fresh memory system per run, while producing bit-identical
+//! reports.
+//!
+//! Like `tests/driver_scratch.rs`, the whole file is a single
+//! `#[test]`: the counting `#[global_allocator]` is process-wide, and
+//! a lone test keeps the measurement window free of concurrent
+//! test-thread traffic.
+//!
+//! [`RunScratch`]: graphmem::sim::RunScratch
+
+use graphmem::accel::AcceleratorKind;
+use graphmem::algo::problem::ProblemKind;
+use graphmem::graph::synthetic::erdos_renyi;
+use graphmem::sim::{RunScratch, SimSpec, Workload};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// System allocator with an allocation-event counter (alloc, realloc
+/// and alloc_zeroed all count; dealloc is free).
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+#[test]
+fn memory_system_reuse_allocates_less_and_stays_bit_identical() {
+    let spec = SimSpec::builder()
+        .accelerator(AcceleratorKind::HitGraph)
+        .workload(Workload::custom("er", erdos_renyi(500, 3000, 0x9A)))
+        .problem(ProblemKind::Bfs)
+        .build()
+        .unwrap();
+    let program = spec.compile_program();
+
+    // Warm both paths outside the measurement window (dataset cache,
+    // scratch growth, channel queue capacities).
+    let baseline = spec.run_with_program(&program);
+    let mut scratch = RunScratch::new();
+    assert_eq!(spec.run_with_program_scratch(&program, &mut scratch), baseline);
+
+    const RUNS: u64 = 6;
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    for _ in 0..RUNS {
+        assert_eq!(spec.run_with_program(&program), baseline);
+    }
+    let fresh_events = ALLOC_EVENTS.load(Ordering::SeqCst) - before;
+
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    for _ in 0..RUNS {
+        assert_eq!(spec.run_with_program_scratch(&program, &mut scratch), baseline);
+    }
+    let reuse_events = ALLOC_EVENTS.load(Ordering::SeqCst) - before;
+
+    // The models still allocate per-run value state, so neither side
+    // is zero — but the reuse path must drop the whole
+    // MemorySystem-construction share (channels, queues, bank and rank
+    // state per run).
+    assert!(
+        reuse_events < fresh_events,
+        "scratch reuse must allocate less: {reuse_events} !< {fresh_events} over {RUNS} runs"
+    );
+}
