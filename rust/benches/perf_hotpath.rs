@@ -19,6 +19,10 @@
 //!   lj streaming-only vs with the paper's vertex array modelled —
 //!   the cached row is asserted in-run to issue strictly fewer DRAM
 //!   requests and to report ≥1 hit (`onchip_hits` JSON extra).
+//! * Advisor probe vs full sweep (`advisor.probe_vs_full`): one
+//!   sampled probe producing a full recommendation vs the 12-point
+//!   on-chip grid search it replaces — the probe is asserted in-run
+//!   to be ≥10× cheaper, and CI greps `advisor_probe_runs`.
 //! * Golden engines: native vs XLA/PJRT per-iteration latency.
 //!
 //! Output: human-readable lines on stdout, plus machine-readable JSON
@@ -33,6 +37,7 @@
 
 use graphmem::accel::stream::{Fanout, LineSource, LineStream, Merge, Phase, StreamClass};
 use graphmem::accel::{build, AcceleratorConfig, AcceleratorKind};
+use graphmem::advisor::Advisor;
 use graphmem::algo::problem::{GraphProblem, ProblemKind};
 use graphmem::dram::{ChannelMode, DramSpec, MemKind, MemRequest, MemTech, MemorySystem};
 use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
@@ -554,6 +559,66 @@ fn bench_onchip(rep: &mut Reporter) {
     );
 }
 
+/// Advisor probe vs the sweep it replaces (`advisor.probe_vs_full`):
+/// one sampled probe run producing a full recommendation vs the
+/// 12-point on-chip sweep a user would otherwise grid-search. The
+/// probe must be ≥10× cheaper (asserted in-run); CI's bench-smoke
+/// greps `advisor_probe_runs` so the probe path cannot silently stop
+/// executing.
+fn bench_advisor(rep: &mut Reporter) {
+    let scale = if quick_scope() { 9 } else { 12 };
+    let g = generate(RmatParams::graph500(scale, 8, 0x5EED));
+    let spec = SimSpec::builder()
+        .accelerator(AcceleratorKind::AccuGraph)
+        .custom_graph("advisor-bench", g.clone())
+        .problem(ProblemKind::PageRank)
+        .config(AcceleratorConfig::all_optimizations())
+        .build()
+        .expect("AccuGraph x rmat is a valid spec");
+
+    // Probe: force sampling (1/8 of the edges) so the row measures
+    // the cheap path the advisor actually takes on big graphs.
+    let advisor = Advisor::new().with_probe_max_edges(g.num_edges() / 8);
+    let mut rec = None;
+    let dt_probe = time(|| rec = Some(advisor.recommend(&spec).expect("probe runs")));
+    let rec = rec.unwrap();
+    assert!(rec.probe_sampled, "probe cutoff must force sampling");
+
+    // The grid search the probe replaces: a 12-point on-chip sweep at
+    // full graph size through a fresh session.
+    let budgets: Vec<Option<OnChipConfig>> = std::iter::once(None)
+        .chain((0..11).map(|i| Some(OnChipConfig::vertex_cache(1024u64 << i))))
+        .collect();
+    let sweep_points = budgets.len() as u64;
+    let sweep = Sweep::new()
+        .accelerators([AcceleratorKind::AccuGraph])
+        .workloads([Workload::custom("advisor-bench", g)])
+        .problems([ProblemKind::PageRank])
+        .configs([AcceleratorConfig::all_optimizations()])
+        .onchip_configs(budgets);
+    let session = Session::new();
+    let mut runs = Vec::new();
+    let dt_sweep = time(|| runs = sweep.run_with(&session).expect("sweep axes are non-empty"));
+    let requests: u64 = runs.iter().map(|r| r.report.dram.requests()).sum();
+    assert!(
+        dt_sweep >= 10.0 * dt_probe,
+        "probe must be >=10x cheaper than the sweep it replaces: probe {dt_probe:.4}s vs sweep {dt_sweep:.4}s"
+    );
+    rep.record_with(
+        "advisor.probe_vs_full",
+        rec.probe_requests,
+        dt_probe,
+        0,
+        vec![
+            ("advisor_probe_runs", 1),
+            ("probe_sampled", 1),
+            ("sweep_points", sweep_points),
+            ("sweep_requests", requests),
+            ("speedup_x", (dt_sweep / dt_probe.max(1e-12)) as u64),
+        ],
+    );
+}
+
 fn bench_engines(rep: &mut Reporter) {
     let scale = if quick_scope() { 9 } else { 11 };
     let g = generate(RmatParams::graph500(scale, 12, 42));
@@ -606,6 +671,7 @@ fn main() {
     bench_end_to_end_sim(&mut rep);
     bench_sweep_mem_axis(&mut rep);
     bench_onchip(&mut rep);
+    bench_advisor(&mut rep);
     bench_engines(&mut rep);
     rep.flush(json_path.as_deref());
 }

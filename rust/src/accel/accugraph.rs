@@ -341,6 +341,8 @@ impl AccuGraphProgram {
             // on-chip buffering is configured.
             patterns: None,
             onchip: None,
+            // Stamped only by the advisor reporting paths.
+            advisor: None,
         }
     }
 }

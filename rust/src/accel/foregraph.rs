@@ -387,6 +387,8 @@ impl ForeGraphProgram {
             // on-chip buffering is configured.
             patterns: None,
             onchip: None,
+            // Stamped only by the advisor reporting paths.
+            advisor: None,
         }
     }
 }

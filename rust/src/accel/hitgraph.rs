@@ -486,6 +486,8 @@ impl HitGraphProgram {
             // on-chip buffering is configured.
             patterns: None,
             onchip: None,
+            // Stamped only by the advisor reporting paths.
+            advisor: None,
         }
     }
 }

@@ -437,6 +437,8 @@ impl ThunderGpProgram {
             // on-chip buffering is configured.
             patterns: None,
             onchip: None,
+            // Stamped only by the advisor reporting paths.
+            advisor: None,
         }
     }
 }

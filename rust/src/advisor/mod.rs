@@ -1,0 +1,152 @@
+//! Pattern-driven configuration advisor: closes the paper's
+//! measure→act loop.
+//!
+//! The source paper *measures* the memory access patterns of four
+//! FPGA graph accelerators but never acts on them; its companion
+//! study (arXiv 2010.13619) shows partitioning and data placement
+//! dominate DRAM behavior, and ReGraph (arXiv 2203.02676) shows cheap
+//! structural/pattern statistics are enough to dispatch the right
+//! configuration. This module does exactly that with the machinery
+//! the repo already has:
+//!
+//! 1. **Probe** ([`probe::ProbeReport`]) — one single-channel
+//!    simulation with `patterns(true)`, on the target graph or a
+//!    prefix sample of it, yielding per-region reuse / sequentiality
+//!    histograms plus structural stats.
+//! 2. **Cost model** (`cost`) — explainable closed-form rules over
+//!    those histograms; every choice carries a rationale naming its
+//!    evidence.
+//! 3. **[`Recommendation`]** — typed choices for partition capacity,
+//!    channel placement and per-region on-chip budgets, with
+//!    predicted costs.
+//!
+//! Consume it three ways: `SimSpecBuilder::auto_partition()` /
+//! `auto_placement()` / `auto_onchip()` resolve choices at build time
+//! (the resolved spec is bit-identical to the same choices made by
+//! hand, so memoization stays sound); `Sweep::validate_advisor`
+//! scores the advisor against a sweep optimum; `graphmem advise`
+//! prints the table via [`crate::report::advice_table`].
+
+mod cost;
+mod probe;
+mod recommend;
+
+pub use probe::ProbeReport;
+pub use recommend::{
+    OnChipChoice, PartitionChoice, PlacementChoice, Recommendation, RegionBudget,
+};
+
+// Re-exported here too: the advisor writes them, the report carries
+// them.
+pub use crate::sim::AdvisorChoices;
+
+use crate::sim::{SimSpec, SpecError};
+
+/// Entry point: configure the probe size, then [`Advisor::recommend`].
+#[derive(Clone, Debug)]
+pub struct Advisor {
+    probe_max_edges: usize,
+}
+
+impl Advisor {
+    /// Probe sampling threshold: graphs above this many edges are
+    /// sampled down before probing (64 Ki edges simulates in
+    /// milliseconds on every model).
+    pub const DEFAULT_PROBE_MAX_EDGES: usize = 65_536;
+
+    pub fn new() -> Advisor {
+        Advisor {
+            probe_max_edges: Advisor::DEFAULT_PROBE_MAX_EDGES,
+        }
+    }
+
+    /// Override the sampling threshold (floored at one edge). Lower it
+    /// to force sampling in benches; raise it to probe exactly.
+    pub fn with_probe_max_edges(mut self, max_edges: usize) -> Advisor {
+        self.probe_max_edges = max_edges.max(1);
+        self
+    }
+
+    /// Run only the measurement pass for `spec`.
+    pub fn probe(&self, spec: &SimSpec) -> Result<ProbeReport, SpecError> {
+        probe::run_probe(spec, self.probe_max_edges)
+    }
+
+    /// Probe `spec`'s workload and derive the full recommendation.
+    /// Deterministic: the same spec always yields the same
+    /// recommendation, which is what lets the `auto_*` builder flags
+    /// resolve to reproducible specs.
+    pub fn recommend(&self, spec: &SimSpec) -> Result<Recommendation, SpecError> {
+        let probe = self.probe(spec)?;
+        Ok(cost::recommend(spec, &probe))
+    }
+}
+
+impl Default for Advisor {
+    fn default() -> Advisor {
+        Advisor::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AcceleratorKind;
+    use crate::algo::problem::ProblemKind;
+    use crate::graph::synthetic;
+    use crate::partition::PartitionScheme;
+
+    fn spec_for(kind: AcceleratorKind) -> SimSpec {
+        SimSpec::builder()
+            .accelerator(kind)
+            .custom_graph("adv-unit", synthetic::erdos_renyi(1_024, 6_144, 7))
+            .problem(ProblemKind::Bfs)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn recommendation_is_deterministic_and_explained() {
+        let spec = spec_for(AcceleratorKind::AccuGraph);
+        let advisor = Advisor::new();
+        let a = advisor.recommend(&spec).unwrap();
+        let b = advisor.recommend(&spec).unwrap();
+        assert_eq!(a, b, "same spec must yield the same recommendation");
+        assert!(!a.probe_sampled, "6k edges is below the sampling threshold");
+        assert!(a.probe_requests > 0);
+        for r in [
+            &a.partitioning.rationale,
+            &a.placement.rationale,
+            &a.onchip.rationale,
+        ] {
+            assert!(!r.is_empty());
+        }
+        assert_eq!(a.partitioning.scheme, PartitionScheme::Horizontal);
+        // 1024 vertices fit one default partition; balancing keeps it.
+        assert_eq!(a.partitioning.partitions, 1);
+        assert_eq!(a.partitioning.capacity_values, 1_024);
+    }
+
+    #[test]
+    fn sampling_threshold_forces_probe_subgraph() {
+        let spec = spec_for(AcceleratorKind::HitGraph);
+        let rec = Advisor::new()
+            .with_probe_max_edges(1_000)
+            .recommend(&spec)
+            .unwrap();
+        assert!(rec.probe_sampled);
+        assert!(rec.probe_label.contains("probe:adv-unit"));
+        // Sampling must not leak into the partition sizing: it still
+        // covers the full 1024-vertex graph.
+        assert_eq!(rec.partitioning.capacity_values, 1_024);
+    }
+
+    #[test]
+    fn single_channel_designs_never_get_extra_channels() {
+        let rec = Advisor::new()
+            .recommend(&spec_for(AcceleratorKind::AccuGraph))
+            .unwrap();
+        assert_eq!(rec.placement.channels, 1);
+        assert!(rec.placement.rationale.contains("utilization"));
+    }
+}

@@ -1,0 +1,146 @@
+//! The cheap measurement pass: one single-channel, pattern-collecting
+//! simulation of the target workload (or a degree-preserving prefix
+//! sample of it when the graph is large), whose histograms feed the
+//! cost model in [`super::cost`].
+
+use crate::graph::properties::GraphProperties;
+use crate::graph::EdgeList;
+use crate::sim::{SimReport, SimSpec, SpecError, Workload};
+use crate::trace::AccessPatternSummary;
+use std::sync::Arc;
+
+/// Everything the probe measured: the pattern summary the cost model
+/// reads, the raw report, and the structural stats of the probed
+/// graph.
+#[derive(Clone, Debug)]
+pub struct ProbeReport {
+    /// Label of the probe spec that was simulated.
+    pub label: String,
+    /// Whether a subgraph was sampled instead of the full graph.
+    pub sampled: bool,
+    /// Edges actually simulated.
+    pub probe_edges: u64,
+    /// Edges of the full target graph.
+    pub full_edges: u64,
+    /// Vertices of the full target graph (partition sizing works on
+    /// the full graph, not the sample).
+    pub full_vertices: usize,
+    /// Per-region / per-channel pattern histograms of the probe run.
+    pub summary: AccessPatternSummary,
+    /// The probe's full report (cycles, bus utilization, DRAM stats).
+    pub report: SimReport,
+    /// Structural stats of the *probed* graph (degree skew, density).
+    pub props: GraphProperties,
+}
+
+/// Run the probe for `spec`: same accelerator / problem / memory /
+/// config, forced to one channel with `patterns(true)`. Graphs above
+/// `probe_max_edges` edges are sampled down first (vertex-prefix
+/// induced subgraph — RMAT-style generators place high-degree
+/// vertices at low IDs, so the prefix keeps the skew the cost model
+/// needs to see).
+pub(crate) fn run_probe(
+    spec: &SimSpec,
+    probe_max_edges: usize,
+) -> Result<ProbeReport, SpecError> {
+    let full = spec.workload().resolve(spec.problem().weighted());
+    let full_edges = full.num_edges() as u64;
+    let full_vertices = full.num_vertices;
+    let (workload, probe_graph, sampled) = if full.num_edges() <= probe_max_edges {
+        (spec.workload().clone(), Arc::clone(&full), false)
+    } else {
+        let pg = prefix_sample(&full, probe_max_edges);
+        let workload = Workload::custom(format!("probe:{}", spec.workload().label()), pg);
+        let graph = match &workload {
+            Workload::Custom { graph, .. } => Arc::clone(graph),
+            Workload::Named(_) => unreachable!("custom() always builds Custom"),
+        };
+        (workload, graph, true)
+    };
+    let probe_spec = SimSpec::builder()
+        .accelerator(spec.accelerator())
+        .workload(workload)
+        .problem(spec.problem())
+        .mem(spec.mem())
+        .channels(1)
+        .config(spec.config().clone())
+        .patterns(true)
+        .build()?;
+    let report = probe_spec.run();
+    let summary = report
+        .patterns
+        .clone()
+        .expect("patterns(true) specs always attach a summary");
+    let props = GraphProperties::compute(&probe_graph);
+    Ok(ProbeReport {
+        label: probe_spec.label(),
+        sampled,
+        probe_edges: probe_graph.num_edges() as u64,
+        full_edges,
+        full_vertices,
+        summary,
+        report,
+        props,
+    })
+}
+
+/// Vertex-prefix induced subgraph: halve the vertex cutoff until the
+/// induced edge count fits `max_edges`. Falls back to a plain edge
+/// prefix if the induced subgraph collapses to zero edges (e.g. a
+/// star whose hub sits at a high ID).
+fn prefix_sample(g: &EdgeList, max_edges: usize) -> EdgeList {
+    let induced = |cutoff: usize| {
+        g.edges
+            .iter()
+            .filter(|e| (e.src as usize) < cutoff && (e.dst as usize) < cutoff)
+    };
+    let mut cutoff = g.num_vertices;
+    while cutoff > 1 && induced(cutoff).count() > max_edges {
+        cutoff /= 2;
+    }
+    let mut pg = EdgeList::new(cutoff.max(1), g.directed);
+    pg.weighted = g.weighted;
+    // Push Edge values directly: EdgeList::add would reset weights.
+    pg.edges.extend(induced(cutoff).copied());
+    if pg.edges.is_empty() {
+        let mut pg = EdgeList::new(g.num_vertices, g.directed);
+        pg.weighted = g.weighted;
+        pg.edges.extend(g.edges.iter().take(max_edges).copied());
+        return pg;
+    }
+    pg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+
+    #[test]
+    fn sample_preserves_weights_and_bounds_edges() {
+        let g = synthetic::erdos_renyi(4_096, 40_000, 3).with_random_weights(0xBEEF, 8.0);
+        let pg = prefix_sample(&g, 10_000);
+        assert!(pg.num_edges() <= 10_000);
+        assert!(pg.num_edges() > 0);
+        assert!(pg.weighted);
+        assert!(pg.num_vertices < g.num_vertices);
+        for e in &pg.edges {
+            assert!((e.src as usize) < pg.num_vertices);
+            assert!((e.dst as usize) < pg.num_vertices);
+            assert!(e.weight >= 1.0, "sampling must not reset weights");
+        }
+    }
+
+    #[test]
+    fn sample_falls_back_to_edge_prefix_on_degenerate_graphs() {
+        // Star into the highest vertex ID: every induced prefix drops
+        // all edges, so the fallback must kick in.
+        let mut g = EdgeList::new(1_000, true);
+        for i in 0..500u32 {
+            g.add(i, 999);
+        }
+        let pg = prefix_sample(&g, 100);
+        assert_eq!(pg.num_edges(), 100);
+        assert_eq!(pg.num_vertices, 1_000);
+    }
+}

@@ -1,0 +1,113 @@
+//! Typed advisor output: one [`Recommendation`] per probed spec, with
+//! a choice, a predicted cost and a human-readable rationale per
+//! decision axis. All fields are public and plainly constructible so
+//! downstream formatters and tests need no builders.
+
+use crate::accel::AcceleratorKind;
+use crate::algo::problem::ProblemKind;
+use crate::dram::ChannelMode;
+use crate::onchip::OnChipConfig;
+use crate::partition::PartitionScheme;
+use crate::sim::{AdvisorChoices, SimReport};
+use crate::trace::Region;
+
+/// Partitioning-axis choice: the scheme the accelerator's datapath
+/// fixes plus the balanced per-partition capacity the advisor derived
+/// for the *full* graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionChoice {
+    pub scheme: PartitionScheme,
+    /// Balanced per-partition capacity in vertex values — the value to
+    /// put into `AcceleratorConfig::bram_values`
+    /// (`foregraph_interval` for ForeGraph). Never exceeds the
+    /// configured capacity; shrinks it when that evens out the last
+    /// partition.
+    pub capacity_values: usize,
+    /// Number of equal partitions that capacity yields.
+    pub partitions: usize,
+    /// Predicted cost proxy: the partition count (each partition is a
+    /// pass over its slice of the edge structure).
+    pub predicted_cost: f64,
+    pub rationale: String,
+}
+
+/// Placement-axis choice: channel count and interleaving mode.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementChoice {
+    pub channels: usize,
+    /// Region placement for the multi-channel designs, line
+    /// interleaving otherwise (mirrors `SimSpec::channel_mode`).
+    pub mode: ChannelMode,
+    /// Predicted cycles after scaling the probe by the channel count.
+    pub predicted_cost: f64,
+    pub rationale: String,
+}
+
+/// One region's slice of the recommended on-chip budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegionBudget {
+    pub region: Region,
+    pub budget_bytes: u64,
+    /// Conservative predicted hit rate at that budget
+    /// (`RegionSummary::predicted_hit_rate`).
+    pub predicted_hit_rate: f64,
+    /// Probe DRAM requests the budget is predicted to absorb.
+    pub predicted_saved_requests: u64,
+}
+
+/// On-chip-axis choice: a sized buffer or an explicit `None` for
+/// streaming workloads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OnChipChoice {
+    /// `None` means "spend no BRAM": every region either streams or
+    /// saves too little traffic to matter.
+    pub config: Option<OnChipConfig>,
+    /// The per-region evidence behind `config` (empty when `None`).
+    pub per_region: Vec<RegionBudget>,
+    /// Predicted cost proxy: probe DRAM requests left after the
+    /// predicted hits are absorbed.
+    pub predicted_cost: f64,
+    pub rationale: String,
+}
+
+/// The advisor's full answer for one spec. Every rationale names the
+/// histogram evidence it was derived from — that contract is asserted
+/// by `tests/advisor_validation.rs`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Recommendation {
+    pub accelerator: AcceleratorKind,
+    pub workload_label: String,
+    pub problem: ProblemKind,
+    /// Label of the probe spec actually simulated (may be a sampled
+    /// subgraph of the target workload).
+    pub probe_label: String,
+    /// DRAM requests the probe issued (the denominator behind the
+    /// on-chip shares).
+    pub probe_requests: u64,
+    /// Whether the probe ran on a sampled subgraph.
+    pub probe_sampled: bool,
+    pub partitioning: PartitionChoice,
+    pub placement: PlacementChoice,
+    pub onchip: OnChipChoice,
+}
+
+impl Recommendation {
+    /// Stamp advisor provenance onto a report produced from this
+    /// recommendation. Returns a clone — the memoized report itself is
+    /// never mutated, so advisor-resolved and manually built specs
+    /// keep sharing one cache entry (see
+    /// [`crate::sim::AdvisorChoices`]).
+    pub fn annotate(&self, report: &SimReport, choices: AdvisorChoices) -> SimReport {
+        let mut out = report.clone();
+        out.advisor = Some(choices);
+        out
+    }
+
+    /// One-line label for logs: `advise AccuGraph/lj/BFS`.
+    pub fn label(&self) -> String {
+        format!(
+            "advise {}/{}/{}",
+            self.accelerator, self.workload_label, self.problem
+        )
+    }
+}

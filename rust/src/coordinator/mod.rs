@@ -17,15 +17,14 @@
 //! }
 //! ```
 //!
-//! [`runner`] holds the deprecated string-keyed shims (`run_one`,
-//! `Runner`, `dram_spec`) retained for one release; see its module
-//! docs for the migration table.
+//! The PR-1 string-keyed shims (`run_one`, `Runner`, `dram_spec`)
+//! that lived in a `runner` module here were retained for one release
+//! and have been removed; migrate to [`crate::sim::Session`] /
+//! [`crate::sim::SimSpec`] (the README's "Typed session API" section
+//! keeps the migration table).
 
 pub mod experiment;
 pub mod paper;
-pub mod runner;
 
 pub use experiment::{run_experiment, Experiment, Scope};
-#[allow(deprecated)]
-pub use runner::{run_one, Runner};
 pub use crate::sim::{Session, SimSpec, Sweep};

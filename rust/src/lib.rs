@@ -39,6 +39,14 @@
 //!   never reach DRAM. Closes the loop on the analyzer's reuse
 //!   histograms: [`trace::RegionSummary::predicted_hit_rate`] predicts
 //!   the buffer's hit rate from a streaming-only run.
+//! * [`advisor`] — the measure→act step the paper stops short of: a
+//!   cheap pattern-collecting probe feeds an explainable cost model
+//!   that recommends partition capacity, channel placement and
+//!   per-region on-chip budgets, each with a predicted cost and a
+//!   rationale naming the histogram evidence. Resolved at build time
+//!   via the `auto_*` flags on [`sim::SimSpecBuilder`], validated
+//!   against sweep optima by `Sweep::validate_advisor`, printed by
+//!   `graphmem advise`.
 //! * [`sim`] — the typed session API and the co-simulation engine:
 //!   [`sim::SimSpec`] describes one run (accelerator × workload ×
 //!   problem × memory technology × channels × configuration) with all
@@ -79,6 +87,7 @@
 //! ```
 
 pub mod accel;
+pub mod advisor;
 pub mod algo;
 pub mod coordinator;
 pub mod dram;

@@ -8,6 +8,8 @@
 //!   trace <accel> <graph> <prob> write an issue-order request trace (--dram, --channels, --out)
 //!   analyze <accel> <graph> <prob>  per-region access-pattern analysis of a live sim
 //!   analyze --trace <file>       the same analysis over an existing trace file
+//!   advise <accel> <graph> <prob>  probe the workload and print the advisor's
+//!                                recommendation (partitioning / placement / on-chip)
 //!   report --exp <id>            regenerate a figure/table (options: --scope, --csv)
 //!   verify <graph> <prob>        golden-engine cross-check (native vs XLA/PJRT)
 //!
@@ -19,6 +21,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+use graphmem::advisor::Advisor;
 use graphmem::algo::golden::values_agree;
 use graphmem::algo::problem::{GraphProblem, ProblemKind};
 use graphmem::coordinator::{run_experiment, Experiment, Scope};
@@ -27,7 +30,7 @@ use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
 use graphmem::graph::rmat::{self, RmatParams};
 use graphmem::graph::{datasets, properties::GraphProperties, DatasetId};
 use graphmem::onchip::OnChipConfig;
-use graphmem::report::{onchip_table, pattern_tables, Table};
+use graphmem::report::{advice_table, onchip_table, pattern_tables, rationale_lines, Table};
 use graphmem::sim::{Session, SimSpec, SpecError, Sweep, Workload};
 use graphmem::trace::{
     parse_events, parse_meta, write_events, write_meta, AccessPatternAnalyzer, TraceMeta,
@@ -71,6 +74,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("analyze") => cmd_analyze(&args[1..]),
+        Some("advise") => cmd_advise(&args[1..]),
         Some("report") => cmd_report(&args[1..]),
         Some("verify") => cmd_verify(&args[1..]),
         Some("help") | None => {
@@ -101,6 +105,10 @@ fn print_help() {
          \x20             reuse-histogram-predicted vs simulated hit rate)\n  \
          graphmem analyze --trace <file> [--dram d] [--channels N] [--mode interleave|region] [--csv]\n  \
          \x20            (same analysis over a trace file; flags default to the file's header)\n  \
+         graphmem advise <accel> <graph> <problem> [--dram d] [--no-opt] [--probe-edges N] [--csv]\n  \
+         \x20            (probe the workload, then print the advisor's partitioning /\n  \
+         \x20             placement / on-chip recommendation with per-choice rationale;\n  \
+         \x20             graphs above N edges are sampled before probing)\n  \
          graphmem report --exp <id|all> [--scope quick|standard|full] [--csv]\n  \
          graphmem verify <graph> <problem> [--max-iters N]\n\n\
          accel: accugraph|foregraph|hitgraph|thundergp   problem: bfs|pr|wcc|sssp|spmv\n\
@@ -354,7 +362,7 @@ fn parse_workload(name: &str, weighted: bool) -> Result<Workload> {
 fn spec_from_args(args: &[String], patterns: bool) -> Result<SimSpec> {
     let (accel, graph, problem) = match (args.first(), args.get(1), args.get(2)) {
         (Some(a), Some(g), Some(p)) => (a, g, p),
-        _ => bail!("usage: graphmem <trace|analyze> <accel> <graph> <problem> [options]"),
+        _ => bail!("usage: graphmem <trace|analyze|advise> <accel> <graph> <problem> [options]"),
     };
     let kind: AcceleratorKind = parse_arg(accel)?;
     let problem: ProblemKind = parse_arg(problem)?;
@@ -494,14 +502,16 @@ fn cmd_analyze(args: &[String]) -> Result<()> {
         let cfg = match value {
             "off" => return Ok(()), // explicit streaming-only: nothing to add
             "default" => {
+                // Exit-code contract: an unsatisfiable request fails
+                // the command instead of printing and returning zero.
                 let Some(cfg) = OnChipConfig::default_for(spec.accelerator(), spec.config())
                 else {
-                    println!(
+                    bail!(
                         "on-chip: {} is a streaming design with no default buffer; pass \
-                         `--onchip <bytes>` to model a vertex scratchpad anyway",
+                         `--onchip <bytes>` to model a vertex scratchpad anyway, or \
+                         `--onchip off`",
                         spec.accelerator()
                     );
-                    return Ok(());
                 };
                 cfg
             }
@@ -540,6 +550,40 @@ fn cmd_analyze(args: &[String]) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `graphmem advise <accel> <graph> <problem>`: run the advisor's
+/// probe and print the recommendation table plus the per-choice
+/// rationales. Invalid spec combinations surface as `SpecError`s
+/// through `?`, so the process exits non-zero on bad arguments — the
+/// same contract as `trace` and `analyze`.
+fn cmd_advise(args: &[String]) -> Result<()> {
+    let spec = spec_from_args(args, false)?;
+    let mut advisor = Advisor::new();
+    if let Some(v) = flag_value(args, "--probe-edges") {
+        let max: usize = v
+            .parse()
+            .map_err(|e| anyhow!("bad --probe-edges {v:?}: {e}"))?;
+        advisor = advisor.with_probe_max_edges(max);
+    }
+    let rec = advisor.recommend(&spec)?;
+    let t = advice_table(&rec);
+    if has_flag(args, "--csv") {
+        println!("# {}", t.title);
+        println!("{}", t.to_csv());
+    } else {
+        println!("{}", t.render());
+    }
+    for line in rationale_lines(&rec) {
+        println!("{line}");
+    }
+    println!(
+        "probe: {}{} — {} DRAM requests",
+        rec.probe_label,
+        if rec.probe_sampled { " (sampled)" } else { "" },
+        rec.probe_requests
+    );
     Ok(())
 }
 

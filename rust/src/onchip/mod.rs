@@ -122,6 +122,18 @@ impl OnChipConfig {
         OnChipConfig::new(capacity_bytes, Geometry::Scratchpad, [Region::Vertices])
     }
 
+    /// A fully-associative scratchpad over an explicit region set —
+    /// the shape the advisor emits when it sizes per-region budgets
+    /// from the reuse-interval histograms (see [`crate::advisor`]).
+    /// Equivalent to [`OnChipConfig::new`] with
+    /// [`Geometry::Scratchpad`].
+    pub fn scratchpad(
+        capacity_bytes: u64,
+        regions: impl IntoIterator<Item = Region>,
+    ) -> OnChipConfig {
+        OnChipConfig::new(capacity_bytes, Geometry::Scratchpad, regions)
+    }
+
     /// The paper-faithful default buffer for an accelerator, sized
     /// from its [`AcceleratorConfig`] capacities:
     ///

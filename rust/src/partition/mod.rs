@@ -17,6 +17,49 @@ pub use horizontal::HorizontalPartitioning;
 pub use interval_shard::IntervalShardPartitioning;
 pub use vertical::VerticalPartitioning;
 
+use crate::accel::AcceleratorKind;
+use std::fmt;
+
+/// The three partitioning families of §3.1, as a value the advisor
+/// ([`crate::advisor`]) can recommend and report on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PartitionScheme {
+    /// Destination-interval rows (AccuGraph, HitGraph).
+    Horizontal,
+    /// Source-interval columns (ThunderGP).
+    Vertical,
+    /// 2-D interval-shard grid (ForeGraph, after GridGraph).
+    IntervalShard,
+}
+
+impl PartitionScheme {
+    /// The scheme an accelerator's architecture fixes (Tab. 1): the
+    /// choice is not free per run — it is baked into each design's
+    /// datapath — so the advisor reports it with the capacity that
+    /// balances the partitions rather than picking across schemes.
+    pub fn for_accelerator(kind: AcceleratorKind) -> PartitionScheme {
+        match kind {
+            AcceleratorKind::AccuGraph | AcceleratorKind::HitGraph => PartitionScheme::Horizontal,
+            AcceleratorKind::ThunderGp => PartitionScheme::Vertical,
+            AcceleratorKind::ForeGraph => PartitionScheme::IntervalShard,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionScheme::Horizontal => "horizontal",
+            PartitionScheme::Vertical => "vertical",
+            PartitionScheme::IntervalShard => "interval-shard",
+        }
+    }
+}
+
+impl fmt::Display for PartitionScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Scaled stand-in for the 1,024,000-vertex BRAM budget of the paper.
 pub const SCALED_BRAM_VALUES: usize = 16_384;
 

@@ -1,9 +1,12 @@
 //! Report generation: aligned text tables, CSV emit, and the figure
 //! series formatters used by the bench harness and the CLI —
-//! including the access-pattern tables of [`pattern`].
+//! including the access-pattern tables of [`pattern`] and the advisor
+//! recommendation formatter of [`advice`].
 
+pub mod advice;
 pub mod pattern;
 pub mod table;
 
+pub use advice::{advice_table, rationale_lines};
 pub use pattern::{channel_table, onchip_table, pattern_tables, region_table, reuse_table};
 pub use table::Table;

@@ -57,6 +57,27 @@ pub struct SimReport {
     /// buffer configured, `dram` counts only the traffic that *missed*
     /// on chip.
     pub onchip: Option<OnChipStats>,
+    /// Which of this run's choices the advisor made — stamped by
+    /// advisor reporting paths ([`crate::sim::Sweep::validate_advisor`]
+    /// and `graphmem advise`) via `Recommendation::annotate`. Always
+    /// `None` on directly executed runs, *including* runs of specs
+    /// built with the `auto_*` builder flags: advisor provenance lives
+    /// on the report only, never in the [`crate::sim::SimSpec`] memo
+    /// key, so advisor-resolved and manually built specs stay
+    /// bit-identical and share one cache entry.
+    pub advisor: Option<AdvisorChoices>,
+}
+
+/// Which decision axes of a spec were resolved by the advisor
+/// ([`crate::advisor`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdvisorChoices {
+    /// Partition capacity came from the advisor.
+    pub partition: bool,
+    /// Channel count / placement mode came from the advisor.
+    pub placement: bool,
+    /// On-chip buffer budget came from the advisor.
+    pub onchip: bool,
 }
 
 impl SimReport {
@@ -160,6 +181,7 @@ mod tests {
             channels: 1,
             patterns: None,
             onchip: None,
+            advisor: None,
         }
     }
 

@@ -25,6 +25,6 @@ pub use driver::{
     run_phase, run_phase_onchip, run_phase_with, set_materialize_streams, PhaseScratch,
     PhaseTelemetry,
 };
-pub use metrics::{RunMetrics, SimReport};
+pub use metrics::{AdvisorChoices, RunMetrics, SimReport};
 pub use spec::{ProgramKey, RunScratch, SimSpec, SimSpecBuilder, SpecError, Workload};
-pub use sweep::{Session, SessionStats, Sweep, SweepRun};
+pub use sweep::{AdvisorValidation, Session, SessionStats, Sweep, SweepRun};

@@ -68,8 +68,9 @@ impl Workload {
 
     /// Materialize the edge list (weighted variant when asked). Both
     /// arms hand out a shared `Arc` — no edge-list copy per run,
-    /// however many threads sweep the same graph.
-    fn resolve(&self, weighted: bool) -> Arc<EdgeList> {
+    /// however many threads sweep the same graph. Crate-visible so the
+    /// advisor's probe can sample the same graph a spec will run on.
+    pub(crate) fn resolve(&self, weighted: bool) -> Arc<EdgeList> {
         match self {
             Workload::Named(id) => {
                 if weighted {
@@ -547,6 +548,14 @@ pub struct SimSpecBuilder {
     /// [`SimSpecBuilder::onchip`] and [`SimSpecBuilder::onchip_default`],
     /// the later call wins.
     onchip_default: bool,
+    /// Advisor resolution flags: when any is set, `build` runs the
+    /// advisor probe and folds the chosen values into the spec. The
+    /// flags themselves never reach [`SimSpec`] — only the resolved
+    /// choices do — so advisor-built and hand-built specs with the
+    /// same values stay bit-identical.
+    auto_partition: bool,
+    auto_placement: bool,
+    auto_onchip: bool,
 }
 
 impl SimSpecBuilder {
@@ -713,9 +722,114 @@ impl SimSpecBuilder {
         self
     }
 
+    /// Let the advisor ([`crate::advisor`]) pick the partition
+    /// capacity: at build time a cheap probe runs and the balanced
+    /// capacity it derives replaces `bram_values`
+    /// (`foregraph_interval` for ForeGraph) in the returned spec.
+    /// Resolution is by value — the result is bit-identical to the
+    /// same choice made by hand:
+    ///
+    /// ```
+    /// use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+    /// use graphmem::algo::problem::ProblemKind;
+    /// use graphmem::graph::synthetic;
+    /// use graphmem::sim::SimSpec;
+    ///
+    /// let g = synthetic::erdos_renyi(2_000, 8_000, 7);
+    /// let auto = SimSpec::builder()
+    ///     .accelerator(AcceleratorKind::AccuGraph)
+    ///     .custom_graph("er2k", g.clone())
+    ///     .problem(ProblemKind::PageRank)
+    ///     .auto_partition(true)
+    ///     .build()
+    ///     .unwrap();
+    /// // 2,000 vertices fit one partition, so the advisor balances
+    /// // the default 16,384-value capacity down to exactly 2,000.
+    /// assert_eq!(auto.config().bram_values, 2_000);
+    /// let mut cfg = AcceleratorConfig::default();
+    /// cfg.bram_values = 2_000;
+    /// let manual = SimSpec::builder()
+    ///     .accelerator(AcceleratorKind::AccuGraph)
+    ///     .custom_graph("er2k", g)
+    ///     .problem(ProblemKind::PageRank)
+    ///     .config(cfg)
+    ///     .build()
+    ///     .unwrap();
+    /// assert_eq!(auto, manual); // one memo entry, shared program
+    /// ```
+    pub fn auto_partition(mut self, on: bool) -> Self {
+        self.auto_partition = on;
+        self
+    }
+
+    /// Let the advisor pick the channel count (and thereby the
+    /// placement mode) from the probe's bus utilization. Overrides an
+    /// explicit [`SimSpecBuilder::channels`] value when set.
+    pub fn auto_placement(mut self, on: bool) -> Self {
+        self.auto_placement = on;
+        self
+    }
+
+    /// Let the advisor size the on-chip buffer from the probe's
+    /// reuse-interval histograms — possibly to `None` for streaming
+    /// workloads. Overrides [`SimSpecBuilder::onchip`] /
+    /// [`SimSpecBuilder::onchip_default`] when set.
+    pub fn auto_onchip(mut self, on: bool) -> Self {
+        self.auto_onchip = on;
+        self
+    }
+
     /// Validate and freeze. Every unsupported combination is rejected
-    /// here, before any simulation work.
+    /// here, before any simulation work. When any `auto_*` flag is
+    /// set, the advisor probes the workload first and its choices are
+    /// resolved *into* the returned spec (a second validation pass
+    /// then applies as usual), so downstream memoization never sees
+    /// the flags — only their resolved values.
     pub fn build(self) -> Result<SimSpec, SpecError> {
+        let (auto_partition, auto_placement, auto_onchip) =
+            (self.auto_partition, self.auto_placement, self.auto_onchip);
+        let patterns = self.patterns;
+        let base = self.build_base()?;
+        if !(auto_partition || auto_placement || auto_onchip) {
+            return Ok(base);
+        }
+        // The probe spec inside recommend() is built without auto
+        // flags, so this recursion is one level deep.
+        let rec = crate::advisor::Advisor::new().recommend(&base)?;
+        let mut config = base.config().clone();
+        if auto_partition {
+            match base.accelerator() {
+                AcceleratorKind::ForeGraph => {
+                    config.foregraph_interval = rec.partitioning.capacity_values;
+                }
+                _ => config.bram_values = rec.partitioning.capacity_values,
+            }
+        }
+        let channels = if auto_placement {
+            rec.placement.channels
+        } else {
+            base.channels()
+        };
+        let onchip = if auto_onchip {
+            rec.onchip.config.clone()
+        } else {
+            base.onchip.clone()
+        };
+        SimSpec::builder()
+            .accelerator(base.accelerator())
+            .workload(base.workload().clone())
+            .problem(base.problem())
+            .mem(base.mem())
+            .channels(channels)
+            .config(config)
+            .patterns(patterns)
+            .onchip(onchip)
+            .build_base()
+    }
+
+    /// The validation core shared by plain and advisor-resolved
+    /// builds.
+    fn build_base(self) -> Result<SimSpec, SpecError> {
         if let Some(err) = self.deferred_dataset {
             return Err(err);
         }
@@ -1084,5 +1198,36 @@ mod tests {
             .unwrap();
         let s4 = base().config(AcceleratorConfig::default()).build().unwrap();
         assert_ne!(s3, s4);
+    }
+
+    #[test]
+    fn auto_flags_resolve_into_plain_spec_values() {
+        let g = synthetic::erdos_renyi(1_500, 6_000, 5);
+        let auto = base()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .custom_graph("er1500", g.clone())
+            .auto_partition(true)
+            .auto_onchip(true)
+            .build()
+            .unwrap();
+        // The balanced capacity for 1,500 vertices is 1,500 (one
+        // partition), not the 16,384 default.
+        assert_eq!(auto.config().bram_values, 1_500);
+        // No advisor trace survives in the spec: the same choices made
+        // by hand produce a bit-identical value (one memo entry).
+        let mut cfg = AcceleratorConfig::default();
+        cfg.bram_values = 1_500;
+        let manual = base()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .custom_graph("er1500", g)
+            .config(cfg)
+            .onchip(auto.onchip().cloned())
+            .build()
+            .unwrap();
+        assert_eq!(auto, manual);
+        assert_eq!(auto.program_key(), manual.program_key());
+        // Directly running an auto-built spec never claims advisor
+        // provenance on the report.
+        assert!(auto.run().advisor.is_none());
     }
 }

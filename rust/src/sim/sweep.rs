@@ -45,9 +45,10 @@
 //! // `.run()` / `.run_with(&session)` executes the product.
 //! ```
 
-use super::metrics::SimReport;
+use super::metrics::{AdvisorChoices, SimReport};
 use super::spec::{ProgramKey, RunScratch, SimSpec, SpecError, Workload};
 use crate::accel::{AcceleratorConfig, AcceleratorKind, PhaseProgram};
+use crate::advisor::{Advisor, Recommendation};
 use crate::algo::problem::ProblemKind;
 use crate::dram::MemTech;
 use crate::graph::datasets::DatasetId;
@@ -577,6 +578,77 @@ impl Sweep {
             .map(|(spec, report)| SweepRun { spec, report })
             .collect())
     }
+
+    /// Score the advisor against this sweep: probe the sweep's *first*
+    /// point (its base configuration), apply the recommended on-chip
+    /// budget to it, then run the full sweep plus the advisor's pick
+    /// through `session` and compare the pick against the sweep
+    /// optimum (minimum cycles). The advisor pick's report is
+    /// annotated with [`AdvisorChoices`]; the sweep's own reports are
+    /// not.
+    ///
+    /// This is the measure→act quality gate: the
+    /// `tests/advisor_validation.rs` suite requires the gap to stay
+    /// within 10% on reuse-heavy workloads.
+    pub fn validate_advisor(&self, session: &Session) -> Result<AdvisorValidation, SpecError> {
+        let specs = self.specs()?;
+        let base = specs
+            .first()
+            .cloned()
+            .ok_or(SpecError::EmptyAxis("sweep product"))?;
+        let recommendation = Advisor::new().recommend(&base)?;
+        let advisor_spec = base.with_onchip(recommendation.onchip.config.clone())?;
+        let reports = match self.threads {
+            Some(t) => session.run_batch(&specs, t),
+            None => session.run_all(&specs),
+        };
+        let advisor_raw = session.run(&advisor_spec);
+        let (best_i, best_report) = reports
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| r.cycles)
+            .map(|(i, r)| (i, r.clone()))
+            .expect("specs() returned a non-empty product");
+        let gap = advisor_raw.cycles as f64 / best_report.cycles as f64 - 1.0;
+        let advisor_report = recommendation.annotate(
+            &advisor_raw,
+            AdvisorChoices {
+                partition: false,
+                placement: false,
+                onchip: true,
+            },
+        );
+        Ok(AdvisorValidation {
+            recommendation,
+            advisor_spec,
+            advisor_report,
+            best_spec: specs[best_i].clone(),
+            best_report,
+            sweep_points: specs.len(),
+            gap,
+        })
+    }
+}
+
+/// Result of [`Sweep::validate_advisor`]: the advisor's pick scored
+/// against the sweep optimum.
+#[derive(Clone, Debug)]
+pub struct AdvisorValidation {
+    pub recommendation: Recommendation,
+    /// The sweep's base point with the recommended on-chip budget
+    /// applied.
+    pub advisor_spec: SimSpec,
+    /// The advisor pick's report, annotated with [`AdvisorChoices`].
+    pub advisor_report: SimReport,
+    /// The sweep point with the fewest cycles.
+    pub best_spec: SimSpec,
+    pub best_report: SimReport,
+    /// Number of sweep points scored against.
+    pub sweep_points: usize,
+    /// `advisor_cycles / best_cycles - 1.0`. May be negative: the
+    /// advisor can propose a budget absent from the sweep axis and
+    /// beat every listed point.
+    pub gap: f64,
 }
 
 impl Default for Sweep {
@@ -781,5 +853,106 @@ mod tests {
         for run in &runs {
             assert!(run.report.cycles > 0, "{}", run.spec.label());
         }
+    }
+
+    /// The string key of the retired `coordinator::Runner` shim,
+    /// reproduced here to document why the shim had to go: it ignored
+    /// the window and experimental-multichannel fields, so two specs
+    /// with different timing collided on one cache entry. The derived
+    /// `Hash`/`Eq` memo key cannot collide structurally.
+    fn old_key(
+        kind: AcceleratorKind,
+        graph: &str,
+        problem: ProblemKind,
+        dram: &str,
+        channels: usize,
+        cfg: &AcceleratorConfig,
+    ) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{:?}|{}|{}|{}",
+            kind.name(),
+            graph,
+            problem.name(),
+            dram,
+            channels,
+            cfg.optimizations,
+            cfg.bram_values,
+            cfg.foregraph_interval,
+            cfg.num_pes
+        )
+    }
+
+    #[test]
+    fn old_key_collision_is_structurally_impossible_now() {
+        let wide = AcceleratorConfig::default().with_window(32);
+        let narrow = AcceleratorConfig::default().with_window(1);
+        assert_ne!(wide, narrow);
+        assert_eq!(
+            old_key(AcceleratorKind::HitGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &wide),
+            old_key(AcceleratorKind::HitGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &narrow),
+            "the retired string key conflated distinct windows"
+        );
+        let flagged = AcceleratorConfig::default().with_experimental_multichannel(true);
+        assert_eq!(
+            old_key(AcceleratorKind::HitGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &flagged),
+            old_key(
+                AcceleratorKind::HitGraph,
+                "sd",
+                ProblemKind::Bfs,
+                "ddr4",
+                1,
+                &AcceleratorConfig::default()
+            ),
+            "...and the experimental flag too"
+        );
+        let build = |cfg: &AcceleratorConfig| {
+            SimSpec::builder()
+                .accelerator(AcceleratorKind::HitGraph)
+                .graph(DatasetId::Sd)
+                .problem(ProblemKind::Bfs)
+                .config(cfg.clone())
+                .build()
+                .unwrap()
+        };
+        let sa = build(&wide);
+        let sb = build(&narrow);
+        assert_ne!(sa, sb, "typed specs keep the window distinct");
+        let session = Session::new();
+        let ra = session.run(&sa);
+        let rb = session.run(&sb);
+        assert_eq!(session.cached_runs(), 2, "two entries, no collision");
+        assert_ne!(ra.cycles, rb.cycles, "window must affect timing");
+    }
+
+    #[test]
+    fn validate_advisor_scores_against_the_sweep_optimum() {
+        let session = Session::new();
+        let v = Sweep::new()
+            .accelerators([AcceleratorKind::AccuGraph])
+            .graphs([DatasetId::Sd])
+            .problems([ProblemKind::PageRank])
+            .onchip_configs([
+                None,
+                Some(OnChipConfig::vertex_cache(4 * 1024)),
+                Some(OnChipConfig::vertex_cache(64 * 1024)),
+            ])
+            .validate_advisor(&session)
+            .unwrap();
+        assert_eq!(v.sweep_points, 3);
+        assert!(v.best_report.cycles > 0);
+        assert!(v.advisor_report.cycles > 0);
+        assert!(v.gap.is_finite());
+        // Only the advisor pick's report carries provenance, and only
+        // for the axis validate_advisor varies.
+        assert_eq!(
+            v.advisor_report.advisor,
+            Some(AdvisorChoices {
+                partition: false,
+                placement: false,
+                onchip: true,
+            })
+        );
+        assert!(v.best_report.advisor.is_none());
+        assert!(!v.recommendation.onchip.rationale.is_empty());
     }
 }

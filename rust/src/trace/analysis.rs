@@ -413,6 +413,38 @@ impl RegionSummary {
         }
     }
 
+    /// Smallest power-of-two capacity (in lines, up to `max_lines`)
+    /// whose [`RegionSummary::predicted_hits`] reach `fraction` of the
+    /// hits predicted at `max_lines` itself, or `None` when even
+    /// `max_lines` predicts no hits (a streaming region). This is the
+    /// advisor's budget-sizing primitive (see [`crate::advisor`]): it
+    /// walks the reuse-interval histogram buckets rather than
+    /// re-simulating candidate buffers.
+    pub fn min_capacity_for_hits(&self, fraction: f64, max_lines: u64) -> Option<u64> {
+        let best = self.predicted_hits(max_lines);
+        if best == 0 {
+            return None;
+        }
+        let target = fraction * best as f64;
+        let mut cap = 1u64;
+        while cap < max_lines {
+            if self.predicted_hits(cap) as f64 >= target {
+                return Some(cap);
+            }
+            cap *= 2;
+        }
+        Some(max_lines)
+    }
+
+    /// This region's share of `total_requests` (0.0 on a zero total).
+    pub fn traffic_share(&self, total_requests: u64) -> f64 {
+        if total_requests == 0 {
+            0.0
+        } else {
+            self.requests() as f64 / total_requests as f64
+        }
+    }
+
     /// Fraction of accesses classified sequential.
     pub fn seq_fraction(&self) -> f64 {
         let n = self.requests();
@@ -676,6 +708,44 @@ mod tests {
         assert_eq!(v.predicted_hit_rate(1), 0.0);
         // An untouched region predicts 0.0, not NaN.
         assert_eq!(s.region(Region::Updates).predicted_hit_rate(1024), 0.0);
+    }
+
+    #[test]
+    fn min_capacity_walks_reuse_buckets() {
+        let mut a = analyzer1();
+        // Two passes over 4 vertex lines -> 4 reuses at interval 4,
+        // which land in the [4, 8) bucket: the smallest power-of-two
+        // capacity covering that whole bucket is 8 lines (capacity 4
+        // predicts zero hits under the conservative bucket rule).
+        for _ in 0..2 {
+            for line in 0..4u64 {
+                a.observe(&ev(line * CACHE_LINE, Region::Vertices, MemKind::Read, 0));
+            }
+        }
+        let s = a.finish();
+        let v = s.region(Region::Vertices);
+        assert_eq!(v.min_capacity_for_hits(0.95, 4096), Some(8));
+        assert_eq!(v.min_capacity_for_hits(1.0, 4096), Some(8));
+        // A streaming region (no reuse at all) sizes to None.
+        assert_eq!(s.region(Region::Edges).min_capacity_for_hits(0.95, 4096), None);
+        // max_lines below every interval -> no predicted hits -> None.
+        assert_eq!(v.min_capacity_for_hits(0.95, 2), None);
+    }
+
+    #[test]
+    fn traffic_share_is_request_fraction() {
+        let mut a = analyzer1();
+        for i in 0..6u64 {
+            a.observe(&ev(i * CACHE_LINE, Region::Edges, MemKind::Read, 0));
+        }
+        for i in 0..2u64 {
+            a.observe(&ev((1 << 24) + i * CACHE_LINE, Region::Vertices, MemKind::Read, 0));
+        }
+        let s = a.finish();
+        let total = s.total_requests();
+        assert!((s.region(Region::Edges).traffic_share(total) - 0.75).abs() < 1e-9);
+        assert!((s.region(Region::Vertices).traffic_share(total) - 0.25).abs() < 1e-9);
+        assert_eq!(s.region(Region::Updates).traffic_share(0), 0.0);
     }
 
     #[test]

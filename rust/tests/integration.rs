@@ -195,25 +195,6 @@ fn session_caches_across_specs() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn deprecated_runner_shim_still_works() {
-    use graphmem::coordinator::{run_one, Runner};
-    let cfg = AcceleratorConfig::all_optimizations();
-    let via_shim =
-        run_one(AcceleratorKind::AccuGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &cfg).unwrap();
-    let via_spec = simulate(AcceleratorKind::AccuGraph, DatasetId::Sd, ProblemKind::Bfs);
-    assert_eq!(via_shim, via_spec);
-    let mut runner = Runner::new();
-    runner
-        .run(AcceleratorKind::AccuGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &cfg)
-        .unwrap();
-    runner
-        .run(AcceleratorKind::AccuGraph, "sd", ProblemKind::Bfs, "ddr4", 1, &cfg)
-        .unwrap();
-    assert_eq!(runner.cached_runs(), 1);
-}
-
-#[test]
 fn optimizations_never_change_algorithm_results() {
     // iteration counts may differ, but convergence must hold: compare
     // iterations of baseline vs all-opt HitGraph — identical (2-phase
