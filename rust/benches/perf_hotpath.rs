@@ -23,6 +23,10 @@
 //!   sampled probe producing a full recommendation vs the 12-point
 //!   on-chip grid search it replaces — the probe is asserted in-run
 //!   to be ≥10× cheaper, and CI greps `advisor_probe_runs`.
+//! * ReGraph event-heap servicing at 32 HBM2 pseudo-channels
+//!   (`regraph.c32_heap`): asserted in-run bit-identical to the
+//!   retained linear-scan reference selector — CI's bench-smoke greps
+//!   `heap_scan_agree` and the request count.
 //! * Golden engines: native vs XLA/PJRT per-iteration latency.
 //!
 //! Output: human-readable lines on stdout, plus machine-readable JSON
@@ -619,6 +623,48 @@ fn bench_advisor(rep: &mut Reporter) {
     );
 }
 
+/// ReGraph at full HBM2 pseudo-channel fan-out (`regraph.c32_heap`):
+/// one 32-channel heterogeneous (little/big pipeline) BFS serviced by
+/// the event heap, asserted in-run to be bit-identical to the same
+/// simulation replayed under the retained `service_one_scan`
+/// reference selector. CI's bench-smoke greps `heap_scan_agree` and
+/// the request count so the 32-channel path cannot silently stop
+/// simulating.
+fn bench_regraph_c32(rep: &mut Reporter) {
+    let scale = if quick_scope() { 9 } else { 13 };
+    let g = generate(RmatParams::graph500(scale, 12, 0xC32));
+    let spec = SimSpec::builder()
+        .accelerator(AcceleratorKind::ReGraph)
+        .custom_graph("regraph-c32", g)
+        .problem(ProblemKind::Bfs)
+        .mem(MemTech::Hbm2)
+        .channels(32)
+        .config(AcceleratorConfig::all_optimizations())
+        .build()
+        .expect("ReGraph x hbm2 x32 is a valid spec");
+    let mut heap = None;
+    let dt_heap = time(|| heap = Some(spec.run()));
+    let heap = heap.unwrap();
+    let (scan, _) = spec.run_traced_scan();
+    assert_eq!(
+        heap, scan,
+        "heap and scan servicing must be bit-identical at C=32"
+    );
+    assert_eq!(heap.channels, 32);
+    assert!(heap.dram.requests() > 0, "C=32 run must issue DRAM traffic");
+    rep.record_with(
+        "regraph.c32_heap",
+        heap.dram.requests(),
+        dt_heap,
+        0,
+        vec![
+            ("heap_scan_agree", 1),
+            ("dram_requests", heap.dram.requests()),
+            ("channels", 32),
+        ],
+    );
+}
+
 fn bench_engines(rep: &mut Reporter) {
     let scale = if quick_scope() { 9 } else { 11 };
     let g = generate(RmatParams::graph500(scale, 12, 42));
@@ -672,6 +718,7 @@ fn main() {
     bench_sweep_mem_axis(&mut rep);
     bench_onchip(&mut rep);
     bench_advisor(&mut rep);
+    bench_regraph_c32(&mut rep);
     bench_engines(&mut rep);
     rep.flush(json_path.as_deref());
 }

@@ -3,13 +3,15 @@
 
 use crate::partition::{SCALED_BRAM_VALUES, SCALED_FOREGRAPH_INTERVAL};
 
-/// The four modelled systems.
+/// The five modelled systems: the paper's four plus the post-paper
+/// ReGraph-style heterogeneous HBM2 design.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AcceleratorKind {
     AccuGraph,
     ForeGraph,
     HitGraph,
     ThunderGp,
+    ReGraph,
 }
 
 impl AcceleratorKind {
@@ -19,6 +21,7 @@ impl AcceleratorKind {
             AcceleratorKind::ForeGraph => "ForeGraph",
             AcceleratorKind::HitGraph => "HitGraph",
             AcceleratorKind::ThunderGp => "ThunderGP",
+            AcceleratorKind::ReGraph => "ReGraph",
         }
     }
 
@@ -28,27 +31,35 @@ impl AcceleratorKind {
             "foregraph" | "fore" | "fg" => Some(AcceleratorKind::ForeGraph),
             "hitgraph" | "hit" | "hg" => Some(AcceleratorKind::HitGraph),
             "thundergp" | "thunder" | "tgp" => Some(AcceleratorKind::ThunderGp),
+            "regraph" | "rg" => Some(AcceleratorKind::ReGraph),
             _ => None,
         }
     }
 
-    pub fn all() -> [AcceleratorKind; 4] {
+    pub fn all() -> [AcceleratorKind; 5] {
         [
             AcceleratorKind::AccuGraph,
             AcceleratorKind::ForeGraph,
             AcceleratorKind::HitGraph,
             AcceleratorKind::ThunderGp,
+            AcceleratorKind::ReGraph,
         ]
     }
 
     /// Does this system support multi-channel memory (Fig. 12)?
     pub fn multi_channel(self) -> bool {
-        matches!(self, AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp)
+        matches!(
+            self,
+            AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp | AcceleratorKind::ReGraph
+        )
     }
 
     /// Does this system support weighted problems (Tab. 5)?
     pub fn supports_weighted(self) -> bool {
-        matches!(self, AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp)
+        matches!(
+            self,
+            AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp | AcceleratorKind::ReGraph
+        )
     }
 }
 
@@ -57,7 +68,7 @@ impl std::str::FromStr for AcceleratorKind {
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         AcceleratorKind::parse(s).ok_or_else(|| {
-            format!("unknown accelerator {s:?} (accugraph|foregraph|hitgraph|thundergp)")
+            format!("unknown accelerator {s:?} (accugraph|foregraph|hitgraph|thundergp|regraph)")
         })
     }
 }
@@ -219,8 +230,11 @@ mod tests {
         assert!(!AcceleratorKind::ForeGraph.multi_channel());
         assert!(AcceleratorKind::HitGraph.multi_channel());
         assert!(AcceleratorKind::ThunderGp.multi_channel());
+        assert!(AcceleratorKind::ReGraph.multi_channel());
         assert!(!AcceleratorKind::AccuGraph.supports_weighted());
         assert!(AcceleratorKind::HitGraph.supports_weighted());
+        assert!(AcceleratorKind::ReGraph.supports_weighted());
+        assert_eq!(AcceleratorKind::parse("rg"), Some(AcceleratorKind::ReGraph));
     }
 
     #[test]

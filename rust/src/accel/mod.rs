@@ -1,5 +1,6 @@
 //! Memory-access-pattern models of the four graph processing
-//! accelerators the paper studies (§3.2):
+//! accelerators the paper studies (§3.2), plus the post-paper
+//! ReGraph-style heterogeneous HBM2 design:
 //!
 //! | Model | Iteration | Partitioning | Binary rep. | Update prop. |
 //! |-------|-----------|--------------|-------------|--------------|
@@ -7,6 +8,7 @@
 //! | [`foregraph`] | edge-centric | interval-shard | compressed edge list | immediate |
 //! | [`hitgraph`]  | edge-centric | horizontal | sorted edge list | 2-phase |
 //! | [`thundergp`] | edge-centric | vertical | sorted edge list | 2-phase |
+//! | [`regraph`] | edge-centric | horizontal, dense/sparse split | sorted edge list | 2-phase, little/big pipelines |
 //!
 //! Each model executes the real algorithm semantics (so iteration
 //! counts, convergence, and the skip/filter optimizations are
@@ -25,6 +27,7 @@ pub mod config;
 pub mod foregraph;
 pub mod hitgraph;
 pub mod program;
+pub mod regraph;
 pub mod stream;
 pub mod thundergp;
 
@@ -33,6 +36,7 @@ pub use config::{AcceleratorConfig, AcceleratorKind, Optimization};
 pub use foregraph::ForeGraph;
 pub use hitgraph::HitGraph;
 pub use program::PhaseProgram;
+pub use regraph::ReGraph;
 pub use thundergp::ThunderGp;
 
 use crate::algo::problem::GraphProblem;
@@ -58,5 +62,6 @@ pub fn build(
         AcceleratorKind::ForeGraph => Box::new(ForeGraph::new(g, cfg)),
         AcceleratorKind::HitGraph => Box::new(HitGraph::new(g, cfg)),
         AcceleratorKind::ThunderGp => Box::new(ThunderGp::new(g, cfg)),
+        AcceleratorKind::ReGraph => Box::new(ReGraph::new(g, cfg)),
     }
 }

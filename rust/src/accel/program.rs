@@ -65,6 +65,7 @@ use super::accugraph::AccuGraphProgram;
 use super::config::{AcceleratorConfig, AcceleratorKind};
 use super::foregraph::ForeGraphProgram;
 use super::hitgraph::HitGraphProgram;
+use super::regraph::ReGraphProgram;
 use super::thundergp::ThunderGpProgram;
 use crate::algo::problem::GraphProblem;
 use crate::dram::MemorySystem;
@@ -103,6 +104,7 @@ enum Model {
     ForeGraph(ForeGraphProgram),
     HitGraph(HitGraphProgram),
     ThunderGp(ThunderGpProgram),
+    ReGraph(ReGraphProgram),
 }
 
 impl PhaseProgram {
@@ -116,6 +118,7 @@ impl PhaseProgram {
             AcceleratorKind::ForeGraph => Model::ForeGraph(ForeGraphProgram::compile(g, cfg)),
             AcceleratorKind::HitGraph => Model::HitGraph(HitGraphProgram::compile(g, cfg)),
             AcceleratorKind::ThunderGp => Model::ThunderGp(ThunderGpProgram::compile(g, cfg)),
+            AcceleratorKind::ReGraph => Model::ReGraph(ReGraphProgram::compile(g, cfg)),
         };
         PhaseProgram {
             kind,
@@ -182,6 +185,7 @@ impl PhaseProgram {
             Model::ForeGraph(m) => m.execute_onchip(p, mem, onchip),
             Model::HitGraph(m) => m.execute_onchip(p, mem, onchip),
             Model::ThunderGp(m) => m.execute_onchip(p, mem, onchip),
+            Model::ReGraph(m) => m.execute_onchip(p, mem, onchip),
         }
     }
 }

@@ -1,0 +1,784 @@
+//! ReGraph-style heterogeneous model (post-paper; arxiv 2203.02676):
+//! edge-centric over a horizontally partitioned **sorted edge list**,
+//! **2-phase** update propagation, scaled out across HBM2
+//! pseudo-channels split into two disjoint groups of heterogeneous
+//! pipelines.
+//!
+//! The defining move is *partition-aware dispatch*: at compile time
+//! every partition is classified **dense** or **sparse** from its
+//! degree histogram (see [`DENSE_MEAN_DEGREE`]), then bound to one of
+//! two disjoint channel groups:
+//!
+//! * **Little pipelines** (first half of the channels) take dense
+//!   partitions and stream them regularly — sequential value prefetch,
+//!   then a sequential edge scan, exactly like HitGraph's PEs.
+//! * **Big pipelines** (second half) take sparse partitions and run
+//!   gather-style: the edge scan leads and the source values are
+//!   fetched per edge through the cache-line abstraction — irregular
+//!   vertex traffic instead of a wasteful full-interval prefetch.
+//!
+//! Update propagation stays 2-phase (crossbar into per-partition
+//! queues, then a gather pass), so convergence behaviour is identical
+//! to the other 2-phase systems and the golden `TwoPhase` reference.
+//!
+//! Split compile/execute (see [`crate::accel::program`]):
+//! [`ReGraphProgram`] owns the partitioning, classification, channel
+//! grouping and the *channel-local* [`LineSource`] descriptors
+//! (including each sparse partition's gather index set and its
+//! per-edge-line release schedule). At execute time the descriptors
+//! are relocated onto the concrete memory system with
+//! [`LineSource::rebase`] — region bases are whole multiples of the
+//! per-channel capacity, so one compiled program serves any channel
+//! group layout and any memory technology for free.
+//!
+//! Building a 32-pseudo-channel ReGraph spec end to end:
+//!
+//! ```
+//! use graphmem::accel::AcceleratorKind;
+//! use graphmem::algo::problem::ProblemKind;
+//! use graphmem::dram::MemTech;
+//! use graphmem::graph::DatasetId;
+//! use graphmem::sim::SimSpec;
+//!
+//! let spec = SimSpec::builder()
+//!     .accelerator(AcceleratorKind::ReGraph)
+//!     .graph(DatasetId::Sd)
+//!     .problem(ProblemKind::PageRank)
+//!     .mem(MemTech::Hbm2)
+//!     .channels(32)
+//!     .build()
+//!     .unwrap();
+//! let report = spec.run();
+//! assert_eq!(report.accelerator, "ReGraph");
+//! assert_eq!(report.channels, 32);
+//! assert!(report.dram.requests() > 0);
+//! ```
+
+use super::config::{AcceleratorConfig, Optimization};
+use super::stream::{seq_lines, Fanout, LineSource, LineStream, Merge, Phase, StreamClass};
+use super::Accelerator;
+use crate::algo::problem::GraphProblem;
+use crate::dram::{MemKind, MemorySystem, CACHE_LINE};
+use crate::graph::EdgeList;
+use crate::onchip::OnChipBuffer;
+use crate::partition::horizontal::HorizontalPartitioning;
+use crate::sim::driver::{run_phase_onchip, PhaseScratch};
+use crate::sim::metrics::{RunMetrics, SimReport};
+use crate::trace::Histogram;
+
+/// Dense/sparse threshold: a partition whose mean out-degree (over its
+/// vertex interval) reaches this value is dispatched to the little
+/// (streaming) pipelines; below it, to the big (gather) pipelines.
+/// The classification is a pure function of the graph and this
+/// constant — no run-time state feeds into it.
+pub const DENSE_MEAN_DEGREE: f64 = 8.0;
+
+/// Compiled ReGraph program: partitioning, dense/sparse classification,
+/// channel-group assignment, and channel-local stream descriptors.
+/// Addresses are channel-local until execute adds the memory system's
+/// region bases via [`LineSource::rebase`].
+pub struct ReGraphProgram {
+    part: HorizontalPartitioning,
+    n: usize,
+    m: usize,
+    cfg: AcceleratorConfig,
+    /// Per-partition classification: `true` = dense (little pipeline).
+    dense: Vec<bool>,
+    /// partition -> owning (global) channel.
+    chan_of: Vec<usize>,
+    /// Channels `[0, little_channels)` form the little group; the rest
+    /// are the big group.
+    little_channels: usize,
+    edge_bytes: u64,
+    /// Channel-local byte addresses, per partition.
+    val_local: Vec<u64>,
+    edge_local: Vec<u64>,
+    upd_local: Vec<u64>,
+    /// Channel-local value source per partition: `Seq` over the whole
+    /// interval for dense partitions, per-edge `Gather` for sparse.
+    pre_src: Vec<LineSource>,
+    /// Channel-local sequential edge scan per partition.
+    edge_src: Vec<LineSource>,
+    /// For sparse partitions: how many gather lines each *edge line*
+    /// releases (compiled once — the gather covers every edge, so the
+    /// schedule is value-independent). `Uniform(0)` placeholder for
+    /// dense partitions.
+    val_fan: Vec<Fanout>,
+}
+
+impl ReGraphProgram {
+    pub fn compile(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+        let channels = cfg.channels.max(1);
+        // At least one partition per channel, so every pipeline in
+        // both groups has work on balanced graphs.
+        let cap = cfg
+            .bram_values
+            .min(((g.num_vertices + channels - 1) / channels).max(1));
+        let mut part = HorizontalPartitioning::new(g, cap);
+        if cfg.has(Optimization::EdgeSorting) {
+            part.sort_by_dst();
+        }
+        let k = part.num_partitions();
+        let edge_bytes = g.edge_bytes();
+
+        // ---- Classification: degree histogram per partition --------
+        let degrees = g.out_degrees();
+        let dense: Vec<bool> = (0..k)
+            .map(|q| {
+                let iv = part.intervals[q];
+                let mut hist = Histogram::default();
+                for v in iv.start..iv.end {
+                    hist.record(degrees[v as usize] as u64);
+                }
+                hist.mean() >= DENSE_MEAN_DEGREE
+            })
+            .collect();
+
+        // ---- Channel groups: little = dense, big = sparse ----------
+        let little_channels = ((channels + 1) / 2).max(1).min(channels);
+        let big_channels = channels - little_channels;
+        let mut next_little = 0usize;
+        let mut next_big = 0usize;
+        let chan_of: Vec<usize> = (0..k)
+            .map(|q| {
+                if dense[q] || big_channels == 0 {
+                    let c = next_little % little_channels;
+                    next_little += 1;
+                    c
+                } else {
+                    let c = little_channels + next_big % big_channels;
+                    next_big += 1;
+                    c
+                }
+            })
+            .collect();
+
+        // ---- Channel-local layout: values, edges, update queues ----
+        let mut val_region_base = vec![0u64; channels];
+        let mut edge_local = vec![0u64; k];
+        let mut upd_local = vec![0u64; k];
+        let block_records = 2 * g.num_edges() as u64 / ((k * k) as u64).max(1) + 64;
+        for c in 0..channels {
+            let owned: Vec<usize> = (0..k).filter(|&q| chan_of[q] == c).collect();
+            let mut cursor = 0u64;
+            val_region_base[c] = cursor;
+            let vals: u64 = owned.iter().map(|&q| part.intervals[q].len() as u64).sum();
+            cursor += (vals * 4 + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
+            for &q in &owned {
+                edge_local[q] = cursor;
+                let bytes = part.edges[q].len() as u64 * edge_bytes;
+                cursor += (bytes + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
+            }
+            for &q in &owned {
+                upd_local[q] = cursor;
+                let bytes = block_records * 8 * k as u64;
+                cursor += (bytes + CACHE_LINE - 1) / CACHE_LINE * CACHE_LINE;
+            }
+        }
+        let mut val_local = vec![0u64; k];
+        let mut val_offset = val_region_base;
+        for q in 0..k {
+            let c = chan_of[q];
+            val_local[q] = val_offset[c];
+            val_offset[c] += part.intervals[q].len() as u64 * 4;
+        }
+
+        // ---- Channel-local descriptors + gather release schedules --
+        let mut pre_src = Vec::with_capacity(k);
+        let mut edge_src = Vec::with_capacity(k);
+        let mut val_fan = Vec::with_capacity(k);
+        let edges_per_line = (CACHE_LINE / edge_bytes).max(1);
+        for q in 0..k {
+            let iv = part.intervals[q];
+            let m_q = part.edges[q].len();
+            let esrc = LineSource::seq(edge_local[q], m_q as u64 * edge_bytes);
+            let nedge = esrc.len();
+            if dense[q] {
+                pre_src.push(LineSource::seq(val_local[q], iv.len() as u64 * 4));
+                val_fan.push(Fanout::Uniform(0));
+            } else {
+                // Big pipeline: one source-value access per edge,
+                // adjacent same-line accesses merged by the cache-line
+                // abstraction. The release schedule mirrors the merge:
+                // a kept line is released by the edge line that first
+                // touches it.
+                let gsrc = LineSource::gather(
+                    val_local[q],
+                    4,
+                    part.edges[q].iter().map(|e| (e.src - iv.start) as u64),
+                );
+                let mut fan = vec![0u32; nedge];
+                let mut last_line = u64::MAX;
+                for (ei, e) in part.edges[q].iter().enumerate() {
+                    let idx = (e.src - iv.start) as u64;
+                    let line = (val_local[q] + idx * 4) / CACHE_LINE * CACHE_LINE;
+                    if line != last_line {
+                        last_line = line;
+                        let eline = (ei as u64 / edges_per_line) as usize;
+                        fan[eline.min(nedge.saturating_sub(1))] += 1;
+                    }
+                }
+                pre_src.push(gsrc);
+                val_fan.push(Fanout::PerParent(fan.into()));
+            }
+            edge_src.push(esrc);
+        }
+
+        ReGraphProgram {
+            part,
+            n: g.num_vertices,
+            m: g.num_edges(),
+            cfg: cfg.clone(),
+            dense,
+            chan_of,
+            little_channels,
+            edge_bytes,
+            val_local,
+            edge_local,
+            upd_local,
+            pre_src,
+            edge_src,
+            val_fan,
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.part.num_partitions()
+    }
+
+    /// Per-partition dense/sparse labels (`true` = dense / little
+    /// pipeline). Deterministic: recompiling the same graph with the
+    /// same configuration reproduces this slice exactly.
+    pub fn classification(&self) -> &[bool] {
+        &self.dense
+    }
+
+    /// Partition -> owning channel assignment.
+    pub fn channel_of(&self) -> &[usize] {
+        &self.chan_of
+    }
+
+    /// Channels `[0, little_channels)` host the little (dense)
+    /// pipelines; channels `[little_channels, channels)` the big
+    /// (sparse) ones.
+    pub fn little_channels(&self) -> usize {
+        self.little_channels
+    }
+
+    pub fn dense_count(&self) -> usize {
+        self.dense.iter().filter(|&&d| d).count()
+    }
+
+    pub fn sparse_count(&self) -> usize {
+        self.dense.len() - self.dense_count()
+    }
+
+    fn val_addr(&self, mem: &MemorySystem, q: usize) -> u64 {
+        mem.region_base(self.chan_of[q]) + self.val_local[q]
+    }
+
+    fn upd_addr(&self, mem: &MemorySystem, q: usize) -> u64 {
+        mem.region_base(self.chan_of[q]) + self.upd_local[q]
+    }
+
+    fn upd_block_records(&self) -> u64 {
+        let k = self.part.num_partitions() as u64;
+        2 * self.m as u64 / (k * k).max(1) + 64
+    }
+
+    fn upd_rec_addr(&self, mem: &MemorySystem, j: usize, q: usize, rec: u64) -> u64 {
+        let block = self.upd_block_records();
+        self.upd_addr(mem, j) + (q as u64 * block + rec.min(block - 1)) * 8
+    }
+
+    pub fn execute(&self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.execute_onchip(p, mem, None)
+    }
+
+    /// [`ReGraphProgram::execute`] with an optional on-chip buffer
+    /// (see [`crate::onchip`]). Like the other 2-phase streaming
+    /// designs, ReGraph's paper-faithful default is no buffer.
+    pub fn execute_onchip(
+        &self,
+        p: &GraphProblem,
+        mem: &mut MemorySystem,
+        mut onchip: Option<&mut OnChipBuffer>,
+    ) -> SimReport {
+        let n = self.n;
+        let k = self.part.num_partitions();
+        let channels = self.cfg.channels.max(1).min(mem.num_channels());
+        let window = self.cfg.window;
+        let skip = self.cfg.has(Optimization::PartitionSkipping);
+        let combine = self.cfg.has(Optimization::UpdateCombining)
+            && self.cfg.has(Optimization::EdgeSorting);
+        let filter = self.cfg.has(Optimization::UpdateFiltering);
+
+        let mut values = p.init_values();
+        let mut prev_changed = vec![true; n];
+        let mut metrics = RunMetrics::default();
+        let mut cursor = 0u64;
+        let max_iters = p.kind.fixed_iterations().unwrap_or(u32::MAX);
+        let per = self.part.intervals.first().map_or(1, |i| i.len().max(1));
+        let mut scratch = PhaseScratch::new();
+
+        loop {
+            metrics.iterations += 1;
+            let mut queues: Vec<Vec<(u32, f32)>> = vec![Vec::new(); k];
+            let mut queue_seg: Vec<Vec<u64>> = vec![vec![0u64; k]; k];
+
+            // ------------- Scatter: waves of one partition/channel ---
+            let active_part: Vec<bool> = (0..k)
+                .map(|q| {
+                    let iv = self.part.intervals[q];
+                    (iv.start..iv.end).any(|v| prev_changed[v as usize])
+                })
+                .collect();
+            if skip {
+                metrics.skipped += active_part.iter().filter(|&&a| !a).count() as u64;
+            }
+            let mut wave = 0usize;
+            loop {
+                let mut wave_parts: Vec<usize> = Vec::new();
+                for c in 0..channels {
+                    let mut seen = 0usize;
+                    for q in 0..k {
+                        if self.chan_of[q] != c {
+                            continue;
+                        }
+                        if skip && !active_part[q] {
+                            continue;
+                        }
+                        if seen == wave {
+                            wave_parts.push(q);
+                            break;
+                        }
+                        seen += 1;
+                    }
+                }
+                if wave_parts.is_empty() {
+                    break;
+                }
+                wave += 1;
+
+                let mut streams: Vec<LineStream> = Vec::new();
+                let mut pe_trees: Vec<Merge> = Vec::new();
+                for &q in &wave_parts {
+                    metrics.processed += 1;
+                    let iv = self.part.intervals[q];
+                    let m_q = self.part.edges[q].len();
+                    let mut produced = 0u64;
+                    let mut upd_cnt_per_edge: Vec<u32> = vec![0; m_q];
+                    for (ei, e) in self.part.edges[q].iter().enumerate() {
+                        if filter && !prev_changed[e.src as usize] {
+                            continue;
+                        }
+                        let u = p.combine(e.src, values[e.src as usize], e.weight);
+                        let dq = (e.dst as usize / per).min(k - 1);
+                        if combine {
+                            if let Some(last) = queues[dq].last_mut() {
+                                if last.0 == e.dst {
+                                    last.1 = p.reduce(last.1, u);
+                                    continue;
+                                }
+                            }
+                        }
+                        queues[dq].push((e.dst, u));
+                        upd_cnt_per_edge[ei] += 1;
+                        produced += 1;
+                    }
+                    metrics.updates_rw += produced;
+                    metrics.edges_read += m_q as u64;
+                    metrics.values_read += if self.dense[q] {
+                        iv.len() as u64
+                    } else {
+                        // Big pipeline: one source-value access per edge.
+                        m_q as u64
+                    };
+
+                    // Relocate the compiled channel-local descriptors
+                    // onto this memory system's region base.
+                    let delta = mem.region_base(self.chan_of[q]);
+                    let base = streams.len();
+                    let edge_stream_idx;
+                    let edge_src = self.edge_src[q].rebase(delta);
+                    let nedge = edge_src.len();
+                    if self.dense[q] {
+                        // Little pipeline: prefetch -> edges.
+                        let pre_src = self.pre_src[q].rebase(delta);
+                        let npre = pre_src.len();
+                        streams.push(LineStream::independent(
+                            StreamClass::Prefetch,
+                            MemKind::Read,
+                            pre_src,
+                        ));
+                        streams.push(if npre == 0 {
+                            LineStream::independent(StreamClass::Edges, MemKind::Read, edge_src)
+                        } else {
+                            LineStream::chained(
+                                StreamClass::Edges,
+                                MemKind::Read,
+                                edge_src,
+                                base,
+                                Fanout::AfterLast(nedge as u32),
+                            )
+                        });
+                        edge_stream_idx = base + 1;
+                    } else {
+                        // Big pipeline: edges lead, values gathered
+                        // per edge line (compiled release schedule).
+                        streams.push(LineStream::independent(
+                            StreamClass::Edges,
+                            MemKind::Read,
+                            edge_src,
+                        ));
+                        let gather_src = self.pre_src[q].rebase(delta);
+                        streams.push(LineStream::chained(
+                            StreamClass::Values,
+                            MemKind::Read,
+                            gather_src,
+                            base,
+                            self.val_fan[q].clone(),
+                        ));
+                        edge_stream_idx = base;
+                    }
+
+                    // Update writes: crossbar into per-partition
+                    // queues, 8 B records, chained to edge lines.
+                    let mut upd_lines: Vec<u64> = Vec::new();
+                    let mut upd_fan = vec![0u32; nedge];
+                    {
+                        let mut last_line: Vec<u64> = vec![u64::MAX; k];
+                        let edges_per_line = (CACHE_LINE / self.edge_bytes).max(1);
+                        for (ei, e) in self.part.edges[q].iter().enumerate() {
+                            let cnt = upd_cnt_per_edge[ei];
+                            if cnt == 0 {
+                                continue;
+                            }
+                            let dq = (e.dst as usize / per).min(k - 1);
+                            let rec = queue_seg[dq][q];
+                            queue_seg[dq][q] += 1;
+                            let line =
+                                self.upd_rec_addr(mem, dq, q, rec) / CACHE_LINE * CACHE_LINE;
+                            if last_line[dq] != line {
+                                last_line[dq] = line;
+                                upd_lines.push(line);
+                                let eline = (ei as u64 / edges_per_line) as usize;
+                                upd_fan[eline.min(nedge.saturating_sub(1))] += 1;
+                            }
+                        }
+                    }
+                    if nedge > 0 {
+                        streams.push(LineStream::chained(
+                            StreamClass::Updates,
+                            MemKind::Write,
+                            upd_lines,
+                            edge_stream_idx,
+                            upd_fan,
+                        ));
+                        pe_trees.push(Merge::prio([base + 2, base + 1, base]));
+                    } else {
+                        pe_trees.push(Merge::prio([base + 1, base]));
+                    }
+                }
+                let phase = Phase {
+                    streams,
+                    merge: Merge::RoundRobin(pe_trees).into(),
+                    window,
+                };
+                cursor =
+                    run_phase_onchip(mem, &phase, cursor, &mut scratch, onchip.as_deref_mut())
+                        .end_cycle;
+            }
+
+            // ------------- Gather: apply the queues ------------------
+            let mut changed_now = vec![false; n];
+            let mut any = false;
+            let mut wave = 0usize;
+            loop {
+                let mut wave_parts: Vec<usize> = Vec::new();
+                for c in 0..channels {
+                    let mut seen = 0usize;
+                    for q in 0..k {
+                        if self.chan_of[q] != c {
+                            continue;
+                        }
+                        if queues[q].is_empty() && skip {
+                            continue;
+                        }
+                        if seen == wave {
+                            wave_parts.push(q);
+                            break;
+                        }
+                        seen += 1;
+                    }
+                }
+                if wave_parts.is_empty() {
+                    break;
+                }
+                wave += 1;
+
+                let mut streams: Vec<LineStream> = Vec::new();
+                let mut pe_trees: Vec<Merge> = Vec::new();
+                for &q in &wave_parts {
+                    let iv = self.part.intervals[q];
+                    let u_q = queues[q].len();
+                    metrics.values_read += iv.len() as u64;
+                    metrics.updates_rw += u_q as u64;
+
+                    let mut write_dsts: Vec<u64> = Vec::new();
+                    let mut write_upd_idx: Vec<usize> = Vec::new();
+                    for (ui, &(dst, u)) in queues[q].iter().enumerate() {
+                        let old = values[dst as usize];
+                        let new = p.apply(old, u);
+                        if p.changed(old, new) {
+                            values[dst as usize] = new;
+                            if !changed_now[dst as usize] {
+                                changed_now[dst as usize] = true;
+                            }
+                            any = true;
+                            write_dsts.push(dst as u64 - iv.start as u64);
+                            write_upd_idx.push(ui);
+                        }
+                    }
+                    metrics.values_written += write_dsts.len() as u64;
+
+                    let base = streams.len();
+                    let pre_src = LineSource::seq(self.val_addr(mem, q), iv.len() as u64 * 4);
+                    let npre = pre_src.len();
+                    streams.push(LineStream::independent(
+                        StreamClass::Prefetch,
+                        MemKind::Read,
+                        pre_src,
+                    ));
+                    let mut upd_lines: Vec<u64> = Vec::new();
+                    for q2 in 0..k {
+                        let used = queue_seg[q][q2];
+                        if used > 0 {
+                            upd_lines
+                                .extend(seq_lines(self.upd_rec_addr(mem, q, q2, 0), used * 8));
+                        }
+                    }
+                    let nupd = upd_lines.len();
+                    streams.push(if npre == 0 {
+                        LineStream::independent(StreamClass::Updates, MemKind::Read, upd_lines)
+                    } else {
+                        LineStream::chained(
+                            StreamClass::Updates,
+                            MemKind::Read,
+                            upd_lines,
+                            base,
+                            Fanout::AfterLast(nupd as u32),
+                        )
+                    });
+                    let val_addr = self.val_addr(mem, q);
+                    let wsrc = LineSource::gather(val_addr, 4, write_dsts.iter().copied());
+                    let mut wfan = vec![0u32; nupd];
+                    {
+                        let mut prev = u64::MAX;
+                        for (wi, &dloc) in write_dsts.iter().enumerate() {
+                            let line = (val_addr + dloc * 4) / CACHE_LINE * CACHE_LINE;
+                            if line == prev {
+                                continue;
+                            }
+                            prev = line;
+                            let uline = (write_upd_idx[wi] as u64 * 8 / CACHE_LINE) as usize;
+                            wfan[uline.min(nupd.saturating_sub(1))] += 1;
+                        }
+                    }
+                    if nupd > 0 {
+                        streams.push(LineStream::chained(
+                            StreamClass::Writes,
+                            MemKind::Write,
+                            wsrc,
+                            base + 1,
+                            wfan,
+                        ));
+                        pe_trees.push(Merge::prio([base + 2, base + 1, base]));
+                    } else {
+                        pe_trees.push(Merge::prio([base + 1, base]));
+                    }
+                }
+                let phase = Phase {
+                    streams,
+                    merge: Merge::RoundRobin(pe_trees).into(),
+                    window,
+                };
+                cursor =
+                    run_phase_onchip(mem, &phase, cursor, &mut scratch, onchip.as_deref_mut())
+                        .end_cycle;
+            }
+
+            prev_changed = changed_now;
+            if metrics.iterations >= max_iters {
+                break;
+            }
+            if !any {
+                break;
+            }
+        }
+
+        let dram = mem.stats();
+        SimReport {
+            accelerator: "ReGraph",
+            problem: p.kind.name(),
+            graph_edges: self.m as u64,
+            cycles: cursor,
+            seconds: cursor as f64 * mem.spec().seconds_per_cycle(),
+            bytes_total: dram.requests() * CACHE_LINE,
+            bus_utilization: mem.utilization(),
+            channels: mem.num_channels(),
+            metrics,
+            dram,
+            patterns: None,
+            onchip: None,
+            advisor: None,
+        }
+    }
+}
+
+/// ReGraph simulator instance: a handle on a compiled
+/// [`ReGraphProgram`].
+pub struct ReGraph {
+    program: ReGraphProgram,
+}
+
+impl ReGraph {
+    pub fn new(g: &EdgeList, cfg: &AcceleratorConfig) -> Self {
+        ReGraph {
+            program: ReGraphProgram::compile(g, cfg),
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.program.num_partitions()
+    }
+
+    /// Per-partition dense/sparse labels (`true` = dense).
+    pub fn classification(&self) -> &[bool] {
+        self.program.classification()
+    }
+}
+
+impl Accelerator for ReGraph {
+    fn name(&self) -> &'static str {
+        "ReGraph"
+    }
+
+    fn run(&mut self, p: &GraphProblem, mem: &mut MemorySystem) -> SimReport {
+        self.program.execute(p, mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::golden::{run_golden, Propagation};
+    use crate::algo::problem::ProblemKind;
+    use crate::dram::{ChannelMode, DramSpec};
+    use crate::graph::synthetic::erdos_renyi;
+
+    /// First half of the vertices high-degree (16 out-edges each),
+    /// second half low-degree (2): with 4 equal partitions the first
+    /// two classify dense, the last two sparse.
+    fn mixed_graph() -> EdgeList {
+        let n = 200u32;
+        let mut g = EdgeList::new(n as usize, true);
+        for v in 0..n {
+            let deg = if v < n / 2 { 16 } else { 2 };
+            for i in 0..deg {
+                g.add(v, (v * 7 + i * 13 + 1) % n);
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn classification_is_pure_and_deterministic() {
+        let g = mixed_graph();
+        let cfg = AcceleratorConfig::default().with_channels(4);
+        let a = ReGraphProgram::compile(&g, &cfg);
+        let b = ReGraphProgram::compile(&g, &cfg);
+        assert_eq!(a.classification(), b.classification());
+        assert_eq!(a.channel_of(), b.channel_of());
+        assert!(a.dense_count() > 0, "mixed graph must have dense partitions");
+        assert!(a.sparse_count() > 0, "mixed graph must have sparse partitions");
+    }
+
+    #[test]
+    fn dense_and_sparse_dispatch_to_disjoint_channel_groups() {
+        let g = mixed_graph();
+        let cfg = AcceleratorConfig::default().with_channels(4);
+        let prog = ReGraphProgram::compile(&g, &cfg);
+        assert_eq!(prog.little_channels(), 2);
+        for q in 0..prog.num_partitions() {
+            let c = prog.channel_of()[q];
+            if prog.classification()[q] {
+                assert!(c < 2, "dense partition {q} on big channel {c}");
+            } else {
+                assert!(c >= 2, "sparse partition {q} on little channel {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelines_use_seq_vs_gather_sources() {
+        let g = mixed_graph();
+        let cfg = AcceleratorConfig::default().with_channels(4);
+        let prog = ReGraphProgram::compile(&g, &cfg);
+        for q in 0..prog.num_partitions() {
+            match (&prog.pre_src[q], prog.dense[q]) {
+                (LineSource::Seq { .. }, true) | (LineSource::Gather { .. }, false) => {}
+                (src, dense) => panic!("partition {q} dense={dense} has source {src:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_iterations_match_two_phase_golden() {
+        let g = erdos_renyi(3000, 18000, 11);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let golden = run_golden(&p, &g, Propagation::TwoPhase);
+        let mut acc = ReGraph::new(&g, &AcceleratorConfig::default());
+        let mut mem = MemorySystem::with_mode(DramSpec::ddr4_2400(1), ChannelMode::Region);
+        let r = acc.run(&p, &mut mem);
+        assert_eq!(r.metrics.iterations, golden.iterations);
+    }
+
+    #[test]
+    fn program_relocates_across_memory_technologies() {
+        let g = mixed_graph();
+        let cfg = AcceleratorConfig::all_optimizations().with_channels(4);
+        let program = ReGraphProgram::compile(&g, &cfg);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let mut m_ddr = MemorySystem::with_mode(DramSpec::ddr4_2400(4), ChannelMode::Region);
+        let mut m_hbm2 = MemorySystem::with_mode(DramSpec::hbm2_2000(4), ChannelMode::Region);
+        let r_ddr = program.execute(&p, &mut m_ddr);
+        let r_hbm2 = program.execute(&p, &mut m_hbm2);
+        assert_eq!(r_ddr.metrics, r_hbm2.metrics);
+        assert_eq!(r_ddr.dram.requests(), r_hbm2.dram.requests());
+    }
+
+    #[test]
+    fn thirty_two_channel_hbm2_runs_end_to_end() {
+        let g = erdos_renyi(8000, 80000, 12);
+        let cfg = AcceleratorConfig::all_optimizations().with_channels(32);
+        let p = GraphProblem::new(ProblemKind::Bfs, &g);
+        let mut acc = ReGraph::new(&g, &cfg);
+        let mut mem = MemorySystem::with_mode(DramSpec::hbm2_2000(32), ChannelMode::Region);
+        let r = acc.run(&p, &mut mem);
+        assert!(r.cycles > 0);
+        assert_eq!(r.channels, 32);
+        assert!(r.dram.requests() > 0);
+    }
+
+    #[test]
+    fn sssp_supported_with_weights() {
+        let g = erdos_renyi(1000, 6000, 13).with_random_weights(9, 16.0);
+        let p = GraphProblem::new(ProblemKind::Sssp, &g);
+        let mut acc = ReGraph::new(&g, &AcceleratorConfig::all_optimizations());
+        let mut mem = MemorySystem::with_mode(DramSpec::ddr4_2400(1), ChannelMode::Region);
+        let r = acc.run(&p, &mut mem);
+        let golden = run_golden(&p, &g, Propagation::TwoPhase);
+        assert_eq!(r.metrics.iterations, golden.iterations);
+    }
+}

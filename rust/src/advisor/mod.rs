@@ -149,4 +149,35 @@ mod tests {
         assert_eq!(rec.placement.channels, 1);
         assert!(rec.placement.rationale.contains("utilization"));
     }
+
+    #[test]
+    fn placement_never_exceeds_the_memory_technology_envelope() {
+        // The doubling loop in `placement_choice` must stop at the
+        // technology's Tab. 3 ceiling: >8 channels is only ever a
+        // valid recommendation on HBM2 pseudo-channel stacks.
+        use crate::dram::MemTech;
+        let advisor = Advisor::new();
+        for tech in MemTech::all() {
+            let spec = SimSpec::builder()
+                .accelerator(AcceleratorKind::ReGraph)
+                .custom_graph("adv-env", synthetic::erdos_renyi(1_024, 6_144, 7))
+                .problem(ProblemKind::Bfs)
+                .mem(tech)
+                .build()
+                .unwrap();
+            let rec = advisor.recommend(&spec).unwrap();
+            assert!(
+                rec.placement.channels <= tech.max_channels(),
+                "{tech}: recommended {} channels, max {}",
+                rec.placement.channels,
+                tech.max_channels()
+            );
+            if tech != MemTech::Hbm2 {
+                assert!(
+                    rec.placement.channels <= 8,
+                    "{tech}: only HBM2 may exceed 8 channels"
+                );
+            }
+        }
+    }
 }

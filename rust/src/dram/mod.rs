@@ -30,7 +30,7 @@ pub use spec::{
     AddrMap, DramPolicy, DramSpec, DramStandard, MemTech, RowPolicy, SchedPolicy, SpeedGrade,
 };
 pub use stats::{DramStats, RowOutcome};
-pub use system::{ChannelMode, MemKind, MemRequest, MemorySystem, ReqToken};
+pub use system::{ChannelMode, MemKind, MemRequest, MemorySystem, ReqToken, ServiceOrder};
 
 /// Cache-line size in bytes. All modelled requests are line-granular
 /// (the paper's "64 bytes are returned for each request which we call

@@ -26,6 +26,11 @@ pub enum MemTech {
     Ddr4,
     /// HBM-1000 pseudo-channels.
     Hbm,
+    /// HBM2-2000 in pseudo-channel mode: 32 independent 64-bit
+    /// pseudo-channels per stack pair — the scale-out axis the paper
+    /// predates (ReGraph-class accelerators bind pipeline groups to
+    /// disjoint pseudo-channel groups).
+    Hbm2,
 }
 
 impl MemTech {
@@ -34,28 +39,33 @@ impl MemTech {
             MemTech::Ddr3 => "ddr3",
             MemTech::Ddr4 => "ddr4",
             MemTech::Hbm => "hbm",
+            MemTech::Hbm2 => "hbm2",
         }
     }
 
-    pub fn all() -> [MemTech; 3] {
-        [MemTech::Ddr3, MemTech::Ddr4, MemTech::Hbm]
+    pub fn all() -> [MemTech; 4] {
+        [MemTech::Ddr3, MemTech::Ddr4, MemTech::Hbm, MemTech::Hbm2]
     }
 
-    /// The Tab. 3 [`DramSpec`] for this technology at a channel count.
+    /// The Tab. 3 [`DramSpec`] for this technology at a channel count
+    /// (HBM2 extends the table along the pseudo-channel axis).
     pub fn spec(self, channels: usize) -> DramSpec {
         match self {
             MemTech::Ddr3 => DramSpec::ddr3_2133(channels),
             MemTech::Ddr4 => DramSpec::ddr4_2400(channels),
             MemTech::Hbm => DramSpec::hbm_1000(channels),
+            MemTech::Hbm2 => DramSpec::hbm2_2000(channels),
         }
     }
 
-    /// Highest channel count the paper evaluates for this technology
-    /// (Fig. 12: DDR3/DDR4 up to 4 channels, HBM up to 8).
+    /// Highest channel count this technology's configuration space
+    /// provides (Fig. 12: DDR3/DDR4 up to 4 channels, HBM up to 8;
+    /// HBM2 pseudo-channel mode scales to 32).
     pub fn max_channels(self) -> usize {
         match self {
             MemTech::Ddr3 | MemTech::Ddr4 => 4,
             MemTech::Hbm => 8,
+            MemTech::Hbm2 => 32,
         }
     }
 }
@@ -68,7 +78,8 @@ impl std::str::FromStr for MemTech {
             "ddr3" => Ok(MemTech::Ddr3),
             "ddr4" => Ok(MemTech::Ddr4),
             "hbm" => Ok(MemTech::Hbm),
-            other => Err(format!("unknown DRAM type {other:?} (ddr3|ddr4|hbm)")),
+            "hbm2" | "hbm2pc" => Ok(MemTech::Hbm2),
+            other => Err(format!("unknown DRAM type {other:?} (ddr3|ddr4|hbm|hbm2)")),
         }
     }
 }
@@ -378,6 +389,46 @@ impl DramSpec {
         }
     }
 
+    /// HBM2-2000 in pseudo-channel mode: each 128-bit legacy channel
+    /// splits into two independent 64-bit pseudo-channels, so a
+    /// two-stack board exposes 32 of them. Per pseudo-channel: 2000
+    /// MT/s over 64 bits (16 GB/s — one cache line per 4-clock burst),
+    /// 16 banks in 4 groups, 1 KB row buffers, 256 MiB capacity.
+    /// Timings are the HBM-1000 grade rescaled to the 1 GHz clock.
+    pub fn hbm2_2000(channels: usize) -> Self {
+        DramSpec {
+            standard: DramStandard::Hbm,
+            speed: SpeedGrade {
+                tck_ps: 1000, // 1 GHz clock, 2000 MT/s DDR
+                cl: 14,
+                cwl: 8,
+                trcd: 14,
+                trp: 14,
+                tras: 34,
+                trc: 48,
+                trrd_l: 6,
+                trrd_s: 4,
+                tfaw: 30,
+                tccd_l: 4,
+                tccd_s: 2,
+                twr: 16,
+                twtr: 8,
+                trtp: 6,
+                burst: 4, // BL8 over the 64-bit pseudo-channel bus
+                trefi: 3900,
+                trfc: 260,
+            },
+            channels,
+            ranks: 1,
+            bank_groups: 4,
+            banks_per_group: 4,
+            row_bytes: 1024,
+            channel_bytes: 256 * 1024 * 1024, // 2 Gb per pseudo-channel
+            bus_bits: 64,
+            data_rate_mts: 2000,
+        }
+    }
+
     /// Named Tab. 3 rows.
     pub fn preset(name: &str) -> Option<DramSpec> {
         match name {
@@ -385,9 +436,11 @@ impl DramSpec {
             "foregraph" => Some(Self::ddr4_2400(1)),
             "hitgraph" => Some(Self::ddr3_1600(4, 2)),
             "thundergp" => Some(Self::ddr4_2400(4)),
+            "regraph" => Some(Self::hbm2_2000(32)),
             "default" | "ddr4" => Some(Self::ddr4_2400(1)),
             "ddr3" => Some(Self::ddr3_2133(1)),
             "hbm" => Some(Self::hbm_1000(1)),
+            "hbm2" => Some(Self::hbm2_2000(1)),
             _ => None,
         }
     }
@@ -414,15 +467,50 @@ mod tests {
         }
         assert_eq!(MemTech::Ddr4.spec(1).standard, DramStandard::Ddr4);
         assert_eq!(MemTech::Hbm.spec(1).standard, DramStandard::Hbm);
+        assert_eq!(MemTech::Hbm2.spec(1).standard, DramStandard::Hbm);
+        assert_eq!("hbm2pc".parse::<MemTech>().unwrap(), MemTech::Hbm2);
         assert!("lpddr".parse::<MemTech>().is_err());
     }
 
     #[test]
     fn presets_resolve() {
-        for name in ["accugraph", "foregraph", "hitgraph", "thundergp", "default", "ddr3", "hbm"] {
+        for name in [
+            "accugraph",
+            "foregraph",
+            "hitgraph",
+            "thundergp",
+            "regraph",
+            "default",
+            "ddr3",
+            "hbm",
+            "hbm2",
+        ] {
             assert!(DramSpec::preset(name).is_some(), "{name}");
         }
         assert!(DramSpec::preset("nope").is_none());
+    }
+
+    #[test]
+    fn max_channels_per_tech() {
+        assert_eq!(MemTech::Ddr3.max_channels(), 4);
+        assert_eq!(MemTech::Ddr4.max_channels(), 4);
+        assert_eq!(MemTech::Hbm.max_channels(), 8);
+        assert_eq!(MemTech::Hbm2.max_channels(), 32);
+    }
+
+    #[test]
+    fn hbm2_pseudo_channel_organization() {
+        let h = DramSpec::hbm2_2000(32);
+        assert_eq!(h.channels, 32);
+        // 2000 MT/s over 64 bits = 16 GB/s per pseudo-channel —
+        // 512 GB/s across the full 32-pseudo-channel configuration.
+        assert!((h.peak_bw_per_channel() - 16.0e9).abs() < 1e6);
+        assert_eq!(h.row_bytes, 1024);
+        assert_eq!(h.banks(), 16);
+        assert_eq!(h.lines_per_row(), 16);
+        assert!(h.rows_per_bank() > 1000);
+        // One cache line per burst: 64-bit bus x 4 DDR clocks = 64 B.
+        assert_eq!(h.bus_bits / 8 * h.speed.burst * 2, super::super::CACHE_LINE);
     }
 
     #[test]
@@ -459,6 +547,7 @@ mod tests {
             DramSpec::ddr3_2133(1),
             DramSpec::ddr4_2400(1),
             DramSpec::hbm_1000(1),
+            DramSpec::hbm2_2000(1),
         ] {
             assert!(s.speed.trc >= s.speed.tras + s.speed.trp - 1);
             assert!(s.speed.tras >= s.speed.trcd);

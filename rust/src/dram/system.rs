@@ -43,6 +43,19 @@ pub struct ReqToken {
     pub done_at: u64,
 }
 
+/// Which completion-selection implementation retires queued requests.
+/// Both select exactly the same request every time (min arrival, ties
+/// by channel index) — the scan variant is the pre-heap reference kept
+/// for equivalence tests and the `perf_hotpath` baseline.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServiceOrder {
+    /// O(log C) incrementally-maintained arrival heap (default).
+    #[default]
+    Heap,
+    /// O(C) linear scan over every channel queue per request.
+    Scan,
+}
+
 /// How byte addresses map to channels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ChannelMode {
@@ -99,6 +112,7 @@ pub struct MemorySystem {
     /// finds the global minimum in O(log C) instead of scanning every
     /// channel queue per serviced request.
     arrivals: BinaryHeap<Reverse<(u64, usize)>>,
+    order: ServiceOrder,
     trace: Option<Vec<TraceEvent>>,
     analyzer: Option<AccessPatternAnalyzer>,
 }
@@ -123,9 +137,25 @@ impl MemorySystem {
                 .map(|_| Channel::with_policy(spec.with_channels(1), policy))
                 .collect(),
             arrivals: BinaryHeap::new(),
+            order: ServiceOrder::Heap,
             trace: None,
             analyzer: None,
         }
+    }
+
+    /// Select the completion-selection implementation for every
+    /// subsequent `service_*` call. [`ServiceOrder::Scan`] reroutes
+    /// [`MemorySystem::service_one`] and [`MemorySystem::service_until`]
+    /// through the linear-scan reference — bit-identical results, kept
+    /// switchable so whole simulations can be replayed under the
+    /// reference selector (see `tests/heap_scan_c32.rs`).
+    pub fn set_service_order(&mut self, order: ServiceOrder) {
+        self.order = order;
+    }
+
+    /// The active completion-selection implementation.
+    pub fn service_order(&self) -> ServiceOrder {
+        self.order
     }
 
     /// Reconfigure in place for a (possibly different) spec / channel
@@ -148,6 +178,7 @@ impl MemorySystem {
             self.channels.push(Channel::with_policy(per, policy));
         }
         self.arrivals.clear();
+        self.order = ServiceOrder::Heap;
         self.trace = None;
         self.analyzer = None;
     }
@@ -314,8 +345,13 @@ impl MemorySystem {
 
     /// Service one request from the channel whose oldest work is
     /// earliest (global-time approximation); returns its completion.
-    /// O(log channels) via the incrementally-maintained arrival heap.
+    /// O(log channels) via the incrementally-maintained arrival heap,
+    /// unless [`MemorySystem::set_service_order`] routed selection
+    /// through the scan reference.
     pub fn service_one(&mut self) -> Option<ReqToken> {
+        if self.order == ServiceOrder::Scan {
+            return self.service_one_scan();
+        }
         let (_, ch) = self.earliest_channel()?;
         Some(self.service_channel(ch))
     }
@@ -361,12 +397,42 @@ impl MemorySystem {
     /// driver uses that to retire a phase's tail in one call instead
     /// of ping-ponging per request.
     pub fn service_until(&mut self, horizon: u64, mut on_token: impl FnMut(ReqToken)) -> u64 {
+        if self.order == ServiceOrder::Scan {
+            return self.service_until_scan(horizon, on_token);
+        }
         let mut last = 0;
         while let Some((a, ch)) = self.earliest_channel() {
             if a > horizon {
                 break;
             }
             let tok = self.service_channel(ch);
+            last = last.max(tok.done_at);
+            on_token(tok);
+        }
+        last
+    }
+
+    /// [`MemorySystem::service_until`] with scan selection: each
+    /// iteration re-derives the global minimum by linear scan (tie
+    /// broken by channel index, matching the heap path exactly).
+    fn service_until_scan(&mut self, horizon: u64, mut on_token: impl FnMut(ReqToken)) -> u64 {
+        let mut last = 0;
+        loop {
+            let Some((a, _)) = self
+                .channels
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| c.earliest_arrival().map(|arr| (arr, i)))
+                .min()
+            else {
+                break;
+            };
+            if a > horizon {
+                break;
+            }
+            let tok = self
+                .service_one_scan()
+                .expect("selection just saw a non-empty channel");
             last = last.max(tok.done_at);
             on_token(tok);
         }
@@ -719,6 +785,49 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 300);
+    }
+
+    #[test]
+    fn scan_order_reroutes_every_service_entry_point() {
+        // With `ServiceOrder::Scan` the heap entry points must behave
+        // bit-identically — including `service_until`, the phase
+        // driver's only servicing call.
+        let mk = |order| {
+            let mut sys = MemorySystem::new(DramSpec::ddr4_2400(4));
+            sys.set_service_order(order);
+            let mut rng = crate::util::rng::Rng::new(13);
+            for i in 0..400u64 {
+                sys.enqueue(
+                    MemRequest {
+                        addr: rng.next_below(1 << 22) * CACHE_LINE,
+                        kind: if i % 3 == 0 { MemKind::Write } else { MemKind::Read },
+                        tag: i,
+                        region: Region::Updates,
+                    },
+                    rng.next_below(20_000),
+                );
+            }
+            sys
+        };
+        let mut heap = mk(ServiceOrder::Heap);
+        let mut scan = mk(ServiceOrder::Scan);
+        assert_eq!(scan.service_order(), ServiceOrder::Scan);
+        let mut heap_toks = Vec::new();
+        let h_last = heap.service_until(u64::MAX, |t| heap_toks.push((t.tag, t.channel, t.done_at)));
+        let mut scan_toks = Vec::new();
+        let s_last = scan.service_until(u64::MAX, |t| scan_toks.push((t.tag, t.channel, t.done_at)));
+        assert_eq!(heap_toks, scan_toks);
+        assert_eq!(h_last, s_last);
+        assert_eq!(heap.stats(), scan.stats());
+        // `service_one` dispatches too, and reset restores the default.
+        let mut one = mk(ServiceOrder::Scan);
+        let mut n = 0;
+        while one.service_one().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 400);
+        one.reset(DramSpec::ddr4_2400(1), ChannelMode::InterleaveLine, DramPolicy::default());
+        assert_eq!(one.service_order(), ServiceOrder::Heap);
     }
 
     #[test]

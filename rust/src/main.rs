@@ -90,14 +90,14 @@ fn print_help() {
         "graphmem — reproduction of 'Demystifying Memory Access Patterns of \
          FPGA-Based Graph Processing Accelerators'\n\n\
          USAGE:\n  graphmem list\n  graphmem datasets\n  \
-         graphmem run <accel> <graph> <problem> [--dram ddr3|ddr4|hbm] [--channels N] [--no-opt]\n  \
+         graphmem run <accel> <graph> <problem> [--dram ddr3|ddr4|hbm|hbm2] [--channels N] [--no-opt]\n  \
          graphmem sweep [--accels a,b,..] [--graphs g,..] [--problems p,..] [--drams d,..]\n  \
          \x20            [--channels n,..] [--threads N] [--no-opt] [--skip-unsupported] [--stats]\n  \
          \x20            (--stats prints the session's cache summary: phase programs\n  \
          \x20             compiled/reused, sim runs executed/memoized)\n  \
-         graphmem trace <accel> <graph> <problem> [--dram ddr3|ddr4|hbm] [--channels N] [--out <file>]\n  \
+         graphmem trace <accel> <graph> <problem> [--dram ddr3|ddr4|hbm|hbm2] [--channels N] [--out <file>]\n  \
          \x20            (issue-order request trace; --channels is validated against the DRAM's\n  \
-         \x20             Tab. 3 maximum: 4 for DDR3/DDR4, 8 for HBM)\n  \
+         \x20             Tab. 3 maximum: 4 for DDR3/DDR4, 8 for HBM, 32 for HBM2 pseudo-channels)\n  \
          graphmem analyze <accel> <graph> <problem> [--dram d] [--channels N] [--no-opt] [--csv]\n  \
          \x20            [--onchip default|off|<bytes>]\n  \
          \x20            (per-region access-pattern tables from a live simulation; --onchip\n  \
@@ -111,7 +111,7 @@ fn print_help() {
          \x20             graphs above N edges are sampled before probing)\n  \
          graphmem report --exp <id|all> [--scope quick|standard|full] [--csv]\n  \
          graphmem verify <graph> <problem> [--max-iters N]\n\n\
-         accel: accugraph|foregraph|hitgraph|thundergp   problem: bfs|pr|wcc|sssp|spmv\n\
+         accel: accugraph|foregraph|hitgraph|thundergp|regraph   problem: bfs|pr|wcc|sssp|spmv\n\
          graph: any Tab. 2 name (see `graphmem list`) or rmat-small (synthetic quick-analysis graph)"
     );
 }

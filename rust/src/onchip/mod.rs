@@ -140,8 +140,9 @@ impl OnChipConfig {
     /// * AccuGraph — vertex array of `bram_values` 4 B values,
     /// * ForeGraph — interval cache of 2 × `foregraph_interval` values
     ///   (source + destination interval),
-    /// * HitGraph / ThunderGP — `None`: streaming designs whose value
-    ///   prefetches are already modelled as explicit request streams.
+    /// * HitGraph / ThunderGP / ReGraph — `None`: streaming designs
+    ///   whose value prefetches (and ReGraph's big-pipeline gathers)
+    ///   are already modelled as explicit request streams.
     pub fn default_for(kind: AcceleratorKind, cfg: &AcceleratorConfig) -> Option<OnChipConfig> {
         match kind {
             AcceleratorKind::AccuGraph => {
@@ -150,7 +151,9 @@ impl OnChipConfig {
             AcceleratorKind::ForeGraph => {
                 Some(OnChipConfig::interval_cache(2 * cfg.foregraph_interval as u64 * 4))
             }
-            AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp => None,
+            AcceleratorKind::HitGraph
+            | AcceleratorKind::ThunderGp
+            | AcceleratorKind::ReGraph => None,
         }
     }
 
@@ -597,5 +600,6 @@ mod tests {
         assert_eq!(fore.capacity_bytes(), 2 * cfg.foregraph_interval as u64 * 4);
         assert!(OnChipConfig::default_for(AcceleratorKind::HitGraph, &cfg).is_none());
         assert!(OnChipConfig::default_for(AcceleratorKind::ThunderGp, &cfg).is_none());
+        assert!(OnChipConfig::default_for(AcceleratorKind::ReGraph, &cfg).is_none());
     }
 }

@@ -1,6 +1,6 @@
 //! Graph partitioning schemes (§3.1): horizontal (AccuGraph,
-//! HitGraph), vertical (ThunderGP) and interval-shard (ForeGraph,
-//! after GridGraph).
+//! HitGraph, ReGraph), vertical (ThunderGP) and interval-shard
+//! (ForeGraph, after GridGraph).
 //!
 //! All schemes divide the vertex set into equal intervals whose size
 //! is bounded by the accelerator's on-chip (BRAM) capacity. The paper
@@ -39,7 +39,9 @@ impl PartitionScheme {
     /// balances the partitions rather than picking across schemes.
     pub fn for_accelerator(kind: AcceleratorKind) -> PartitionScheme {
         match kind {
-            AcceleratorKind::AccuGraph | AcceleratorKind::HitGraph => PartitionScheme::Horizontal,
+            AcceleratorKind::AccuGraph
+            | AcceleratorKind::HitGraph
+            | AcceleratorKind::ReGraph => PartitionScheme::Horizontal,
             AcceleratorKind::ThunderGp => PartitionScheme::Vertical,
             AcceleratorKind::ForeGraph => PartitionScheme::IntervalShard,
         }

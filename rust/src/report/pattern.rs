@@ -6,7 +6,12 @@
 
 use super::table::Table;
 use crate::onchip::OnChipStats;
-use crate::trace::{AccessPatternSummary, Histogram, Region};
+use crate::trace::{AccessPatternSummary, ChannelSummary, Histogram, Region};
+
+/// Widest reuse-interval table we render: channel counts beyond this
+/// (HBM2 pseudo-channel stacks go to 32) are split into several
+/// 8-column blocks so the table stays terminal-sized.
+pub(crate) const REUSE_TABLE_CHANNELS: usize = 8;
 
 /// Percentage table cell: `part / whole` to one decimal, `-` for an
 /// empty denominator. Shared by every pattern table in the crate.
@@ -124,14 +129,17 @@ pub fn channel_table(label: &str, s: &AccessPatternSummary) -> Table {
 /// line (small intervals = cache-friendly reuse; huge intervals =
 /// streaming re-reads).
 pub fn reuse_table(label: &str, s: &AccessPatternSummary) -> Table {
-    let max_bucket = s
-        .channels
+    reuse_table_block(label, &s.channels)
+}
+
+fn reuse_table_block(label: &str, channels: &[ChannelSummary]) -> Table {
+    let max_bucket = channels
         .iter()
         .map(|c| c.reuse.buckets().len())
         .max()
         .unwrap_or(0);
     let mut header: Vec<String> = vec!["reuse interval".to_string()];
-    for c in &s.channels {
+    for c in channels {
         header.push(format!("ch{}", c.channel));
     }
     let header_refs: Vec<&str> = header.iter().map(|h| h.as_str()).collect();
@@ -142,7 +150,7 @@ pub fn reuse_table(label: &str, s: &AccessPatternSummary) -> Table {
     for k in 0..max_bucket {
         let mut row = vec![format!("< {}", Histogram::bucket_limit(k))];
         let mut any = false;
-        for c in &s.channels {
+        for c in channels {
             let v = c.reuse.buckets().get(k).copied().unwrap_or(0);
             any |= v > 0;
             row.push(v.to_string());
@@ -154,13 +162,24 @@ pub fn reuse_table(label: &str, s: &AccessPatternSummary) -> Table {
     t
 }
 
-/// The full table set for one run.
+/// The full table set for one run. Wide channel configurations (HBM2
+/// pseudo-channels, up to 32) get one reuse table per block of
+/// [`REUSE_TABLE_CHANNELS`] channels instead of a 33-column monster.
 pub fn pattern_tables(label: &str, s: &AccessPatternSummary) -> Vec<Table> {
-    vec![
-        region_table(label, s),
-        channel_table(label, s),
-        reuse_table(label, s),
-    ]
+    let mut tables = vec![region_table(label, s), channel_table(label, s)];
+    if s.channels.len() <= REUSE_TABLE_CHANNELS {
+        tables.push(reuse_table(label, s));
+    } else {
+        for block in s.channels.chunks(REUSE_TABLE_CHANNELS) {
+            let first = block.first().map(|c| c.channel).unwrap_or(0);
+            let last = block.last().map(|c| c.channel).unwrap_or(0);
+            tables.push(reuse_table_block(
+                &format!("{label} ch{first}-{last}"),
+                block,
+            ));
+        }
+    }
+    tables
 }
 
 #[cfg(test)]
@@ -213,6 +232,31 @@ mod tests {
         // the repeated vertex line produced exactly one reuse record
         assert!(rt.render().contains("ch0"));
         assert_eq!(pattern_tables("x", &s).len(), 3);
+    }
+
+    #[test]
+    fn wide_channel_configs_split_the_reuse_table_into_blocks() {
+        // 32 HBM2 pseudo-channels: the reuse histogram must come out
+        // as four 8-channel blocks, not one 33-column table.
+        let mut a = AccessPatternAnalyzer::new(MemTech::Hbm2.spec(32), ChannelMode::Region);
+        for i in 0..64u64 {
+            a.observe(&TraceEvent {
+                addr: i * 64,
+                kind: MemKind::Read,
+                region: Region::Edges,
+                arrival: i,
+                channel: (i % 32) as usize,
+            });
+        }
+        let s = a.finish();
+        assert_eq!(s.channels.len(), 32);
+        let tables = pattern_tables("wide", &s);
+        assert_eq!(tables.len(), 2 + 32 / REUSE_TABLE_CHANNELS);
+        let rendered: Vec<String> = tables.iter().map(|t| t.render()).collect();
+        assert!(rendered[2].contains("ch0-7"), "{}", rendered[2]);
+        assert!(rendered[5].contains("ch24-31"), "{}", rendered[5]);
+        // The per-channel roll-up still carries every channel.
+        assert!(rendered[1].contains("31"), "{}", rendered[1]);
     }
 
     #[test]

@@ -22,7 +22,7 @@
 
 use crate::accel::{AcceleratorConfig, AcceleratorKind, PhaseProgram};
 use crate::algo::problem::{GraphProblem, ProblemKind};
-use crate::dram::{ChannelMode, DramPolicy, MemTech, MemorySystem};
+use crate::dram::{ChannelMode, DramPolicy, MemTech, MemorySystem, ServiceOrder};
 use crate::graph::datasets::DatasetId;
 use crate::graph::EdgeList;
 use crate::onchip::{OnChipBuffer, OnChipConfig};
@@ -176,7 +176,7 @@ pub enum SpecError {
     CustomGraphUnweighted { name: String, problem: ProblemKind },
     /// A dataset name that is not one of the Tab. 2 identifiers.
     UnknownDataset(String),
-    /// A DRAM technology name outside ddr3|ddr4|hbm.
+    /// A DRAM technology name outside ddr3|ddr4|hbm|hbm2.
     UnknownMemTech(String),
     /// A structurally invalid on-chip buffer configuration (see
     /// [`crate::onchip::OnChipConfig::validate`]).
@@ -229,7 +229,7 @@ impl fmt::Display for SpecError {
                 )
             }
             SpecError::UnknownMemTech(name) => {
-                write!(f, "unknown DRAM type {name:?} (ddr3|ddr4|hbm)")
+                write!(f, "unknown DRAM type {name:?} (ddr3|ddr4|hbm|hbm2)")
             }
             SpecError::OnChipInvalid(why) => {
                 write!(f, "invalid on-chip buffer configuration: {why}")
@@ -402,6 +402,21 @@ impl SimSpec {
     /// `graphmem trace` / `graphmem analyze --trace` substrate).
     pub fn run_traced(&self) -> (SimReport, Vec<TraceEvent>) {
         let (report, trace) = self.run_inner(true);
+        (report, trace.unwrap_or_default())
+    }
+
+    /// [`SimSpec::run_traced`] with every DRAM completion selected by
+    /// the linear-scan reference
+    /// ([`crate::dram::MemorySystem::service_one_scan`]) instead of
+    /// the arrival heap. Bit-identical report and trace — the
+    /// heap/scan equivalence suite (`tests/heap_scan_c32.rs`) asserts
+    /// this end-to-end at up to 32 HBM2 pseudo-channels.
+    pub fn run_traced_scan(&self) -> (SimReport, Vec<TraceEvent>) {
+        let program = self.compile_program();
+        let mut mem =
+            MemorySystem::with_mode(self.mem.spec(self.channels), self.channel_mode());
+        mem.set_service_order(ServiceOrder::Scan);
+        let (report, trace) = self.run_on(&program, &mut mem, true);
         (report, trace.unwrap_or_default())
     }
 

@@ -41,7 +41,7 @@
 //!     .mem_techs([MemTech::Ddr4, MemTech::Hbm])
 //!     .specs()
 //!     .unwrap();
-//! assert_eq!(specs.len(), 8);
+//! assert_eq!(specs.len(), 10);
 //! // `.run()` / `.run_with(&session)` executes the product.
 //! ```
 
@@ -697,9 +697,38 @@ mod tests {
             .problems([ProblemKind::Sssp]);
         assert!(bad.specs().is_err());
         let kept = bad.clone().skip_unsupported().specs().unwrap();
-        // Only HitGraph and ThunderGP support weighted problems.
-        assert_eq!(kept.len(), 2);
+        // Only HitGraph, ThunderGP and ReGraph support weighted problems.
+        assert_eq!(kept.len(), 3);
         assert!(kept.iter().all(|s| s.accelerator().supports_weighted()));
+    }
+
+    #[test]
+    fn channel_axis_scales_to_32_on_hbm2() {
+        // The channel axis may now name counts up to HBM2's 32
+        // pseudo-channels; points beyond a technology's envelope are
+        // skippable rather than capped silently.
+        let specs = Sweep::new()
+            .accelerators([AcceleratorKind::ReGraph])
+            .graphs([DatasetId::Sd])
+            .problems([ProblemKind::Bfs])
+            .mem_techs([MemTech::Hbm, MemTech::Hbm2])
+            .channels([8, 16, 32])
+            .skip_unsupported()
+            .specs()
+            .unwrap();
+        // HBM keeps only 8; HBM2 keeps all three.
+        assert_eq!(specs.len(), 4);
+        assert!(specs
+            .iter()
+            .all(|s| s.channels() <= s.mem().max_channels()));
+        let c32 = specs
+            .iter()
+            .find(|s| s.channels() == 32)
+            .expect("32-channel HBM2 point present");
+        let report = c32.run();
+        assert_eq!(report.channels, 32);
+        assert!(report.cycles > 0);
+        assert!(report.dram.requests() > 0);
     }
 
     #[test]

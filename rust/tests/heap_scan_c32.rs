@@ -1,0 +1,126 @@
+//! Heap/scan servicing equivalence at HBM2 pseudo-channel scale.
+//!
+//! `MemorySystem::service_one` selects completions with an O(log C)
+//! arrival heap; `service_one_scan` is the retained linear-scan
+//! reference. The two must pick *exactly* the same request every
+//! time, so entire simulations replayed under either selector must be
+//! bit-identical. These tests lock that down at the `SimReport`
+//! level — cycles, DRAM stats, issue-order traces and access-pattern
+//! summaries — at 8, 16 and 32 channels, across two multi-channel
+//! accelerators and two problems; plus ReGraph classifier determinism
+//! under sweep program-sharing and worker-thread parallelism.
+
+use graphmem::accel::{AcceleratorConfig, AcceleratorKind, ReGraph};
+use graphmem::algo::problem::ProblemKind;
+use graphmem::dram::MemTech;
+use graphmem::graph::EdgeList;
+use graphmem::sim::{Session, SimSpec, Sweep, Workload};
+
+/// Mixed-degree graph: vertices below 400 are 16-degree hubs, the
+/// rest are degree-2 — both classifier labels occur, and the update
+/// traffic spreads over every channel at C=32.
+fn workload() -> EdgeList {
+    let n = 2_000u32;
+    let mut g = EdgeList::new(n as usize, true);
+    for v in 0..n {
+        let deg = if v < 400 { 16 } else { 2 };
+        for i in 0..deg {
+            g.add(v, (v * 7 + i * 13 + 1) % n);
+        }
+    }
+    g
+}
+
+fn spec(
+    kind: AcceleratorKind,
+    problem: ProblemKind,
+    tech: MemTech,
+    channels: usize,
+    g: &EdgeList,
+) -> SimSpec {
+    SimSpec::builder()
+        .accelerator(kind)
+        .custom_graph("hs-eq", g.clone())
+        .problem(problem)
+        .mem(tech)
+        .channels(channels)
+        .config(AcceleratorConfig::all_optimizations())
+        .patterns(true)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn heap_and_scan_servicing_agree_bit_for_bit_up_to_c32() {
+    let g = workload();
+    for kind in [AcceleratorKind::ReGraph, AcceleratorKind::HitGraph] {
+        for problem in [ProblemKind::Bfs, ProblemKind::PageRank] {
+            for (tech, channels) in [
+                (MemTech::Hbm, 8),
+                (MemTech::Hbm2, 16),
+                (MemTech::Hbm2, 32),
+            ] {
+                let s = spec(kind, problem, tech, channels, &g);
+                let label = s.label();
+                let (heap, heap_trace) = s.run_traced();
+                let (scan, scan_trace) = s.run_traced_scan();
+                assert!(heap.cycles > 0, "{label}: empty simulation");
+                assert!(heap.dram.requests() > 0, "{label}: no DRAM traffic");
+                assert!(heap.patterns.is_some(), "{label}: patterns missing");
+                assert_eq!(heap.channels, channels, "{label}");
+                assert_eq!(heap, scan, "{label}: heap/scan reports diverge");
+                assert_eq!(
+                    heap_trace, scan_trace,
+                    "{label}: heap/scan issue traces diverge"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn classifier_is_deterministic_under_sweep_sharing_and_threads() {
+    let g = workload();
+
+    // The dense/sparse split is a pure function of graph + threshold:
+    // repeated compilations agree, and both labels actually occur.
+    let cfg = AcceleratorConfig::all_optimizations().with_channels(8);
+    let labels: Vec<Vec<bool>> = (0..3)
+        .map(|_| ReGraph::new(&g, &cfg).classification().to_vec())
+        .collect();
+    assert_eq!(labels[0], labels[1]);
+    assert_eq!(labels[1], labels[2]);
+    assert!(labels[0].iter().any(|&d| d), "no dense partition labelled");
+    assert!(labels[0].iter().any(|&d| !d), "no sparse partition labelled");
+
+    // A problems-axis sweep shares one compiled ReGraph program
+    // between BFS and PageRank (same `program_key`); serial and
+    // 4-thread executions of the same sweep must be bit-identical,
+    // dispatch included.
+    let mk = || {
+        Sweep::new()
+            .accelerators([AcceleratorKind::ReGraph])
+            .workloads([Workload::custom("hs-cls", g.clone())])
+            .problems([ProblemKind::Bfs, ProblemKind::PageRank])
+            .mem_techs([MemTech::Hbm2])
+            .channels([8, 32])
+            .configs([AcceleratorConfig::all_optimizations()])
+            .collect_patterns()
+    };
+    let serial = mk().threads(1).run().unwrap();
+    let parallel = mk().threads(4).run().unwrap();
+    assert_eq!(serial.len(), 4);
+    assert_eq!(parallel.len(), serial.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.report, p.report, "{}", s.spec.label());
+        assert!(s.report.patterns.is_some(), "{}", s.spec.label());
+    }
+
+    // And a shared Session (program cache crossing sweep boundaries)
+    // reproduces the exact same reports once more.
+    let session = Session::new();
+    let again = mk().threads(2).run_with(&session).unwrap();
+    for (s, a) in serial.iter().zip(&again) {
+        assert_eq!(s.report, a.report, "{}", s.spec.label());
+    }
+}

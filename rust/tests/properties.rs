@@ -104,6 +104,80 @@ fn prop_dram_latency_at_least_cas_plus_burst() {
     });
 }
 
+#[test]
+fn prop_channel_mapping_round_trips_without_aliasing() {
+    // For every channel mode and every channel count up to the HBM2
+    // pseudo-channel maximum, the (channel_of, local_addr) pair must
+    // be injective over in-range line addresses: two distinct global
+    // addresses may never land on the same channel-local line.
+    check(0xD3, 8, |rng| {
+        for channels in 1..=32usize {
+            let spec = DramSpec::hbm2_2000(channels);
+            let cb = spec.channel_bytes;
+            let lines = cb / 64 * channels as u64;
+            for mode in [ChannelMode::InterleaveLine, ChannelMode::Region] {
+                let sys = MemorySystem::with_mode(spec, mode);
+                let mut seen: std::collections::HashMap<(usize, u64), u64> =
+                    std::collections::HashMap::new();
+                for _ in 0..64 {
+                    let addr = rng.next_below(lines) * 64;
+                    let ch = sys.channel_of(addr);
+                    let local = mode.local_addr(addr, channels, cb);
+                    if ch >= channels {
+                        return Err(format!(
+                            "{mode:?} x{channels}: channel {ch} out of range for {addr:#x}"
+                        ));
+                    }
+                    if local >= cb {
+                        return Err(format!(
+                            "{mode:?} x{channels}: in-range {addr:#x} escaped its \
+                             channel ({local:#x} >= {cb:#x})"
+                        ));
+                    }
+                    if let Some(prev) = seen.insert((ch, local), addr) {
+                        if prev != addr {
+                            return Err(format!(
+                                "{mode:?} x{channels}: {prev:#x} and {addr:#x} alias \
+                                 to (ch{ch}, {local:#x})"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_region_mode_clamps_out_of_range_at_32_channels() {
+    // PR 5's bug class, re-asserted at the HBM2 scale: Region-mode
+    // routing clamps out-of-range addresses to the last channel, and
+    // the local rewrite subtracts that channel's base — so distinct
+    // out-of-range globals stay distinct and never collide with any
+    // in-range local address (which are all < channel_bytes).
+    let spec = DramSpec::hbm2_2000(32);
+    let cb = spec.channel_bytes;
+    let sys = MemorySystem::with_mode(spec, ChannelMode::Region);
+    check(0xD4, 40, |rng| {
+        let addr = (32 + rng.next_below(1_000)) * cb + rng.next_below(cb / 64) * 64;
+        let ch = sys.channel_of(addr);
+        if ch != 31 {
+            return Err(format!("{addr:#x} routed to ch{ch}, expected clamp to 31"));
+        }
+        let local = ChannelMode::Region.local_addr(addr, 32, cb);
+        if local != addr - 31 * cb {
+            return Err(format!("{addr:#x}: local {local:#x} != addr - 31*cb"));
+        }
+        if local < cb {
+            return Err(format!(
+                "{addr:#x}: out-of-range local {local:#x} collided with in-range space"
+            ));
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Partitioning conservation laws
 // ---------------------------------------------------------------------------
@@ -281,7 +355,9 @@ fn prop_accelerators_converge_consistently() {
             let mut mem = MemorySystem::with_mode(DramSpec::ddr4_2400(1), mode);
             let r = accel.run(&p, &mut mem);
             match kind {
-                AcceleratorKind::HitGraph | AcceleratorKind::ThunderGp => {
+                AcceleratorKind::HitGraph
+                | AcceleratorKind::ThunderGp
+                | AcceleratorKind::ReGraph => {
                     if r.metrics.iterations != two.iterations {
                         return Err(format!(
                             "{kind:?}: {} != golden {}",

@@ -71,6 +71,28 @@ fn every_invalid_combination_is_rejected_at_build() {
         .channels(8)
         .build()
         .is_ok());
+    // ...and beyond 8, only HBM2 pseudo-channel mode goes to 32.
+    for (tech, channels, ok) in [
+        (MemTech::Hbm, 9, false),
+        (MemTech::Hbm, 32, false),
+        (MemTech::Hbm2, 16, true),
+        (MemTech::Hbm2, 32, true),
+        (MemTech::Hbm2, 33, false),
+    ] {
+        let res = builder(AcceleratorKind::ReGraph, ProblemKind::Bfs)
+            .mem(tech)
+            .channels(channels)
+            .build();
+        if ok {
+            assert!(res.is_ok(), "{tech} x{channels}");
+        } else {
+            let err = res.unwrap_err();
+            assert!(
+                matches!(err, SpecError::ChannelsExceedMemTech { .. }),
+                "{tech} x{channels}: {err}"
+            );
+        }
+    }
     // Unknown dataset names surface at build, not at run.
     let err = builder(AcceleratorKind::HitGraph, ProblemKind::Bfs)
         .graph_named("wv")
@@ -82,7 +104,7 @@ fn every_invalid_combination_is_rejected_at_build() {
 
 #[test]
 fn parallel_sweep_is_byte_identical_to_serial() {
-    // Two axes (4 accelerators x 3 memory technologies), >1 worker.
+    // Two axes (5 accelerators x 4 memory technologies), >1 worker.
     let sweep = Sweep::new()
         .accelerators(AcceleratorKind::all())
         .graphs([DatasetId::Sd])
@@ -91,7 +113,7 @@ fn parallel_sweep_is_byte_identical_to_serial() {
         .configs([AcceleratorConfig::all_optimizations()])
         .threads(4);
     let specs = sweep.specs().unwrap();
-    assert_eq!(specs.len(), 12);
+    assert_eq!(specs.len(), 20);
 
     let parallel = sweep.run().unwrap();
     assert_eq!(parallel.len(), specs.len());
