@@ -27,6 +27,12 @@
 //!   (`regraph.c32_heap`): asserted in-run bit-identical to the
 //!   retained linear-scan reference selector — CI's bench-smoke greps
 //!   `heap_scan_agree` and the request count.
+//! * Fault-injector overhead (`robust.faulted_vs_clean`): the same
+//!   HitGraph BFS run clean and under `FaultPlan::mixed`, both through
+//!   `run_checked` — asserted in-run that neither surfaces a
+//!   `SimError`, that faults actually fired, and that injection moves
+//!   cycles upward without touching results. CI's bench-smoke greps
+//!   `sim_errors` and `faults_injected`.
 //! * Golden engines: native vs XLA/PJRT per-iteration latency.
 //!
 //! Output: human-readable lines on stdout, plus machine-readable JSON
@@ -43,7 +49,7 @@ use graphmem::accel::stream::{Fanout, LineSource, LineStream, Merge, Phase, Stre
 use graphmem::accel::{build, AcceleratorConfig, AcceleratorKind};
 use graphmem::advisor::Advisor;
 use graphmem::algo::problem::{GraphProblem, ProblemKind};
-use graphmem::dram::{ChannelMode, DramSpec, MemKind, MemRequest, MemTech, MemorySystem};
+use graphmem::dram::{ChannelMode, DramSpec, FaultPlan, MemKind, MemRequest, MemTech, MemorySystem};
 use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
 use graphmem::graph::rmat::{generate, RmatParams};
 use graphmem::graph::DatasetId;
@@ -665,6 +671,69 @@ fn bench_regraph_c32(rep: &mut Reporter) {
     );
 }
 
+/// Fault-injector overhead (`robust.faulted_vs_clean`): one HitGraph
+/// BFS simulated clean and again under `FaultPlan::mixed`, both via
+/// the typed-error path (`run_checked`). The injector must be free
+/// when absent (no plan installed → zero checks beyond an `Option`
+/// test) and deterministic when present, so the interesting number is
+/// the faulted/clean wall ratio at identical request counts. In-run
+/// asserts guarantee the row can't go stale: zero `SimError`s, faults
+/// actually injected, results untouched, cycles only ever up.
+fn bench_robust_faults(rep: &mut Reporter) {
+    let scale = if quick_scope() { 9 } else { 12 };
+    let g = generate(RmatParams::graph500(scale, 12, 0xFA17));
+    let clean_spec = SimSpec::builder()
+        .accelerator(AcceleratorKind::HitGraph)
+        .custom_graph("robust-fvc", g)
+        .problem(ProblemKind::Bfs)
+        .mem(MemTech::Hbm)
+        .channels(4)
+        .config(AcceleratorConfig::all_optimizations())
+        .build()
+        .expect("HitGraph x hbm x4 is a valid spec");
+    let faulted_spec = clean_spec.clone().with_faults(Some(FaultPlan::mixed(0xFA17)));
+    let mut sim_errors = 0u64;
+    let mut clean = None;
+    let dt_clean = time(|| match clean_spec.run_checked() {
+        Ok(r) => clean = Some(r),
+        Err(_) => sim_errors += 1,
+    });
+    let mut faulted = None;
+    let dt_faulted = time(|| match faulted_spec.run_checked() {
+        Ok(r) => faulted = Some(r),
+        Err(_) => sim_errors += 1,
+    });
+    assert_eq!(sim_errors, 0, "neither run may surface a SimError");
+    let (clean, faulted) = (clean.unwrap(), faulted.unwrap());
+    assert!(faulted.dram.faults_injected > 0, "mixed plan must fire");
+    assert_eq!(
+        clean.metrics, faulted.metrics,
+        "fault injection must never change algorithm results"
+    );
+    assert_eq!(clean.dram.requests(), faulted.dram.requests());
+    assert!(faulted.cycles >= clean.cycles, "faults only ever add cycles");
+    println!(
+        "robust.faulted_vs_clean: clean {:.3} ms, faulted {:.3} ms ({} faults, +{} cycles)",
+        dt_clean * 1e3,
+        dt_faulted * 1e3,
+        faulted.dram.faults_injected,
+        faulted.cycles - clean.cycles
+    );
+    rep.record_with(
+        "robust.faulted_vs_clean",
+        clean.dram.requests() + faulted.dram.requests(),
+        dt_clean + dt_faulted,
+        0,
+        vec![
+            ("sim_errors", sim_errors),
+            ("faults_injected", faulted.dram.faults_injected),
+            ("fault_delay_cycles", faulted.dram.fault_delay_cycles),
+            ("clean_cycles", clean.cycles),
+            ("faulted_cycles", faulted.cycles),
+        ],
+    );
+}
+
 fn bench_engines(rep: &mut Reporter) {
     let scale = if quick_scope() { 9 } else { 11 };
     let g = generate(RmatParams::graph500(scale, 12, 42));
@@ -719,6 +788,7 @@ fn main() {
     bench_onchip(&mut rep);
     bench_advisor(&mut rep);
     bench_regraph_c32(&mut rep);
+    bench_robust_faults(&mut rep);
     bench_engines(&mut rep);
     rep.flush(json_path.as_deref());
 }

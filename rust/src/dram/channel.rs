@@ -9,6 +9,7 @@
 //! clock.
 
 use super::address::{AddressMapper, DecodedAddr};
+use super::fault::FaultLane;
 use super::spec::{DramPolicy, DramSpec, RowPolicy, SchedPolicy};
 use super::stats::{DramStats, RowOutcome};
 use super::system::{MemKind, MemRequest};
@@ -93,6 +94,10 @@ pub struct Channel {
     /// servicing removes a request, forcing one window-bounded rescan.
     earliest: Option<u64>,
     seq: u64,
+    /// Installed fault injector for this channel, if any: adds a
+    /// deterministic, selection-independent delay to serviced
+    /// completions (see [`super::fault`]).
+    fault: Option<FaultLane>,
     pub stats: DramStats,
 }
 
@@ -127,6 +132,7 @@ impl Channel {
             queue: Vec::with_capacity(64),
             earliest: None,
             seq: 0,
+            fault: None,
             stats: DramStats::default(),
         }
     }
@@ -170,7 +176,15 @@ impl Channel {
         self.queue.clear();
         self.earliest = None;
         self.seq = 0;
+        self.fault = None;
         self.stats = DramStats::default();
+    }
+
+    /// Install (or clear) this channel's fault lane. The spec layer
+    /// re-installs lanes at the start of every run, so a reset channel
+    /// is always fault-free until told otherwise.
+    pub(super) fn set_fault_lane(&mut self, lane: Option<FaultLane>) {
+        self.fault = lane;
     }
 
     /// Number of requests waiting.
@@ -361,8 +375,20 @@ impl Channel {
 
         let lat = if is_write { sp.cwl } else { sp.cl };
         let burst_start = cas_t + lat;
-        let data_end = burst_start + sp.burst;
-        self.next_burst = burst_start + sp.burst;
+        let mut data_end = burst_start + sp.burst;
+        // Fault injection (deterministic, keyed on the per-channel
+        // serviced count): the delay is structural — it pushes the
+        // data bus, the write-recovery window and the completion time
+        // alike — so faulted timing composes exactly like slow DRAM.
+        if let Some(lane) = &mut self.fault {
+            let inj = lane.next_injection();
+            if inj.events > 0 {
+                data_end += inj.extra_cycles;
+                self.stats.faults_injected += inj.events;
+                self.stats.fault_delay_cycles += inj.extra_cycles;
+            }
+        }
+        self.next_burst = data_end;
         self.last_cas_time = cas_t;
         self.last_cas_group = d.bank_group;
         self.last_cas_was_write = is_write;

@@ -1,0 +1,281 @@
+//! Deterministic DRAM fault injection: a seeded [`FaultPlan`]
+//! perturbs per-channel service timing to model the degraded-memory
+//! conditions a real HBM/DDR subsystem exhibits — refresh storms
+//! (periodic latency spikes), thermal throttling (windows of degraded
+//! service), and transient bus errors retried with bounded backoff.
+//!
+//! Faults are *purely additive delay* applied when a request is
+//! serviced, keyed only on `(seed, channel, per-channel serviced
+//! count)`. Two consequences the test suite relies on:
+//!
+//! * **Determinism** — the same plan on the same workload produces
+//!   bit-identical reports, every time. No wall clock, no global RNG.
+//! * **Selector independence** — completion *selection* (event heap
+//!   vs. the linear-scan reference) keys on queue-arrival times, which
+//!   faults never touch; the per-channel service order is therefore
+//!   unchanged, and the k-th serviced request on a channel is the same
+//!   request under either selector. Heap-vs-scan equivalence holds
+//!   under every fault plan (`tests/fault_equivalence.rs`).
+//!
+//! A plan only ever *slows* the serviced request: results (values,
+//! request counts, region mixes) are invariant; cycles move. The
+//! injected events and delay are accounted in
+//! [`DramStats::faults_injected`](super::stats::DramStats) /
+//! [`fault_delay_cycles`](super::stats::DramStats) so a run can prove
+//! faults actually fired.
+
+/// Periodic per-channel latency spikes (refresh-storm model): every
+/// `period`-th serviced request on a channel — phase-shifted per
+/// channel by the seed — completes `extra_cycles` late.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LatencySpikes {
+    /// Spike cadence in serviced requests (≥ 1).
+    pub period: u64,
+    /// Extra completion delay per spike.
+    pub extra_cycles: u64,
+}
+
+/// Temporary channel degradation (thermal-throttle model): within
+/// every `every`-request stretch, a window of `window` consecutive
+/// serviced requests — phase-shifted per channel by the seed — each
+/// completes `extra_cycles` late.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ChannelDegrade {
+    /// Stretch length in serviced requests (≥ 1).
+    pub every: u64,
+    /// Degraded-window length within each stretch.
+    pub window: u64,
+    /// Extra delay per request inside a degraded window.
+    pub extra_cycles: u64,
+}
+
+/// Transient request retries with bounded linear backoff (flaky-bus
+/// model): every `every`-th serviced request — phase-shifted per
+/// channel — transiently fails `r` times, `r` drawn deterministically
+/// in `1..=max_retries`, and retry `i` waits `i * backoff_cycles`,
+/// delaying completion by `backoff_cycles * r * (r + 1) / 2`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TransientRetries {
+    /// Failure cadence in serviced requests (≥ 1).
+    pub every: u64,
+    /// Retry-count bound (≥ 1).
+    pub max_retries: u32,
+    /// Backoff unit per retry.
+    pub backoff_cycles: u64,
+}
+
+/// A seeded, deterministic fault-injection plan. Attach one to a run
+/// via `SimSpecBuilder::faults(..)` — it joins the memoization key
+/// (faulted and clean runs are distinct cache entries) but not the
+/// memory-independent program key. The default plan injects nothing.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub struct FaultPlan {
+    /// Phase-shifts every fault source per channel and draws the
+    /// retry counts; same seed ⇒ same faults, always.
+    pub seed: u64,
+    /// Periodic latency spikes, if any.
+    pub spikes: Option<LatencySpikes>,
+    /// Degraded-service windows, if any.
+    pub degrade: Option<ChannelDegrade>,
+    /// Transient retries, if any.
+    pub retries: Option<TransientRetries>,
+}
+
+impl FaultPlan {
+    /// Heavy periodic spikes: every 7th request +350 cycles, the
+    /// pattern of a refresh storm.
+    pub fn refresh_storm(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            spikes: Some(LatencySpikes { period: 7, extra_cycles: 350 }),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Thermal throttling: 16-request degraded windows every 64
+    /// requests, +40 cycles each.
+    pub fn thermal_throttle(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            degrade: Some(ChannelDegrade { every: 64, window: 16, extra_cycles: 40 }),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Flaky bus: every 11th request transiently fails up to 3 times
+    /// with 120-cycle linear backoff.
+    pub fn flaky_bus(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            retries: Some(TransientRetries { every: 11, max_retries: 3, backoff_cycles: 120 }),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// All three fault sources at once.
+    pub fn mixed(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            spikes: FaultPlan::refresh_storm(seed).spikes,
+            degrade: FaultPlan::thermal_throttle(seed).degrade,
+            retries: FaultPlan::flaky_bus(seed).retries,
+        }
+    }
+
+    /// True iff the plan can never inject a delay.
+    pub fn is_noop(&self) -> bool {
+        self.spikes.is_none() && self.degrade.is_none() && self.retries.is_none()
+    }
+
+    /// Extra completion delay and fault-event count for the `k`-th
+    /// serviced request on `channel`. Pure function of
+    /// `(self, channel, k)`.
+    pub fn injection_for(&self, channel: usize, k: u64) -> Injection {
+        let mut inj = Injection::default();
+        if let Some(sp) = self.spikes {
+            let period = sp.period.max(1);
+            if k % period == mix(self.seed, channel, 1) % period {
+                inj.extra_cycles += sp.extra_cycles;
+                inj.events += 1;
+            }
+        }
+        if let Some(dg) = self.degrade {
+            let every = dg.every.max(1);
+            if (k + mix(self.seed, channel, 2)) % every < dg.window.min(every) {
+                inj.extra_cycles += dg.extra_cycles;
+                inj.events += 1;
+            }
+        }
+        if let Some(rt) = self.retries {
+            let every = rt.every.max(1);
+            if k % every == mix(self.seed, channel, 3) % every {
+                let draw = mix(self.seed, channel, k.rotate_left(17) ^ 4);
+                let r = 1 + draw % rt.max_retries.max(1) as u64;
+                inj.extra_cycles += rt.backoff_cycles * r * (r + 1) / 2;
+                inj.events += 1;
+            }
+        }
+        inj
+    }
+}
+
+/// The delay a [`FaultPlan`] injects into one serviced request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Injection {
+    /// Cycles added to the request's completion (and to the channel's
+    /// bus availability — the delay is structural, not cosmetic).
+    pub extra_cycles: u64,
+    /// Distinct fault events that fired (spike / degrade / retry).
+    pub events: u64,
+}
+
+/// Per-channel fault state: the plan plus this channel's serviced
+/// counter. Owned by [`Channel`](super::channel::Channel); reset
+/// clears it (faults are re-installed per run by the spec layer).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultLane {
+    plan: FaultPlan,
+    channel: usize,
+    serviced: u64,
+}
+
+impl FaultLane {
+    /// Lane for global channel index `channel`.
+    pub fn new(plan: FaultPlan, channel: usize) -> FaultLane {
+        FaultLane { plan, channel, serviced: 0 }
+    }
+
+    /// Injection for the next serviced request; advances the counter.
+    pub fn next_injection(&mut self) -> Injection {
+        let inj = self.plan.injection_for(self.channel, self.serviced);
+        self.serviced += 1;
+        inj
+    }
+}
+
+/// splitmix64-style mixer: deterministic per-(seed, channel, salt)
+/// phase offsets and retry draws.
+fn mix(seed: u64, channel: usize, salt: u64) -> u64 {
+    let mut x = seed
+        ^ (channel as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ salt.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_noop() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_noop());
+        for k in 0..100 {
+            assert_eq!(plan.injection_for(0, k), Injection::default());
+        }
+    }
+
+    #[test]
+    fn presets_inject_somewhere() {
+        for plan in [
+            FaultPlan::refresh_storm(1),
+            FaultPlan::thermal_throttle(2),
+            FaultPlan::flaky_bus(3),
+            FaultPlan::mixed(4),
+        ] {
+            assert!(!plan.is_noop());
+            let total: u64 = (0..1000).map(|k| plan.injection_for(0, k).events).sum();
+            assert!(total > 0, "{plan:?} never fired in 1000 requests");
+        }
+    }
+
+    #[test]
+    fn injections_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::mixed(0xAB);
+        let b = FaultPlan::mixed(0xCD);
+        let series = |p: &FaultPlan, ch: usize| -> Vec<Injection> {
+            (0..256).map(|k| p.injection_for(ch, k)).collect()
+        };
+        assert_eq!(series(&a, 3), series(&a, 3), "pure function of (plan, ch, k)");
+        assert_ne!(series(&a, 0), series(&b, 0), "seed must matter");
+        assert_ne!(series(&a, 0), series(&a, 1), "channel phase must matter");
+    }
+
+    #[test]
+    fn lane_counter_matches_direct_injection() {
+        let plan = FaultPlan::flaky_bus(9);
+        let mut lane = FaultLane::new(plan.clone(), 5);
+        for k in 0..64 {
+            assert_eq!(lane.next_injection(), plan.injection_for(5, k));
+        }
+    }
+
+    #[test]
+    fn retry_backoff_is_bounded() {
+        let plan = FaultPlan::flaky_bus(7);
+        let rt = plan.retries.unwrap();
+        let worst = rt.backoff_cycles * (rt.max_retries as u64) * (rt.max_retries as u64 + 1) / 2;
+        for ch in 0..4 {
+            for k in 0..2000 {
+                let inj = plan.injection_for(ch, k);
+                assert!(inj.extra_cycles <= worst, "unbounded backoff at ch{ch} k{k}");
+            }
+        }
+    }
+
+    #[test]
+    fn plans_are_hashable_memo_keys() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(FaultPlan::refresh_storm(1));
+        set.insert(FaultPlan::refresh_storm(1));
+        set.insert(FaultPlan::refresh_storm(2));
+        set.insert(FaultPlan::default());
+        assert_eq!(set.len(), 3);
+    }
+}

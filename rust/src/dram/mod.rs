@@ -20,12 +20,14 @@
 
 pub mod address;
 pub mod channel;
+pub mod fault;
 pub mod spec;
 pub mod stats;
 pub mod system;
 
 pub use address::{AddressMapper, DecodedAddr};
 pub use channel::Channel;
+pub use fault::{ChannelDegrade, FaultPlan, LatencySpikes, TransientRetries};
 pub use spec::{
     AddrMap, DramPolicy, DramSpec, DramStandard, MemTech, RowPolicy, SchedPolicy, SpeedGrade,
 };

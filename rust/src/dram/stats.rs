@@ -38,6 +38,10 @@ pub struct DramStats {
     pub region_reads: [u64; Region::COUNT],
     /// Serviced writes per [`Region`].
     pub region_writes: [u64; Region::COUNT],
+    /// Fault-injection events that fired (see [`super::fault`]).
+    pub faults_injected: u64,
+    /// Total completion delay injected by faults, cycles.
+    pub fault_delay_cycles: u64,
 }
 
 impl DramStats {
@@ -108,6 +112,8 @@ impl DramStats {
             self.region_reads[i] += other.region_reads[i];
             self.region_writes[i] += other.region_writes[i];
         }
+        self.faults_injected += other.faults_injected;
+        self.fault_delay_cycles += other.fault_delay_cycles;
     }
 }
 

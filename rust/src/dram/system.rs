@@ -9,6 +9,7 @@
 //! ordering.
 
 use super::channel::{Channel, Serviced};
+use super::fault;
 use super::spec::{DramPolicy, DramSpec};
 use super::stats::DramStats;
 use crate::trace::{AccessPatternAnalyzer, AccessPatternSummary, Region, TraceEvent};
@@ -156,6 +157,20 @@ impl MemorySystem {
     /// The active completion-selection implementation.
     pub fn service_order(&self) -> ServiceOrder {
         self.order
+    }
+
+    /// Install (or clear, with `None`) a deterministic fault plan:
+    /// every channel gets a [`fault::FaultLane`] seeded with its
+    /// global channel index, so the injected delays are a pure
+    /// function of `(plan, channel, per-channel serviced count)` —
+    /// independent of the completion selector. [`MemorySystem::reset`]
+    /// clears lanes (via [`Channel`] reset); the spec layer re-installs
+    /// them per run.
+    pub fn set_faults(&mut self, plan: Option<&fault::FaultPlan>) {
+        let plan = plan.filter(|p| !p.is_noop());
+        for (i, ch) in self.channels.iter_mut().enumerate() {
+            ch.set_fault_lane(plan.map(|p| fault::FaultLane::new(p.clone(), i)));
+        }
     }
 
     /// Reconfigure in place for a (possibly different) spec / channel
@@ -785,6 +800,71 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 300);
+    }
+
+    #[test]
+    fn faults_are_selector_independent_and_cleared_on_reset() {
+        use crate::dram::FaultPlan;
+        let plan = FaultPlan::mixed(0xFA);
+        let mk = |faulted: bool| {
+            let mut sys = MemorySystem::new(DramSpec::ddr4_2400(4));
+            if faulted {
+                sys.set_faults(Some(&plan));
+            }
+            let mut rng = crate::util::rng::Rng::new(77);
+            for i in 0..300u64 {
+                sys.enqueue(
+                    MemRequest {
+                        addr: rng.next_below(1 << 22) * CACHE_LINE,
+                        kind: if i % 5 == 0 { MemKind::Write } else { MemKind::Read },
+                        tag: i,
+                        region: Region::Edges,
+                    },
+                    rng.next_below(10_000),
+                );
+            }
+            sys
+        };
+        // Identical selection and identical (faulted) timing under
+        // both selectors: the injected delay keys on per-channel
+        // serviced counts, which faults themselves never reorder.
+        let mut heap = mk(true);
+        let mut scan = mk(true);
+        loop {
+            match (heap.service_one(), scan.service_one_scan()) {
+                (None, None) => break,
+                (Some(a), Some(b)) => {
+                    assert_eq!((a.tag, a.channel, a.done_at), (b.tag, b.channel, b.done_at));
+                }
+                _ => panic!("one path finished early"),
+            }
+        }
+        assert_eq!(heap.stats(), scan.stats());
+        assert!(heap.stats().faults_injected > 0, "plan must actually fire");
+        assert!(heap.stats().fault_delay_cycles > 0);
+        // The clean run services the same requests, no fault counters,
+        // and finishes no later than the faulted one.
+        let mut clean = mk(false);
+        clean.drain();
+        assert_eq!(clean.stats().requests(), heap.stats().requests());
+        assert_eq!(clean.stats().faults_injected, 0);
+        assert!(clean.stats().finish_cycle <= heap.stats().finish_cycle);
+        // Reset clears lanes: a replay after reset is fault-free.
+        heap.reset(DramSpec::ddr4_2400(4), ChannelMode::InterleaveLine, DramPolicy::default());
+        let mut rng = crate::util::rng::Rng::new(77);
+        for i in 0..300u64 {
+            heap.enqueue(
+                MemRequest {
+                    addr: rng.next_below(1 << 22) * CACHE_LINE,
+                    kind: if i % 5 == 0 { MemKind::Write } else { MemKind::Read },
+                    tag: i,
+                    region: Region::Edges,
+                },
+                rng.next_below(10_000),
+            );
+        }
+        heap.drain();
+        assert_eq!(heap.stats().faults_injected, 0, "reset must clear fault lanes");
     }
 
     #[test]

@@ -189,27 +189,47 @@ pub fn load_binary(path: impl AsRef<Path>) -> Result<EdgeList> {
     if buf.len() < 24 || &buf[0..4] != b"GMEL" {
         bail!("not a graphmem binary edge list");
     }
-    let n = u64::from_le_bytes(buf[4..12].try_into().unwrap()) as usize;
-    let m = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
+    let n = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    let m = u64::from_le_bytes(buf[12..20].try_into().unwrap());
     let flags = u32::from_le_bytes(buf[20..24].try_into().unwrap());
     let directed = flags & 1 != 0;
     let weighted = flags & 2 != 0;
-    let rec = if weighted { 12 } else { 8 };
-    if buf.len() != 24 + m * rec {
-        bail!("truncated edge list: expected {} records", m);
+    let rec: u64 = if weighted { 12 } else { 8 };
+    // Checked size validation *before* any allocation: a corrupt
+    // header must not drive `Vec::with_capacity` (or a wrapping
+    // length check) into an abort. Truncated payloads, trailing
+    // garbage and absurd record counts all land here.
+    let expected = m.checked_mul(rec).and_then(|p| p.checked_add(24));
+    if expected != Some(buf.len() as u64) {
+        bail!(
+            "corrupt edge list: header declares {m} record(s) of {rec} B, \
+             file carries {} payload byte(s)",
+            buf.len() - 24
+        );
     }
+    let n = usize::try_from(n).context("vertex count exceeds this platform's address space")?;
+    let m = m as usize; // m * rec == payload length, so m fits usize
     let mut edges = Vec::with_capacity(m);
     let mut off = 24;
     for _ in 0..m {
         let src = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
         let dst = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap());
+        // Endpoints must stay inside the declared vertex range — an
+        // out-of-range id would otherwise surface as an index panic
+        // deep in partitioning or simulation.
+        if src as usize >= n || dst as usize >= n {
+            bail!(
+                "corrupt edge list: edge {src} -> {dst} references a vertex \
+                 beyond the declared {n}"
+            );
+        }
         let weight = if weighted {
             f32::from_le_bytes(buf[off + 8..off + 12].try_into().unwrap())
         } else {
             1.0
         };
         edges.push(Edge { src, dst, weight });
-        off += rec;
+        off += rec as usize;
     }
     Ok(EdgeList {
         num_vertices: n,
@@ -316,5 +336,51 @@ mod tests {
         let p = dir.join("bad.bin");
         std::fs::write(&p, b"NOPE").unwrap();
         assert!(load_binary(&p).is_err());
+    }
+
+    /// Serialize a well-formed unweighted file, then corrupt it one
+    /// way at a time: every malformation must surface as `Err`, never
+    /// as a panic or an allocation blow-up.
+    #[test]
+    fn binary_rejects_every_malformation_without_panicking() {
+        let dir = std::env::temp_dir().join("graphmem_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good_path = dir.join("good.bin");
+        let g = erdos_renyi(10, 30, 5);
+        save_binary(&g, &good_path).unwrap();
+        let good = std::fs::read(&good_path).unwrap();
+        let write = |name: &str, bytes: &[u8]| {
+            let p = dir.join(name);
+            std::fs::write(&p, bytes).unwrap();
+            p
+        };
+        // Truncated header: valid magic, but fewer than 24 bytes.
+        let p = write("short_header.bin", &good[..12]);
+        assert!(load_binary(&p).is_err());
+        // Truncated payload: header promises 30 records, one is cut.
+        let p = write("short_payload.bin", &good[..good.len() - 4]);
+        let err = load_binary(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt edge list"), "{err}");
+        // Trailing garbage after the declared payload.
+        let mut long = good.clone();
+        long.extend_from_slice(b"JUNK");
+        let p = write("trailing.bin", &long);
+        assert!(load_binary(&p).is_err());
+        // Absurd record count: m = u64::MAX must fail the checked
+        // size validation, not reach `Vec::with_capacity`.
+        let mut absurd = good.clone();
+        absurd[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        let p = write("absurd_m.bin", &absurd);
+        let err = load_binary(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt edge list"), "{err}");
+        // Out-of-range endpoint: shrink the declared vertex count
+        // below the ids actually present.
+        let mut shrunk = good.clone();
+        shrunk[4..12].copy_from_slice(&1u64.to_le_bytes());
+        let p = write("shrunk_n.bin", &shrunk);
+        let err = load_binary(&p).unwrap_err().to_string();
+        assert!(err.contains("beyond the declared"), "{err}");
+        // The untouched original still loads.
+        assert_eq!(load_binary(&good_path).unwrap().edges, g.edges);
     }
 }

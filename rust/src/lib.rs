@@ -63,6 +63,12 @@
 //!   figure and table of the paper's evaluation (each expressed as
 //!   `SimSpec` sweeps over a shared session), and table/figure
 //!   formatters.
+//! * [`robust`] — typed failures ([`robust::SimError`]) with stall
+//!   diagnostics, per-run budgets enforced by a watchdog in the phase
+//!   driver, and the panic-capture boundary that lets sweeps return
+//!   per-spec outcomes instead of crashing; [`dram::FaultPlan`] is the
+//!   matching seeded fault injector that perturbs DRAM timing to prove
+//!   the engine livelock-free under degraded memory.
 //!
 //! # Quick start
 //!
@@ -96,6 +102,7 @@ pub mod graph;
 pub mod onchip;
 pub mod partition;
 pub mod report;
+pub mod robust;
 pub mod runtime;
 pub mod sim;
 pub mod trace;

@@ -30,8 +30,11 @@ use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
 use graphmem::graph::rmat::{self, RmatParams};
 use graphmem::graph::{datasets, properties::GraphProperties, DatasetId};
 use graphmem::onchip::OnChipConfig;
-use graphmem::report::{advice_table, onchip_table, pattern_tables, rationale_lines, Table};
-use graphmem::sim::{Session, SimSpec, SpecError, Sweep, Workload};
+use graphmem::report::{
+    advice_table, failure_details, failure_table, onchip_table, pattern_tables, rationale_lines,
+    Table,
+};
+use graphmem::sim::{Session, SimSpec, SpecError, Sweep, SweepOutcome, SweepTrial, Workload};
 use graphmem::trace::{
     parse_events, parse_meta, write_events, write_meta, AccessPatternAnalyzer, TraceMeta,
 };
@@ -93,8 +96,11 @@ fn print_help() {
          graphmem run <accel> <graph> <problem> [--dram ddr3|ddr4|hbm|hbm2] [--channels N] [--no-opt]\n  \
          graphmem sweep [--accels a,b,..] [--graphs g,..] [--problems p,..] [--drams d,..]\n  \
          \x20            [--channels n,..] [--threads N] [--no-opt] [--skip-unsupported] [--stats]\n  \
+         \x20            [--keep-going|--fail-fast]\n  \
          \x20            (--stats prints the session's cache summary: phase programs\n  \
-         \x20             compiled/reused, sim runs executed/memoized)\n  \
+         \x20             compiled/reused, sim runs executed/memoized; failed points are\n  \
+         \x20             isolated and tabulated by default [--keep-going] — --fail-fast\n  \
+         \x20             aborts at the first failure instead)\n  \
          graphmem trace <accel> <graph> <problem> [--dram ddr3|ddr4|hbm|hbm2] [--channels N] [--out <file>]\n  \
          \x20            (issue-order request trace; --channels is validated against the DRAM's\n  \
          \x20             Tab. 3 maximum: 4 for DDR3/DDR4, 8 for HBM, 32 for HBM2 pseudo-channels)\n  \
@@ -280,7 +286,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let session = Session::new();
     let t0 = std::time::Instant::now();
     // Translate internal axis names into the flags this command exposes.
-    let runs = sweep.run_with(&session).map_err(|e| match e {
+    let axis_error = |e: SpecError| match e {
         SpecError::EmptyAxis(axis) => {
             let flag = match axis {
                 "accelerators" => "--accels",
@@ -293,14 +299,37 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             anyhow!("nothing to sweep: {flag} is empty")
         }
         other => anyhow!("{other}"),
-    })?;
+    };
+    // Failure handling: by default every point runs to an outcome
+    // (--keep-going) and failures are tabulated afterwards;
+    // --fail-fast aborts serially at the first failed point instead.
+    let trials: Vec<SweepTrial> = if has_flag(args, "--fail-fast") {
+        let specs = sweep.specs().map_err(axis_error)?;
+        let mut trials = Vec::with_capacity(specs.len());
+        for spec in specs {
+            match session.try_run(&spec) {
+                Ok(report) => trials.push(SweepTrial {
+                    spec,
+                    outcome: SweepOutcome::Ok(report),
+                }),
+                Err(err) => bail!(
+                    "sweep aborted at {}: {err} (drop --fail-fast to run the remaining points)",
+                    spec.label()
+                ),
+            }
+        }
+        trials
+    } else {
+        sweep.run_outcomes_with(&session).map_err(axis_error)?
+    };
     let wall = t0.elapsed().as_secs_f64();
     let mut t = Table::new(
         "Sweep results",
         &["accel", "graph", "problem", "dram", "ch", "sim time (s)", "MTEPS", "util%"],
     );
-    for run in &runs {
-        let (s, r) = (&run.spec, &run.report);
+    for trial in &trials {
+        let Some(r) = trial.outcome.report() else { continue };
+        let s = &trial.spec;
         t.row(vec![
             s.accelerator().to_string(),
             s.workload().label().to_string(),
@@ -313,6 +342,12 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    if let Some(failures) = failure_table(&trials) {
+        println!("{}", failures.render());
+        for block in failure_details(&trials) {
+            eprintln!("{block}");
+        }
+    }
     if has_flag(args, "--stats") {
         let st = session.stats();
         println!(
@@ -324,11 +359,16 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             st.duplicate_waits
         );
     }
+    let failed = trials.iter().filter(|t| !t.outcome.is_ok()).count();
     eprintln!(
-        "{} runs ({} distinct simulations) in {wall:.2}s wall",
-        runs.len(),
-        session.cached_runs()
+        "{} runs ({} distinct simulations, {} failed) in {wall:.2}s wall",
+        trials.len(),
+        session.cached_runs(),
+        failed
     );
+    if failed > 0 {
+        bail!("{failed} of {} sweep points failed (see the failure table above)", trials.len());
+    }
     Ok(())
 }
 

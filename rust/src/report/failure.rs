@@ -1,0 +1,104 @@
+//! Formatter for failed sweep points (`graphmem sweep --keep-going`):
+//! one row per failure with the spec label, the error kind slug and
+//! the full diagnostic. Stall diagnostics run long (per-stream
+//! cursors, per-channel loads), so the table keeps a one-line digest
+//! and [`failure_details`] carries the full rendering below it.
+
+use super::table::Table;
+use crate::sim::{SweepOutcome, SweepTrial};
+
+/// One row per failed trial: `spec | kind | detail`. Returns `None`
+/// when every trial succeeded (print nothing instead of an empty
+/// table).
+pub fn failure_table(trials: &[SweepTrial]) -> Option<Table> {
+    let failed: Vec<_> = trials
+        .iter()
+        .filter_map(|t| t.outcome.error().map(|e| (t, e)))
+        .collect();
+    if failed.is_empty() {
+        return None;
+    }
+    let mut t = Table::new(
+        format!("Failed sweep points ({} of {})", failed.len(), trials.len()),
+        &["spec", "kind", "detail"],
+    );
+    for (trial, err) in failed {
+        // First line only: multi-line diagnostics go to
+        // `failure_details`, not into a table cell.
+        let digest = err.to_string();
+        let digest = digest.lines().next().unwrap_or_default().to_string();
+        t.row(vec![trial.spec.label(), err.kind().to_string(), digest]);
+    }
+    Some(t)
+}
+
+/// Full diagnostics for every failed trial, one block per failure —
+/// stall reports include their per-stream / per-channel breakdown
+/// here.
+pub fn failure_details(trials: &[SweepTrial]) -> Vec<String> {
+    trials
+        .iter()
+        .filter_map(|t| match &t.outcome {
+            SweepOutcome::Failed(err) => Some(format!("{}: {err}", t.spec.label())),
+            SweepOutcome::Ok(_) => None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robust::SimError;
+    use crate::sim::{SimSpec, SweepOutcome, SweepTrial};
+    use crate::accel::AcceleratorKind;
+    use crate::algo::problem::ProblemKind;
+    use crate::graph::DatasetId;
+
+    fn spec() -> SimSpec {
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::HitGraph)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::Bfs)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn all_ok_renders_nothing() {
+        let trials = vec![SweepTrial {
+            spec: spec(),
+            outcome: SweepOutcome::Ok(spec().run()),
+        }];
+        assert!(failure_table(&trials).is_none());
+        assert!(failure_details(&trials).is_empty());
+    }
+
+    #[test]
+    fn failures_render_label_kind_and_detail() {
+        let trials = vec![
+            SweepTrial {
+                spec: spec(),
+                outcome: SweepOutcome::Failed(SimError::BudgetExceeded {
+                    resource: crate::robust::BudgetResource::Cycles,
+                    limit: 100,
+                    observed: 101,
+                }),
+            },
+            SweepTrial {
+                spec: spec(),
+                outcome: SweepOutcome::Failed(SimError::Panicked {
+                    message: "boom".to_string(),
+                }),
+            },
+        ];
+        let t = failure_table(&trials).expect("two failures, one table");
+        assert_eq!(t.num_rows(), 2);
+        let rendered = t.render();
+        assert!(rendered.contains("HitGraph/sd/BFS/ddr4x1"));
+        assert!(rendered.contains("budget-exceeded"));
+        assert!(rendered.contains("panicked"));
+        let details = failure_details(&trials);
+        assert_eq!(details.len(), 2);
+        assert!(details[1].contains("boom"));
+    }
+}

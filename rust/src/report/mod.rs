@@ -4,9 +4,11 @@
 //! recommendation formatter of [`advice`].
 
 pub mod advice;
+pub mod failure;
 pub mod pattern;
 pub mod table;
 
 pub use advice::{advice_table, rationale_lines};
+pub use failure::{failure_details, failure_table};
 pub use pattern::{channel_table, onchip_table, pattern_tables, region_table, reuse_table};
 pub use table::Table;

@@ -1,0 +1,521 @@
+//! Robustness layer: typed simulation errors, run budgets with a
+//! stall watchdog, and the panic-capture plumbing that lets sweeps
+//! degrade gracefully instead of taking the process down.
+//!
+//! The design goal is a long-running `graphmem` service where one
+//! malformed spec, wedged accelerator model, or runaway simulation is
+//! a *result*, not a crash:
+//!
+//! * [`SimError`] is the typed failure vocabulary. The phase driver
+//!   raises [`SimError::Stalled`] with full [`StallDiagnostics`]
+//!   (per-stream cursors, per-channel load, last-progress cycle) when
+//!   it detects no forward progress; the budget watchdog raises
+//!   [`SimError::BudgetExceeded`]; anything else that unwinds is
+//!   recovered as [`SimError::Panicked`].
+//! * [`RunBudget`] bounds a run by simulated cycles, issued requests,
+//!   and/or wall-clock time. It is installed per run as a thread-local
+//!   scope (see [`budget`]) so the driver's hot loop pays a single
+//!   `Cell<bool>` read when no budget is active — the exact pattern of
+//!   the driver's `MATERIALIZE_STREAMS` hook.
+//! * [`catch_sim`] converts any unwind out of a simulation into a
+//!   `Result<_, SimError>`, downcasting payloads raised via [`raise`]
+//!   losslessly. `SimSpec::run_checked` and the `sim::Session` memo
+//!   layer are thin wrappers over it.
+//!
+//! Error transport is deliberately `panic_any` + downcast rather than
+//! threading `Result` through every accelerator model: the five
+//! models' `execute_onchip` signatures stay untouched, and the
+//! recovery boundary sits exactly where isolation is needed (one spec
+//! within a sweep).
+
+use std::fmt;
+use std::time::Duration;
+
+/// Structured failure of a single simulation run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SimError {
+    /// The phase driver detected no forward progress: either the
+    /// memory system refused to service with requests in flight, or a
+    /// chain deadlock left unissued work with nothing in flight.
+    Stalled(StallDiagnostics),
+    /// An installed [`RunBudget`] limit was crossed.
+    BudgetExceeded {
+        /// Which limit was crossed.
+        resource: BudgetResource,
+        /// The configured limit (cycles, requests, or milliseconds).
+        limit: u64,
+        /// The observed value at the moment the watchdog fired.
+        observed: u64,
+    },
+    /// The spec or its inputs were rejected before simulation
+    /// (builder validation, unloadable graph, malformed file).
+    InvalidInput(String),
+    /// The simulation unwound with a payload that was not a
+    /// [`SimError`] — an accelerator-model bug (index out of bounds,
+    /// arithmetic overflow, failed assert). The panic message is
+    /// preserved verbatim.
+    Panicked {
+        /// Stringified panic payload.
+        message: String,
+    },
+}
+
+impl SimError {
+    /// Short machine-friendly tag, used by failure tables and bench
+    /// counters.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SimError::Stalled(_) => "stalled",
+            SimError::BudgetExceeded { .. } => "budget-exceeded",
+            SimError::InvalidInput(_) => "invalid-input",
+            SimError::Panicked { .. } => "panicked",
+        }
+    }
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::Stalled(d) => write!(
+                f,
+                "simulation stalled: no forward progress after cycle {} \
+                 ({} of {} requests issued, {} in flight, {} streams waiting)",
+                d.last_progress_cycle,
+                d.total_issued(),
+                d.total_requests(),
+                d.total_in_flight(),
+                d.stuck_streams(),
+            ),
+            SimError::BudgetExceeded { resource, limit, observed } => write!(
+                f,
+                "run budget exceeded: {observed} {resource} (limit {limit})"
+            ),
+            SimError::InvalidInput(msg) => write!(f, "invalid input: {msg}"),
+            SimError::Panicked { message } => write!(f, "simulation panicked: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Which [`RunBudget`] limit a [`SimError::BudgetExceeded`] crossed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BudgetResource {
+    /// Simulated cycles ([`RunBudget::max_cycles`]).
+    Cycles,
+    /// Issued requests ([`RunBudget::max_requests`]).
+    Requests,
+    /// Wall-clock milliseconds ([`RunBudget::wall_deadline`]).
+    WallMillis,
+}
+
+impl fmt::Display for BudgetResource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BudgetResource::Cycles => "simulated cycles",
+            BudgetResource::Requests => "issued requests",
+            BudgetResource::WallMillis => "wall-clock ms",
+        })
+    }
+}
+
+/// Snapshot of the phase driver's state at the moment it stopped
+/// making progress. Everything needed to see *which* stream wedged on
+/// *which* channel without re-running under a debugger.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StallDiagnostics {
+    /// Cycle of the last completed request (phase start if none).
+    pub last_progress_cycle: u64,
+    /// One cursor per phase stream, in stream order.
+    pub streams: Vec<StreamCursor>,
+    /// One load entry per memory channel, in channel order.
+    pub channels: Vec<ChannelLoad>,
+}
+
+impl StallDiagnostics {
+    /// Requests issued across all streams.
+    pub fn total_issued(&self) -> u64 {
+        self.streams.iter().map(|s| s.issued).sum()
+    }
+
+    /// Total requests the phase holds.
+    pub fn total_requests(&self) -> u64 {
+        self.streams.iter().map(|s| s.len).sum()
+    }
+
+    /// Requests in flight across all channels.
+    pub fn total_in_flight(&self) -> u64 {
+        self.channels.iter().map(|c| c.in_flight).sum()
+    }
+
+    /// Streams with unissued requests remaining.
+    pub fn stuck_streams(&self) -> u64 {
+        self.streams.iter().filter(|s| s.issued < s.len).count() as u64
+    }
+
+    /// Multi-line human-readable dump (CLI failure reports).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "stalled at cycle {} ({} of {} requests issued)\n",
+            self.last_progress_cycle,
+            self.total_issued(),
+            self.total_requests()
+        );
+        for (i, s) in self.streams.iter().enumerate() {
+            out.push_str(&format!(
+                "  stream {i}: issued {}/{} (released {})\n",
+                s.issued, s.len, s.available
+            ));
+        }
+        for (c, ch) in self.channels.iter().enumerate() {
+            out.push_str(&format!(
+                "  channel {c}: {} in flight, {} waiting\n",
+                ch.in_flight, ch.waiting
+            ));
+        }
+        out
+    }
+}
+
+/// Per-stream cursor inside [`StallDiagnostics`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamCursor {
+    /// Requests issued so far.
+    pub issued: u64,
+    /// Stream length.
+    pub len: u64,
+    /// Requests released so far (chained streams grow this on parent
+    /// completions; `issued == available < len` means starved).
+    pub available: u64,
+}
+
+/// Per-channel load inside [`StallDiagnostics`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChannelLoad {
+    /// Requests in flight in this channel's window.
+    pub in_flight: u64,
+    /// Streams whose next request targets this channel.
+    pub waiting: u64,
+}
+
+/// Resource bounds for one simulation run. Unset fields are
+/// unbounded; the default budget is a no-op. Part of the `SimSpec`
+/// memo key (it changes observable behavior), but *not* of the
+/// memory-independent `ProgramKey`.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub struct RunBudget {
+    /// Abort once the simulated clock passes this cycle.
+    pub max_cycles: Option<u64>,
+    /// Abort once this many requests have been issued.
+    pub max_requests: Option<u64>,
+    /// Abort once this much wall-clock time has elapsed. The only
+    /// non-deterministic limit — crossing it depends on host speed —
+    /// so determinism-sensitive callers should leave it unset.
+    pub wall_deadline: Option<Duration>,
+}
+
+impl RunBudget {
+    /// True iff no limit is set (the default).
+    pub fn is_unbounded(&self) -> bool {
+        self.max_cycles.is_none() && self.max_requests.is_none() && self.wall_deadline.is_none()
+    }
+
+    /// Bound the simulated clock.
+    pub fn with_max_cycles(mut self, cycles: u64) -> Self {
+        self.max_cycles = Some(cycles);
+        self
+    }
+
+    /// Bound the issued-request count.
+    pub fn with_max_requests(mut self, requests: u64) -> Self {
+        self.max_requests = Some(requests);
+        self
+    }
+
+    /// Bound the wall-clock time.
+    pub fn with_wall_deadline(mut self, deadline: Duration) -> Self {
+        self.wall_deadline = Some(deadline);
+        self
+    }
+}
+
+/// Raise a typed simulation error. The payload unwinds untouched and
+/// is recovered losslessly by [`catch_sim`].
+pub fn raise(err: SimError) -> ! {
+    std::panic::panic_any(err)
+}
+
+/// Run `f`, converting any unwind into a [`SimError`]: payloads
+/// raised via [`raise`] come back as-is, anything else becomes
+/// [`SimError::Panicked`] with the stringified message.
+pub fn catch_sim<R>(f: impl FnOnce() -> R) -> Result<R, SimError> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(payload) => Err(error_from_panic(payload)),
+    }
+}
+
+/// Downcast a panic payload into a [`SimError`].
+pub fn error_from_panic(payload: Box<dyn std::any::Any + Send>) -> SimError {
+    match payload.downcast::<SimError>() {
+        Ok(err) => *err,
+        Err(payload) => {
+            let message = if let Some(s) = payload.downcast_ref::<&'static str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            SimError::Panicked { message }
+        }
+    }
+}
+
+/// Charge one issued request against the active budget, if any.
+/// Called by the phase driver per retired request; a single
+/// thread-local flag read when no budget is installed.
+#[inline]
+pub fn charge_request() {
+    if budget::active() {
+        budget::charge_request_slow();
+    }
+}
+
+/// Check the simulated clock against the active budget, if any.
+#[inline]
+pub fn note_cycle(cycle: u64) {
+    if budget::active() {
+        budget::note_cycle_slow(cycle);
+    }
+}
+
+/// Thread-local [`RunBudget`] scope: [`install`](budget::install) a
+/// budget for the duration of one run, and the driver's
+/// [`charge_request`]/[`note_cycle`] hooks enforce it. Scopes nest
+/// (the previous budget is restored on drop), so a probe simulation
+/// inside a budgeted run replaces — never accumulates into — the
+/// outer budget.
+pub mod budget {
+    use super::{raise, BudgetResource, RunBudget, SimError};
+    use std::cell::{Cell, RefCell};
+    use std::time::Instant;
+
+    /// Wall-deadline polls are amortized: `Instant::now` runs once per
+    /// this many charged requests (and once per `note_cycle` batch).
+    const WALL_POLL_PERIOD: u64 = 4096;
+
+    struct BudgetState {
+        budget: RunBudget,
+        requests: u64,
+        started: Instant,
+    }
+
+    thread_local! {
+        static ACTIVE: Cell<bool> = const { Cell::new(false) };
+        static STATE: RefCell<Option<BudgetState>> = const { RefCell::new(None) };
+    }
+
+    /// True iff a (non-trivial) budget is installed on this thread.
+    #[inline]
+    pub(super) fn active() -> bool {
+        ACTIVE.with(|a| a.get())
+    }
+
+    /// RAII scope restoring the previously installed budget on drop
+    /// (including during unwinds, so a budget abort cannot leak its
+    /// own scope into the next run).
+    pub struct BudgetScope {
+        previous: Option<RunBudget>,
+    }
+
+    impl Drop for BudgetScope {
+        fn drop(&mut self) {
+            set(self.previous.take());
+        }
+    }
+
+    /// Install `budget` for the current thread until the returned
+    /// scope drops. `None` (or an unbounded budget) disables
+    /// enforcement — and *shields* any outer scope, which is what a
+    /// nested unbudgeted helper run wants.
+    pub fn install(budget: Option<RunBudget>) -> BudgetScope {
+        let previous = set(budget);
+        BudgetScope { previous }
+    }
+
+    /// Swap the installed budget, returning the previous one.
+    fn set(budget: Option<RunBudget>) -> Option<RunBudget> {
+        let fresh = budget.filter(|b| !b.is_unbounded());
+        ACTIVE.with(|a| a.set(fresh.is_some()));
+        STATE.with(|s| {
+            let prev = s.replace(fresh.map(|budget| BudgetState {
+                budget,
+                requests: 0,
+                started: Instant::now(),
+            }));
+            prev.map(|st| st.budget)
+        })
+    }
+
+    /// Exceed-check helper: returns the error to raise, so the
+    /// `RefCell` borrow is released before unwinding.
+    fn check<F: FnOnce(&mut BudgetState) -> Option<SimError>>(f: F) {
+        let exceeded = STATE.with(|s| s.borrow_mut().as_mut().and_then(f));
+        if let Some(err) = exceeded {
+            raise(err);
+        }
+    }
+
+    fn wall_exceeded(st: &BudgetState) -> Option<SimError> {
+        let deadline = st.budget.wall_deadline?;
+        let elapsed = st.started.elapsed();
+        (elapsed > deadline).then(|| SimError::BudgetExceeded {
+            resource: BudgetResource::WallMillis,
+            limit: deadline.as_millis() as u64,
+            observed: elapsed.as_millis() as u64,
+        })
+    }
+
+    pub(super) fn charge_request_slow() {
+        check(|st| {
+            st.requests += 1;
+            if let Some(max) = st.budget.max_requests {
+                if st.requests > max {
+                    return Some(SimError::BudgetExceeded {
+                        resource: BudgetResource::Requests,
+                        limit: max,
+                        observed: st.requests,
+                    });
+                }
+            }
+            if st.requests % WALL_POLL_PERIOD == 0 {
+                return wall_exceeded(st);
+            }
+            None
+        });
+    }
+
+    pub(super) fn note_cycle_slow(cycle: u64) {
+        check(|st| {
+            if let Some(max) = st.budget.max_cycles {
+                if cycle > max {
+                    return Some(SimError::BudgetExceeded {
+                        resource: BudgetResource::Cycles,
+                        limit: max,
+                        observed: cycle,
+                    });
+                }
+            }
+            wall_exceeded(st)
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catch_sim_passes_values_through() {
+        assert_eq!(catch_sim(|| 41 + 1), Ok(42));
+    }
+
+    #[test]
+    fn catch_sim_recovers_typed_errors_losslessly() {
+        let err = SimError::BudgetExceeded {
+            resource: BudgetResource::Cycles,
+            limit: 7,
+            observed: 9,
+        };
+        let e2 = err.clone();
+        let got = catch_sim(move || -> () { raise(e2) }).unwrap_err();
+        assert_eq!(got, err);
+    }
+
+    #[test]
+    fn catch_sim_wraps_plain_panics_with_their_message() {
+        let got = catch_sim(|| -> () { panic!("boom {}", 3) }).unwrap_err();
+        assert_eq!(
+            got,
+            SimError::Panicked { message: "boom 3".to_string() }
+        );
+        assert_eq!(got.kind(), "panicked");
+    }
+
+    #[test]
+    fn budget_scopes_nest_and_restore() {
+        let outer = RunBudget::default().with_max_requests(5);
+        let _a = budget::install(Some(outer));
+        {
+            // Inner unbudgeted scope shields the outer one: charging
+            // far past the outer limit must not fire.
+            let _b = budget::install(None);
+            for _ in 0..100 {
+                charge_request();
+            }
+        }
+        // Outer budget restored — and its counters were never charged
+        // by the shielded inner work.
+        let err = catch_sim(|| {
+            for _ in 0..6 {
+                charge_request();
+            }
+        })
+        .unwrap_err();
+        assert_eq!(
+            err,
+            SimError::BudgetExceeded {
+                resource: BudgetResource::Requests,
+                limit: 5,
+                observed: 6,
+            }
+        );
+    }
+
+    #[test]
+    fn unbounded_budget_is_never_enforced() {
+        let _scope = budget::install(Some(RunBudget::default()));
+        for _ in 0..10_000 {
+            charge_request();
+            note_cycle(u64::MAX - 1);
+        }
+    }
+
+    #[test]
+    fn wall_deadline_fires_on_cycle_notes() {
+        use std::time::Duration;
+        let _scope =
+            budget::install(Some(RunBudget::default().with_wall_deadline(Duration::ZERO)));
+        let err = catch_sim(|| note_cycle(1)).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                SimError::BudgetExceeded { resource: BudgetResource::WallMillis, .. }
+            ),
+            "expected wall-deadline abort, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let stall = SimError::Stalled(StallDiagnostics {
+            last_progress_cycle: 120,
+            streams: vec![
+                StreamCursor { issued: 4, len: 4, available: 4 },
+                StreamCursor { issued: 1, len: 3, available: 1 },
+            ],
+            channels: vec![ChannelLoad { in_flight: 0, waiting: 0 }],
+        });
+        let s = stall.to_string();
+        assert!(s.contains("cycle 120"), "{s}");
+        assert!(s.contains("5 of 7"), "{s}");
+        assert_eq!(stall.kind(), "stalled");
+        let SimError::Stalled(d) = &stall else { unreachable!() };
+        assert_eq!(d.stuck_streams(), 1);
+        assert!(d.render().contains("stream 1: issued 1/3"));
+        assert!(
+            SimError::InvalidInput("bad".into()).to_string().contains("bad")
+        );
+    }
+}

@@ -46,11 +46,29 @@
 //! pre-buffer driver, which is what keeps default-off runs
 //! bit-identical (`tests/onchip_equivalence.rs`).
 //!
+//! # Robustness
+//!
+//! The driver never unwraps on a wedged simulation. Both structural
+//! stall cases — the memory system refusing to service while requests
+//! are in flight, and a chain deadlock (nothing in flight, nothing
+//! issuable, work remaining, e.g. a fan-out that under-releases its
+//! stream) — raise a typed [`SimError::Stalled`] carrying per-stream
+//! cursors and per-channel load ([`StallDiagnostics`]), deterministic
+//! down to the last-progress cycle. An installed
+//! [`RunBudget`](crate::robust::RunBudget) (see
+//! [`crate::robust::budget`]) is charged one unit per issued request
+//! and checked against the completion clock, so runaway phases
+//! surface as [`SimError::BudgetExceeded`] instead of spinning
+//! forever. Catch either with [`crate::robust::catch_sim`] (which is
+//! what [`SimSpec::run_checked`](crate::sim::SimSpec::run_checked)
+//! does).
+//!
 //! [`LineSource`]: crate::accel::stream::LineSource
 
 use crate::accel::stream::{Fanout, Merge, Phase};
 use crate::dram::{MemRequest, MemorySystem};
 use crate::onchip::OnChipBuffer;
+use crate::robust::{self, ChannelLoad, SimError, StallDiagnostics, StreamCursor};
 use std::cell::Cell;
 use std::collections::VecDeque;
 
@@ -193,6 +211,40 @@ impl MergeArena {
     }
 }
 
+/// Abort the phase with a structured stall diagnosis instead of a
+/// bare panic: the payload is a [`SimError::Stalled`] that
+/// [`crate::robust::catch_sim`] (and therefore `run_checked` and the
+/// sweep layer) recovers as a typed error.
+#[cold]
+#[inline(never)]
+fn raise_stall(
+    state: &[StreamState],
+    in_flight: &[usize],
+    waiting: &[usize],
+    last_progress_cycle: u64,
+) -> ! {
+    let diagnostics = StallDiagnostics {
+        last_progress_cycle,
+        streams: state
+            .iter()
+            .map(|st| StreamCursor {
+                issued: st.issued as u64,
+                len: st.len as u64,
+                available: st.available as u64,
+            })
+            .collect(),
+        channels: in_flight
+            .iter()
+            .zip(waiting)
+            .map(|(&in_flight, &waiting)| ChannelLoad {
+                in_flight: in_flight as u64,
+                waiting: waiting as u64,
+            })
+            .collect(),
+    };
+    robust::raise(SimError::Stalled(diagnostics))
+}
+
 /// Encode (stream, index) into the request tag.
 #[inline]
 fn tag(stream: usize, idx: usize) -> u64 {
@@ -329,11 +381,10 @@ pub fn run_phase_onchip(
                     "fanout must cover every parent completion"
                 );
             }
-            debug_assert_eq!(
-                s.fanout.total(phase.streams[p].len()),
-                s.len() as u64,
-                "stream {i}: fanout must release exactly the stream"
-            );
+            // A fan-out that under-releases its stream is NOT asserted
+            // here: it surfaces deterministically as a chain deadlock
+            // (`SimError::Stalled`) in the service loop below, in every
+            // build profile, with full cursor diagnostics.
             children[p].push(i);
         }
     }
@@ -443,6 +494,7 @@ pub fn run_phase_onchip(
                 waiting[ch] -= 1; // stream exhausted
             }
             telemetry.requests += 1;
+            robust::charge_request();
             match onchip_done {
                 None => {
                     in_flight[ch] += 1;
@@ -471,6 +523,14 @@ pub fn run_phase_onchip(
         }
 
         if total_in_flight == 0 {
+            if remaining > 0 {
+                // Chain deadlock: nothing in flight, nothing issuable,
+                // yet the phase still holds unissued requests (e.g. a
+                // fan-out that releases fewer requests than the chained
+                // stream holds). This used to silently terminate with
+                // wrong results in release builds.
+                raise_stall(state, in_flight, waiting, end);
+            }
             break; // nothing issued and nothing issuable -> done
         }
 
@@ -479,15 +539,20 @@ pub fn run_phase_onchip(
             // unblock anything the fill loop cares about. Retire the
             // in-flight tail in one batch call.
             end = end.max(mem.service_until(u64::MAX, |_| {}));
+            robust::note_cycle(end);
             break;
         }
 
         // Event-driven servicing: keep completing requests until one
         // of them can actually unblock an issue.
         loop {
-            let tok = mem
-                .service_one()
-                .expect("in-flight requests must be serviceable");
+            let Some(tok) = mem.service_one() else {
+                // The memory system refuses to service while the
+                // window accounting says requests are in flight — an
+                // accelerator-model or memory-model bug. Surface it as
+                // a diagnostic, not a panic.
+                raise_stall(state, in_flight, waiting, end);
+            };
             in_flight[tok.channel] -= 1;
             total_in_flight -= 1;
             slot_free_at[tok.channel] = tok.done_at;
@@ -515,19 +580,14 @@ pub fn run_phase_onchip(
                 st.pending_release.push_back((tok.done_at, f));
             }
             if total_in_flight == 0 || unblocked {
+                robust::note_cycle(end);
                 break;
             }
         }
     }
-
-    // Sanity: every request issued and completed.
-    for (i, st) in state.iter().enumerate() {
-        debug_assert_eq!(
-            st.issued, st.len,
-            "stream {i} stuck: issued {} of {} (broken chain?)",
-            st.issued, st.len
-        );
-    }
+    // Every request issued and completed: the structural stall
+    // detector above guarantees `remaining == 0` on this path.
+    robust::note_cycle(end);
 
     telemetry.end_cycle = end;
     telemetry
@@ -928,5 +988,123 @@ mod tests {
             window: 4,
         };
         run_phase(&mut m, &phase, 0);
+    }
+
+    /// Parent of 1 completion, chained child of 2 lines released
+    /// `Uniform(1)`: one child request can never be released. The
+    /// driver must diagnose the chain deadlock as `SimError::Stalled`
+    /// (in every build profile), not hang or silently drop work.
+    fn stalling_phase() -> Phase {
+        let parent =
+            LineStream::independent(StreamClass::Edges, MemKind::Read, seq_lines(0, 64));
+        let child = LineStream::chained(
+            StreamClass::Writes,
+            MemKind::Write,
+            seq_lines(1 << 20, 2 * 64),
+            0,
+            Fanout::Uniform(1),
+        );
+        Phase {
+            streams: vec![parent, child],
+            merge: Merge::prio([1, 0]).into(),
+            window: 4,
+        }
+    }
+
+    #[test]
+    fn chain_deadlock_raises_structured_stall() {
+        let phase = stalling_phase();
+        let err = crate::robust::catch_sim(|| {
+            let mut m = mem();
+            run_phase(&mut m, &phase, 0)
+        })
+        .expect_err("under-releasing fanout must stall");
+        let SimError::Stalled(diag) = err else {
+            panic!("expected Stalled, got {err:?}");
+        };
+        // Parent fully issued, child stuck at 1 of 2 with nothing
+        // released; both channels idle.
+        assert_eq!(diag.streams.len(), 2);
+        assert_eq!(diag.streams[0].issued, 1);
+        assert_eq!(diag.streams[1].issued, 1);
+        assert_eq!(diag.streams[1].len, 2);
+        assert_eq!(diag.streams[1].available, 1);
+        assert_eq!(diag.total_in_flight(), 0);
+        assert!(diag.last_progress_cycle > 0, "parent completed first");
+    }
+
+    #[test]
+    fn chain_deadlock_diagnosis_is_deterministic() {
+        let phase = stalling_phase();
+        let run = || {
+            crate::robust::catch_sim(|| {
+                let mut m = mem();
+                run_phase(&mut m, &phase, 0)
+            })
+            .expect_err("must stall")
+        };
+        assert_eq!(run(), run(), "same phase, same diagnostics");
+    }
+
+    #[test]
+    fn budget_max_requests_surfaces_as_typed_error() {
+        use crate::robust::{budget, RunBudget};
+        let phase = Phase::single(
+            StreamClass::Values,
+            MemKind::Read,
+            LineSource::seq(0, 64 * 64),
+            8,
+        );
+        let err = crate::robust::catch_sim(|| {
+            let _scope = budget::install(Some(RunBudget::default().with_max_requests(10)));
+            let mut m = mem();
+            run_phase(&mut m, &phase, 0)
+        })
+        .expect_err("64 requests must blow a 10-request budget");
+        match err {
+            SimError::BudgetExceeded { limit, observed, .. } => {
+                assert_eq!(limit, 10);
+                assert_eq!(observed, 11, "aborts on the first over-budget request");
+            }
+            other => panic!("expected BudgetExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn budget_max_cycles_surfaces_as_typed_error() {
+        use crate::robust::{budget, RunBudget};
+        let phase = Phase::single(
+            StreamClass::Values,
+            MemKind::Read,
+            LineSource::seq(0, 64 * 64),
+            8,
+        );
+        let err = crate::robust::catch_sim(|| {
+            let _scope = budget::install(Some(RunBudget::default().with_max_cycles(1)));
+            let mut m = mem();
+            run_phase(&mut m, &phase, 0)
+        })
+        .expect_err("any real phase outlives a 1-cycle budget");
+        assert!(
+            matches!(err, SimError::BudgetExceeded { .. }),
+            "expected BudgetExceeded, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn unbudgeted_run_is_unaffected() {
+        // No budget scope installed: the charge/note hooks must be
+        // inert and the phase bit-identical to the pre-robustness
+        // driver.
+        let phase = Phase::single(
+            StreamClass::Values,
+            MemKind::Read,
+            LineSource::seq(0, 64 * 64),
+            8,
+        );
+        let mut m = mem();
+        let t = run_phase(&mut m, &phase, 0);
+        assert_eq!(t.requests, 64);
+        assert_eq!(m.stats().requests(), 64);
     }
 }

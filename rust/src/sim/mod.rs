@@ -15,6 +15,11 @@
 //! * [`driver`] / [`metrics`] — the phase-level co-simulation engine
 //!   (with its reusable [`PhaseScratch`] arena) and the metric set
 //!   the specs produce.
+//!
+//! Abnormal outcomes (stalls, exceeded [`crate::robust::RunBudget`]s,
+//! stray panics) surface as typed [`crate::robust::SimError`]s through
+//! [`SimSpec::run_checked`] / [`Session::try_run`] /
+//! [`Sweep::run_outcomes`]; see [`crate::robust`].
 
 pub mod driver;
 pub mod metrics;
@@ -27,4 +32,6 @@ pub use driver::{
 };
 pub use metrics::{AdvisorChoices, RunMetrics, SimReport};
 pub use spec::{ProgramKey, RunScratch, SimSpec, SimSpecBuilder, SpecError, Workload};
-pub use sweep::{AdvisorValidation, Session, SessionStats, Sweep, SweepRun};
+pub use sweep::{
+    AdvisorValidation, Session, SessionStats, Sweep, SweepOutcome, SweepRun, SweepTrial,
+};

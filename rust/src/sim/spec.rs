@@ -22,10 +22,11 @@
 
 use crate::accel::{AcceleratorConfig, AcceleratorKind, PhaseProgram};
 use crate::algo::problem::{GraphProblem, ProblemKind};
-use crate::dram::{ChannelMode, DramPolicy, MemTech, MemorySystem, ServiceOrder};
+use crate::dram::{ChannelMode, DramPolicy, FaultPlan, MemTech, MemorySystem, ServiceOrder};
 use crate::graph::datasets::DatasetId;
 use crate::graph::EdgeList;
 use crate::onchip::{OnChipBuffer, OnChipConfig};
+use crate::robust::{RunBudget, SimError};
 use crate::sim::metrics::SimReport;
 use crate::trace::{AccessPatternAnalyzer, TraceEvent};
 use std::fmt;
@@ -243,11 +244,24 @@ impl fmt::Display for SpecError {
 
 impl std::error::Error for SpecError {}
 
+impl From<SpecError> for SimError {
+    /// Build-time rejections fold into the run-time error taxonomy as
+    /// [`SimError::InvalidInput`] — callers that assemble specs from
+    /// untrusted input (the CLI, sweep frontends) can carry one error
+    /// type end to end.
+    fn from(err: SpecError) -> SimError {
+        SimError::InvalidInput(err.to_string())
+    }
+}
+
 /// A fully validated simulation specification.
 ///
 /// Construct through [`SimSpec::builder`]; every value of this type is
-/// runnable ([`SimSpec::run`] cannot fail). Derived `Hash`/`Eq` make
-/// it the memoization key of [`super::sweep::Session`].
+/// runnable — shape errors are rejected at build time, and run-time
+/// failures (a tripped [`RunBudget`], a stalled driver) abort the run
+/// as a typed panic that [`SimSpec::run_checked`] catches. Derived
+/// `Hash`/`Eq` make it the memoization key of
+/// [`super::sweep::Session`].
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct SimSpec {
     accelerator: AcceleratorKind,
@@ -264,6 +278,16 @@ pub struct SimSpec {
     /// [`crate::onchip`]). Part of the spec's identity; `None` (the
     /// default) is bit-identical to the pre-buffer simulator.
     onchip: Option<OnChipConfig>,
+    /// Run budget enforced by the phase driver (see [`crate::robust`]).
+    /// Part of the spec's identity; `None` (the default) runs
+    /// unguarded, bit-identical to the pre-budget simulator.
+    budget: Option<RunBudget>,
+    /// Deterministic DRAM fault-injection plan (see
+    /// [`crate::dram::fault`]). Part of the spec's identity — faulted
+    /// and clean runs never alias in the memo — but, like `onchip`,
+    /// absent from [`SimSpec::program_key`]: faults perturb memory
+    /// timing only, never compilation.
+    faults: Option<FaultPlan>,
 }
 
 impl SimSpec {
@@ -313,6 +337,31 @@ impl SimSpec {
         }
         self.onchip = onchip;
         Ok(self)
+    }
+
+    /// The run budget, if any.
+    pub fn budget(&self) -> Option<&RunBudget> {
+        self.budget.as_ref()
+    }
+
+    /// The fault-injection plan, if any.
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
+    }
+
+    /// The same spec with a different run budget — the hook for
+    /// wrapping an already-built spec in guardrails. Always valid
+    /// (every budget value is enforceable), hence infallible.
+    pub fn with_budget(mut self, budget: Option<RunBudget>) -> SimSpec {
+        self.budget = budget;
+        self
+    }
+
+    /// The same spec with a different fault plan — the hook for
+    /// sweeping fault scenarios over one base spec. Always valid.
+    pub fn with_faults(mut self, faults: Option<FaultPlan>) -> SimSpec {
+        self.faults = faults;
+        self
     }
 
     /// How this accelerator places data across channels: the
@@ -385,6 +434,16 @@ impl SimSpec {
     /// sweep instead.
     pub fn run(&self) -> SimReport {
         self.run_inner(false).0
+    }
+
+    /// [`SimSpec::run`] with every abnormal outcome returned as a
+    /// typed [`SimError`] instead of unwinding: a stalled phase
+    /// engine, an exceeded [`RunBudget`], or any panic escaping the
+    /// simulation core (reported as [`SimError::Panicked`] with the
+    /// payload message). A successful run is bit-identical to
+    /// [`SimSpec::run`].
+    pub fn run_checked(&self) -> Result<SimReport, SimError> {
+        crate::robust::catch_sim(|| self.run())
     }
 
     /// [`SimSpec::run`] against a pre-compiled program (see
@@ -497,6 +556,11 @@ impl SimSpec {
         if self.patterns {
             mem.attach_analyzer();
         }
+        // Guardrails: install the fault lanes on the (fresh or reset)
+        // memory system and scope the run budget to this thread for
+        // the duration of the execution. Both are no-ops when unset.
+        mem.set_faults(self.faults.as_ref());
+        let _budget = crate::robust::budget::install(self.budget.clone());
         let mut onchip = self.onchip.as_ref().map(|c| OnChipBuffer::new(c.clone()));
         let mut report = program.execute_onchip(&p, mem, onchip.as_mut());
         report.patterns = mem.take_pattern_summary();
@@ -563,6 +627,8 @@ pub struct SimSpecBuilder {
     /// [`SimSpecBuilder::onchip`] and [`SimSpecBuilder::onchip_default`],
     /// the later call wins.
     onchip_default: bool,
+    budget: Option<RunBudget>,
+    faults: Option<FaultPlan>,
     /// Advisor resolution flags: when any is set, `build` runs the
     /// advisor probe and folds the chosen values into the spec. The
     /// flags themselves never reach [`SimSpec`] — only the resolved
@@ -737,6 +803,66 @@ impl SimSpecBuilder {
         self
     }
 
+    /// Abort the run when it exceeds the given [`RunBudget`] —
+    /// simulated cycles, issued requests, or wall-clock time. The
+    /// violation surfaces as [`SimError::BudgetExceeded`] through
+    /// [`SimSpec::run_checked`] (plain [`SimSpec::run`] unwinds with
+    /// the same typed payload). Part of the spec's identity, so a
+    /// budgeted run never aliases an unguarded one in the memo.
+    ///
+    /// ```
+    /// use graphmem::accel::AcceleratorKind;
+    /// use graphmem::algo::problem::ProblemKind;
+    /// use graphmem::graph::DatasetId;
+    /// use graphmem::robust::{RunBudget, SimError};
+    /// use graphmem::sim::SimSpec;
+    ///
+    /// let spec = SimSpec::builder()
+    ///     .accelerator(AcceleratorKind::HitGraph)
+    ///     .graph(DatasetId::Sd)
+    ///     .problem(ProblemKind::Bfs)
+    ///     .budget(RunBudget::default().with_max_requests(100))
+    ///     .build()
+    ///     .unwrap();
+    /// match spec.run_checked() {
+    ///     Err(SimError::BudgetExceeded { limit: 100, .. }) => {}
+    ///     other => panic!("expected a budget violation, got {other:?}"),
+    /// }
+    /// ```
+    pub fn budget(mut self, budget: impl Into<Option<RunBudget>>) -> Self {
+        self.budget = budget.into();
+        self
+    }
+
+    /// Inject deterministic DRAM faults (see [`crate::dram::fault`])
+    /// during the run: the seeded plan adds completion delay to
+    /// selected serviced requests — results are invariant, cycles
+    /// move, and [`crate::dram::DramStats::faults_injected`] proves
+    /// the faults fired. Part of the spec's identity but not of
+    /// [`SimSpec::program_key`] (faults never touch compilation).
+    ///
+    /// ```
+    /// use graphmem::accel::AcceleratorKind;
+    /// use graphmem::algo::problem::ProblemKind;
+    /// use graphmem::dram::FaultPlan;
+    /// use graphmem::graph::DatasetId;
+    /// use graphmem::sim::SimSpec;
+    ///
+    /// let base = SimSpec::builder()
+    ///     .accelerator(AcceleratorKind::HitGraph)
+    ///     .graph(DatasetId::Sd)
+    ///     .problem(ProblemKind::Bfs);
+    /// let clean = base.clone().build().unwrap().run();
+    /// let faulted = base.faults(FaultPlan::refresh_storm(7)).build().unwrap().run();
+    /// assert!(faulted.dram.faults_injected > 0);
+    /// assert_eq!(faulted.dram.requests(), clean.dram.requests());
+    /// assert!(faulted.cycles >= clean.cycles);
+    /// ```
+    pub fn faults(mut self, plan: impl Into<Option<FaultPlan>>) -> Self {
+        self.faults = plan.into();
+        self
+    }
+
     /// Let the advisor ([`crate::advisor`]) pick the partition
     /// capacity: at build time a cheap probe runs and the balanced
     /// capacity it derives replaces `bram_values`
@@ -839,6 +965,8 @@ impl SimSpecBuilder {
             .config(config)
             .patterns(patterns)
             .onchip(onchip)
+            .budget(base.budget.clone())
+            .faults(base.faults.clone())
             .build_base()
     }
 
@@ -908,6 +1036,8 @@ impl SimSpecBuilder {
             config,
             patterns: self.patterns,
             onchip,
+            budget: self.budget,
+            faults: self.faults,
         })
     }
 }
@@ -1118,6 +1248,91 @@ mod tests {
         // Different budgets are distinct memo keys too.
         let bigger = base().onchip(OnChipConfig::vertex_cache(8192)).build().unwrap();
         assert_ne!(cached, bigger);
+    }
+
+    #[test]
+    fn budget_and_faults_join_the_memo_key_but_not_the_program_key() {
+        use crate::dram::FaultPlan;
+        use crate::robust::RunBudget;
+        let plain = base().build().unwrap();
+        assert!(plain.budget().is_none());
+        assert!(plain.faults().is_none());
+        let budgeted = base()
+            .budget(RunBudget::default().with_max_cycles(1_000_000))
+            .build()
+            .unwrap();
+        let faulted = base().faults(FaultPlan::mixed(7)).build().unwrap();
+        // Guarded, faulted and plain runs must never alias in the memo...
+        assert_ne!(plain, budgeted);
+        assert_ne!(plain, faulted);
+        assert_ne!(budgeted, faulted);
+        assert_ne!(faulted, base().faults(FaultPlan::mixed(8)).build().unwrap());
+        // ...while the compiled program is shared (both affect
+        // execution only, never compilation).
+        assert_eq!(plain.program_key(), budgeted.program_key());
+        assert_eq!(plain.program_key(), faulted.program_key());
+        // The advisor-resolution path preserves both.
+        let auto = base()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .budget(RunBudget::default().with_max_cycles(1_000_000))
+            .faults(FaultPlan::mixed(7))
+            .auto_partition(true)
+            .build()
+            .unwrap();
+        assert!(auto.budget().is_some());
+        assert_eq!(auto.faults(), Some(&FaultPlan::mixed(7)));
+        // Post-build hooks round-trip.
+        let rearmed = plain.clone().with_faults(Some(FaultPlan::mixed(7)));
+        assert_eq!(rearmed, base().faults(FaultPlan::mixed(7)).build().unwrap());
+        assert_eq!(rearmed.with_faults(None), plain);
+    }
+
+    #[test]
+    fn run_checked_ok_is_bit_identical_to_run() {
+        let spec = base().build().unwrap();
+        assert_eq!(spec.run_checked().unwrap(), spec.run());
+    }
+
+    #[test]
+    fn run_checked_surfaces_budget_violations_as_typed_errors() {
+        use crate::robust::{BudgetResource, RunBudget, SimError};
+        let spec = base()
+            .budget(RunBudget::default().with_max_requests(5))
+            .build()
+            .unwrap();
+        match spec.run_checked() {
+            Err(SimError::BudgetExceeded {
+                resource,
+                limit,
+                observed,
+            }) => {
+                assert_eq!(resource, BudgetResource::Requests);
+                assert_eq!(limit, 5);
+                assert!(observed > 5);
+            }
+            other => panic!("expected a budget violation, got {other:?}"),
+        }
+        // An unbounded budget is never enforced.
+        let free = base().budget(RunBudget::default()).build().unwrap();
+        assert!(free.run_checked().is_ok());
+    }
+
+    #[test]
+    fn faulted_runs_move_cycles_never_results() {
+        use crate::dram::FaultPlan;
+        let clean = base().build().unwrap().run();
+        let spec = base().faults(FaultPlan::mixed(0xF0)).build().unwrap();
+        let faulted = spec.run();
+        assert!(faulted.dram.faults_injected > 0, "plan never fired");
+        assert!(faulted.dram.fault_delay_cycles > 0);
+        assert_eq!(clean.dram.faults_injected, 0);
+        // Results are invariant: same algorithm metrics, same request
+        // counts — only timing moves, and only upward.
+        assert_eq!(clean.metrics, faulted.metrics);
+        assert_eq!(clean.dram.requests(), faulted.dram.requests());
+        assert!(faulted.cycles >= clean.cycles);
+        // Determinism: the same plan reproduces the report bit for bit.
+        assert_eq!(spec.run(), faulted);
     }
 
     #[test]

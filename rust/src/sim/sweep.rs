@@ -22,6 +22,18 @@
 //! compiled/reused, runs executed/memoized/duplicate-waited); the CLI
 //! surfaces it behind `graphmem sweep --stats`.
 //!
+//! **Panic isolation.** Every simulation executes behind
+//! [`crate::robust::catch_sim`]: a stalled phase engine, an exceeded
+//! [`crate::robust::RunBudget`] or a stray panic becomes a typed
+//! [`crate::robust::SimError`] memoized like any result (the simulator
+//! is deterministic, so a failure is as cacheable as a report). The
+//! `try_run*` entry points surface the `Result`; the legacy infallible
+//! entry points panic with the failure's display form. One failing
+//! spec never takes down a batch — [`Session::run_trials`] /
+//! [`Sweep::run_outcomes`] pair every spec with its
+//! [`SweepOutcome`], and all internal locks recover from poisoning
+//! (a worker that died mid-publish cannot wedge the session).
+//!
 //! [`Sweep`] declares experiment axes (accelerators × workloads ×
 //! problems × memory technologies × channel counts × configurations ×
 //! on-chip buffers), takes their cartesian product and executes it
@@ -53,11 +65,21 @@ use crate::algo::problem::ProblemKind;
 use crate::dram::MemTech;
 use crate::graph::datasets::DatasetId;
 use crate::onchip::OnChipConfig;
+use crate::robust::SimError;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, recovering the data from a poisoned state: the
+/// session's values are published atomically (a slot is either `None`
+/// or a complete value), so a thread that panicked while holding a
+/// lock cannot have left partial state behind. Without this, one
+/// panicking worker would wedge every later lock on the same shard.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Number of independent cache shards; keeps lock contention low when
 /// many worker threads publish results concurrently.
@@ -123,7 +145,7 @@ impl<K: Hash + Eq + Clone, V: Clone> OnceMap<K, V> {
 
     /// Cached values across all shards.
     fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().done.len()).sum()
+        self.shards.iter().map(|s| lock_unpoisoned(s).done.len()).sum()
     }
 
     fn get_or_compute(&self, key: &K, mut f: impl FnMut() -> V) -> (V, Fetch) {
@@ -133,7 +155,7 @@ impl<K: Hash + Eq + Clone, V: Clone> OnceMap<K, V> {
                 Wait(Arc<Gate<V>>),
             }
             let role = {
-                let mut shard = self.shard(key).lock().unwrap();
+                let mut shard = lock_unpoisoned(self.shard(key));
                 if let Some(v) = shard.done.get(key) {
                     return (v.clone(), Fetch::Hit);
                 }
@@ -165,10 +187,10 @@ impl<K: Hash + Eq + Clone, V: Clone> OnceMap<K, V> {
                             if !self.armed {
                                 return;
                             }
-                            let mut shard = self.map.shard(self.key).lock().unwrap();
+                            let mut shard = lock_unpoisoned(self.map.shard(self.key));
                             shard.running.remove(self.key);
                             drop(shard);
-                            *self.gate.state.lock().unwrap() = GateState::Cancelled;
+                            *lock_unpoisoned(&self.gate.state) = GateState::Cancelled;
                             self.gate.cv.notify_all();
                         }
                     }
@@ -184,23 +206,23 @@ impl<K: Hash + Eq + Clone, V: Clone> OnceMap<K, V> {
                         v
                     };
                     {
-                        let mut shard = self.shard(key).lock().unwrap();
+                        let mut shard = lock_unpoisoned(self.shard(key));
                         shard.done.insert(key.clone(), value.clone());
                         shard.running.remove(key);
                     }
-                    *gate.state.lock().unwrap() = GateState::Done(value.clone());
+                    *lock_unpoisoned(&gate.state) = GateState::Done(value.clone());
                     gate.cv.notify_all();
                     return (value, Fetch::Computed);
                 }
                 Role::Wait(gate) => {
-                    let mut st = gate.state.lock().unwrap();
+                    let mut st = lock_unpoisoned(&gate.state);
                     loop {
                         match &*st {
                             GateState::Done(v) => return (v.clone(), Fetch::Waited),
                             GateState::Cancelled => break,
                             GateState::Pending => {}
                         }
-                        st = gate.cv.wait(st).unwrap();
+                        st = gate.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
                     }
                     // Cancelled: fall through and retry from the top.
                 }
@@ -237,7 +259,7 @@ pub struct SessionStats {
 /// [`SimSpec::program_key`], shared across memory technologies and
 /// worker threads.
 pub struct Session {
-    reports: OnceMap<SimSpec, SimReport>,
+    reports: OnceMap<SimSpec, Result<SimReport, SimError>>,
     programs: OnceMap<ProgramKey, Arc<PhaseProgram>>,
     /// Worker threads used by [`Session::run_all`]; `None` = derive
     /// from the machine.
@@ -284,8 +306,20 @@ impl Session {
     /// Run one spec (or fetch its memoized report). Concurrent calls
     /// with the same spec simulate once: later callers wait on the
     /// first one's gate ([`SessionStats::duplicate_waits`]).
+    ///
+    /// Panics if the simulation fails (stall, exceeded budget, stray
+    /// panic) — use [`Session::try_run`] for the typed `Result`.
     pub fn run(&self, spec: &SimSpec) -> SimReport {
         self.run_scratch(spec, &mut RunScratch::new())
+    }
+
+    /// [`Session::run`] with every failure returned as a typed
+    /// [`SimError`] instead of unwinding. Failures are memoized like
+    /// reports: the simulator is deterministic, so a spec that stalled
+    /// once stalls every time — re-asking costs a cache hit, not a
+    /// re-simulation.
+    pub fn try_run(&self, spec: &SimSpec) -> Result<SimReport, SimError> {
+        self.try_run_scratch(spec, &mut RunScratch::new())
     }
 
     /// [`Session::run`] against a caller-owned [`RunScratch`]: a run
@@ -295,9 +329,23 @@ impl Session {
     /// per-run allocation on the sweep hot path. Bit-identical to
     /// [`Session::run`].
     pub fn run_scratch(&self, spec: &SimSpec, scratch: &mut RunScratch) -> SimReport {
+        self.try_run_scratch(spec, scratch)
+            .unwrap_or_else(|err| panic!("simulation of {} failed: {err}", spec.label()))
+    }
+
+    /// [`Session::try_run`] against a caller-owned [`RunScratch`].
+    /// The simulation body runs behind [`crate::robust::catch_sim`],
+    /// so a failing spec leaves the session (and the scratch) usable.
+    pub fn try_run_scratch(
+        &self,
+        spec: &SimSpec,
+        scratch: &mut RunScratch,
+    ) -> Result<SimReport, SimError> {
         let (report, how) = self.reports.get_or_compute(spec, || {
-            let program = self.program_for(spec);
-            spec.run_with_program_scratch(&program, scratch)
+            crate::robust::catch_sim(|| {
+                let program = self.program_for(spec);
+                spec.run_with_program_scratch(&program, scratch)
+            })
         });
         match how {
             Fetch::Computed => {}
@@ -314,18 +362,48 @@ impl Session {
     /// Run a batch of specs across worker threads; the result vector
     /// is index-aligned with `specs`. Reports are identical to calling
     /// [`Session::run`] serially (the simulator is deterministic).
+    /// Panics on the first failed spec — see [`Session::try_run_all`].
     pub fn run_all(&self, specs: &[SimSpec]) -> Vec<SimReport> {
         self.run_batch(specs, self.threads.unwrap_or_else(default_threads))
     }
 
     /// [`Session::run_all`] with an explicit worker-thread count.
     pub fn run_batch(&self, specs: &[SimSpec], threads: usize) -> Vec<SimReport> {
+        self.try_run_batch(specs, threads)
+            .into_iter()
+            .zip(specs)
+            .map(|(res, spec)| {
+                res.unwrap_or_else(|err| {
+                    panic!("simulation of {} failed: {err}", spec.label())
+                })
+            })
+            .collect()
+    }
+
+    /// Fallible batch run: every spec yields its own
+    /// `Result<SimReport, SimError>` — one stalling or over-budget
+    /// spec never takes down the rest of the batch. Index-aligned
+    /// with `specs`.
+    pub fn try_run_all(&self, specs: &[SimSpec]) -> Vec<Result<SimReport, SimError>> {
+        self.try_run_batch(specs, self.threads.unwrap_or_else(default_threads))
+    }
+
+    /// [`Session::try_run_all`] with an explicit worker-thread count.
+    pub fn try_run_batch(
+        &self,
+        specs: &[SimSpec],
+        threads: usize,
+    ) -> Vec<Result<SimReport, SimError>> {
         let threads = threads.min(specs.len().max(1));
         if threads <= 1 || specs.len() <= 1 {
-            return specs.iter().map(|s| self.run(s)).collect();
+            let mut scratch = RunScratch::new();
+            return specs
+                .iter()
+                .map(|s| self.try_run_scratch(s, &mut scratch))
+                .collect();
         }
         let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<SimReport>>> =
+        let slots: Vec<Mutex<Option<Result<SimReport, SimError>>>> =
             specs.iter().map(|_| Mutex::new(None)).collect();
         std::thread::scope(|scope| {
             for _ in 0..threads {
@@ -337,15 +415,36 @@ impl Session {
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         let Some(spec) = specs.get(i) else { break };
-                        let report = self.run_scratch(spec, &mut scratch);
-                        *slots[i].lock().unwrap() = Some(report);
+                        let result = self.try_run_scratch(spec, &mut scratch);
+                        *lock_unpoisoned(&slots[i]) = Some(result);
                     }
                 });
             }
         });
         slots
             .into_iter()
-            .map(|slot| slot.into_inner().unwrap().expect("every slot filled"))
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .expect("every slot filled")
+            })
+            .collect()
+    }
+
+    /// Run an explicit list of specs, pairing each with its
+    /// [`SweepOutcome`] — the keep-going sweep substrate: failures are
+    /// isolated per spec and the rest of the batch always completes.
+    pub fn run_trials(&self, specs: &[SimSpec]) -> Vec<SweepTrial> {
+        self.try_run_all(specs)
+            .into_iter()
+            .zip(specs)
+            .map(|(res, spec)| SweepTrial {
+                spec: spec.clone(),
+                outcome: match res {
+                    Ok(report) => SweepOutcome::Ok(report),
+                    Err(err) => SweepOutcome::Failed(err),
+                },
+            })
             .collect()
     }
 
@@ -386,6 +485,52 @@ fn default_threads() -> usize {
 pub struct SweepRun {
     pub spec: SimSpec,
     pub report: SimReport,
+}
+
+/// How one sweep point ended: a report, or a typed failure. The
+/// keep-going sweep mode ([`Sweep::run_outcomes`], `graphmem sweep
+/// --keep-going`) collects these instead of aborting on the first
+/// failed spec.
+#[derive(Clone, Debug)]
+pub enum SweepOutcome {
+    Ok(SimReport),
+    Failed(SimError),
+}
+
+impl SweepOutcome {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, SweepOutcome::Ok(_))
+    }
+
+    /// The report, when the point succeeded.
+    pub fn report(&self) -> Option<&SimReport> {
+        match self {
+            SweepOutcome::Ok(r) => Some(r),
+            SweepOutcome::Failed(_) => None,
+        }
+    }
+
+    /// The failure, when the point failed.
+    pub fn error(&self) -> Option<&SimError> {
+        match self {
+            SweepOutcome::Ok(_) => None,
+            SweepOutcome::Failed(e) => Some(e),
+        }
+    }
+
+    pub fn into_result(self) -> Result<SimReport, SimError> {
+        match self {
+            SweepOutcome::Ok(r) => Ok(r),
+            SweepOutcome::Failed(e) => Err(e),
+        }
+    }
+}
+
+/// One attempted sweep point: the spec plus however it ended.
+#[derive(Clone, Debug)]
+pub struct SweepTrial {
+    pub spec: SimSpec,
+    pub outcome: SweepOutcome,
 }
 
 /// Declarative cartesian sweep over simulation axes.
@@ -576,6 +721,34 @@ impl Sweep {
             .into_iter()
             .zip(reports)
             .map(|(spec, report)| SweepRun { spec, report })
+            .collect())
+    }
+
+    /// Keep-going execution: every point yields a [`SweepTrial`] —
+    /// failed points carry their typed [`SimError`] and never abort
+    /// the rest of the product. The `Err` arm covers *declaration*
+    /// errors only (an empty or invalid axis).
+    pub fn run_outcomes(&self) -> Result<Vec<SweepTrial>, SpecError> {
+        self.run_outcomes_with(&Session::new())
+    }
+
+    /// [`Sweep::run_outcomes`] against a shared session.
+    pub fn run_outcomes_with(&self, session: &Session) -> Result<Vec<SweepTrial>, SpecError> {
+        let specs = self.specs()?;
+        let results = match self.threads {
+            Some(t) => session.try_run_batch(&specs, t),
+            None => session.try_run_all(&specs),
+        };
+        Ok(specs
+            .into_iter()
+            .zip(results)
+            .map(|(spec, res)| SweepTrial {
+                spec,
+                outcome: match res {
+                    Ok(report) => SweepOutcome::Ok(report),
+                    Err(err) => SweepOutcome::Failed(err),
+                },
+            })
             .collect())
     }
 
@@ -951,6 +1124,88 @@ mod tests {
         let rb = session.run(&sb);
         assert_eq!(session.cached_runs(), 2, "two entries, no collision");
         assert_ne!(ra.cycles, rb.cycles, "window must affect timing");
+    }
+
+    #[test]
+    fn oncemap_survives_a_panicking_computation() {
+        let map: OnceMap<u32, u32> = OnceMap::new();
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            map.get_or_compute(&7, || panic!("boom"))
+        }));
+        assert!(boom.is_err());
+        // The gate was cancelled, not leaked: the next caller for the
+        // same key computes fresh instead of hanging on a dead gate.
+        assert_eq!(map.get_or_compute(&7, || 42), (42, Fetch::Computed));
+        assert_eq!(map.get_or_compute(&7, || 43), (42, Fetch::Hit));
+        assert_eq!(map.len(), 1);
+    }
+
+    /// The ISSUE acceptance scenario: a batch containing a panicking
+    /// spec and a budget-exceeding spec completes every remaining spec
+    /// and reports per-spec outcomes.
+    #[test]
+    fn failing_specs_are_isolated_and_the_batch_completes() {
+        use crate::graph::{Edge, EdgeList};
+        use crate::robust::{RunBudget, SimError};
+        let session = Session::new();
+        let healthy = quick_sweep().specs().unwrap();
+        assert_eq!(healthy.len(), 2);
+        // A spec that panics mid-simulation: an edge endpoint beyond
+        // |V| indexes out of bounds deep in the phase engine.
+        let mut bad_graph = EdgeList::new(4, true);
+        bad_graph.edges.push(Edge { src: 0, dst: 999, weight: 1.0 });
+        let panicking = SimSpec::builder()
+            .accelerator(AcceleratorKind::HitGraph)
+            .custom_graph("corrupt", bad_graph)
+            .problem(ProblemKind::Bfs)
+            .build()
+            .unwrap();
+        // A spec that exceeds its request budget immediately.
+        let over_budget = healthy[0]
+            .clone()
+            .with_budget(Some(RunBudget::default().with_max_requests(3)));
+        let specs = vec![
+            healthy[0].clone(),
+            panicking.clone(),
+            over_budget.clone(),
+            healthy[1].clone(),
+        ];
+        let trials = session.run_trials(&specs);
+        assert_eq!(trials.len(), 4);
+        assert!(trials[0].outcome.is_ok(), "healthy spec must survive the batch");
+        assert!(trials[3].outcome.is_ok(), "specs after a failure still run");
+        match trials[1].outcome.error() {
+            Some(SimError::Panicked { message }) => {
+                assert!(!message.is_empty(), "panic payload captured");
+            }
+            other => panic!("expected a captured panic, got {other:?}"),
+        }
+        match trials[2].outcome.error() {
+            Some(SimError::BudgetExceeded { limit: 3, observed, .. }) => {
+                assert!(*observed > 3);
+            }
+            other => panic!("expected a budget violation, got {other:?}"),
+        }
+        // Failures are memoized like reports: asking again is a cache
+        // hit, not a re-simulation.
+        let runs_before = session.stats().sim_runs;
+        let again = session.try_run(&panicking);
+        assert_eq!(
+            again.unwrap_err().kind(),
+            "panicked",
+            "memoized failure keeps its type"
+        );
+        assert_eq!(session.stats().sim_runs, runs_before);
+        // The parallel path isolates failures the same way.
+        let parallel = session.try_run_batch(&specs, 4);
+        assert!(parallel[0].is_ok() && parallel[3].is_ok());
+        assert!(parallel[1].is_err() && parallel[2].is_err());
+        // The infallible entry point surfaces the typed failure as a
+        // labelled panic.
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            session.run(&over_budget)
+        }));
+        assert!(err.is_err());
     }
 
     #[test]

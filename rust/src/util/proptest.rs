@@ -27,6 +27,45 @@ where
     }
 }
 
+/// Random byte buffer for parser-fuzz properties: a mix of raw bytes
+/// and caller-supplied format fragments, so parsers see pure noise,
+/// almost-valid input, and valid pieces spliced in the wrong order.
+pub fn fuzz_bytes(rng: &mut Rng, max_len: u64, fragments: &[&[u8]]) -> Vec<u8> {
+    let target = rng.next_below(max_len.max(1)) as usize;
+    let mut out = Vec::with_capacity(target);
+    while out.len() < target {
+        if !fragments.is_empty() && rng.chance(0.3) {
+            let f = fragments[rng.next_below(fragments.len() as u64) as usize];
+            out.extend_from_slice(f);
+        } else {
+            out.push(rng.next_below(256) as u8);
+        }
+    }
+    out.truncate(target);
+    out
+}
+
+/// Evaluate `f` behind `catch_unwind`: "errors, never panics"
+/// properties turn an escaped panic into an ordinary property failure
+/// (reported with its replay seed) instead of aborting the driver.
+/// The result value itself — `Ok` or `Err` — is deliberately ignored;
+/// only a panic fails the property.
+pub fn no_panic<R>(f: impl FnOnce() -> R + std::panic::UnwindSafe) -> Result<(), String> {
+    match std::panic::catch_unwind(f) {
+        Ok(_) => Ok(()),
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&'static str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(format!("parser panicked: {msg}"))
+        }
+    }
+}
+
 /// Convenience assertion macro for property bodies.
 #[macro_export]
 macro_rules! prop_assert {
@@ -51,6 +90,23 @@ mod tests {
                 Err(format!("x={x}"))
             }
         });
+    }
+
+    #[test]
+    fn fuzz_bytes_is_deterministic_and_bounded() {
+        let a = fuzz_bytes(&mut Rng::new(7), 64, &[b"abc", b"0 1\n"]);
+        let b = fuzz_bytes(&mut Rng::new(7), 64, &[b"abc", b"0 1\n"]);
+        assert_eq!(a, b, "same seed, same bytes");
+        assert!(a.len() < 64);
+        assert_ne!(a, fuzz_bytes(&mut Rng::new(8), 64, &[b"abc", b"0 1\n"]));
+    }
+
+    #[test]
+    fn no_panic_reports_the_payload() {
+        assert!(no_panic(|| 1 + 1).is_ok());
+        assert!(no_panic(|| -> Result<(), String> { Err("plain error".into()) }).is_ok());
+        let err = no_panic(|| panic!("kaboom")).unwrap_err();
+        assert!(err.contains("kaboom"));
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Fault-injection equivalence suite: the deterministic DRAM fault
+//! injector (`graphmem::dram::fault`) must perturb *timing only*.
+//!
+//! Three invariants, each under several fault plans and accelerators:
+//!
+//! * **Heap/scan bit-identity** — completion selection keys on
+//!   queue-arrival times, which faults never touch, so the event-heap
+//!   selector and the linear-scan reference produce identical reports
+//!   and traces under every plan (extending `tests/heap_scan_c32.rs`
+//!   to degraded memory).
+//! * **Result invariance** — a faulted run returns exactly the clean
+//!   run's algorithm metrics and request counts; only cycles move,
+//!   and only upward.
+//! * **Determinism** — same plan, same seed, same report, bit for
+//!   bit; distinct seeds are distinct memo keys sharing one compiled
+//!   program.
+
+use graphmem::accel::AcceleratorKind;
+use graphmem::algo::problem::ProblemKind;
+use graphmem::dram::{FaultPlan, MemTech};
+use graphmem::graph::DatasetId;
+use graphmem::sim::{Session, SimSpec};
+use graphmem::trace::Region;
+
+fn plans() -> Vec<(&'static str, FaultPlan)> {
+    vec![
+        ("refresh_storm", FaultPlan::refresh_storm(0xA1)),
+        ("thermal_throttle", FaultPlan::thermal_throttle(0xB2)),
+        ("flaky_bus", FaultPlan::flaky_bus(0xC3)),
+        ("mixed", FaultPlan::mixed(0xD4)),
+    ]
+}
+
+fn spec_for(kind: AcceleratorKind, channels: usize, plan: Option<FaultPlan>) -> SimSpec {
+    SimSpec::builder()
+        .accelerator(kind)
+        .graph(DatasetId::Sd)
+        .problem(ProblemKind::Bfs)
+        .mem(if channels > 1 { MemTech::Hbm } else { MemTech::Ddr4 })
+        .channels(channels)
+        .faults(plan)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn heap_and_scan_stay_bit_identical_under_every_fault_plan() {
+    for (kind, ch) in [
+        (AcceleratorKind::HitGraph, 4),
+        (AcceleratorKind::AccuGraph, 1),
+        (AcceleratorKind::ThunderGp, 2),
+    ] {
+        for (name, plan) in plans() {
+            let spec = spec_for(kind, ch, Some(plan));
+            let (heap_report, heap_trace) = spec.run_traced();
+            let (scan_report, scan_trace) = spec.run_traced_scan();
+            assert_eq!(heap_report, scan_report, "{kind:?}/{name}: reports diverged");
+            assert_eq!(heap_trace, scan_trace, "{kind:?}/{name}: traces diverged");
+            assert!(
+                heap_report.dram.faults_injected > 0,
+                "{kind:?}/{name}: plan never fired"
+            );
+        }
+    }
+}
+
+#[test]
+fn faults_move_cycles_never_results() {
+    for (kind, ch) in [(AcceleratorKind::HitGraph, 4), (AcceleratorKind::AccuGraph, 1)] {
+        let clean = spec_for(kind, ch, None).run();
+        assert_eq!(clean.dram.faults_injected, 0);
+        assert_eq!(clean.dram.fault_delay_cycles, 0);
+        for (name, plan) in plans() {
+            let faulted = spec_for(kind, ch, Some(plan)).run();
+            assert!(
+                faulted.dram.faults_injected > 0 && faulted.dram.fault_delay_cycles > 0,
+                "{kind:?}/{name}: no faults recorded"
+            );
+            // Golden-result invariance: the algorithm cannot see the
+            // degraded memory, only the clock can.
+            assert_eq!(clean.metrics, faulted.metrics, "{kind:?}/{name}: metrics moved");
+            assert_eq!(
+                clean.dram.requests(),
+                faulted.dram.requests(),
+                "{kind:?}/{name}: request count moved"
+            );
+            for region in Region::all() {
+                assert_eq!(
+                    clean.dram.region_requests(region),
+                    faulted.dram.region_requests(region),
+                    "{kind:?}/{name}: {region} traffic moved"
+                );
+            }
+            assert!(
+                faulted.cycles >= clean.cycles,
+                "{kind:?}/{name}: faults sped the run up ({} < {})",
+                faulted.cycles,
+                clean.cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_reproduces_bit_identically() {
+    let a1 = spec_for(AcceleratorKind::HitGraph, 4, Some(FaultPlan::mixed(42)));
+    let a2 = spec_for(AcceleratorKind::HitGraph, 4, Some(FaultPlan::mixed(42)));
+    assert_eq!(a1, a2, "same plan, same spec identity");
+    assert_eq!(a1.run(), a2.run(), "same plan, same report");
+    assert_eq!(a1.run(), a1.run(), "replay is stable");
+    // A different seed is a different memo key over the same compiled
+    // program.
+    let b = spec_for(AcceleratorKind::HitGraph, 4, Some(FaultPlan::mixed(43)));
+    assert_ne!(a1, b);
+    assert_eq!(a1.program_key(), b.program_key());
+    assert!(b.run().dram.faults_injected > 0);
+}
+
+#[test]
+fn fault_axis_shares_compiled_programs_in_a_session() {
+    let session = Session::new();
+    let mut specs: Vec<SimSpec> = plans()
+        .into_iter()
+        .map(|(_, p)| spec_for(AcceleratorKind::HitGraph, 4, Some(p)))
+        .collect();
+    specs.push(spec_for(AcceleratorKind::HitGraph, 4, None));
+    let results = session.try_run_all(&specs);
+    assert!(results.iter().all(|r| r.is_ok()), "every plan must simulate");
+    let st = session.stats();
+    assert_eq!(st.sim_runs, 5, "each plan is its own memo entry");
+    assert_eq!(st.programs_compiled, 1, "fault plans share one compiled program");
+}

@@ -9,13 +9,14 @@ use graphmem::algo::golden::{run_golden, values_agree, Propagation};
 use graphmem::algo::problem::{GraphProblem, ProblemKind};
 use graphmem::dram::{ChannelMode, DramSpec, MemKind, MemRequest, MemorySystem};
 use graphmem::graph::edgelist::EdgeList;
+use graphmem::graph::io::{load_binary, parse_matrix_market, parse_text};
 use graphmem::graph::properties::bfs_levels;
 use graphmem::graph::Csr;
 use graphmem::partition::interval_shard::{stride_permutation, IntervalShardPartitioning};
 use graphmem::partition::{HorizontalPartitioning, VerticalPartitioning};
 use graphmem::sim::run_phase;
-use graphmem::trace::Region;
-use graphmem::util::proptest::check;
+use graphmem::trace::{parse_events, parse_meta, Region};
+use graphmem::util::proptest::{check, fuzz_bytes, no_panic};
 use graphmem::util::rng::Rng;
 
 fn random_graph(rng: &mut Rng, max_n: u64, max_m: u64) -> EdgeList {
@@ -380,4 +381,85 @@ fn prop_accelerators_converge_consistently() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Parser robustness: arbitrary bytes must error, never panic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_text_parser_never_panics() {
+    let fragments: &[&[u8]] = &[
+        b"0 1\n", b"1 2 3.5\n", b"# comment\n", b"\n", b"  ", b"-1 -2\n",
+        b"99999999999999999999 0\n", b"0", b"\xff\xfe", b"nan inf\n",
+    ];
+    check(0xF0D, 200, |rng| {
+        let bytes = fuzz_bytes(rng, 256, fragments);
+        no_panic(move || {
+            let _ = parse_text(bytes.as_slice(), true);
+        })
+    });
+}
+
+#[test]
+fn prop_matrix_market_parser_never_panics() {
+    let fragments: &[&[u8]] = &[
+        b"%%MatrixMarket matrix coordinate real general\n",
+        b"%%MatrixMarket matrix coordinate pattern symmetric\n",
+        b"% comment\n", b"3 3 3\n", b"1 2 0.5\n", b"0 0\n", b"1\n",
+        b"18446744073709551615 1 1\n", b"\xc3\x28", b"\n",
+    ];
+    check(0xF1D, 200, |rng| {
+        let bytes = fuzz_bytes(rng, 256, fragments);
+        no_panic(move || {
+            let _ = parse_matrix_market(bytes.as_slice());
+        })
+    });
+}
+
+#[test]
+fn prop_trace_reader_never_panics() {
+    // The trace reader consumes text lines; splice header fragments,
+    // valid-looking records and garbage. Lossy UTF-8 conversion
+    // mirrors what a reader pulling a corrupt file would feed it.
+    let fragments: &[&[u8]] = &[
+        b"# graphmem-trace v1\n", b"# dram ddr4 channels 1\n",
+        b"R 0 64 edges\n", b"W 12 128 vertices\n", b"R x y z\n",
+        b"0,1,2,3\n", b"\n", b"R 18446744073709551615 0 updates\n", b"\xf0\x9f",
+    ];
+    check(0xF2D, 200, |rng| {
+        let bytes = fuzz_bytes(rng, 256, fragments);
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        no_panic(move || {
+            let _ = parse_meta(&text);
+            let _ = parse_events(&text);
+        })
+    });
+}
+
+#[test]
+fn prop_binary_loader_never_panics() {
+    // Raw bytes through the GMEL binary path: magic + bogus headers,
+    // truncations, huge counts. Goes through a temp file because the
+    // loader's entry point is path-based.
+    let dir = std::env::temp_dir().join("graphmem_prop_fuzz");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("fuzz_{}.bin", std::process::id()));
+    let fragments: &[&[u8]] = &[
+        b"GMEL",
+        &10u64.to_le_bytes(),
+        &u64::MAX.to_le_bytes(),
+        &0u32.to_le_bytes(),
+        &3u32.to_le_bytes(),
+        b"\x00\x00\x00\x00\x00\x00\x00\x00",
+    ];
+    check(0xF3D, 120, |rng| {
+        let bytes = fuzz_bytes(rng, 96, fragments);
+        std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+        let p = path.clone();
+        no_panic(move || {
+            let _ = load_binary(&p);
+        })
+    });
+    let _ = std::fs::remove_file(&path);
 }
