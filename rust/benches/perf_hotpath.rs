@@ -33,6 +33,11 @@
 //!   `SimError`, that faults actually fired, and that injection moves
 //!   cycles upward without touching results. CI's bench-smoke greps
 //!   `sim_errors` and `faults_injected`.
+//! * Durable-cache restart (`serve.cold_vs_warm.{cold,warm}`): one
+//!   figure-grade spec set simulated and written through a disk-backed
+//!   session, then re-served by a fresh session over the same cache
+//!   directory — the warm pass is asserted bit-identical with zero
+//!   executed simulations. CI's bench-smoke greps `disk_cache_hits`.
 //! * Golden engines: native vs XLA/PJRT per-iteration latency.
 //!
 //! Output: human-readable lines on stdout, plus machine-readable JSON
@@ -734,6 +739,99 @@ fn bench_robust_faults(rep: &mut Reporter) {
     );
 }
 
+/// Durable-cache restart latency (`serve.cold_vs_warm`, the PR-9
+/// tentpole's headline number): the same figure-grade spec set through
+/// a cold session (simulate + write-through) and then a fresh session
+/// over the same cache directory, as a daemon restart would see it.
+/// In-run asserts pin the contract: the warm pass adopts every report
+/// from disk bit-identically and executes zero simulations
+/// (`sim_runs == disk_hits`). CI's bench-smoke greps
+/// `disk_cache_hits` so the disk layer cannot silently stop hitting.
+fn bench_serve_cold_vs_warm(rep: &mut Reporter) {
+    use graphmem::persist::CacheDir;
+    use std::sync::Arc;
+
+    let pid = std::process::id();
+    let root = std::env::temp_dir().join(format!("graphmem-bench-serve-{pid}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let scale = if quick_scope() { 9 } else { 12 };
+    let g = generate(RmatParams::graph500(scale, 8, 0x5E12));
+    let specs: Vec<SimSpec> = [AcceleratorKind::HitGraph, AcceleratorKind::ThunderGp]
+        .into_iter()
+        .flat_map(|k| {
+            [ProblemKind::Bfs, ProblemKind::PageRank].into_iter().map(move |p| (k, p))
+        })
+        .map(|(k, p)| {
+            SimSpec::builder()
+                .accelerator(k)
+                .workload(Workload::custom("serve-bench", g.clone()))
+                .problem(p)
+                .config(AcceleratorConfig::all_optimizations())
+                .build()
+                .expect("bench specs are valid")
+        })
+        .collect();
+
+    let cold = Session::new()
+        .with_disk_cache(Arc::new(CacheDir::new(&root).expect("temp cache dir")));
+    let mut cold_reports = Vec::with_capacity(specs.len());
+    let dt_cold = time(|| {
+        for s in &specs {
+            cold_reports.push(cold.run(s));
+        }
+    });
+    let st = cold.stats();
+    assert_eq!(st.disk_writes, specs.len(), "cold pass writes every entry through");
+    let requests: u64 = cold_reports.iter().map(|r| r.dram.requests()).sum();
+    rep.record_with(
+        "serve.cold_vs_warm.cold",
+        requests,
+        dt_cold,
+        0,
+        vec![
+            ("disk_cache_hits", st.disk_hits as u64),
+            ("disk_cache_writes", st.disk_writes as u64),
+            ("executed_sims", (st.sim_runs - st.disk_hits) as u64),
+        ],
+    );
+
+    // The restart: a fresh session (empty memo) over the same files.
+    let warm = Session::new()
+        .with_disk_cache(Arc::new(CacheDir::new(&root).expect("temp cache dir")));
+    let mut warm_reports = Vec::with_capacity(specs.len());
+    let dt_warm = time(|| {
+        for s in &specs {
+            warm_reports.push(warm.run(s));
+        }
+    });
+    assert_eq!(warm_reports, cold_reports, "disk answers are bit-identical");
+    let st = warm.stats();
+    assert_eq!(
+        st.sim_runs, st.disk_hits,
+        "warm identity: the restarted session executed zero simulations"
+    );
+    assert!(st.disk_hits >= 1, "the disk cache must actually hit");
+    rep.record_with(
+        "serve.cold_vs_warm.warm",
+        requests,
+        dt_warm,
+        0,
+        vec![
+            ("disk_cache_hits", st.disk_hits as u64),
+            ("disk_cache_writes", st.disk_writes as u64),
+            ("executed_sims", (st.sim_runs - st.disk_hits) as u64),
+        ],
+    );
+    println!(
+        "serve.cold_vs_warm: cold {:.3}s, warm {:.3}s ({:.0}x) over {} specs",
+        dt_cold,
+        dt_warm,
+        dt_cold / dt_warm.max(1e-12),
+        specs.len()
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 fn bench_engines(rep: &mut Reporter) {
     let scale = if quick_scope() { 9 } else { 11 };
     let g = generate(RmatParams::graph500(scale, 12, 42));
@@ -789,6 +887,7 @@ fn main() {
     bench_advisor(&mut rep);
     bench_regraph_c32(&mut rep);
     bench_robust_faults(&mut rep);
+    bench_serve_cold_vs_warm(&mut rep);
     bench_engines(&mut rep);
     rep.flush(json_path.as_deref());
 }

@@ -104,6 +104,39 @@ pub enum Optimization {
     ChunkScheduling,
 }
 
+impl Optimization {
+    /// Stable serialization name (used by `crate::persist`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Optimization::PrefetchSkipping => "PrefetchSkipping",
+            Optimization::PartitionSkipping => "PartitionSkipping",
+            Optimization::EdgeShuffling => "EdgeShuffling",
+            Optimization::ShardSkipping => "ShardSkipping",
+            Optimization::StrideMapping => "StrideMapping",
+            Optimization::EdgeSorting => "EdgeSorting",
+            Optimization::UpdateCombining => "UpdateCombining",
+            Optimization::UpdateFiltering => "UpdateFiltering",
+            Optimization::ChunkScheduling => "ChunkScheduling",
+        }
+    }
+
+    /// Inverse of [`Optimization::name`] (case-insensitive).
+    pub fn parse(s: &str) -> Option<Optimization> {
+        match s.to_ascii_lowercase().as_str() {
+            "prefetchskipping" => Some(Optimization::PrefetchSkipping),
+            "partitionskipping" => Some(Optimization::PartitionSkipping),
+            "edgeshuffling" => Some(Optimization::EdgeShuffling),
+            "shardskipping" => Some(Optimization::ShardSkipping),
+            "stridemapping" => Some(Optimization::StrideMapping),
+            "edgesorting" => Some(Optimization::EdgeSorting),
+            "updatecombining" => Some(Optimization::UpdateCombining),
+            "updatefiltering" => Some(Optimization::UpdateFiltering),
+            "chunkscheduling" => Some(Optimization::ChunkScheduling),
+            _ => None,
+        }
+    }
+}
+
 /// Full accelerator configuration.
 ///
 /// Derives `Hash`/`Eq` so memoization keys (see

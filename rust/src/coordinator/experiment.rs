@@ -13,8 +13,8 @@ use crate::dram::MemTech;
 use crate::trace::Region;
 use crate::graph::datasets::DatasetId;
 use crate::graph::properties::GraphProperties;
-use crate::report::Table;
-use crate::sim::{Session, SimReport, SimSpec, Sweep};
+use crate::report::{failure_table, Table};
+use crate::sim::{Session, SimReport, SimSpec, Sweep, SweepOutcome, SweepTrial};
 use crate::util::stats;
 use anyhow::{anyhow, Result};
 
@@ -235,6 +235,20 @@ fn prefetch(session: &Session, sweep: &Sweep) -> Result<()> {
 const PROBLEMS_FIG8: [ProblemKind; 3] =
     [ProblemKind::Bfs, ProblemKind::PageRank, ProblemKind::Wcc];
 
+/// The paper's core figure matrix (Fig. 8 / Tab. 4, whose BFS column
+/// also feeds Figs. 2, 9, 10 and 14): every accelerator × every graph
+/// in `scope` × BFS/PR/WCC on DDR4 single-channel, all optimizations.
+/// `graphmem serve --warm` precompiles exactly this set so a fresh
+/// daemon answers figure-grade requests without first-touch latency.
+pub fn figure_matrix_specs(scope: Scope) -> Result<Vec<SimSpec>> {
+    Ok(Sweep::new()
+        .accelerators(AcceleratorKind::all())
+        .graphs(scope.graphs())
+        .problems(PROBLEMS_FIG8)
+        .configs([all_opt()])
+        .specs()?)
+}
+
 // ---------------------------------------------------------------------------
 // Fig. 8 / Tab. 4 — MTEPS (and runtimes) on DDR4 single-channel
 // ---------------------------------------------------------------------------
@@ -294,10 +308,25 @@ fn fig08(session: &Session, scope: Scope) -> Result<Vec<Table>> {
 fn fig02(session: &Session, scope: Scope) -> Result<Vec<Table>> {
     let cfg = all_opt();
     let graphs = scope.graphs();
+    // Only systems with published Tab. 4 rows can be shape-compared;
+    // the rest (ReGraph) are excluded with a typed failure row instead
+    // of aborting the whole experiment.
+    let probe_graph = *graphs.first().ok_or_else(|| anyhow!("empty scope"))?;
+    let mut kinds = Vec::new();
+    let mut excluded = Vec::new();
+    for kind in AcceleratorKind::all() {
+        match paper::tab4_runtime_checked(kind, probe_graph, ProblemKind::Bfs) {
+            Ok(_) => kinds.push(kind),
+            Err(err) => excluded.push(SweepTrial {
+                spec: spec(kind, probe_graph, ProblemKind::Bfs, MemTech::Ddr4, 1, &cfg)?,
+                outcome: SweepOutcome::Failed(err),
+            }),
+        }
+    }
     prefetch(
         session,
         &Sweep::new()
-            .accelerators(AcceleratorKind::all())
+            .accelerators(kinds.iter().copied())
             .graphs(graphs.clone())
             .problems(PROBLEMS_FIG8)
             .configs([cfg.clone()]),
@@ -307,16 +336,15 @@ fn fig02(session: &Session, scope: Scope) -> Result<Vec<Table>> {
         &["accelerator", "BFS", "PR", "WCC", "mean"],
     );
     // errs[kind][problem] -> Vec of per-graph share errors
-    let kinds = AcceleratorKind::all();
     let mut errs = vec![vec![Vec::new(); PROBLEMS_FIG8.len()]; kinds.len()];
     for g in &graphs {
         for (pi, problem) in PROBLEMS_FIG8.iter().enumerate() {
             let mut ours = Vec::new();
             let mut theirs = Vec::new();
-            for kind in kinds {
+            for &kind in &kinds {
                 let r = sim(session, kind, *g, *problem, MemTech::Ddr4, 1, &cfg)?;
-                let p = paper::tab4_runtime(kind, *g, *problem)
-                    .ok_or_else(|| anyhow!("no paper number for {kind:?} {g}"))?;
+                let p = paper::tab4_runtime_checked(kind, *g, *problem)
+                    .map_err(|e| anyhow!("{e}"))?;
                 ours.push(r.seconds);
                 theirs.push(p);
             }
@@ -355,7 +383,14 @@ fn fig02(session: &Session, scope: Scope) -> Result<Vec<Table>> {
         "Dann et al. (Fig. 2)".into(),
         format!("{:.2}", paper::PAPER_MEAN_ERROR_PCT),
     ]);
-    Ok(vec![t, note])
+    let mut tables = vec![t, note];
+    // Excluded systems surface through the standard failure path, one
+    // typed row each, instead of silently vanishing (or, before this,
+    // aborting the whole figure with an anyhow error).
+    if let Some(excl) = failure_table(&excluded) {
+        tables.push(excl);
+    }
+    Ok(tables)
 }
 
 // ---------------------------------------------------------------------------

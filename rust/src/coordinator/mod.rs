@@ -26,5 +26,5 @@
 pub mod experiment;
 pub mod paper;
 
-pub use experiment::{run_experiment, Experiment, Scope};
+pub use experiment::{figure_matrix_specs, run_experiment, Experiment, Scope};
 pub use crate::sim::{Session, SimSpec, Sweep};

@@ -69,6 +69,19 @@
 //!   per-spec outcomes instead of crashing; [`dram::FaultPlan`] is the
 //!   matching seeded fault injector that perturbs DRAM timing to prove
 //!   the engine livelock-free under degraded memory.
+//! * [`persist`] — versioned, checksummed text serialization for
+//!   [`sim::SimSpec`] / [`sim::SimReport`] / [`robust::SimError`]
+//!   (bit-identical round trips, no serde) plus the atomic-write
+//!   disk cache [`persist::CacheDir`] layered under [`sim::Session`]:
+//!   warm reports and failure memos survive restarts and are shared
+//!   across processes. Spec serialization also yields reproducible
+//!   sweep manifests (`graphmem sweep --manifest/--from-manifest`).
+//! * [`serve`] — the simulator as a long-running shared service:
+//!   `graphmem serve` speaks a line-delimited TCP protocol with
+//!   bounded in-flight admission (typed `busy` back-pressure),
+//!   per-request [`robust::RunBudget`] caps, panic isolation, disk
+//!   cache durability and drain-then-exit shutdown; `graphmem submit`
+//!   is the retrying client with an advisor-estimate degraded mode.
 //!
 //! # Quick start
 //!
@@ -101,9 +114,11 @@ pub mod engine;
 pub mod graph;
 pub mod onchip;
 pub mod partition;
+pub mod persist;
 pub mod report;
 pub mod robust;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod trace;
 pub mod util;

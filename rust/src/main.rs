@@ -12,6 +12,11 @@
 //!                                recommendation (partitioning / placement / on-chip)
 //!   report --exp <id>            regenerate a figure/table (options: --scope, --csv)
 //!   verify <graph> <prob>        golden-engine cross-check (native vs XLA/PJRT)
+//!   serve                        crash-safe simulation daemon with a durable disk
+//!                                cache (--listen, --cache-dir, --max-inflight,
+//!                                --max-cycles/--max-requests/--wall-timeout-ms, --warm)
+//!   submit <accel> <graph> <prob>  submit one run to a daemon, with retry/backoff
+//!                                and an opt-in --degraded advisor-estimate fallback
 //!
 //! All argument parsing goes through the typed `FromStr` impls
 //! (`AcceleratorKind`, `DatasetId`, `ProblemKind`, `MemTech`) and into
@@ -30,15 +35,19 @@ use graphmem::engine::{AlgorithmEngine, NativeEngine, XlaEngine};
 use graphmem::graph::rmat::{self, RmatParams};
 use graphmem::graph::{datasets, properties::GraphProperties, DatasetId};
 use graphmem::onchip::OnChipConfig;
+use graphmem::persist::{builtin_graphs, parse_manifest_with, write_manifest};
 use graphmem::report::{
     advice_table, failure_details, failure_table, onchip_table, pattern_tables, rationale_lines,
     Table,
 };
+use graphmem::robust::RunBudget;
+use graphmem::serve::{Client, Server, ServerConfig, SubmitOutcome};
 use graphmem::sim::{Session, SimSpec, SpecError, Sweep, SweepOutcome, SweepTrial, Workload};
 use graphmem::trace::{
     parse_events, parse_meta, write_events, write_meta, AccessPatternAnalyzer, TraceMeta,
 };
 use std::str::FromStr;
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -80,6 +89,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("advise") => cmd_advise(&args[1..]),
         Some("report") => cmd_report(&args[1..]),
         Some("verify") => cmd_verify(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("submit") => cmd_submit(&args[1..]),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -96,7 +107,10 @@ fn print_help() {
          graphmem run <accel> <graph> <problem> [--dram ddr3|ddr4|hbm|hbm2] [--channels N] [--no-opt]\n  \
          graphmem sweep [--accels a,b,..] [--graphs g,..] [--problems p,..] [--drams d,..]\n  \
          \x20            [--channels n,..] [--threads N] [--no-opt] [--skip-unsupported] [--stats]\n  \
-         \x20            [--keep-going|--fail-fast]\n  \
+         \x20            [--keep-going|--fail-fast] [--manifest FILE] [--from-manifest FILE]\n  \
+         \x20            (--manifest writes the expanded run plan to FILE; --from-manifest\n  \
+         \x20             replays a previously written plan bit-identically instead of\n  \
+         \x20             expanding the axis flags)\n  \
          \x20            (--stats prints the session's cache summary: phase programs\n  \
          \x20             compiled/reused, sim runs executed/memoized; failed points are\n  \
          \x20             isolated and tabulated by default [--keep-going] — --fail-fast\n  \
@@ -116,7 +130,20 @@ fn print_help() {
          \x20             placement / on-chip recommendation with per-choice rationale;\n  \
          \x20             graphs above N edges are sampled before probing)\n  \
          graphmem report --exp <id|all> [--scope quick|standard|full] [--csv]\n  \
-         graphmem verify <graph> <problem> [--max-iters N]\n\n\
+         graphmem verify <graph> <problem> [--max-iters N]\n  \
+         graphmem serve [--listen ADDR] [--cache-dir DIR] [--max-inflight N] [--retry-after-ms N]\n  \
+         \x20            [--max-cycles N] [--max-requests N] [--wall-timeout-ms N] [--warm]\n  \
+         \x20            (line-protocol daemon; --cache-dir makes reports and failure memos\n  \
+         \x20             durable across restarts, the --max-* flags cap every admitted run,\n  \
+         \x20             --warm precompiles the quick-scope figure matrix; stop it with\n  \
+         \x20             `graphmem submit --shutdown`)\n  \
+         graphmem submit <accel> <graph> <problem> [--addr ADDR] [--dram d] [--channels N]\n  \
+         \x20            [--no-opt] [--degraded] [--retries N] [--max-cycles N] [--max-requests N]\n  \
+         \x20            [--wall-timeout-ms N]\n  \
+         graphmem submit --ping|--stats|--shutdown|--boom [--addr ADDR]\n  \
+         \x20            (client with exponential-backoff retries on BUSY/connect failure;\n  \
+         \x20             --degraded answers budget-exceeded runs with the advisor's\n  \
+         \x20             probe-based estimate, clearly marked)\n\n\
          accel: accugraph|foregraph|hitgraph|thundergp|regraph   problem: bfs|pr|wcc|sssp|spmv\n\
          graph: any Tab. 2 name (see `graphmem list`) or rmat-small (synthetic quick-analysis graph)"
     );
@@ -280,11 +307,6 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     if has_flag(args, "--skip-unsupported") {
         sweep = sweep.skip_unsupported();
     }
-    if let Some(t) = flag_value(args, "--threads") {
-        sweep = sweep.threads(t.parse()?);
-    }
-    let session = Session::new();
-    let t0 = std::time::Instant::now();
     // Translate internal axis names into the flags this command exposes.
     let axis_error = |e: SpecError| match e {
         SpecError::EmptyAxis(axis) => {
@@ -300,11 +322,33 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         }
         other => anyhow!("{other}"),
     };
+    // The run plan is an explicit spec list either way: expanded from
+    // the axis flags, or replayed bit-identically from a manifest
+    // written by an earlier `--manifest` run (synthetic graphs are
+    // resolved by name through `persist::builtin_graphs`).
+    let specs: Vec<SimSpec> = match flag_value(args, "--from-manifest") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("cannot read manifest {path}: {e}"))?;
+            parse_manifest_with(&text, Some(&builtin_graphs))
+                .map_err(|e| anyhow!("{path}: {e}"))?
+        }
+        None => sweep.specs().map_err(axis_error)?,
+    };
+    if let Some(path) = flag_value(args, "--manifest") {
+        std::fs::write(path, write_manifest(&specs))
+            .map_err(|e| anyhow!("cannot write manifest {path}: {e}"))?;
+        eprintln!("wrote {} spec(s) to {path}", specs.len());
+    }
+    let mut session = Session::new();
+    if let Some(t) = flag_value(args, "--threads") {
+        session = session.with_threads(t.parse()?);
+    }
+    let t0 = std::time::Instant::now();
     // Failure handling: by default every point runs to an outcome
     // (--keep-going) and failures are tabulated afterwards;
     // --fail-fast aborts serially at the first failed point instead.
     let trials: Vec<SweepTrial> = if has_flag(args, "--fail-fast") {
-        let specs = sweep.specs().map_err(axis_error)?;
         let mut trials = Vec::with_capacity(specs.len());
         for spec in specs {
             match session.try_run(&spec) {
@@ -320,7 +364,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         }
         trials
     } else {
-        sweep.run_outcomes_with(&session).map_err(axis_error)?
+        session.run_trials(&specs)
     };
     let wall = t0.elapsed().as_secs_f64();
     let mut t = Table::new(
@@ -351,12 +395,15 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     if has_flag(args, "--stats") {
         let st = session.stats();
         println!(
-            "cache: programs {} compiled / {} reused; sim runs {} executed / {} memoized / {} duplicate-waits",
+            "cache: programs {} compiled / {} reused; sim runs {} executed / {} memoized / {} \
+             duplicate-waits; disk {} hits / {} writes",
             st.programs_compiled,
             st.programs_reused,
-            st.sim_runs,
+            st.sim_runs - st.disk_hits,
             st.memo_hits,
-            st.duplicate_waits
+            st.duplicate_waits,
+            st.disk_hits,
+            st.disk_writes
         );
     }
     let failed = trials.iter().filter(|t| !t.outcome.is_ok()).count();
@@ -375,19 +422,23 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
 /// A CLI workload: any Tab. 2 dataset name, or the `rmat-small` alias
 /// (a scale-10, edge-factor-8 Graph500 R-MAT — small enough for
 /// instant pattern analysis). Weighted problems get deterministic
-/// random weights, like the named datasets.
+/// random weights, like the named datasets — under the distinct name
+/// `rmat-small-w`, so the two variants (different edge digests) never
+/// collide in manifests or the serve daemon's name-keyed resolver
+/// (`graphmem::persist::builtin_graphs`).
 fn parse_workload(name: &str, weighted: bool) -> Result<Workload> {
     if let Ok(id) = name.parse::<DatasetId>() {
         return Ok(Workload::Named(id));
     }
     match name.to_ascii_lowercase().as_str() {
-        "rmat-small" => {
-            let mut g = rmat::generate(RmatParams::graph500(10, 8, 0x5A));
-            if weighted {
-                g = g.with_random_weights(0x77EE, 64.0);
-            }
-            Ok(Workload::custom("rmat-small", g))
-        }
+        "rmat-small" if !weighted => Ok(Workload::custom(
+            "rmat-small",
+            rmat::generate(RmatParams::graph500(10, 8, 0x5A)),
+        )),
+        "rmat-small" | "rmat-small-w" => Ok(Workload::custom(
+            "rmat-small-w",
+            rmat::generate(RmatParams::graph500(10, 8, 0x5A)).with_random_weights(0x77EE, 64.0),
+        )),
         _ => bail!(
             "unknown graph {name:?} (expected one of: {} or rmat-small)",
             datasets::dataset_names().join(" ")
@@ -402,7 +453,9 @@ fn parse_workload(name: &str, weighted: bool) -> Result<Workload> {
 fn spec_from_args(args: &[String], patterns: bool) -> Result<SimSpec> {
     let (accel, graph, problem) = match (args.first(), args.get(1), args.get(2)) {
         (Some(a), Some(g), Some(p)) => (a, g, p),
-        _ => bail!("usage: graphmem <trace|analyze|advise> <accel> <graph> <problem> [options]"),
+        _ => bail!(
+            "usage: graphmem <trace|analyze|advise|submit> <accel> <graph> <problem> [options]"
+        ),
     };
     let kind: AcceleratorKind = parse_arg(accel)?;
     let problem: ProblemKind = parse_arg(problem)?;
@@ -699,5 +752,139 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         Ok(())
     } else {
         bail!("VERIFY FAILED — engines diverge");
+    }
+}
+
+/// Shared `--max-cycles` / `--max-requests` / `--wall-timeout-ms`
+/// parsing for `serve` (admission cap) and `submit` (per-spec budget).
+fn budget_from_args(args: &[String]) -> Result<Option<RunBudget>> {
+    let max_cycles: Option<u64> = flag_value(args, "--max-cycles")
+        .map(|v| v.parse().map_err(|e| anyhow!("bad --max-cycles {v:?}: {e}")))
+        .transpose()?;
+    let max_requests: Option<u64> = flag_value(args, "--max-requests")
+        .map(|v| v.parse().map_err(|e| anyhow!("bad --max-requests {v:?}: {e}")))
+        .transpose()?;
+    let wall_deadline: Option<Duration> = flag_value(args, "--wall-timeout-ms")
+        .map(|v| v.parse().map_err(|e| anyhow!("bad --wall-timeout-ms {v:?}: {e}")))
+        .transpose()?
+        .map(Duration::from_millis);
+    if max_cycles.is_none() && max_requests.is_none() && wall_deadline.is_none() {
+        return Ok(None);
+    }
+    Ok(Some(RunBudget {
+        max_cycles,
+        max_requests,
+        wall_deadline,
+    }))
+}
+
+/// `graphmem serve`: bind the crash-safe simulation daemon and run it
+/// until a `SHUTDOWN` request drains it. The "listening on" line is
+/// flushed eagerly so supervisors (and the CI smoke job) can block on
+/// it even through a pipe.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let listen = flag_value(args, "--listen").unwrap_or("127.0.0.1:7421");
+    let defaults = ServerConfig::default();
+    let cfg = ServerConfig {
+        max_inflight: match flag_value(args, "--max-inflight") {
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("bad --max-inflight {v:?}: {e}"))?,
+            None => defaults.max_inflight,
+        },
+        retry_after_ms: match flag_value(args, "--retry-after-ms") {
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("bad --retry-after-ms {v:?}: {e}"))?,
+            None => defaults.retry_after_ms,
+        },
+        admission: budget_from_args(args)?,
+        cache_dir: flag_value(args, "--cache-dir").map(std::path::PathBuf::from),
+        warm: has_flag(args, "--warm"),
+        ..defaults
+    };
+    let server = Server::bind(listen, cfg)?;
+    let addr = server.local_addr()?;
+    println!("listening on {addr}");
+    {
+        use std::io::Write;
+        std::io::stdout().flush()?;
+    }
+    let stats = server.run()?;
+    eprintln!(
+        "served {} request(s): {} busy-rejected, {} sim failures, {} cache hits, {} degraded \
+         replies",
+        stats.requests,
+        stats.busy_rejections,
+        stats.sim_failures,
+        stats.cache_hits,
+        stats.degraded_replies
+    );
+    Ok(())
+}
+
+/// `graphmem submit`: one request to a running daemon, with the
+/// client's retry/backoff handling `BUSY` and connection failures.
+/// Failed simulations exit non-zero — the same contract as `run`.
+fn cmd_submit(args: &[String]) -> Result<()> {
+    let addr = flag_value(args, "--addr").unwrap_or("127.0.0.1:7421");
+    let mut client = Client::new(addr);
+    if let Some(r) = flag_value(args, "--retries") {
+        client = client.with_max_attempts(
+            r.parse().map_err(|e| anyhow!("bad --retries {r:?}: {e}"))?,
+        );
+    }
+    if has_flag(args, "--ping") {
+        client.ping()?;
+        println!("pong");
+        return Ok(());
+    }
+    if has_flag(args, "--stats") {
+        for (k, v) in client.stats()? {
+            println!("{k}={v}");
+        }
+        return Ok(());
+    }
+    if has_flag(args, "--shutdown") {
+        client.shutdown()?;
+        println!("shutting down");
+        return Ok(());
+    }
+    if has_flag(args, "--boom") {
+        let err = client.boom()?;
+        println!("daemon survived an injected panic: {err}");
+        return Ok(());
+    }
+    let mut spec = spec_from_args(args, false)?;
+    if let Some(budget) = budget_from_args(args)? {
+        spec = spec.with_budget(Some(budget));
+    }
+    match client.submit(&spec, has_flag(args, "--degraded"))? {
+        SubmitOutcome::Report { report, cache_hit } => {
+            println!("cache_hit={cache_hit}");
+            println!("{}", report.summary());
+            println!(
+                "  cycles={} requests={} bytes={}",
+                report.cycles,
+                report.dram.requests(),
+                report.bytes_total
+            );
+            Ok(())
+        }
+        SubmitOutcome::Degraded(est) => {
+            println!("degraded=true (budget exceeded; advisor probe estimate, not a simulation)");
+            println!(
+                "  probe={}{} requests={} predicted_cycles={:.0} partitions={} channels={}",
+                est.probe_label,
+                if est.probe_sampled { " (sampled)" } else { "" },
+                est.probe_requests,
+                est.predicted_cycles,
+                est.partitions,
+                est.channels
+            );
+            println!("  rationale: {}", est.rationale);
+            Ok(())
+        }
+        SubmitOutcome::Failed(err) => bail!("simulation failed: {err}"),
     }
 }

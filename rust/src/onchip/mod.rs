@@ -233,6 +233,26 @@ pub struct OnChipStats {
 }
 
 impl OnChipStats {
+    /// Rebuild stats from serialized counters — the inverse of reading
+    /// the per-region accessors in `Region::all()` order. Stored
+    /// verbatim, so a round trip through `crate::persist` is
+    /// structurally equal to the original.
+    pub fn from_parts(
+        hits: [u64; Region::COUNT],
+        misses: [u64; Region::COUNT],
+        fills: [u64; Region::COUNT],
+        evictions: u64,
+        capacity_lines: u64,
+    ) -> OnChipStats {
+        OnChipStats {
+            hits,
+            misses,
+            fills,
+            evictions,
+            capacity_lines,
+        }
+    }
+
     pub fn region_hits(&self, r: Region) -> u64 {
         self.hits[r.index()]
     }

@@ -1,0 +1,210 @@
+//! Disk-backed result cache: one checksummed text file per memoized
+//! `(SimSpec → Result<SimReport, SimError>)` entry, written atomically
+//! (`tmp` + `rename`) so concurrent writers and crashes can never tear
+//! an entry. Layered under [`crate::sim::Session`] via
+//! [`Session::with_disk_cache`](crate::sim::Session::with_disk_cache),
+//! it makes warm reports and failure memos survive restarts and lets
+//! separate processes (CI runs, serve daemons) share one cache.
+//!
+//! Load is *total*: a missing, truncated, bit-flipped, foreign-version
+//! or hash-colliding file reads as a **miss** — the caller recomputes
+//! and rewrites, and correctness never depends on the cache's health.
+
+use super::{fnv1a, parse_entry, render_entry, spec_to_line};
+use crate::robust::SimError;
+use crate::sim::{SimReport, SimSpec};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// File extension of cache entries (anything else in the directory is
+/// ignored, including abandoned temp files).
+const ENTRY_EXT: &str = "gmc";
+
+/// A directory of durable simulation results.
+#[derive(Debug)]
+pub struct CacheDir {
+    root: PathBuf,
+    /// Distinguishes concurrent temp files within one process; the
+    /// pid distinguishes processes.
+    seq: AtomicU64,
+}
+
+impl CacheDir {
+    /// Open (creating if needed) a cache rooted at `root`.
+    pub fn new(root: impl Into<PathBuf>) -> io::Result<CacheDir> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(CacheDir { root, seq: AtomicU64::new(0) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Where `spec`'s entry lives: the filename is the FNV-1a hash of
+    /// the canonical spec line, so equal specs map to one file across
+    /// processes. Collisions are survivable — `load` verifies the
+    /// stored spec line and treats a mismatch as a miss.
+    pub fn entry_path(&self, spec: &SimSpec) -> PathBuf {
+        let hash = fnv1a(spec_to_line(spec).as_bytes());
+        self.root.join(format!("r{hash:016x}.{ENTRY_EXT}"))
+    }
+
+    /// Fetch `spec`'s memoized result, or `None` on any miss:
+    /// no file, unreadable file, checksum/version/parse failure, or a
+    /// filename collision with a different spec. Never panics and
+    /// never returns a result for the wrong spec.
+    pub fn load(&self, spec: &SimSpec) -> Option<Result<SimReport, SimError>> {
+        let text = fs::read_to_string(self.entry_path(spec)).ok()?;
+        let (stored_line, result) = parse_entry(&text).ok()?;
+        if stored_line != spec_to_line(spec) {
+            return None;
+        }
+        Some(result)
+    }
+
+    /// True iff a valid entry for `spec` is on disk.
+    pub fn contains(&self, spec: &SimSpec) -> bool {
+        self.load(spec).is_some()
+    }
+
+    /// Durably store `spec`'s result. Atomic: the entry is rendered
+    /// into a uniquely named temp file in the same directory and
+    /// `rename`d over the final path, so readers see either the old
+    /// entry or the new one, never a torn write. A failed store is
+    /// reported but harmless — the cache just stays cold for this key.
+    pub fn store(
+        &self,
+        spec: &SimSpec,
+        result: &Result<SimReport, SimError>,
+    ) -> io::Result<PathBuf> {
+        let body = render_entry(spec, result);
+        let path = self.entry_path(spec);
+        let tmp = self.root.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            self.seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, body)?;
+        match fs::rename(&tmp, &path) {
+            Ok(()) => Ok(path),
+            Err(e) => {
+                // Don't leave the temp file behind on a failed rename.
+                let _ = fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    /// Number of entry files currently on disk (valid or not) —
+    /// diagnostics only.
+    pub fn len(&self) -> usize {
+        let Ok(dir) = fs::read_dir(&self.root) else {
+            return 0;
+        };
+        dir.filter_map(|e| e.ok())
+            .filter(|e| {
+                e.path().extension().map(|x| x == ENTRY_EXT).unwrap_or(false)
+            })
+            .count()
+    }
+
+    /// True iff no entry files are on disk.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AcceleratorKind;
+    use crate::algo::problem::ProblemKind;
+    use crate::graph::datasets::DatasetId;
+    use std::fs;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let root = std::env::temp_dir().join(format!(
+            "graphmem-cachedir-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&root);
+        root
+    }
+
+    fn spec() -> SimSpec {
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::HitGraph)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::Bfs)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn store_load_round_trip_and_miss_semantics() {
+        let root = tmp_root("roundtrip");
+        let cache = CacheDir::new(&root).unwrap();
+        let s = spec();
+        assert!(cache.load(&s).is_none(), "cold cache misses");
+        assert!(cache.is_empty());
+
+        let report = s.run();
+        cache.store(&s, &Ok(report.clone())).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert!(cache.contains(&s));
+        assert_eq!(cache.load(&s).unwrap().unwrap(), report, "bit-identical");
+
+        // A second cache on the same root shares the entry (restart /
+        // cross-process durability).
+        let other = CacheDir::new(&root).unwrap();
+        assert_eq!(other.load(&s).unwrap().unwrap(), report);
+
+        // Overwrite in place keeps exactly one file.
+        cache.store(&s, &Ok(report.clone())).unwrap();
+        assert_eq!(cache.len(), 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupt_entries_read_as_misses() {
+        let root = tmp_root("corrupt");
+        let cache = CacheDir::new(&root).unwrap();
+        let s = spec();
+        let path = cache.store(&s, &Ok(s.run())).unwrap();
+
+        // Truncation.
+        let full = fs::read_to_string(&path).unwrap();
+        fs::write(&path, &full[..full.len() / 3]).unwrap();
+        assert!(cache.load(&s).is_none(), "truncated entry is a miss");
+
+        // Bit flip.
+        let mut bytes = full.clone().into_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x04;
+        fs::write(&path, &bytes).unwrap();
+        assert!(cache.load(&s).is_none(), "bit-flipped entry is a miss");
+
+        // Version mismatch.
+        fs::write(&path, full.replace("graphmem-cache v1", "graphmem-cache v0")).unwrap();
+        assert!(cache.load(&s).is_none(), "foreign version is a miss");
+
+        // Recompute-and-rewrite heals the entry.
+        cache.store(&s, &Ok(s.run())).unwrap();
+        assert_eq!(cache.load(&s).unwrap().unwrap(), s.run());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn failure_memos_persist_too() {
+        let root = tmp_root("failure");
+        let cache = CacheDir::new(&root).unwrap();
+        let s = spec();
+        let err = SimError::Panicked { message: "model bug".to_string() };
+        cache.store(&s, &Err(err.clone())).unwrap();
+        assert_eq!(cache.load(&s).unwrap().unwrap_err(), err);
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,1389 @@
+//! Durable, versioned, checksummed text serialization for the sim
+//! types — plus the disk-backed result cache ([`CacheDir`]) layered
+//! under [`crate::sim::Session`].
+//!
+//! The build is offline (vendored `anyhow`/`xla` only, no serde), so
+//! the format is hand-rolled and deliberately boring: one line of
+//! space-separated `key=value` tokens per object, strings
+//! percent-escaped down to `[A-Za-z0-9._-]`, floats carried as
+//! `f64::to_bits` hex so round trips are **bit-identical**, and every
+//! multi-line artifact (cache entries, sweep manifests) framed by a
+//! version header and a trailing FNV-1a checksum line.
+//!
+//! Three properties the whole service layer leans on:
+//!
+//! * **Canonical**: [`spec_to_line`] of equal [`SimSpec`]s is equal
+//!   text (the builder already canonicalizes configs), so the spec
+//!   line doubles as a cross-process memo key.
+//! * **Total parsing**: corrupt, truncated, or version-mismatched
+//!   input returns a typed [`PersistError`] — never a panic. The
+//!   cache treats any error as a miss (recompute and rewrite); the
+//!   server answers a malformed request with a typed error response.
+//! * **Atomic writes**: [`CacheDir::store`] writes a temp file and
+//!   `rename`s it into place, so a crashed or concurrent writer can
+//!   leave at worst a stale temp file, never a torn entry.
+
+mod cache;
+
+pub use cache::CacheDir;
+
+use crate::accel::{AcceleratorConfig, AcceleratorKind, Optimization};
+use crate::algo::problem::ProblemKind;
+use crate::dram::{
+    ChannelDegrade, DramStats, FaultPlan, LatencySpikes, MemTech, TransientRetries,
+};
+use crate::graph::datasets::DatasetId;
+use crate::graph::EdgeList;
+use crate::onchip::{Geometry, OnChipConfig, OnChipStats};
+use crate::robust::{
+    BudgetResource, ChannelLoad, RunBudget, SimError, StallDiagnostics, StreamCursor,
+};
+use crate::sim::metrics::{AdvisorChoices, RunMetrics};
+use crate::sim::{SimReport, SimSpec, Workload};
+use crate::trace::{AccessPatternSummary, ChannelSummary, Histogram, Region, RegionSummary};
+use std::fmt;
+use std::time::Duration;
+
+/// Version header of a cache entry. Bump on any format change: a
+/// mismatched header is a parse error, which the cache treats as a
+/// miss — old entries are recomputed and rewritten, never misread.
+pub const ENTRY_HEADER: &str = "graphmem-cache v1";
+
+/// Version header of a sweep manifest.
+pub const MANIFEST_HEADER: &str = "graphmem-manifest v1";
+
+/// Resolves a custom workload's name back to its edge list when
+/// parsing a spec line. Named (Tab. 2) workloads never need one; the
+/// parsed digest is verified against the resolved graph either way.
+pub type GraphResolver<'a> = dyn Fn(&str) -> Option<EdgeList> + Sync + 'a;
+
+/// The synthetic custom workloads the CLI mints by name: `rmat-small`
+/// (the scale-10, edge-factor-8 Graph500 R-MAT quick-analysis graph)
+/// and `rmat-small-w` (the same graph with the deterministic random
+/// weights the CLI adds for SSSP/SpMV). Specs serialized over these
+/// stay self-contained across processes — the serve daemon and
+/// `sweep --from-manifest` both pass this as their [`GraphResolver`];
+/// the digest check still guards against generator drift.
+pub fn builtin_graphs(name: &str) -> Option<EdgeList> {
+    use crate::graph::rmat::{self, RmatParams};
+    let base = || rmat::generate(RmatParams::graph500(10, 8, 0x5A));
+    match name {
+        "rmat-small" => Some(base()),
+        "rmat-small-w" => Some(base().with_random_weights(0x77EE, 64.0)),
+        _ => None,
+    }
+}
+
+/// Everything the parsers can reject. Deliberately stringly in the
+/// detail positions — the consumer decision is always the same
+/// (treat as miss / answer with a typed error), the detail is for
+/// humans.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PersistError {
+    /// The version header line was missing or not the expected one.
+    Header(String),
+    /// The trailing checksum disagrees with the content.
+    Checksum { expected: u64, found: u64 },
+    /// The artifact ended before its frame was complete.
+    Truncated(&'static str),
+    /// A required `key=value` token was absent.
+    MissingField(&'static str),
+    /// A token was present but malformed.
+    Field { field: &'static str, detail: String },
+    /// A token key outside the format (strict v1 parsing).
+    UnknownKey(String),
+    /// An enum name no parser recognizes.
+    UnknownName { what: &'static str, name: String },
+    /// The rebuilt spec failed builder validation.
+    Spec(String),
+    /// A custom workload resolved to different edges than were
+    /// serialized (content digest mismatch).
+    DigestMismatch { name: String, expected: u64, found: u64 },
+    /// A custom workload with no [`GraphResolver`] to resolve it.
+    UnresolvedWorkload(String),
+}
+
+impl fmt::Display for PersistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PersistError::Header(got) => write!(f, "unrecognized header {got:?}"),
+            PersistError::Checksum { expected, found } => write!(
+                f,
+                "checksum mismatch: stored {expected:016x}, content hashes to {found:016x}"
+            ),
+            PersistError::Truncated(what) => write!(f, "truncated input: missing {what}"),
+            PersistError::MissingField(key) => write!(f, "missing field `{key}`"),
+            PersistError::Field { field, detail } => write!(f, "bad field `{field}`: {detail}"),
+            PersistError::UnknownKey(key) => write!(f, "unknown field `{key}`"),
+            PersistError::UnknownName { what, name } => write!(f, "unknown {what} {name:?}"),
+            PersistError::Spec(why) => write!(f, "spec rejected: {why}"),
+            PersistError::DigestMismatch { name, expected, found } => write!(
+                f,
+                "custom workload {name:?} resolved to different edges: serialized digest \
+                 {expected:016x}, resolved {found:016x}"
+            ),
+            PersistError::UnresolvedWorkload(name) => write!(
+                f,
+                "custom workload {name:?} needs a graph resolver to deserialize"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+impl From<PersistError> for SimError {
+    /// Persistence failures fold into the run-time taxonomy as
+    /// invalid input, so the serve layer carries one error type.
+    fn from(err: PersistError) -> SimError {
+        SimError::InvalidInput(err.to_string())
+    }
+}
+
+/// FNV-1a over raw bytes — the checksum of every framed artifact and
+/// the filename hash of [`CacheDir`].
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Percent-escape a string down to `[A-Za-z0-9._-]` so it fits in one
+/// whitespace-free token.
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for &b in s.as_bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'.' | b'_' | b'-' => out.push(b as char),
+            _ => {
+                out.push('%');
+                out.push(char::from_digit(u32::from(b >> 4), 16).unwrap());
+                out.push(char::from_digit(u32::from(b & 0xf), 16).unwrap());
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`esc`]. Total: malformed escapes and invalid UTF-8
+/// are errors, never panics.
+pub fn unesc(s: &str) -> Result<String, PersistError> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            if i + 3 > bytes.len() {
+                return Err(PersistError::Field {
+                    field: "escape",
+                    detail: format!("dangling escape in {s:?}"),
+                });
+            }
+            let hi = (bytes[i + 1] as char).to_digit(16);
+            let lo = (bytes[i + 2] as char).to_digit(16);
+            match (hi, lo) {
+                (Some(hi), Some(lo)) => out.push((hi * 16 + lo) as u8),
+                _ => {
+                    return Err(PersistError::Field {
+                        field: "escape",
+                        detail: format!("non-hex escape in {s:?}"),
+                    })
+                }
+            }
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).map_err(|_| PersistError::Field {
+        field: "escape",
+        detail: format!("escaped bytes in {s:?} are not UTF-8"),
+    })
+}
+
+fn f64_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+fn f64_from_hex(field: &'static str, v: &str) -> Result<f64, PersistError> {
+    u64::from_str_radix(v, 16)
+        .map(f64::from_bits)
+        .map_err(|e| PersistError::Field { field, detail: format!("{v:?}: {e}") })
+}
+
+fn parse_num<T: std::str::FromStr>(field: &'static str, v: &str) -> Result<T, PersistError>
+where
+    T::Err: fmt::Display,
+{
+    v.parse::<T>()
+        .map_err(|e| PersistError::Field { field, detail: format!("{v:?}: {e}") })
+}
+
+fn parse_bool(field: &'static str, v: &str) -> Result<bool, PersistError> {
+    match v {
+        "0" => Ok(false),
+        "1" => Ok(true),
+        other => Err(PersistError::Field {
+            field,
+            detail: format!("expected 0|1, got {other:?}"),
+        }),
+    }
+}
+
+fn join_u64<I: IntoIterator<Item = u64>>(vals: I) -> String {
+    let strs: Vec<String> = vals.into_iter().map(|v| v.to_string()).collect();
+    strs.join(",")
+}
+
+fn parse_u64_list(field: &'static str, v: &str) -> Result<Vec<u64>, PersistError> {
+    if v.is_empty() {
+        return Ok(Vec::new());
+    }
+    v.split(',').map(|part| parse_num(field, part)).collect()
+}
+
+/// `key=value` token bag with strict take-once semantics.
+struct Tokens {
+    pairs: Vec<(String, String)>,
+}
+
+impl Tokens {
+    fn parse(line: &str) -> Result<Tokens, PersistError> {
+        let mut pairs = Vec::new();
+        for tok in line.split_ascii_whitespace() {
+            let (k, v) = tok.split_once('=').ok_or_else(|| PersistError::Field {
+                field: "token",
+                detail: format!("{tok:?} is not key=value"),
+            })?;
+            pairs.push((k.to_string(), v.to_string()));
+        }
+        Ok(Tokens { pairs })
+    }
+
+    fn take(&mut self, key: &'static str) -> Result<String, PersistError> {
+        let i = self
+            .pairs
+            .iter()
+            .position(|(k, _)| k == key)
+            .ok_or(PersistError::MissingField(key))?;
+        Ok(self.pairs.swap_remove(i).1)
+    }
+
+    /// Strict v1 parsing: leftover keys are an error (a future-format
+    /// entry must read as a miss, not as a silently narrowed value).
+    fn finish(self) -> Result<(), PersistError> {
+        match self.pairs.into_iter().next() {
+            None => Ok(()),
+            Some((k, _)) => Err(PersistError::UnknownKey(k)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimSpec
+// ---------------------------------------------------------------------------
+
+/// Serialize a spec as one canonical line. Equal specs produce equal
+/// lines (the builder canonicalizes configs), so this doubles as the
+/// cross-process memo key and the manifest entry format.
+pub fn spec_to_line(spec: &SimSpec) -> String {
+    let cfg = spec.config();
+    let graph = match spec.workload() {
+        Workload::Named(id) => format!("named:{}", id.name()),
+        Workload::Custom { name, digest, .. } => {
+            format!("custom:{}:{digest:016x}", esc(name))
+        }
+    };
+    let opts = if cfg.optimizations.is_empty() {
+        "-".to_string()
+    } else {
+        let names: Vec<&str> = cfg.optimizations.iter().map(|o| o.name()).collect();
+        names.join(",")
+    };
+    format!(
+        "accel={} graph={} problem={} mem={} channels={} patterns={} opts={} bram={} \
+         interval={} pes={} window={} xmc={} onchip={} budget={} faults={}",
+        spec.accelerator().name(),
+        graph,
+        spec.problem().name(),
+        spec.mem().name(),
+        spec.channels(),
+        u8::from(spec.patterns_enabled()),
+        opts,
+        cfg.bram_values,
+        cfg.foregraph_interval,
+        cfg.num_pes,
+        cfg.window,
+        u8::from(cfg.experimental_multichannel),
+        onchip_value(spec.onchip()),
+        budget_value(spec.budget()),
+        faults_value(spec.faults()),
+    )
+}
+
+/// Parse a spec line that holds a named (Tab. 2) workload. Custom
+/// workloads error with [`PersistError::UnresolvedWorkload`]; use
+/// [`spec_from_line_with`] to supply a resolver.
+pub fn spec_from_line(line: &str) -> Result<SimSpec, PersistError> {
+    spec_from_line_with(line, None)
+}
+
+/// Parse a spec line, resolving custom workloads through `resolver`.
+/// The serialized content digest is verified against the resolved
+/// graph, so a resolver that returns different edges is detected.
+pub fn spec_from_line_with(
+    line: &str,
+    resolver: Option<&GraphResolver<'_>>,
+) -> Result<SimSpec, PersistError> {
+    let mut t = Tokens::parse(line)?;
+
+    let accel_name = t.take("accel")?;
+    let accel = AcceleratorKind::parse(&accel_name).ok_or(PersistError::UnknownName {
+        what: "accelerator",
+        name: accel_name.clone(),
+    })?;
+
+    let graph_v = t.take("graph")?;
+    let workload = if let Some(name) = graph_v.strip_prefix("named:") {
+        let id: DatasetId = name.parse().map_err(|_| PersistError::UnknownName {
+            what: "dataset",
+            name: name.to_string(),
+        })?;
+        Workload::Named(id)
+    } else if let Some(rest) = graph_v.strip_prefix("custom:") {
+        let (name_esc, digest_hex) = rest.rsplit_once(':').ok_or_else(|| PersistError::Field {
+            field: "graph",
+            detail: format!("custom workload {rest:?} lacks a digest"),
+        })?;
+        let name = unesc(name_esc)?;
+        let expected = u64::from_str_radix(digest_hex, 16).map_err(|e| PersistError::Field {
+            field: "graph",
+            detail: format!("digest {digest_hex:?}: {e}"),
+        })?;
+        let resolver = resolver.ok_or_else(|| PersistError::UnresolvedWorkload(name.clone()))?;
+        let graph = resolver(&name).ok_or_else(|| PersistError::UnresolvedWorkload(name.clone()))?;
+        let workload = Workload::custom(name.clone(), graph);
+        let found = match &workload {
+            Workload::Custom { digest, .. } => *digest,
+            Workload::Named(_) => unreachable!(),
+        };
+        if found != expected {
+            return Err(PersistError::DigestMismatch { name, expected, found });
+        }
+        workload
+    } else {
+        return Err(PersistError::Field {
+            field: "graph",
+            detail: format!("expected named:<id> or custom:<name>:<digest>, got {graph_v:?}"),
+        });
+    };
+
+    let problem_name = t.take("problem")?;
+    let problem = ProblemKind::parse(&problem_name).ok_or(PersistError::UnknownName {
+        what: "problem",
+        name: problem_name.clone(),
+    })?;
+
+    let mem_name = t.take("mem")?;
+    let mem: MemTech = mem_name.parse().map_err(|_| PersistError::UnknownName {
+        what: "memory technology",
+        name: mem_name.clone(),
+    })?;
+
+    let channels: usize = parse_num("channels", &t.take("channels")?)?;
+    let patterns = parse_bool("patterns", &t.take("patterns")?)?;
+
+    let opts_v = t.take("opts")?;
+    let optimizations = if opts_v == "-" {
+        Vec::new()
+    } else {
+        opts_v
+            .split(',')
+            .map(|name| {
+                Optimization::parse(name).ok_or(PersistError::UnknownName {
+                    what: "optimization",
+                    name: name.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?
+    };
+    let config = AcceleratorConfig {
+        optimizations,
+        bram_values: parse_num("bram", &t.take("bram")?)?,
+        foregraph_interval: parse_num("interval", &t.take("interval")?)?,
+        num_pes: parse_num("pes", &t.take("pes")?)?,
+        // Normalized to the spec's channel axis by the builder.
+        channels: 1,
+        window: parse_num("window", &t.take("window")?)?,
+        experimental_multichannel: parse_bool("xmc", &t.take("xmc")?)?,
+    };
+
+    let onchip = onchip_parse(&t.take("onchip")?)?;
+    let budget = budget_parse(&t.take("budget")?)?;
+    let faults = faults_parse(&t.take("faults")?)?;
+    t.finish()?;
+
+    SimSpec::builder()
+        .accelerator(accel)
+        .workload(workload)
+        .problem(problem)
+        .mem(mem)
+        .channels(channels)
+        .config(config)
+        .patterns(patterns)
+        .onchip(onchip)
+        .budget(budget)
+        .faults(faults)
+        .build()
+        .map_err(|e| PersistError::Spec(e.to_string()))
+}
+
+fn onchip_value(cfg: Option<&OnChipConfig>) -> String {
+    let Some(c) = cfg else {
+        return "-".to_string();
+    };
+    let regions: Vec<&str> = c.regions().iter().map(|r| r.name()).collect();
+    let geom = match c.geometry() {
+        Geometry::DirectMapped => "dm".to_string(),
+        Geometry::SetAssociative { ways } => format!("sa{ways}"),
+        Geometry::Scratchpad => "sp".to_string(),
+    };
+    format!(
+        "r:{};c:{};g:{geom};l:{};w:{}",
+        regions.join("+"),
+        c.capacity_bytes(),
+        c.hit_latency(),
+        u8::from(c.write_allocate()),
+    )
+}
+
+fn onchip_parse(v: &str) -> Result<Option<OnChipConfig>, PersistError> {
+    if v == "-" {
+        return Ok(None);
+    }
+    let mut regions = None;
+    let mut capacity = None;
+    let mut geometry = None;
+    let mut latency = None;
+    let mut write_allocate = None;
+    for part in v.split(';') {
+        let (tag, val) = part.split_once(':').ok_or_else(|| PersistError::Field {
+            field: "onchip",
+            detail: format!("part {part:?} is not tag:value"),
+        })?;
+        match tag {
+            "r" => {
+                regions = Some(
+                    val.split('+')
+                        .map(|name| {
+                            name.parse::<Region>().map_err(|_| PersistError::UnknownName {
+                                what: "region",
+                                name: name.to_string(),
+                            })
+                        })
+                        .collect::<Result<Vec<_>, _>>()?,
+                );
+            }
+            "c" => capacity = Some(parse_num::<u64>("onchip", val)?),
+            "g" => {
+                geometry = Some(if val == "dm" {
+                    Geometry::DirectMapped
+                } else if val == "sp" {
+                    Geometry::Scratchpad
+                } else if let Some(ways) = val.strip_prefix("sa") {
+                    Geometry::SetAssociative { ways: parse_num("onchip", ways)? }
+                } else {
+                    return Err(PersistError::UnknownName {
+                        what: "geometry",
+                        name: val.to_string(),
+                    });
+                });
+            }
+            "l" => latency = Some(parse_num::<u64>("onchip", val)?),
+            "w" => write_allocate = Some(parse_bool("onchip", val)?),
+            other => {
+                return Err(PersistError::Field {
+                    field: "onchip",
+                    detail: format!("unknown part tag {other:?}"),
+                })
+            }
+        }
+    }
+    let missing = |what| PersistError::Field {
+        field: "onchip",
+        detail: format!("missing part `{what}`"),
+    };
+    let cfg = OnChipConfig::new(
+        capacity.ok_or_else(|| missing("c"))?,
+        geometry.ok_or_else(|| missing("g"))?,
+        regions.ok_or_else(|| missing("r"))?,
+    )
+    .with_hit_latency(latency.ok_or_else(|| missing("l"))?)
+    .with_write_allocate(write_allocate.ok_or_else(|| missing("w"))?);
+    Ok(Some(cfg))
+}
+
+fn budget_value(budget: Option<&RunBudget>) -> String {
+    let Some(b) = budget else {
+        return "-".to_string();
+    };
+    let opt = |v: Option<u64>| v.map_or("-".to_string(), |n| n.to_string());
+    let wall = b
+        .wall_deadline
+        .map_or("-".to_string(), |d| format!("{}.{:09}", d.as_secs(), d.subsec_nanos()));
+    format!("c:{};r:{};w:{wall}", opt(b.max_cycles), opt(b.max_requests))
+}
+
+fn budget_parse(v: &str) -> Result<Option<RunBudget>, PersistError> {
+    if v == "-" {
+        return Ok(None);
+    }
+    let mut budget = RunBudget::default();
+    for part in v.split(';') {
+        let (tag, val) = part.split_once(':').ok_or_else(|| PersistError::Field {
+            field: "budget",
+            detail: format!("part {part:?} is not tag:value"),
+        })?;
+        match (tag, val) {
+            (_, "-") => {}
+            ("c", val) => budget.max_cycles = Some(parse_num("budget", val)?),
+            ("r", val) => budget.max_requests = Some(parse_num("budget", val)?),
+            ("w", val) => {
+                let (secs, nanos) = val.split_once('.').ok_or_else(|| PersistError::Field {
+                    field: "budget",
+                    detail: format!("wall deadline {val:?} is not secs.nanos"),
+                })?;
+                budget.wall_deadline = Some(Duration::new(
+                    parse_num("budget", secs)?,
+                    parse_num("budget", nanos)?,
+                ));
+            }
+            (other, _) => {
+                return Err(PersistError::Field {
+                    field: "budget",
+                    detail: format!("unknown part tag {other:?}"),
+                })
+            }
+        }
+    }
+    Ok(Some(budget))
+}
+
+fn faults_value(faults: Option<&FaultPlan>) -> String {
+    let Some(p) = faults else {
+        return "-".to_string();
+    };
+    let spikes = p
+        .spikes
+        .map_or("-".to_string(), |s| format!("{},{}", s.period, s.extra_cycles));
+    let degrade = p.degrade.map_or("-".to_string(), |d| {
+        format!("{},{},{}", d.every, d.window, d.extra_cycles)
+    });
+    let retries = p.retries.map_or("-".to_string(), |r| {
+        format!("{},{},{}", r.every, r.max_retries, r.backoff_cycles)
+    });
+    format!("s:{};sp:{spikes};dg:{degrade};rt:{retries}", p.seed)
+}
+
+fn faults_parse(v: &str) -> Result<Option<FaultPlan>, PersistError> {
+    if v == "-" {
+        return Ok(None);
+    }
+    let mut plan = FaultPlan::default();
+    for part in v.split(';') {
+        let (tag, val) = part.split_once(':').ok_or_else(|| PersistError::Field {
+            field: "faults",
+            detail: format!("part {part:?} is not tag:value"),
+        })?;
+        let triple = |val: &str| -> Result<Vec<u64>, PersistError> {
+            let nums = parse_u64_list("faults", val)?;
+            if nums.len() == 3 {
+                Ok(nums)
+            } else {
+                Err(PersistError::Field {
+                    field: "faults",
+                    detail: format!("expected 3 numbers, got {val:?}"),
+                })
+            }
+        };
+        match (tag, val) {
+            ("s", val) => plan.seed = parse_num("faults", val)?,
+            (_, "-") => {}
+            ("sp", val) => {
+                let nums = parse_u64_list("faults", val)?;
+                if nums.len() != 2 {
+                    return Err(PersistError::Field {
+                        field: "faults",
+                        detail: format!("expected 2 numbers, got {val:?}"),
+                    });
+                }
+                plan.spikes = Some(LatencySpikes { period: nums[0], extra_cycles: nums[1] });
+            }
+            ("dg", val) => {
+                let nums = triple(val)?;
+                plan.degrade = Some(ChannelDegrade {
+                    every: nums[0],
+                    window: nums[1],
+                    extra_cycles: nums[2],
+                });
+            }
+            ("rt", val) => {
+                let nums = triple(val)?;
+                let max_retries = u32::try_from(nums[1]).map_err(|_| PersistError::Field {
+                    field: "faults",
+                    detail: format!("retry bound {} exceeds u32", nums[1]),
+                })?;
+                plan.retries = Some(TransientRetries {
+                    every: nums[0],
+                    max_retries,
+                    backoff_cycles: nums[2],
+                });
+            }
+            (other, _) => {
+                return Err(PersistError::Field {
+                    field: "faults",
+                    detail: format!("unknown part tag {other:?}"),
+                })
+            }
+        }
+    }
+    Ok(Some(plan))
+}
+
+// ---------------------------------------------------------------------------
+// SimReport
+// ---------------------------------------------------------------------------
+
+/// Number of flat counters a [`DramStats`] serializes to.
+const DRAM_FIELDS: usize = 9 + 2 * Region::COUNT + 2;
+
+/// Serialize a report as one line. Floats are carried as bit
+/// patterns, so parsing reproduces the report **bit-identically**
+/// (asserted by the round-trip suite).
+pub fn report_to_line(r: &SimReport) -> String {
+    let m = &r.metrics;
+    let d = &r.dram;
+    let mut dram: Vec<u64> = vec![
+        d.reads,
+        d.writes,
+        d.row_hits,
+        d.row_misses,
+        d.row_conflicts,
+        d.data_bus_cycles,
+        d.refreshes,
+        d.total_latency,
+        d.finish_cycle,
+    ];
+    dram.extend_from_slice(&d.region_reads);
+    dram.extend_from_slice(&d.region_writes);
+    dram.push(d.faults_injected);
+    dram.push(d.fault_delay_cycles);
+    let advisor = r.advisor.as_ref().map_or("-".to_string(), |a| {
+        format!(
+            "{},{},{}",
+            u8::from(a.partition),
+            u8::from(a.placement),
+            u8::from(a.onchip)
+        )
+    });
+    format!(
+        "accel={} problem={} edges={} cycles={} seconds={} iters={} eread={} vread={} \
+         vwrite={} urw={} skip={} proc={} bytes={} util={} channels={} dram={} patterns={} \
+         onchip={} advisor={advisor}",
+        esc(r.accelerator),
+        esc(r.problem),
+        r.graph_edges,
+        r.cycles,
+        f64_hex(r.seconds),
+        m.iterations,
+        m.edges_read,
+        m.values_read,
+        m.values_written,
+        m.updates_rw,
+        m.skipped,
+        m.processed,
+        r.bytes_total,
+        f64_hex(r.bus_utilization),
+        r.channels,
+        join_u64(dram),
+        patterns_value(r.patterns.as_ref()),
+        onchip_stats_value(r.onchip.as_ref()),
+    )
+}
+
+/// Inverse of [`report_to_line`].
+pub fn report_from_line(line: &str) -> Result<SimReport, PersistError> {
+    let mut t = Tokens::parse(line)?;
+    let accel_name = unesc(&t.take("accel")?)?;
+    let accelerator = AcceleratorKind::parse(&accel_name)
+        .ok_or(PersistError::UnknownName { what: "accelerator", name: accel_name })?
+        .name();
+    let problem_name = unesc(&t.take("problem")?)?;
+    let problem = ProblemKind::parse(&problem_name)
+        .ok_or(PersistError::UnknownName { what: "problem", name: problem_name })?
+        .name();
+    let graph_edges = parse_num("edges", &t.take("edges")?)?;
+    let cycles = parse_num("cycles", &t.take("cycles")?)?;
+    let seconds = f64_from_hex("seconds", &t.take("seconds")?)?;
+    let metrics = RunMetrics {
+        iterations: parse_num("iters", &t.take("iters")?)?,
+        edges_read: parse_num("eread", &t.take("eread")?)?,
+        values_read: parse_num("vread", &t.take("vread")?)?,
+        values_written: parse_num("vwrite", &t.take("vwrite")?)?,
+        updates_rw: parse_num("urw", &t.take("urw")?)?,
+        skipped: parse_num("skip", &t.take("skip")?)?,
+        processed: parse_num("proc", &t.take("proc")?)?,
+    };
+    let bytes_total = parse_num("bytes", &t.take("bytes")?)?;
+    let bus_utilization = f64_from_hex("util", &t.take("util")?)?;
+    let channels = parse_num("channels", &t.take("channels")?)?;
+    let nums = parse_u64_list("dram", &t.take("dram")?)?;
+    if nums.len() != DRAM_FIELDS {
+        return Err(PersistError::Field {
+            field: "dram",
+            detail: format!("expected {DRAM_FIELDS} counters, got {}", nums.len()),
+        });
+    }
+    let mut region_reads = [0u64; Region::COUNT];
+    let mut region_writes = [0u64; Region::COUNT];
+    region_reads.copy_from_slice(&nums[9..9 + Region::COUNT]);
+    region_writes.copy_from_slice(&nums[9 + Region::COUNT..9 + 2 * Region::COUNT]);
+    let dram = DramStats {
+        reads: nums[0],
+        writes: nums[1],
+        row_hits: nums[2],
+        row_misses: nums[3],
+        row_conflicts: nums[4],
+        data_bus_cycles: nums[5],
+        refreshes: nums[6],
+        total_latency: nums[7],
+        finish_cycle: nums[8],
+        region_reads,
+        region_writes,
+        faults_injected: nums[DRAM_FIELDS - 2],
+        fault_delay_cycles: nums[DRAM_FIELDS - 1],
+    };
+    let patterns = patterns_parse(&t.take("patterns")?)?;
+    let onchip = onchip_stats_parse(&t.take("onchip")?)?;
+    let advisor_v = t.take("advisor")?;
+    let advisor = if advisor_v == "-" {
+        None
+    } else {
+        let parts: Vec<&str> = advisor_v.split(',').collect();
+        if parts.len() != 3 {
+            return Err(PersistError::Field {
+                field: "advisor",
+                detail: format!("expected 3 flags, got {advisor_v:?}"),
+            });
+        }
+        Some(AdvisorChoices {
+            partition: parse_bool("advisor", parts[0])?,
+            placement: parse_bool("advisor", parts[1])?,
+            onchip: parse_bool("advisor", parts[2])?,
+        })
+    };
+    t.finish()?;
+    Ok(SimReport {
+        accelerator,
+        problem,
+        graph_edges,
+        cycles,
+        seconds,
+        metrics,
+        dram,
+        bytes_total,
+        bus_utilization,
+        channels,
+        patterns,
+        onchip,
+        advisor,
+    })
+}
+
+fn hist_value(h: &Histogram) -> String {
+    format!("{}:{}:{}", h.count(), h.sum(), join_u64(h.buckets().iter().copied()))
+}
+
+fn hist_parse(v: &str) -> Result<Histogram, PersistError> {
+    let mut parts = v.splitn(3, ':');
+    let (total, sum, counts) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(t), Some(s), Some(c)) => (t, s, c),
+        _ => {
+            return Err(PersistError::Field {
+                field: "histogram",
+                detail: format!("expected total:sum:counts, got {v:?}"),
+            })
+        }
+    };
+    Ok(Histogram::from_parts(
+        parse_u64_list("histogram", counts)?,
+        parse_num("histogram", total)?,
+        parse_num("histogram", sum)?,
+    ))
+}
+
+fn patterns_value(summary: Option<&AccessPatternSummary>) -> String {
+    let Some(s) = summary else {
+        return "-".to_string();
+    };
+    let regions: Vec<String> = s
+        .regions
+        .iter()
+        .map(|r| {
+            format!(
+                "{};{};{};{};{};{};{};{};{};{};{};{};{}",
+                r.region.name(),
+                r.reads,
+                r.writes,
+                r.bytes,
+                r.sequential,
+                r.strided,
+                r.random,
+                r.row_hits,
+                r.row_misses,
+                r.row_conflicts,
+                hist_value(&r.run_lengths),
+                r.distinct_lines,
+                hist_value(&r.reuse),
+            )
+        })
+        .collect();
+    let channels: Vec<String> = s
+        .channels
+        .iter()
+        .map(|c| {
+            format!(
+                "{};{};{};{};{};{};{};{}",
+                c.channel,
+                c.reads,
+                c.writes,
+                c.row_hits,
+                c.row_misses,
+                c.row_conflicts,
+                c.distinct_lines,
+                hist_value(&c.reuse),
+            )
+        })
+        .collect();
+    format!("{}~{}", regions.join("/"), channels.join("/"))
+}
+
+fn patterns_parse(v: &str) -> Result<Option<AccessPatternSummary>, PersistError> {
+    if v == "-" {
+        return Ok(None);
+    }
+    let (regions_v, channels_v) = v.split_once('~').ok_or_else(|| PersistError::Field {
+        field: "patterns",
+        detail: format!("missing region/channel separator in {v:?}"),
+    })?;
+    let mut summary = AccessPatternSummary::default();
+    if !regions_v.is_empty() {
+        for entry in regions_v.split('/') {
+            let p: Vec<&str> = entry.split(';').collect();
+            if p.len() != 13 {
+                return Err(PersistError::Field {
+                    field: "patterns",
+                    detail: format!("region entry has {} parts, expected 13", p.len()),
+                });
+            }
+            summary.regions.push(RegionSummary {
+                region: p[0].parse().map_err(|_| PersistError::UnknownName {
+                    what: "region",
+                    name: p[0].to_string(),
+                })?,
+                reads: parse_num("patterns", p[1])?,
+                writes: parse_num("patterns", p[2])?,
+                bytes: parse_num("patterns", p[3])?,
+                sequential: parse_num("patterns", p[4])?,
+                strided: parse_num("patterns", p[5])?,
+                random: parse_num("patterns", p[6])?,
+                row_hits: parse_num("patterns", p[7])?,
+                row_misses: parse_num("patterns", p[8])?,
+                row_conflicts: parse_num("patterns", p[9])?,
+                run_lengths: hist_parse(p[10])?,
+                distinct_lines: parse_num("patterns", p[11])?,
+                reuse: hist_parse(p[12])?,
+            });
+        }
+    }
+    if !channels_v.is_empty() {
+        for entry in channels_v.split('/') {
+            let p: Vec<&str> = entry.split(';').collect();
+            if p.len() != 8 {
+                return Err(PersistError::Field {
+                    field: "patterns",
+                    detail: format!("channel entry has {} parts, expected 8", p.len()),
+                });
+            }
+            summary.channels.push(ChannelSummary {
+                channel: parse_num("patterns", p[0])?,
+                reads: parse_num("patterns", p[1])?,
+                writes: parse_num("patterns", p[2])?,
+                row_hits: parse_num("patterns", p[3])?,
+                row_misses: parse_num("patterns", p[4])?,
+                row_conflicts: parse_num("patterns", p[5])?,
+                distinct_lines: parse_num("patterns", p[6])?,
+                reuse: hist_parse(p[7])?,
+            });
+        }
+    }
+    Ok(Some(summary))
+}
+
+fn onchip_stats_value(stats: Option<&OnChipStats>) -> String {
+    let Some(s) = stats else {
+        return "-".to_string();
+    };
+    let per_region = |f: &dyn Fn(Region) -> u64| join_u64(Region::all().into_iter().map(f));
+    format!(
+        "h:{};m:{};f:{};e:{};cap:{}",
+        per_region(&|r| s.region_hits(r)),
+        per_region(&|r| s.region_misses(r)),
+        per_region(&|r| s.region_fills(r)),
+        s.evictions(),
+        s.capacity_lines(),
+    )
+}
+
+fn onchip_stats_parse(v: &str) -> Result<Option<OnChipStats>, PersistError> {
+    if v == "-" {
+        return Ok(None);
+    }
+    let mut hits = None;
+    let mut misses = None;
+    let mut fills = None;
+    let mut evictions = None;
+    let mut capacity = None;
+    let array = |val: &str| -> Result<[u64; Region::COUNT], PersistError> {
+        let nums = parse_u64_list("onchip-stats", val)?;
+        if nums.len() != Region::COUNT {
+            return Err(PersistError::Field {
+                field: "onchip-stats",
+                detail: format!("expected {} counters, got {}", Region::COUNT, nums.len()),
+            });
+        }
+        let mut arr = [0u64; Region::COUNT];
+        arr.copy_from_slice(&nums);
+        Ok(arr)
+    };
+    for part in v.split(';') {
+        let (tag, val) = part.split_once(':').ok_or_else(|| PersistError::Field {
+            field: "onchip-stats",
+            detail: format!("part {part:?} is not tag:value"),
+        })?;
+        match tag {
+            "h" => hits = Some(array(val)?),
+            "m" => misses = Some(array(val)?),
+            "f" => fills = Some(array(val)?),
+            "e" => evictions = Some(parse_num::<u64>("onchip-stats", val)?),
+            "cap" => capacity = Some(parse_num::<u64>("onchip-stats", val)?),
+            other => {
+                return Err(PersistError::Field {
+                    field: "onchip-stats",
+                    detail: format!("unknown part tag {other:?}"),
+                })
+            }
+        }
+    }
+    let missing = |what| PersistError::Field {
+        field: "onchip-stats",
+        detail: format!("missing part `{what}`"),
+    };
+    Ok(Some(OnChipStats::from_parts(
+        hits.ok_or_else(|| missing("h"))?,
+        misses.ok_or_else(|| missing("m"))?,
+        fills.ok_or_else(|| missing("f"))?,
+        evictions.ok_or_else(|| missing("e"))?,
+        capacity.ok_or_else(|| missing("cap"))?,
+    )))
+}
+
+// ---------------------------------------------------------------------------
+// SimError
+// ---------------------------------------------------------------------------
+
+/// Serialize a typed failure as one line (failure memos persist and
+/// travel the wire exactly like reports).
+pub fn error_to_line(err: &SimError) -> String {
+    match err {
+        SimError::Stalled(d) => {
+            let streams = if d.streams.is_empty() {
+                "-".to_string()
+            } else {
+                let parts: Vec<String> = d
+                    .streams
+                    .iter()
+                    .map(|s| format!("{}:{}:{}", s.issued, s.len, s.available))
+                    .collect();
+                parts.join("/")
+            };
+            let chans = if d.channels.is_empty() {
+                "-".to_string()
+            } else {
+                let parts: Vec<String> = d
+                    .channels
+                    .iter()
+                    .map(|c| format!("{}:{}", c.in_flight, c.waiting))
+                    .collect();
+                parts.join("/")
+            };
+            format!(
+                "kind=stalled cycle={} streams={streams} chans={chans}",
+                d.last_progress_cycle
+            )
+        }
+        SimError::BudgetExceeded { resource, limit, observed } => {
+            let res = match resource {
+                BudgetResource::Cycles => "cycles",
+                BudgetResource::Requests => "requests",
+                BudgetResource::WallMillis => "wall-ms",
+            };
+            format!("kind=budget-exceeded resource={res} limit={limit} observed={observed}")
+        }
+        SimError::InvalidInput(msg) => format!("kind=invalid-input msg={}", esc(msg)),
+        SimError::Panicked { message } => format!("kind=panicked msg={}", esc(message)),
+    }
+}
+
+/// Inverse of [`error_to_line`].
+pub fn error_from_line(line: &str) -> Result<SimError, PersistError> {
+    let mut t = Tokens::parse(line)?;
+    let kind = t.take("kind")?;
+    let err = match kind.as_str() {
+        "stalled" => {
+            let mut d = StallDiagnostics {
+                last_progress_cycle: parse_num("cycle", &t.take("cycle")?)?,
+                ..StallDiagnostics::default()
+            };
+            let streams_v = t.take("streams")?;
+            if streams_v != "-" {
+                for part in streams_v.split('/') {
+                    let nums: Vec<&str> = part.split(':').collect();
+                    if nums.len() != 3 {
+                        return Err(PersistError::Field {
+                            field: "streams",
+                            detail: format!("cursor {part:?} is not issued:len:available"),
+                        });
+                    }
+                    d.streams.push(StreamCursor {
+                        issued: parse_num("streams", nums[0])?,
+                        len: parse_num("streams", nums[1])?,
+                        available: parse_num("streams", nums[2])?,
+                    });
+                }
+            }
+            let chans_v = t.take("chans")?;
+            if chans_v != "-" {
+                for part in chans_v.split('/') {
+                    let (in_flight, waiting) =
+                        part.split_once(':').ok_or_else(|| PersistError::Field {
+                            field: "chans",
+                            detail: format!("load {part:?} is not in_flight:waiting"),
+                        })?;
+                    d.channels.push(ChannelLoad {
+                        in_flight: parse_num("chans", in_flight)?,
+                        waiting: parse_num("chans", waiting)?,
+                    });
+                }
+            }
+            SimError::Stalled(d)
+        }
+        "budget-exceeded" => {
+            let res_v = t.take("resource")?;
+            let resource = match res_v.as_str() {
+                "cycles" => BudgetResource::Cycles,
+                "requests" => BudgetResource::Requests,
+                "wall-ms" => BudgetResource::WallMillis,
+                other => {
+                    return Err(PersistError::UnknownName {
+                        what: "budget resource",
+                        name: other.to_string(),
+                    })
+                }
+            };
+            SimError::BudgetExceeded {
+                resource,
+                limit: parse_num("limit", &t.take("limit")?)?,
+                observed: parse_num("observed", &t.take("observed")?)?,
+            }
+        }
+        "invalid-input" => SimError::InvalidInput(unesc(&t.take("msg")?)?),
+        "panicked" => SimError::Panicked { message: unesc(&t.take("msg")?)? },
+        other => {
+            return Err(PersistError::UnknownName {
+                what: "error kind",
+                name: other.to_string(),
+            })
+        }
+    };
+    t.finish()?;
+    Ok(err)
+}
+
+// ---------------------------------------------------------------------------
+// Framed artifacts: cache entries and sweep manifests
+// ---------------------------------------------------------------------------
+
+/// Render a complete cache-entry file: header, spec line, result line
+/// (`ok …` or `err …`), trailing checksum over everything above it.
+pub fn render_entry(spec: &SimSpec, result: &Result<SimReport, SimError>) -> String {
+    let mut body = String::new();
+    body.push_str(ENTRY_HEADER);
+    body.push('\n');
+    body.push_str("spec ");
+    body.push_str(&spec_to_line(spec));
+    body.push('\n');
+    match result {
+        Ok(report) => {
+            body.push_str("ok ");
+            body.push_str(&report_to_line(report));
+        }
+        Err(err) => {
+            body.push_str("err ");
+            body.push_str(&error_to_line(err));
+        }
+    }
+    body.push('\n');
+    let sum = fnv1a(body.as_bytes());
+    body.push_str(&format!("checksum {sum:016x}\n"));
+    body
+}
+
+/// Parse a cache-entry file back into its spec line and memoized
+/// result. Total: truncation, bit flips, a foreign header, or any
+/// malformed field is a [`PersistError`] — the cache treats every one
+/// as a miss.
+pub fn parse_entry(text: &str) -> Result<(String, Result<SimReport, SimError>), PersistError> {
+    let body = verify_frame(text, ENTRY_HEADER)?;
+    let mut lines = body.lines();
+    let spec_line = lines
+        .next()
+        .and_then(|l| l.strip_prefix("spec "))
+        .ok_or(PersistError::Truncated("spec line"))?;
+    let result_line = lines.next().ok_or(PersistError::Truncated("result line"))?;
+    if lines.next().is_some() {
+        return Err(PersistError::Field {
+            field: "entry",
+            detail: "trailing lines after the result".to_string(),
+        });
+    }
+    let result = if let Some(rest) = result_line.strip_prefix("ok ") {
+        Ok(report_from_line(rest)?)
+    } else if let Some(rest) = result_line.strip_prefix("err ") {
+        Err(error_from_line(rest)?)
+    } else {
+        return Err(PersistError::Field {
+            field: "entry",
+            detail: format!("result line starts with neither `ok ` nor `err `: {result_line:?}"),
+        });
+    };
+    Ok((spec_line.to_string(), result))
+}
+
+/// Checksum-verify a framed artifact and strip its header and
+/// checksum line, returning the inner body.
+fn verify_frame<'t>(text: &'t str, header: &str) -> Result<&'t str, PersistError> {
+    let idx = text.rfind("\nchecksum ").ok_or(PersistError::Truncated("checksum line"))?;
+    let (content, sum_line) = text.split_at(idx + 1);
+    let sum_hex = sum_line
+        .strip_prefix("checksum ")
+        .ok_or(PersistError::Truncated("checksum line"))?
+        .trim_end();
+    let expected = u64::from_str_radix(sum_hex, 16).map_err(|e| PersistError::Field {
+        field: "checksum",
+        detail: format!("{sum_hex:?}: {e}"),
+    })?;
+    let found = fnv1a(content.as_bytes());
+    if found != expected {
+        return Err(PersistError::Checksum { expected, found });
+    }
+    let body = content
+        .strip_prefix(header)
+        .and_then(|rest| rest.strip_prefix('\n'))
+        .ok_or_else(|| {
+            PersistError::Header(content.lines().next().unwrap_or_default().to_string())
+        })?;
+    Ok(body)
+}
+
+/// Render a sweep manifest: one canonical spec line per entry,
+/// framed like a cache entry. Replaying the manifest rebuilds the
+/// exact spec list — same memo keys, bit-identical reports.
+pub fn write_manifest(specs: &[SimSpec]) -> String {
+    let mut body = String::new();
+    body.push_str(MANIFEST_HEADER);
+    body.push('\n');
+    for spec in specs {
+        body.push_str("spec ");
+        body.push_str(&spec_to_line(spec));
+        body.push('\n');
+    }
+    let sum = fnv1a(body.as_bytes());
+    body.push_str(&format!("checksum {sum:016x}\n"));
+    body
+}
+
+/// Parse a manifest of named-workload specs.
+pub fn parse_manifest(text: &str) -> Result<Vec<SimSpec>, PersistError> {
+    parse_manifest_with(text, None)
+}
+
+/// Parse a manifest, resolving custom workloads through `resolver`.
+pub fn parse_manifest_with(
+    text: &str,
+    resolver: Option<&GraphResolver<'_>>,
+) -> Result<Vec<SimSpec>, PersistError> {
+    let body = verify_frame(text, MANIFEST_HEADER)?;
+    let mut specs = Vec::new();
+    for line in body.lines() {
+        let spec_line = line
+            .strip_prefix("spec ")
+            .ok_or(PersistError::Truncated("spec line"))?;
+        specs.push(spec_from_line_with(spec_line, resolver)?);
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SimSpec {
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::HitGraph)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::Bfs)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn esc_round_trips_arbitrary_strings() {
+        for s in ["", "plain", "has space", "a=b;c|d%e\nf", "ünïcode 🎈", "-"] {
+            let e = esc(s);
+            assert!(
+                e.bytes().all(|b| b.is_ascii_alphanumeric()
+                    || b == b'.'
+                    || b == b'_'
+                    || b == b'-'
+                    || b == b'%'),
+                "{e:?} has unsafe bytes"
+            );
+            assert!(!e.contains(' '));
+            assert_eq!(unesc(&e).unwrap(), s);
+        }
+        assert!(unesc("%").is_err());
+        assert!(unesc("%zz").is_err());
+        assert!(unesc("%ff").is_err(), "lone 0xff is not UTF-8");
+    }
+
+    #[test]
+    fn spec_line_is_canonical_and_round_trips() {
+        let s = spec();
+        let line = spec_to_line(&s);
+        assert_eq!(line, spec_to_line(&s.clone()), "equal specs, equal lines");
+        let back = spec_from_line(&line).unwrap();
+        assert_eq!(back, s, "round trip is identity (same memo key)");
+        assert_eq!(spec_to_line(&back), line);
+    }
+
+    #[test]
+    fn report_round_trip_is_bit_identical() {
+        let r = spec().run();
+        let back = report_from_line(&report_to_line(&r)).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.seconds.to_bits(), r.seconds.to_bits());
+    }
+
+    #[test]
+    fn error_lines_round_trip_every_variant() {
+        let errors = [
+            SimError::Stalled(StallDiagnostics {
+                last_progress_cycle: 99,
+                streams: vec![StreamCursor { issued: 1, len: 3, available: 2 }],
+                channels: vec![ChannelLoad { in_flight: 4, waiting: 5 }],
+            }),
+            SimError::Stalled(StallDiagnostics::default()),
+            SimError::BudgetExceeded {
+                resource: BudgetResource::WallMillis,
+                limit: 10,
+                observed: 22,
+            },
+            SimError::InvalidInput("spaces and = signs %".to_string()),
+            SimError::Panicked { message: "index out of bounds: 9 > 3".to_string() },
+        ];
+        for err in errors {
+            let line = error_to_line(&err);
+            assert_eq!(error_from_line(&line).unwrap(), err, "{line}");
+        }
+    }
+
+    #[test]
+    fn entries_verify_and_reject_corruption() {
+        let s = spec();
+        let ok_entry = render_entry(&s, &Ok(s.run()));
+        let (line, result) = parse_entry(&ok_entry).unwrap();
+        assert_eq!(line, spec_to_line(&s));
+        assert_eq!(result.unwrap(), s.run());
+
+        // Truncation, bit flips and header swaps all error — never panic.
+        assert!(parse_entry(&ok_entry[..ok_entry.len() / 2]).is_err());
+        let mut flipped = ok_entry.clone().into_bytes();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x01;
+        match String::from_utf8(flipped) {
+            Ok(text) => assert!(parse_entry(&text).is_err()),
+            Err(_) => {} // non-UTF-8 never reaches the parser
+        }
+        let vmism = ok_entry.replace("graphmem-cache v1", "graphmem-cache v9");
+        assert!(parse_entry(&vmism).is_err(), "version mismatch is a miss");
+    }
+
+    #[test]
+    fn manifests_round_trip_spec_lists() {
+        let specs = vec![
+            spec(),
+            SimSpec::builder()
+                .accelerator(AcceleratorKind::AccuGraph)
+                .graph(DatasetId::Sd)
+                .problem(ProblemKind::PageRank)
+                .build()
+                .unwrap(),
+        ];
+        let text = write_manifest(&specs);
+        assert_eq!(parse_manifest(&text).unwrap(), specs);
+        assert_eq!(write_manifest(&parse_manifest(&text).unwrap()), text);
+        assert!(parse_manifest(&text.replace("v1", "v2")).is_err());
+    }
+
+    #[test]
+    fn custom_workloads_need_a_resolver_and_verify_digests() {
+        use crate::graph::synthetic;
+        let g = synthetic::erdos_renyi(64, 256, 11);
+        let s = SimSpec::builder()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .custom_graph("mine", g.clone())
+            .problem(ProblemKind::Bfs)
+            .build()
+            .unwrap();
+        let line = spec_to_line(&s);
+        assert!(matches!(
+            spec_from_line(&line),
+            Err(PersistError::UnresolvedWorkload(_))
+        ));
+        let resolve = move |name: &str| (name == "mine").then(|| g.clone());
+        let back = spec_from_line_with(&line, Some(&resolve)).unwrap();
+        assert_eq!(back, s);
+        // A resolver returning different edges is caught by the digest.
+        let wrong = |_: &str| Some(synthetic::erdos_renyi(64, 256, 12));
+        assert!(matches!(
+            spec_from_line_with(&line, Some(&wrong)),
+            Err(PersistError::DigestMismatch { .. })
+        ));
+    }
+}

@@ -1,0 +1,459 @@
+//! The simulator as a long-running shared service.
+//!
+//! [`Server`] owns one memoizing [`Session`] (optionally layered over
+//! a durable [`CacheDir`]) and speaks the line protocol of [`proto`]
+//! on a [`std::net::TcpListener`]. The design goal is *crash safety
+//! under load*, in order of the request path:
+//!
+//! * **Admission control** — a bounded in-flight permit counter.
+//!   Requests beyond `max_inflight` are rejected immediately with a
+//!   typed `BUSY retry_after_ms=…` instead of queueing unboundedly;
+//!   `PING`/`STATS` bypass admission so liveness probes always answer.
+//! * **Per-request budgets** — the server's admission [`RunBudget`]
+//!   is merged (axis-wise minimum) into every request's own budget,
+//!   so no single spec can monopolize the daemon; exceeding it is a
+//!   typed error (or, in degraded mode, an advisor estimate).
+//! * **Panic isolation** — simulations already run behind
+//!   [`crate::robust::catch_sim`] inside the session; a panicking
+//!   request becomes a typed `panicked` response and the daemon keeps
+//!   serving (the `BOOM` diagnostic request proves it end to end).
+//! * **Durability** — with a disk cache attached, every computed
+//!   result (reports *and* failure memos) is persisted atomically;
+//!   a restarted daemon serves pre-restart results bit-identically
+//!   without re-simulating.
+//! * **Graceful drain** — shutdown (flag or `SHUTDOWN` request) stops
+//!   accepting work, lets every in-flight request finish and answer,
+//!   then returns from [`Server::run`].
+//!
+//! The CLI front-ends are `graphmem serve` and `graphmem submit`
+//! (the retrying [`Client`] with exponential backoff and jitter).
+
+pub mod client;
+pub mod proto;
+
+pub use client::{Client, SubmitOutcome};
+pub use proto::{DegradedEstimate, Request, Response};
+
+use crate::advisor::Advisor;
+use crate::coordinator::{figure_matrix_specs, Scope};
+use crate::persist::{builtin_graphs, spec_from_line_with, CacheDir};
+use crate::robust::{RunBudget, SimError};
+use crate::sim::{Session, SimSpec};
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Knobs of a [`Server`]. `Default` is a sane interactive daemon:
+/// four in-flight requests, 250 ms busy hint, no admission budget,
+/// memory-only cache, cold start.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Maximum concurrently executing `RUN` requests; beyond this the
+    /// server answers `BUSY`. `0` rejects every `RUN` (a deterministic
+    /// overload mode — `PING`/`STATS` still answer).
+    pub max_inflight: usize,
+    /// Back-off hint attached to `BUSY` responses.
+    pub retry_after_ms: u64,
+    /// Admission budget merged (axis-wise minimum) into every
+    /// request's own [`RunBudget`].
+    pub admission: Option<RunBudget>,
+    /// Root of the durable result cache; `None` = memory only.
+    pub cache_dir: Option<PathBuf>,
+    /// Precompile the paper's figure matrix (quick scope) at startup
+    /// and adopt any matching disk entries.
+    pub warm: bool,
+    /// Accept-loop poll interval while idle.
+    pub poll_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_inflight: 4,
+            retry_after_ms: 250,
+            admission: None,
+            cache_dir: None,
+            warm: false,
+            poll_ms: 20,
+        }
+    }
+}
+
+/// Point-in-time serve counters (`STATS` carries these plus the
+/// session's [`crate::sim::SessionStats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Request lines handled (any command, any outcome).
+    pub requests: usize,
+    /// `RUN`s rejected by admission control.
+    pub busy_rejections: usize,
+    /// `RUN`s answered with a typed `ERR sim` (incl. spec rejects and
+    /// the `BOOM` diagnostic).
+    pub sim_failures: usize,
+    /// `RUN`s answered without simulating (memo or disk).
+    pub cache_hits: usize,
+    /// `RUN`s answered with an advisor estimate in degraded mode.
+    pub degraded_replies: usize,
+}
+
+/// In-flight permit: holding one is the right to execute a `RUN`.
+/// Dropping it (normally or through an unwind) frees the slot.
+struct Permit<'a>(&'a AtomicUsize);
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The serve daemon. See the module docs for the request path.
+pub struct Server {
+    listener: TcpListener,
+    session: Session,
+    cfg: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+    inflight: AtomicUsize,
+    requests: AtomicUsize,
+    busy_rejections: AtomicUsize,
+    sim_failures: AtomicUsize,
+    cache_hits: AtomicUsize,
+    degraded_replies: AtomicUsize,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port),
+    /// attach the disk cache and pre-warm if configured.
+    pub fn bind(addr: &str, cfg: ServerConfig) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let mut session = Session::new();
+        if let Some(root) = &cfg.cache_dir {
+            session = session.with_disk_cache(Arc::new(CacheDir::new(root)?));
+        }
+        let server = Server {
+            listener,
+            session,
+            cfg,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            inflight: AtomicUsize::new(0),
+            requests: AtomicUsize::new(0),
+            busy_rejections: AtomicUsize::new(0),
+            sim_failures: AtomicUsize::new(0),
+            cache_hits: AtomicUsize::new(0),
+            degraded_replies: AtomicUsize::new(0),
+        };
+        if server.cfg.warm {
+            server.warm();
+        }
+        Ok(server)
+    }
+
+    /// The bound address (useful with an ephemeral port).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// A handle that makes [`Server::run`] drain and return when set
+    /// (e.g. from a signal handler or a test harness).
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// The underlying session (counters, peeks — diagnostics only).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// Serve counters so far.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            busy_rejections: self.busy_rejections.load(Ordering::Relaxed),
+            sim_failures: self.sim_failures.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            degraded_replies: self.degraded_replies.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Precompile the paper's core figure matrix (quick scope) and
+    /// adopt any results already on disk, so a fresh daemon answers
+    /// figure-grade requests without first-touch compile latency and
+    /// a restarted one without re-simulating at all.
+    fn warm(&self) {
+        let Ok(specs) = figure_matrix_specs(Scope::Quick) else {
+            return;
+        };
+        for spec in &specs {
+            self.session.program_for(spec);
+            if let Some(disk) = self.session.disk_cache() {
+                if disk.contains(spec) {
+                    // The disk layer satisfies this without simulating.
+                    let _ = self.session.try_run(spec);
+                }
+            }
+        }
+    }
+
+    /// Accept-and-serve until shutdown, then drain: every connection
+    /// accepted before the flag was set finishes its in-flight
+    /// request and gets its response before this returns.
+    pub fn run(&self) -> io::Result<ServeStats> {
+        std::thread::scope(|scope| {
+            while !self.shutdown.load(Ordering::SeqCst) {
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        scope.spawn(move || self.serve_connection(stream));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(self.cfg.poll_ms.max(1)));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        // Transient accept failure (fd pressure, RST in
+                        // the backlog): log and keep serving.
+                        eprintln!("graphmem serve: accept error: {e}");
+                        std::thread::sleep(Duration::from_millis(self.cfg.poll_ms.max(1)));
+                    }
+                }
+            }
+            // Scope exit joins every connection thread — the drain.
+        });
+        Ok(self.stats())
+    }
+
+    /// One connection: line in, line out, until EOF or shutdown.
+    fn serve_connection(&self, stream: TcpStream) {
+        let read_timeout = Duration::from_millis(self.cfg.poll_ms.max(1) * 5);
+        if stream.set_read_timeout(Some(read_timeout)).is_err() {
+            return;
+        }
+        let Ok(read_half) = stream.try_clone() else {
+            return;
+        };
+        let mut reader = BufReader::new(read_half);
+        let mut stream = stream;
+        let mut line = String::new();
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => return, // EOF: client hung up.
+                Ok(_) => {
+                    let trimmed = line.trim().to_string();
+                    line.clear();
+                    if trimmed.is_empty() {
+                        continue;
+                    }
+                    let response = self.handle_line(&trimmed);
+                    let closing = matches!(response, Response::ShuttingDown);
+                    let mut out = response.render();
+                    out.push('\n');
+                    if stream.write_all(out.as_bytes()).is_err() || stream.flush().is_err() {
+                        return;
+                    }
+                    if closing {
+                        return;
+                    }
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    // Idle poll tick: drop the connection once draining
+                    // (no new requests are admitted after shutdown).
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Dispatch one request line to a response. Never panics out:
+    /// everything that can fail answers typed.
+    fn handle_line(&self, line: &str) -> Response {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        match Request::parse(line) {
+            Err(msg) => Response::Proto(msg),
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Stats) => Response::Stats(self.stats_rows()),
+            Ok(Request::Shutdown) => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Response::ShuttingDown
+            }
+            Ok(Request::Boom) => {
+                // Deliberate panic inside the sim boundary: the typed
+                // `panicked` answer (and the daemon still being alive)
+                // is the point of this diagnostic.
+                self.sim_failures.fetch_add(1, Ordering::Relaxed);
+                let err = crate::robust::catch_sim::<()>(|| {
+                    panic!("boom: operator-requested diagnostic panic")
+                })
+                .unwrap_err();
+                Response::SimFailed(err)
+            }
+            Ok(Request::Run {
+                spec_line,
+                degraded,
+            }) => self.handle_run(&spec_line, degraded),
+        }
+    }
+
+    fn handle_run(&self, spec_line: &str, degraded: bool) -> Response {
+        // Admission before any parsing or simulation work.
+        let Some(_permit) = self.try_acquire() else {
+            self.busy_rejections.fetch_add(1, Ordering::Relaxed);
+            return Response::Busy {
+                retry_after_ms: self.cfg.retry_after_ms,
+            };
+        };
+        let spec = match spec_from_line_with(spec_line, Some(&builtin_graphs)) {
+            Ok(spec) => spec,
+            Err(err) => {
+                // Malformed or invalid specs fold into the run-time
+                // error taxonomy — the client sees one error type.
+                self.sim_failures.fetch_add(1, Ordering::Relaxed);
+                return Response::SimFailed(err.into());
+            }
+        };
+        let spec = self.admitted(spec);
+        let warm = self.session.peek(&spec).is_some()
+            || self
+                .session
+                .disk_cache()
+                .is_some_and(|disk| disk.contains(&spec));
+        match self.session.try_run(&spec) {
+            Ok(report) => {
+                if warm {
+                    self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Response::Report {
+                    cache_hit: warm,
+                    report,
+                }
+            }
+            Err(err @ SimError::BudgetExceeded { .. }) if degraded => {
+                // Graceful degradation: the cheap advisor probe stands
+                // in for the over-budget run, clearly marked. If even
+                // the probe fails, the original typed error stands.
+                match Advisor::new().recommend(&spec) {
+                    Ok(rec) => {
+                        self.degraded_replies.fetch_add(1, Ordering::Relaxed);
+                        Response::Degraded(DegradedEstimate::from_recommendation(&rec))
+                    }
+                    Err(_) => {
+                        self.sim_failures.fetch_add(1, Ordering::Relaxed);
+                        Response::SimFailed(err)
+                    }
+                }
+            }
+            Err(err) => {
+                self.sim_failures.fetch_add(1, Ordering::Relaxed);
+                Response::SimFailed(err)
+            }
+        }
+    }
+
+    /// The request's spec with the server's admission budget merged
+    /// in (axis-wise minimum — a request can tighten its own budget
+    /// but never exceed the server's).
+    fn admitted(&self, spec: SimSpec) -> SimSpec {
+        let Some(cap) = &self.cfg.admission else {
+            return spec;
+        };
+        let merged = merge_budgets(spec.budget(), cap);
+        spec.with_budget(Some(merged))
+    }
+
+    fn try_acquire(&self) -> Option<Permit<'_>> {
+        let mut current = self.inflight.load(Ordering::SeqCst);
+        loop {
+            if current >= self.cfg.max_inflight {
+                return None;
+            }
+            match self.inflight.compare_exchange(
+                current,
+                current + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return Some(Permit(&self.inflight)),
+                Err(actual) => current = actual,
+            }
+        }
+    }
+
+    fn stats_rows(&self) -> Vec<(String, String)> {
+        let serve = self.stats();
+        let session = self.session.stats();
+        let row = |k: &str, v: usize| (k.to_string(), v.to_string());
+        vec![
+            row("requests", serve.requests),
+            row("busy_rejections", serve.busy_rejections),
+            row("sim_failures", serve.sim_failures),
+            row("cache_hits", serve.cache_hits),
+            row("degraded_replies", serve.degraded_replies),
+            row("sim_runs", session.sim_runs),
+            row("memo_hits", session.memo_hits),
+            row("duplicate_waits", session.duplicate_waits),
+            row("programs_compiled", session.programs_compiled),
+            row("programs_reused", session.programs_reused),
+            row("disk_hits", session.disk_hits),
+            row("disk_writes", session.disk_writes),
+        ]
+    }
+}
+
+/// Axis-wise minimum of a request budget and the server cap: every
+/// limit the cap sets applies, and a request that set a *tighter*
+/// limit keeps it.
+fn merge_budgets(request: Option<&RunBudget>, cap: &RunBudget) -> RunBudget {
+    fn tighter<T: Ord + Copy>(a: Option<T>, b: Option<T>) -> Option<T> {
+        match (a, b) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, b) => b,
+        }
+    }
+    let Some(req) = request else {
+        return cap.clone();
+    };
+    RunBudget {
+        max_cycles: tighter(req.max_cycles, cap.max_cycles),
+        max_requests: tighter(req.max_requests, cap.max_requests),
+        wall_deadline: tighter(req.wall_deadline, cap.wall_deadline),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_merge_takes_axiswise_minimum() {
+        let cap = RunBudget {
+            max_cycles: Some(1_000),
+            max_requests: None,
+            wall_deadline: Some(Duration::from_secs(5)),
+        };
+        // No request budget: the cap applies verbatim.
+        assert_eq!(merge_budgets(None, &cap), cap);
+        // Tighter request limits survive, looser ones are clamped, and
+        // axes only the request sets are kept.
+        let req = RunBudget {
+            max_cycles: Some(2_000),
+            max_requests: Some(7),
+            wall_deadline: Some(Duration::from_secs(1)),
+        };
+        let merged = merge_budgets(Some(&req), &cap);
+        assert_eq!(merged.max_cycles, Some(1_000));
+        assert_eq!(merged.max_requests, Some(7));
+        assert_eq!(merged.wall_deadline, Some(Duration::from_secs(1)));
+    }
+}

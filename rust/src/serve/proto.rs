@@ -1,0 +1,435 @@
+//! The line-delimited wire protocol of `graphmem serve`.
+//!
+//! One request line in, one response line out, both built from the
+//! same primitives as [`crate::persist`] (percent-escaped strings,
+//! `key=value` tokens, floats as `f64::to_bits` hex), so a report
+//! travels the wire **bit-identically**. Parsing is total on both
+//! sides: a malformed request earns a typed `ERR proto` response and
+//! a malformed response earns a typed [`PersistError`] at the client
+//! — never a panic, never a wedged connection.
+//!
+//! Requests:
+//!
+//! ```text
+//! RUN [degraded] <spec line>     simulate (or fetch) one spec
+//! PING                           liveness probe
+//! STATS                          session + serve counters
+//! SHUTDOWN                       drain in-flight work, then exit
+//! BOOM                           diagnostic: panic inside the sim
+//!                                boundary (proves isolation)
+//! ```
+//!
+//! Responses:
+//!
+//! ```text
+//! OK report cache_hit=<bool> <report line>
+//! OK degraded <estimate tokens>
+//! OK pong | OK stats <k=v ...> | OK shutting-down
+//! ERR sim <error line>           typed SimError (incl. spec rejects)
+//! ERR proto <escaped message>    unparseable request
+//! BUSY retry_after_ms=<n>        admission queue full — back off
+//! ```
+
+use crate::advisor::Recommendation;
+use crate::persist::{
+    error_from_line, error_to_line, esc, report_from_line, report_to_line, unesc, PersistError,
+};
+use crate::robust::SimError;
+use crate::sim::SimReport;
+
+/// One client request line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Simulate (or fetch) one serialized [`crate::sim::SimSpec`].
+    /// With `degraded`, a budget-exceeded run falls back to the
+    /// advisor's probe-based estimate instead of a hard failure.
+    Run { spec_line: String, degraded: bool },
+    Ping,
+    Stats,
+    Shutdown,
+    /// Diagnostic: panics inside the simulation boundary. The daemon
+    /// must answer with a typed `panicked` error and keep serving.
+    Boom,
+}
+
+impl Request {
+    /// Render as one protocol line (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            Request::Run {
+                spec_line,
+                degraded: false,
+            } => format!("RUN {spec_line}"),
+            Request::Run {
+                spec_line,
+                degraded: true,
+            } => format!("RUN degraded {spec_line}"),
+            Request::Ping => "PING".to_string(),
+            Request::Stats => "STATS".to_string(),
+            Request::Shutdown => "SHUTDOWN".to_string(),
+            Request::Boom => "BOOM".to_string(),
+        }
+    }
+
+    /// Total parse; the error string is a human-readable reason the
+    /// server echoes back as `ERR proto`.
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let line = line.trim();
+        let (cmd, rest) = match line.split_once(' ') {
+            Some((c, r)) => (c, r.trim()),
+            None => (line, ""),
+        };
+        let bare = |req: Request| {
+            if rest.is_empty() {
+                Ok(req)
+            } else {
+                Err(format!("{cmd} takes no arguments, got {rest:?}"))
+            }
+        };
+        match cmd {
+            "RUN" => {
+                let (degraded, spec_line) = if rest == "degraded" {
+                    (true, "")
+                } else {
+                    match rest.strip_prefix("degraded ") {
+                        Some(r) => (true, r.trim()),
+                        None => (false, rest),
+                    }
+                };
+                if spec_line.is_empty() {
+                    return Err("RUN needs a serialized spec line".to_string());
+                }
+                Ok(Request::Run {
+                    spec_line: spec_line.to_string(),
+                    degraded,
+                })
+            }
+            "PING" => bare(Request::Ping),
+            "STATS" => bare(Request::Stats),
+            "SHUTDOWN" => bare(Request::Shutdown),
+            "BOOM" => bare(Request::Boom),
+            "" => Err("empty request".to_string()),
+            other => Err(format!(
+                "unknown command {other:?} (expected RUN|PING|STATS|SHUTDOWN|BOOM)"
+            )),
+        }
+    }
+}
+
+/// What a budget-exceeded request gets instead of a hard failure when
+/// the client opted into degraded mode: the advisor's probe-based
+/// estimate, clearly marked as such. `predicted_cycles` is the
+/// advisor's placement-axis cost model output, not a measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegradedEstimate {
+    /// Label of the probe spec the advisor actually simulated.
+    pub probe_label: String,
+    /// DRAM requests the probe issued.
+    pub probe_requests: u64,
+    /// Whether the probe ran on a sampled subgraph.
+    pub probe_sampled: bool,
+    /// Predicted cycles for the full run (advisor cost model).
+    pub predicted_cycles: f64,
+    /// Recommended partition count the prediction assumes.
+    pub partitions: usize,
+    /// Recommended channel count the prediction assumes.
+    pub channels: usize,
+    /// The advisor's evidence for the prediction.
+    pub rationale: String,
+}
+
+impl DegradedEstimate {
+    /// Distill a full advisor [`Recommendation`] down to the estimate
+    /// the wire carries.
+    pub fn from_recommendation(rec: &Recommendation) -> DegradedEstimate {
+        DegradedEstimate {
+            probe_label: rec.probe_label.clone(),
+            probe_requests: rec.probe_requests,
+            probe_sampled: rec.probe_sampled,
+            predicted_cycles: rec.placement.predicted_cost,
+            partitions: rec.partitioning.partitions,
+            channels: rec.placement.channels,
+            rationale: rec.placement.rationale.clone(),
+        }
+    }
+
+    fn render_fields(&self) -> String {
+        format!(
+            "probe={} requests={} sampled={} cycles={:016x} partitions={} channels={} \
+             rationale={}",
+            esc(&self.probe_label),
+            self.probe_requests,
+            u8::from(self.probe_sampled),
+            self.predicted_cycles.to_bits(),
+            self.partitions,
+            self.channels,
+            esc(&self.rationale),
+        )
+    }
+
+    fn parse_fields(s: &str) -> Result<DegradedEstimate, PersistError> {
+        let mut probe = None;
+        let mut requests = None;
+        let mut sampled = None;
+        let mut cycles = None;
+        let mut partitions = None;
+        let mut channels = None;
+        let mut rationale = None;
+        for tok in s.split_whitespace() {
+            let (k, v) = tok.split_once('=').ok_or_else(|| PersistError::Field {
+                field: "degraded",
+                detail: format!("token {tok:?} is not key=value"),
+            })?;
+            let bad = |detail: String| PersistError::Field {
+                field: "degraded",
+                detail,
+            };
+            match k {
+                "probe" => probe = Some(unesc(v)?),
+                "requests" => {
+                    requests = Some(v.parse::<u64>().map_err(|e| bad(format!("requests: {e}")))?)
+                }
+                "sampled" => sampled = Some(v == "1"),
+                "cycles" => {
+                    let bits = u64::from_str_radix(v, 16)
+                        .map_err(|e| bad(format!("cycles: {e}")))?;
+                    cycles = Some(f64::from_bits(bits));
+                }
+                "partitions" => {
+                    partitions =
+                        Some(v.parse::<usize>().map_err(|e| bad(format!("partitions: {e}")))?)
+                }
+                "channels" => {
+                    channels = Some(v.parse::<usize>().map_err(|e| bad(format!("channels: {e}")))?)
+                }
+                "rationale" => rationale = Some(unesc(v)?),
+                other => return Err(PersistError::UnknownKey(other.to_string())),
+            }
+        }
+        Ok(DegradedEstimate {
+            probe_label: probe.ok_or(PersistError::MissingField("probe"))?,
+            probe_requests: requests.ok_or(PersistError::MissingField("requests"))?,
+            probe_sampled: sampled.ok_or(PersistError::MissingField("sampled"))?,
+            predicted_cycles: cycles.ok_or(PersistError::MissingField("cycles"))?,
+            partitions: partitions.ok_or(PersistError::MissingField("partitions"))?,
+            channels: channels.ok_or(PersistError::MissingField("channels"))?,
+            rationale: rationale.ok_or(PersistError::MissingField("rationale"))?,
+        })
+    }
+}
+
+/// One server response line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// A full report; `cache_hit` is true when it was served without
+    /// simulating (memo or disk).
+    Report { cache_hit: bool, report: SimReport },
+    /// Advisor estimate in place of an over-budget run.
+    Degraded(DegradedEstimate),
+    /// The simulation (or the spec itself) failed, typed.
+    SimFailed(SimError),
+    /// Admission queue full; retry after the hinted delay.
+    Busy { retry_after_ms: u64 },
+    /// The request line could not be parsed.
+    Proto(String),
+    Pong,
+    /// Serve + session counters as ordered `(key, value)` pairs.
+    Stats(Vec<(String, String)>),
+    ShuttingDown,
+}
+
+impl Response {
+    /// Render as one protocol line (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            Response::Report { cache_hit, report } => {
+                format!("OK report cache_hit={cache_hit} {}", report_to_line(report))
+            }
+            Response::Degraded(est) => format!("OK degraded {}", est.render_fields()),
+            Response::SimFailed(err) => format!("ERR sim {}", error_to_line(err)),
+            Response::Busy { retry_after_ms } => {
+                format!("BUSY retry_after_ms={retry_after_ms}")
+            }
+            Response::Proto(msg) => format!("ERR proto {}", esc(msg)),
+            Response::Pong => "OK pong".to_string(),
+            Response::Stats(kvs) => {
+                let mut out = "OK stats".to_string();
+                for (k, v) in kvs {
+                    out.push(' ');
+                    out.push_str(&format!("{}={}", esc(k), esc(v)));
+                }
+                out
+            }
+            Response::ShuttingDown => "OK shutting-down".to_string(),
+        }
+    }
+
+    /// Total parse of a server response line.
+    pub fn parse(line: &str) -> Result<Response, PersistError> {
+        let line = line.trim();
+        let bad = |detail: String| PersistError::Field {
+            field: "response",
+            detail,
+        };
+        if let Some(rest) = line.strip_prefix("OK report cache_hit=") {
+            let (flag, report_line) = rest
+                .split_once(' ')
+                .ok_or_else(|| bad("report response lacks a report line".to_string()))?;
+            let cache_hit = match flag {
+                "true" => true,
+                "false" => false,
+                other => return Err(bad(format!("cache_hit {other:?} is not a bool"))),
+            };
+            return Ok(Response::Report {
+                cache_hit,
+                report: report_from_line(report_line)?,
+            });
+        }
+        if let Some(rest) = line.strip_prefix("OK degraded ") {
+            return Ok(Response::Degraded(DegradedEstimate::parse_fields(rest)?));
+        }
+        if let Some(rest) = line.strip_prefix("ERR sim ") {
+            return Ok(Response::SimFailed(error_from_line(rest)?));
+        }
+        if let Some(rest) = line.strip_prefix("ERR proto ") {
+            return Ok(Response::Proto(unesc(rest.trim())?));
+        }
+        if let Some(rest) = line.strip_prefix("BUSY retry_after_ms=") {
+            let ms = rest
+                .trim()
+                .parse::<u64>()
+                .map_err(|e| bad(format!("retry_after_ms: {e}")))?;
+            return Ok(Response::Busy { retry_after_ms: ms });
+        }
+        if line == "OK pong" {
+            return Ok(Response::Pong);
+        }
+        if line == "OK shutting-down" {
+            return Ok(Response::ShuttingDown);
+        }
+        if let Some(rest) = line.strip_prefix("OK stats") {
+            let mut kvs = Vec::new();
+            for tok in rest.split_whitespace() {
+                let (k, v) = tok.split_once('=').ok_or_else(|| {
+                    bad(format!("stats token {tok:?} is not key=value"))
+                })?;
+                kvs.push((unesc(k)?, unesc(v)?));
+            }
+            return Ok(Response::Stats(kvs));
+        }
+        Err(bad(format!("unrecognized response line {line:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AcceleratorKind;
+    use crate::algo::problem::ProblemKind;
+    use crate::graph::datasets::DatasetId;
+    use crate::persist::spec_to_line;
+    use crate::robust::{BudgetResource, SimError};
+    use crate::sim::SimSpec;
+
+    fn spec() -> SimSpec {
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::Bfs)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        let cases = [
+            Request::Run {
+                spec_line: spec_to_line(&spec()),
+                degraded: false,
+            },
+            Request::Run {
+                spec_line: spec_to_line(&spec()),
+                degraded: true,
+            },
+            Request::Ping,
+            Request::Stats,
+            Request::Shutdown,
+            Request::Boom,
+        ];
+        for req in cases {
+            assert_eq!(Request::parse(&req.render()).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_errors() {
+        for line in ["", "RUN", "FETCH x=1", "PING extra", "RUN degraded "] {
+            assert!(Request::parse(line).is_err(), "{line:?}");
+        }
+    }
+
+    #[test]
+    fn report_response_is_bit_identical() {
+        let report = spec().run();
+        let resp = Response::Report {
+            cache_hit: true,
+            report: report.clone(),
+        };
+        match Response::parse(&resp.render()).unwrap() {
+            Response::Report { cache_hit, report: parsed } => {
+                assert!(cache_hit);
+                assert_eq!(parsed, report);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_response_variant_round_trips() {
+        let est = DegradedEstimate {
+            probe_label: "probe:sd sampled".to_string(),
+            probe_requests: 1234,
+            probe_sampled: true,
+            predicted_cycles: 1.5e9,
+            partitions: 7,
+            channels: 4,
+            rationale: "bus utilization 61.2% > 40% knee".to_string(),
+        };
+        let err = SimError::BudgetExceeded {
+            resource: BudgetResource::Cycles,
+            limit: 10,
+            observed: 11,
+        };
+        let cases = [
+            Response::Degraded(est),
+            Response::SimFailed(err),
+            Response::Busy { retry_after_ms: 250 },
+            Response::Proto("unknown command \"FETCH\"".to_string()),
+            Response::Pong,
+            Response::Stats(vec![
+                ("sim_runs".to_string(), "3".to_string()),
+                ("cache_hits".to_string(), "1".to_string()),
+            ]),
+            Response::ShuttingDown,
+        ];
+        for resp in cases {
+            assert_eq!(Response::parse(&resp.render()).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn corrupt_response_lines_error_never_panic() {
+        for line in [
+            "",
+            "OK",
+            "OK report cache_hit=maybe x",
+            "OK report cache_hit=true",
+            "BUSY retry_after_ms=soon",
+            "ERR sim ",
+            "OK degraded cycles=zz",
+            "garbage with spaces",
+        ] {
+            assert!(Response::parse(line).is_err(), "{line:?}");
+        }
+    }
+}

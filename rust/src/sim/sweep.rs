@@ -18,6 +18,13 @@
 //!   compiles each workload once per channel count and shares the
 //!   program across memory technologies and worker threads by `Arc`.
 //!
+//! An optional third layer, [`Session::with_disk_cache`], puts a
+//! durable [`crate::persist::CacheDir`] under the report memo: misses
+//! consult the disk before simulating and computed results (reports
+//! *and* typed failures) are atomically persisted, so warm results
+//! survive restarts and are shared across processes. Corrupt or
+//! truncated entries read as misses and are recomputed and rewritten.
+//!
 //! [`Session::stats`] reports both layers' traffic (programs
 //! compiled/reused, runs executed/memoized/duplicate-waited); the CLI
 //! surfaces it behind `graphmem sweep --stats`.
@@ -65,6 +72,7 @@ use crate::algo::problem::ProblemKind;
 use crate::dram::MemTech;
 use crate::graph::datasets::DatasetId;
 use crate::onchip::OnChipConfig;
+use crate::persist::CacheDir;
 use crate::robust::SimError;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -146,6 +154,12 @@ impl<K: Hash + Eq + Clone, V: Clone> OnceMap<K, V> {
     /// Cached values across all shards.
     fn len(&self) -> usize {
         self.shards.iter().map(|s| lock_unpoisoned(s).done.len()).sum()
+    }
+
+    /// Non-blocking lookup: the cached value if the computation has
+    /// completed, `None` otherwise (including while it is in flight).
+    fn peek(&self, key: &K) -> Option<V> {
+        lock_unpoisoned(self.shard(key)).done.get(key).cloned()
     }
 
     fn get_or_compute(&self, key: &K, mut f: impl FnMut() -> V) -> (V, Fetch) {
@@ -249,6 +263,15 @@ pub struct SessionStats {
     pub programs_compiled: usize,
     /// Program-cache hits (incl. waits on a concurrent compile).
     pub programs_reused: usize,
+    /// Results loaded from the layered [`CacheDir`] instead of being
+    /// simulated ([`Session::with_disk_cache`]). Each disk hit still
+    /// lands in the in-memory memo, so `sim_runs` counts it; the
+    /// number of simulations actually *executed* this session is
+    /// `sim_runs - disk_hits`, and a fully warm run satisfies
+    /// `sim_runs == disk_hits`.
+    pub disk_hits: usize,
+    /// Results durably written to the layered [`CacheDir`].
+    pub disk_writes: usize,
 }
 
 /// Shared memoizing simulation session: run any number of specs
@@ -264,10 +287,16 @@ pub struct Session {
     /// Worker threads used by [`Session::run_all`]; `None` = derive
     /// from the machine.
     threads: Option<usize>,
+    /// Durable third cache layer ([`Session::with_disk_cache`]):
+    /// consulted before simulating, written after. Misses (including
+    /// corrupt or foreign entries) fall through to a normal compute.
+    disk: Option<Arc<CacheDir>>,
     memo_hits: AtomicUsize,
     duplicate_waits: AtomicUsize,
     programs_compiled: AtomicUsize,
     programs_reused: AtomicUsize,
+    disk_hits: AtomicUsize,
+    disk_writes: AtomicUsize,
 }
 
 impl Session {
@@ -276,10 +305,13 @@ impl Session {
             reports: OnceMap::new(),
             programs: OnceMap::new(),
             threads: None,
+            disk: None,
             memo_hits: AtomicUsize::new(0),
             duplicate_waits: AtomicUsize::new(0),
             programs_compiled: AtomicUsize::new(0),
             programs_reused: AtomicUsize::new(0),
+            disk_hits: AtomicUsize::new(0),
+            disk_writes: AtomicUsize::new(0),
         }
     }
 
@@ -287,6 +319,23 @@ impl Session {
     pub fn with_threads(mut self, threads: usize) -> Session {
         self.threads = Some(threads.max(1));
         self
+    }
+
+    /// Layer a durable [`CacheDir`] under the in-memory memo: every
+    /// miss first consults the disk (a valid entry is adopted without
+    /// simulating — [`SessionStats::disk_hits`]), and every computed
+    /// result (report *or* typed failure) is atomically persisted so
+    /// it survives restarts and is shared across processes. Disk I/O
+    /// happens at most once per distinct spec per session; the
+    /// compute-once gate covers the disk probe too.
+    pub fn with_disk_cache(mut self, dir: Arc<CacheDir>) -> Session {
+        self.disk = Some(dir);
+        self
+    }
+
+    /// The layered disk cache, if one was attached.
+    pub fn disk_cache(&self) -> Option<&Arc<CacheDir>> {
+        self.disk.as_ref()
     }
 
     /// The compiled program for `spec`, from the session's program
@@ -342,10 +391,24 @@ impl Session {
         scratch: &mut RunScratch,
     ) -> Result<SimReport, SimError> {
         let (report, how) = self.reports.get_or_compute(spec, || {
-            crate::robust::catch_sim(|| {
+            if let Some(disk) = &self.disk {
+                if let Some(stored) = disk.load(spec) {
+                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    return stored;
+                }
+            }
+            let result = crate::robust::catch_sim(|| {
                 let program = self.program_for(spec);
                 spec.run_with_program_scratch(&program, scratch)
-            })
+            });
+            if let Some(disk) = &self.disk {
+                // A failed store leaves the cache cold for this key;
+                // the in-memory result is still correct.
+                if disk.store(spec, &result).is_ok() {
+                    self.disk_writes.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            result
         });
         match how {
             Fetch::Computed => {}
@@ -453,6 +516,14 @@ impl Session {
         self.reports.len()
     }
 
+    /// Non-blocking memo lookup: the memoized result if `spec` has
+    /// already materialized in *this* session, without touching disk
+    /// and without triggering a computation. The serve daemon uses it
+    /// to report `cache_hit` truthfully before running a request.
+    pub fn peek(&self, spec: &SimSpec) -> Option<Result<SimReport, SimError>> {
+        self.reports.peek(spec)
+    }
+
     /// Snapshot of the session's cache traffic.
     pub fn stats(&self) -> SessionStats {
         SessionStats {
@@ -461,6 +532,8 @@ impl Session {
             duplicate_waits: self.duplicate_waits.load(Ordering::Relaxed),
             programs_compiled: self.programs_compiled.load(Ordering::Relaxed),
             programs_reused: self.programs_reused.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            disk_writes: self.disk_writes.load(Ordering::Relaxed),
         }
     }
 }

@@ -61,10 +61,24 @@ impl Histogram {
         }
     }
 
+    /// Sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
     /// Bucket counts, lowest bucket first (`buckets()[0]` = exact
     /// zeros, `buckets()[k]` = values in `[2^(k-1), 2^k)`).
     pub fn buckets(&self) -> &[u64] {
         &self.counts
+    }
+
+    /// Rebuild a histogram from its serialized parts — the inverse of
+    /// reading [`Histogram::buckets`]/[`Histogram::count`]/
+    /// [`Histogram::sum`]. The parts are stored verbatim (no
+    /// renormalization), so a round trip through `crate::persist` is
+    /// structurally equal to the original.
+    pub fn from_parts(counts: Vec<u64>, total: u64, sum: u64) -> Histogram {
+        Histogram { counts, total, sum }
     }
 
     /// Upper bound (exclusive) of bucket `k`.

@@ -1,0 +1,276 @@
+//! Durability tests for the `persist` layer (PR 9's tentpole): every
+//! spec axis must serialize → parse → the identical memo key, reports
+//! must survive the disk bit-identically, the Session's disk layer
+//! must answer restarts without re-simulating, corruption must degrade
+//! to recompute-and-rewrite, and no parser — cache entry, manifest, or
+//! serve protocol line — may panic on hostile bytes.
+
+use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::problem::ProblemKind;
+use graphmem::dram::{
+    ChannelDegrade, FaultPlan, LatencySpikes, MemTech, TransientRetries,
+};
+use graphmem::graph::DatasetId;
+use graphmem::onchip::OnChipConfig;
+use graphmem::persist::{
+    builtin_graphs, error_from_line, error_to_line, parse_entry, parse_manifest_with,
+    render_entry, report_from_line, report_to_line, spec_from_line, spec_from_line_with,
+    spec_to_line, write_manifest, CacheDir, ENTRY_HEADER, MANIFEST_HEADER,
+};
+use graphmem::robust::RunBudget;
+use graphmem::serve::{Request, Response};
+use graphmem::sim::{Session, SimSpec};
+use graphmem::util::proptest::{check, fuzz_bytes, mutate_bytes, no_panic};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn base(kind: AcceleratorKind) -> SimSpec {
+    SimSpec::builder()
+        .accelerator(kind)
+        .graph(DatasetId::Sd)
+        .problem(ProblemKind::Bfs)
+        .build()
+        .unwrap()
+}
+
+/// One spec per axis the line format serializes: accelerator, graph
+/// kind (named + custom), problem, memory technology, channel count,
+/// patterns toggle, optimization set, on-chip buffer, run budget, and
+/// fault plan.
+fn every_axis_specs() -> Vec<SimSpec> {
+    let mut specs: Vec<SimSpec> = AcceleratorKind::all().iter().map(|&k| base(k)).collect();
+    // Memory technologies and channel counts (Tab. 3 bounds).
+    for (mem, ch) in [
+        (MemTech::Ddr3, 1),
+        (MemTech::Ddr4, 4),
+        (MemTech::Hbm, 8),
+        (MemTech::Hbm2, 16),
+    ] {
+        specs.push(
+            SimSpec::builder()
+                .accelerator(AcceleratorKind::HitGraph)
+                .graph(DatasetId::Sd)
+                .problem(ProblemKind::Bfs)
+                .mem(mem)
+                .channels(ch)
+                .build()
+                .unwrap(),
+        );
+    }
+    // Weighted problem on a weighted-capable system.
+    specs.push(
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::ThunderGp)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::Sssp)
+            .build()
+            .unwrap(),
+    );
+    // Baseline (empty optimization set → the "-" token) + patterns.
+    specs.push(
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::PageRank)
+            .config(AcceleratorConfig::baseline())
+            .patterns(true)
+            .build()
+            .unwrap(),
+    );
+    // On-chip buffer.
+    specs.push(
+        base(AcceleratorKind::AccuGraph)
+            .with_onchip(Some(OnChipConfig::vertex_cache(1 << 14)))
+            .unwrap(),
+    );
+    // Run budget, including the sub-second wall deadline encoding.
+    specs.push(base(AcceleratorKind::ForeGraph).with_budget(Some(RunBudget {
+        max_cycles: Some(5_000_000),
+        max_requests: Some(1_000_000),
+        wall_deadline: Some(Duration::from_millis(1_500)),
+    })));
+    // Fault plan with every sub-field populated.
+    specs.push(base(AcceleratorKind::HitGraph).with_faults(Some(FaultPlan {
+        seed: 0xBEEF,
+        spikes: Some(LatencySpikes { period: 97, extra_cycles: 40 }),
+        degrade: Some(ChannelDegrade { every: 1_000, window: 50, extra_cycles: 8 }),
+        retries: Some(TransientRetries { every: 211, max_retries: 3, backoff_cycles: 12 }),
+    })));
+    // Custom synthetic workloads, both digest variants.
+    specs.push(
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .custom_graph("rmat-small", builtin_graphs("rmat-small").unwrap())
+            .problem(ProblemKind::Bfs)
+            .build()
+            .unwrap(),
+    );
+    specs.push(
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::HitGraph)
+            .custom_graph("rmat-small-w", builtin_graphs("rmat-small-w").unwrap())
+            .problem(ProblemKind::Sssp)
+            .build()
+            .unwrap(),
+    );
+    specs
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let pid = std::process::id();
+    let root = std::env::temp_dir().join(format!("graphmem-persist-it-{tag}-{pid}"));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+#[test]
+fn every_spec_axis_round_trips_to_the_identical_memo_key() {
+    for spec in every_axis_specs() {
+        let line = spec_to_line(&spec);
+        let back = spec_from_line_with(&line, Some(&builtin_graphs))
+            .unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(back, spec, "round trip is identity for {line}");
+        assert_eq!(spec_to_line(&back), line, "memo key is stable for {line}");
+    }
+}
+
+#[test]
+fn reports_survive_entries_bit_identically_for_every_accelerator() {
+    for kind in AcceleratorKind::all() {
+        let spec = base(kind);
+        let report = spec.run();
+        let back = report_from_line(&report_to_line(&report)).unwrap();
+        assert_eq!(back, report, "{kind:?}");
+        assert_eq!(back.seconds.to_bits(), report.seconds.to_bits(), "{kind:?}");
+
+        let (line, stored) = parse_entry(&render_entry(&spec, &Ok(report.clone()))).unwrap();
+        assert_eq!(line, spec_to_line(&spec));
+        assert_eq!(stored.unwrap(), report, "{kind:?} entry is bit-identical");
+    }
+}
+
+#[test]
+fn session_disk_layer_answers_restarts_without_resimulating() {
+    let root = tmp_root("restart");
+    let specs: Vec<SimSpec> = AcceleratorKind::all().iter().map(|&k| base(k)).collect();
+
+    // Cold process: everything simulates and is written through.
+    let cold = Session::new().with_disk_cache(Arc::new(CacheDir::new(&root).unwrap()));
+    let cold_reports: Vec<_> = specs.iter().map(|s| cold.run(s)).collect();
+    let st = cold.stats();
+    assert_eq!(st.disk_hits, 0, "cold cache cannot hit");
+    assert_eq!(st.disk_writes, specs.len(), "every result written through");
+
+    // "Restarted" process: a fresh Session over the same directory.
+    // The warm identity `sim_runs == disk_hits` means zero simulations
+    // executed — every report was adopted from disk.
+    let warm = Session::new().with_disk_cache(Arc::new(CacheDir::new(&root).unwrap()));
+    for (spec, cold_report) in specs.iter().zip(&cold_reports) {
+        let r = warm.run(spec);
+        assert_eq!(&r, cold_report, "disk report is bit-identical");
+        assert_eq!(r.seconds.to_bits(), cold_report.seconds.to_bits());
+    }
+    let st = warm.stats();
+    assert_eq!(st.sim_runs, st.disk_hits, "warm restart executed nothing");
+    assert_eq!(st.disk_writes, 0, "hits are not rewritten");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn corruption_degrades_to_recompute_and_rewrite() {
+    let root = tmp_root("degrade");
+    let spec = base(AcceleratorKind::HitGraph);
+    let dir = Arc::new(CacheDir::new(&root).unwrap());
+    let first = Session::new().with_disk_cache(Arc::clone(&dir));
+    let report = first.run(&spec);
+
+    // Tear the entry mid-file, as a crashed non-atomic writer would.
+    let path = dir.entry_path(&spec);
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+
+    let second = Session::new().with_disk_cache(Arc::new(CacheDir::new(&root).unwrap()));
+    assert_eq!(second.run(&spec), report, "recompute matches");
+    let st = second.stats();
+    assert_eq!(st.disk_hits, 0, "the torn entry was a miss, not a panic");
+    assert_eq!(st.disk_writes, 1, "the entry was healed");
+    assert_eq!(
+        std::fs::read_to_string(&path).unwrap(),
+        text,
+        "healed entry is byte-identical to the original write"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn manifests_replay_bit_identically_through_the_builtin_resolver() {
+    let specs = every_axis_specs();
+    let text = write_manifest(&specs);
+    let back = parse_manifest_with(&text, Some(&builtin_graphs)).unwrap();
+    assert_eq!(back, specs);
+    assert_eq!(
+        write_manifest(&back),
+        text,
+        "parse → write is byte-identical (the sweep --manifest replay contract)"
+    );
+}
+
+#[test]
+fn prop_no_parser_panics_on_fuzzed_bytes() {
+    let spec = base(AcceleratorKind::ReGraph);
+    let spec_line = spec_to_line(&spec);
+    let report_line = report_to_line(&spec.run());
+    let error_line = error_to_line(&graphmem::robust::SimError::InvalidInput("x".into()));
+    let fragments: Vec<Vec<u8>> = vec![
+        spec_line.clone().into_bytes(),
+        report_line.clone().into_bytes(),
+        error_line.clone().into_bytes(),
+        ENTRY_HEADER.as_bytes().to_vec(),
+        MANIFEST_HEADER.as_bytes().to_vec(),
+        b"spec ".to_vec(),
+        b"ok ".to_vec(),
+        b"err ".to_vec(),
+        b"sum ".to_vec(),
+        b"RUN ".to_vec(),
+        b"OK report cache_hit=true ".to_vec(),
+        b"ERR sim ".to_vec(),
+        b"BUSY retry_after_ms=9".to_vec(),
+    ];
+    let frag_refs: Vec<&[u8]> = fragments.iter().map(|f| f.as_slice()).collect();
+    check(0x9E51, 400, |rng| {
+        let bytes = fuzz_bytes(rng, 512, &frag_refs);
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        no_panic(|| {
+            let _ = spec_from_line(&text);
+            let _ = spec_from_line_with(&text, Some(&builtin_graphs));
+            let _ = report_from_line(&text);
+            let _ = error_from_line(&text);
+            let _ = parse_entry(&text);
+            let _ = parse_manifest_with(&text, Some(&builtin_graphs));
+            let _ = Request::parse(&text);
+            let _ = Response::parse(&text);
+        })
+    });
+}
+
+#[test]
+fn prop_mutated_cache_entries_and_protocol_lines_never_panic() {
+    let spec = base(AcceleratorKind::AccuGraph);
+    let entry = render_entry(&spec, &Ok(spec.run()));
+    let manifest = write_manifest(&[spec.clone()]);
+    let response = Response::Report { cache_hit: true, report: spec.run() }.render();
+    let request = Request::Run { spec_line: spec_to_line(&spec), degraded: true }.render();
+    check(0xC0FF, 400, |rng| {
+        let which = rng.next_below(4);
+        let valid: &str = [&entry, &manifest, &response, &request][which as usize];
+        let bytes = mutate_bytes(rng, valid.as_bytes());
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        no_panic(|| {
+            let _ = parse_entry(&text);
+            let _ = parse_manifest_with(&text, Some(&builtin_graphs));
+            let _ = Response::parse(&text);
+            let _ = Request::parse(&text);
+        })
+    });
+}

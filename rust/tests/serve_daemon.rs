@@ -1,0 +1,201 @@
+//! End-to-end tests of the serve daemon over real sockets: cache-hit
+//! semantics, restart durability through a shared disk cache, panic
+//! isolation, admission control (budgets and `BUSY`), degraded mode,
+//! and graceful shutdown. Every server binds `127.0.0.1:0` so the
+//! tests never collide on a port.
+
+use graphmem::accel::AcceleratorKind;
+use graphmem::algo::problem::ProblemKind;
+use graphmem::graph::DatasetId;
+use graphmem::robust::RunBudget;
+use graphmem::serve::{Client, Server, ServerConfig, ServeStats, SubmitOutcome};
+use graphmem::sim::{SimReport, SimSpec};
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+fn spec() -> SimSpec {
+    SimSpec::builder()
+        .accelerator(AcceleratorKind::HitGraph)
+        .graph(DatasetId::Sd)
+        .problem(ProblemKind::Bfs)
+        .build()
+        .unwrap()
+}
+
+/// Bind on an ephemeral port and serve from a background thread.
+/// Returns the address, the running thread (joins to the final
+/// counters), and a client pointed at it.
+fn start(cfg: ServerConfig) -> (Client, JoinHandle<ServeStats>) {
+    let server = Server::bind("127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let join = std::thread::spawn(move || server.run().unwrap());
+    let client = Client::new(addr).with_base_backoff(Duration::from_millis(5));
+    (client, join)
+}
+
+fn expect_report(outcome: SubmitOutcome) -> (SimReport, bool) {
+    match outcome {
+        SubmitOutcome::Report { report, cache_hit } => (report, cache_hit),
+        other => panic!("expected a report, got {other:?}"),
+    }
+}
+
+fn stat(rows: &[(String, String)], key: &str) -> usize {
+    rows.iter()
+        .find(|(k, _)| k == key)
+        .unwrap_or_else(|| panic!("missing stats row {key}"))
+        .1
+        .parse()
+        .unwrap()
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let pid = std::process::id();
+    let root = std::env::temp_dir().join(format!("graphmem-serve-it-{tag}-{pid}"));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+#[test]
+fn second_submit_is_a_cache_hit_and_shutdown_drains() {
+    let (client, join) = start(ServerConfig::default());
+    client.ping().unwrap();
+
+    let (first, hit1) = expect_report(client.submit(&spec(), false).unwrap());
+    assert!(!hit1, "cold daemon must simulate");
+    let (second, hit2) = expect_report(client.submit(&spec(), false).unwrap());
+    assert!(hit2, "second identical submit is answered from the memo");
+    assert_eq!(first, second, "memo answer is bit-identical");
+
+    let rows = client.stats().unwrap();
+    assert_eq!(stat(&rows, "cache_hits"), 1);
+    assert_eq!(stat(&rows, "sim_runs"), 1);
+
+    client.shutdown().unwrap();
+    let stats = join.join().unwrap();
+    assert!(stats.requests >= 5, "ping + 2 runs + stats + shutdown");
+    assert_eq!(stats.cache_hits, 1);
+}
+
+#[test]
+fn restart_serves_pre_restart_results_from_the_durable_cache() {
+    let root = tmp_root("restart");
+    let cfg = ServerConfig {
+        cache_dir: Some(root.clone()),
+        ..ServerConfig::default()
+    };
+
+    // First daemon lifetime: compute and persist.
+    let (client, join) = start(cfg.clone());
+    let (original, hit) = expect_report(client.submit(&spec(), false).unwrap());
+    assert!(!hit);
+    client.shutdown().unwrap();
+    join.join().unwrap();
+
+    // Second daemon lifetime over the same directory: the very first
+    // submit is already warm, bit-identically, with zero simulations.
+    let (client, join) = start(cfg);
+    let (reread, hit) = expect_report(client.submit(&spec(), false).unwrap());
+    assert!(hit, "restarted daemon answers from disk");
+    assert_eq!(reread, original, "disk answer is bit-identical");
+    assert_eq!(reread.seconds.to_bits(), original.seconds.to_bits());
+    let rows = client.stats().unwrap();
+    assert_eq!(stat(&rows, "disk_hits"), 1);
+    assert_eq!(
+        stat(&rows, "sim_runs"),
+        stat(&rows, "disk_hits"),
+        "warm identity: nothing was executed"
+    );
+    client.shutdown().unwrap();
+    join.join().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn a_panicking_request_leaves_the_daemon_serving() {
+    let (client, join) = start(ServerConfig::default());
+    let err = client.boom().unwrap();
+    assert_eq!(err.kind(), "panicked");
+    assert!(err.to_string().contains("boom"));
+
+    // The daemon survived: liveness and real work both still answer.
+    client.ping().unwrap();
+    let (_, hit) = expect_report(client.submit(&spec(), false).unwrap());
+    assert!(!hit);
+    client.shutdown().unwrap();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.sim_failures, 1);
+}
+
+#[test]
+fn admission_budget_rejects_typed_and_degraded_mode_estimates() {
+    let cfg = ServerConfig {
+        admission: Some(RunBudget {
+            max_cycles: Some(1), // nothing real completes in one cycle
+            max_requests: None,
+            wall_deadline: None,
+        }),
+        ..ServerConfig::default()
+    };
+    let (client, join) = start(cfg);
+
+    // Plain submit: the merged budget trips and the failure is typed.
+    match client.submit(&spec(), false).unwrap() {
+        SubmitOutcome::Failed(err) => assert_eq!(err.kind(), "budget-exceeded"),
+        other => panic!("expected a typed budget failure, got {other:?}"),
+    }
+
+    // Degraded submit of the same spec: the advisor's probe estimate
+    // stands in, clearly marked, instead of the error.
+    match client.submit(&spec(), true).unwrap() {
+        SubmitOutcome::Degraded(est) => {
+            assert!(est.partitions >= 1);
+            assert!(est.channels >= 1);
+            assert!(est.predicted_cycles > 0.0);
+            assert!(!est.rationale.is_empty());
+        }
+        other => panic!("expected a degraded estimate, got {other:?}"),
+    }
+
+    client.shutdown().unwrap();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.sim_failures, 1);
+    assert_eq!(stats.degraded_replies, 1);
+}
+
+#[test]
+fn overloaded_daemon_answers_busy_but_stays_alive() {
+    // max_inflight = 0 is the deterministic overload mode: every RUN
+    // is rejected with BUSY while control requests still answer.
+    let cfg = ServerConfig {
+        max_inflight: 0,
+        retry_after_ms: 1,
+        ..ServerConfig::default()
+    };
+    let (client, join) = start(cfg);
+    let one_shot = client.clone().with_max_attempts(2);
+    let err = one_shot.submit(&spec(), false).unwrap_err();
+    assert_eq!(
+        err.kind(),
+        std::io::ErrorKind::WouldBlock,
+        "exhausted retries surface the BUSY as WouldBlock"
+    );
+    client.ping().unwrap();
+    let rows = client.stats().unwrap();
+    assert_eq!(stat(&rows, "busy_rejections"), 2, "both attempts rejected");
+    client.shutdown().unwrap();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.busy_rejections, 2);
+}
+
+#[test]
+fn malformed_spec_lines_answer_typed_not_dropped() {
+    let (client, join) = start(ServerConfig::default());
+    match client.submit_line("accel=NoSuchSystem graph=named:sd", false).unwrap() {
+        SubmitOutcome::Failed(err) => assert_eq!(err.kind(), "invalid-input"),
+        other => panic!("expected a typed spec reject, got {other:?}"),
+    }
+    client.shutdown().unwrap();
+    join.join().unwrap();
+}
