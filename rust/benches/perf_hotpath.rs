@@ -38,6 +38,10 @@
 //!   session, then re-served by a fresh session over the same cache
 //!   directory — the warm pass is asserted bit-identical with zero
 //!   executed simulations. CI's bench-smoke greps `disk_cache_hits`.
+//! * Static-verifier overhead (`verify.overhead`): figure-grade
+//!   programs compiled vs verified side by side — verification is
+//!   asserted in-run to cost <10% of compilation and to find zero
+//!   violations. CI's bench-smoke greps `verify_violations`.
 //! * Golden engines: native vs XLA/PJRT per-iteration latency.
 //!
 //! Output: human-readable lines on stdout, plus machine-readable JSON
@@ -832,6 +836,83 @@ fn bench_serve_cold_vs_warm(rep: &mut Reporter) {
     let _ = std::fs::remove_dir_all(&root);
 }
 
+/// Static verification overhead (`verify.overhead`): a figure-grade
+/// spec set compiled repeatedly, then the compiled artifacts verified
+/// repeatedly, side by side. Verification walks descriptor facts
+/// (extremal lines for closed forms, full scans for gathers) and must
+/// stay under 10% of compile wall time — asserted in-run, so the
+/// checker cannot quietly grow a hot loop. CI's bench-smoke greps
+/// `verify_violations` so the figure-grade programs stay clean.
+fn bench_verify_overhead(rep: &mut Reporter) {
+    let scale = if quick_scope() { 9 } else { 12 };
+    let g = generate(RmatParams::graph500(scale, 8, 0x5EC5));
+    // One spec per channel mode + the gather-heaviest design, so the
+    // verify pass covers both the extremal-line and full-scan paths.
+    let specs: Vec<SimSpec> = [
+        (AcceleratorKind::AccuGraph, 1usize, MemTech::Ddr4),
+        (AcceleratorKind::HitGraph, 8, MemTech::Hbm),
+        (AcceleratorKind::ThunderGp, 8, MemTech::Hbm),
+    ]
+    .into_iter()
+    .map(|(k, c, m)| {
+        SimSpec::builder()
+            .accelerator(k)
+            .custom_graph("verify-bench", g.clone())
+            .problem(ProblemKind::Bfs)
+            .mem(m)
+            .channels(c)
+            .config(AcceleratorConfig::all_optimizations())
+            .build()
+            .expect("verify-bench specs are valid")
+    })
+    .collect();
+
+    let reps = if quick_scope() { 20 } else { 40 };
+    let mut programs = Vec::with_capacity(reps * specs.len());
+    let dt_compile = time(|| {
+        for _ in 0..reps {
+            for s in &specs {
+                programs.push(s.compile_program());
+            }
+        }
+    });
+    let mut violations = 0u64;
+    let mut lines = 0u64;
+    let dt_verify = time(|| {
+        for (i, p) in programs.iter().enumerate() {
+            let r = specs[i % specs.len()].verify_report(p);
+            violations += r.violations.len() as u64;
+            lines += r.lines;
+        }
+    });
+    assert_eq!(violations, 0, "figure-grade programs must verify clean");
+    assert!(
+        dt_verify < 0.10 * dt_compile,
+        "static verification must cost <10% of compilation: verify {:.4}s vs compile {:.4}s",
+        dt_verify,
+        dt_compile
+    );
+    println!(
+        "verify.overhead: compile {:.3} ms, verify {:.3} ms ({:.1}% of compile) over {} programs",
+        dt_compile * 1e3,
+        dt_verify * 1e3,
+        dt_verify / dt_compile.max(1e-12) * 100.0,
+        programs.len()
+    );
+    rep.record_with(
+        "verify.overhead",
+        lines,
+        dt_verify,
+        0,
+        vec![
+            ("verify_violations", violations),
+            ("programs_verified", programs.len() as u64),
+            ("compile_wall_us", (dt_compile * 1e6) as u64),
+            ("verify_wall_us", (dt_verify * 1e6) as u64),
+        ],
+    );
+}
+
 fn bench_engines(rep: &mut Reporter) {
     let scale = if quick_scope() { 9 } else { 11 };
     let g = generate(RmatParams::graph500(scale, 12, 42));
@@ -888,6 +969,7 @@ fn main() {
     bench_regraph_c32(&mut rep);
     bench_robust_faults(&mut rep);
     bench_serve_cold_vs_warm(&mut rep);
+    bench_verify_overhead(&mut rep);
     bench_engines(&mut rep);
     rep.flush(json_path.as_deref());
 }

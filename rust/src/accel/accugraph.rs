@@ -139,6 +139,55 @@ impl AccuGraphProgram {
         self.part.num_partitions()
     }
 
+    /// The checkable mirror of this program for the static verifier
+    /// (see [`crate::verify`]): the per-partition prefetch phases and
+    /// Phase-B skeletons verbatim, with the value-dependent
+    /// write-back stream as its maximal stand-in — a write-back
+    /// gather targets vertex values, so it can never span more than
+    /// the value region, chained to the neighbor stream exactly as at
+    /// execute time.
+    pub(crate) fn facts(&self) -> crate::verify::ProgramFacts {
+        use crate::dram::ChannelMode;
+        use crate::verify::{PhaseFacts, ProgramFacts, StreamFacts};
+        let mut phases = Vec::with_capacity(self.prefetch.len() + self.body.len());
+        for (q, ph) in self.prefetch.iter().enumerate() {
+            phases.push(PhaseFacts::of(format!("prefetch[{q}]"), ph, None));
+        }
+        for (q, body) in self.body.iter().enumerate() {
+            let mut streams: Vec<StreamFacts> =
+                body.iter().map(|s| StreamFacts::of(s, None)).collect();
+            let stub = if self.nbr_lines[q] == 0 {
+                LineSource::seq(self.val_base, 0)
+            } else {
+                LineSource::seq(self.val_base, self.n as u64 * 4)
+            };
+            let released = stub.len() as u32;
+            streams.push(StreamFacts {
+                class: StreamClass::Writes,
+                source: stub,
+                chained_to: Some(2), // the neighbor stream
+                fanout: super::stream::Fanout::AfterLast(released),
+                owner: None,
+                gather_domain: None,
+                dynamic: true,
+            });
+            phases.push(PhaseFacts {
+                label: format!("body[{q}]"),
+                streams,
+                merge: Arc::clone(&self.merge),
+                window: self.cfg.window,
+            });
+        }
+        ProgramFacts::assemble(
+            super::AcceleratorKind::AccuGraph,
+            self.n,
+            self.m,
+            self.cfg.channels,
+            ChannelMode::InterleaveLine,
+            phases,
+        )
+    }
+
     /// Execute the compiled program against a problem and a memory
     /// system. Value-dependent state (frontiers, accumulators, the
     /// write-back streams) is built here, against the cached skeleton.

@@ -134,6 +134,104 @@ impl ForeGraphProgram {
         self.part.num_intervals()
     }
 
+    /// The checkable mirror of this program (see [`crate::verify`]):
+    /// the phases an iteration assembles in the maximal case — every
+    /// PE live, no shard skipped. Group prefetches, shard reads and
+    /// write-backs are all compile-time streams; the one
+    /// value-dependent stream is the shuffled zipped-edge read, whose
+    /// stand-in covers the largest padded span a group can produce.
+    pub(crate) fn facts(&self) -> crate::verify::ProgramFacts {
+        use crate::dram::ChannelMode;
+        use crate::verify::{PhaseFacts, ProgramFacts, StreamFacts};
+        let q = self.part.num_intervals();
+        let pes = self.cfg.num_pes.max(1);
+        let shuf = self.cfg.has(Optimization::EdgeShuffling);
+        let window = self.cfg.window;
+        let mut phases = Vec::new();
+        let mut round_start = 0usize;
+        while round_start < q {
+            let group: Vec<usize> = (round_start..(round_start + pes).min(q)).collect();
+            round_start += pes;
+            let k = group.len();
+            phases.push(PhaseFacts {
+                label: format!("group-prefetch[{}..{}]", group[0], group[k - 1]),
+                streams: group
+                    .iter()
+                    .map(|&i| StreamFacts::of(&self.pre_stream[i], None))
+                    .collect(),
+                merge: Arc::clone(&self.rr_merge[k - 1]),
+                window,
+            });
+            for j in 0..q {
+                let live: Vec<usize> = group
+                    .iter()
+                    .copied()
+                    .filter(|&i| !self.part.shards[i][j].is_empty())
+                    .collect();
+                if live.is_empty() {
+                    continue;
+                }
+                let mut streams = vec![StreamFacts::of(&self.pre_stream[j], None)];
+                let merge;
+                if shuf {
+                    let max_len = live
+                        .iter()
+                        .map(|&i| self.part.shards[i][j].len())
+                        .max()
+                        .unwrap_or(0);
+                    let bytes =
+                        (max_len * live.len()) as u64 * IntervalShardPartitioning::EDGE_BYTES;
+                    // Anchor at the group's largest shard base: at
+                    // execute time the zip starts at `live[0]`'s base,
+                    // so this stand-in reaches the farthest address any
+                    // live set can touch.
+                    streams.push(StreamFacts {
+                        class: StreamClass::Edges,
+                        source: LineSource::seq(self.shard_base[live[live.len() - 1]][j], bytes),
+                        chained_to: None,
+                        fanout: super::stream::Fanout::Uniform(0),
+                        owner: None,
+                        gather_domain: None,
+                        dynamic: true,
+                    });
+                    merge = Arc::clone(&self.prio_single);
+                } else {
+                    for &i in &live {
+                        let len = self.part.shards[i][j].len() as u64;
+                        streams.push(StreamFacts {
+                            class: StreamClass::Edges,
+                            source: LineSource::seq(
+                                self.shard_base[i][j],
+                                len * IntervalShardPartitioning::EDGE_BYTES,
+                            ),
+                            chained_to: None,
+                            fanout: super::stream::Fanout::Uniform(0),
+                            owner: None,
+                            gather_domain: None,
+                            dynamic: false,
+                        });
+                    }
+                    merge = Arc::clone(&self.prio_rr[live.len() - 1]);
+                }
+                phases.push(PhaseFacts {
+                    label: format!("shards[{}..{}][{j}]", group[0], group[k - 1]),
+                    streams,
+                    merge,
+                    window,
+                });
+                phases.push(PhaseFacts::of(format!("writeback[{j}]"), &self.writeback[j], None));
+            }
+        }
+        ProgramFacts::assemble(
+            super::AcceleratorKind::ForeGraph,
+            self.n,
+            self.m,
+            self.cfg.channels,
+            ChannelMode::InterleaveLine,
+            phases,
+        )
+    }
+
     /// Undo the stride permutation on a value vector (for result
     /// verification).
     pub fn unpermute(&self, values: &[f32]) -> Vec<f32> {

@@ -120,6 +120,175 @@ impl HitGraphProgram {
         self.part.num_partitions()
     }
 
+    /// The checkable mirror of this program (see [`crate::verify`]):
+    /// scatter and gather waves in the maximal case (every partition
+    /// active). Addresses are channel-local, as compiled; streams carry
+    /// their owning channel so the Region-bounds check can replay the
+    /// memory system's rebase. Value-dependent streams appear as
+    /// maximal stand-ins: the gather-side queue read covers partition
+    /// `q`'s whole queue region (every producer block fully used), the
+    /// value write-back covers the whole interval, and the scatter-side
+    /// update write — which crosses channels through the crossbar —
+    /// carries no owner (its per-destination blocks are capacity-bound
+    /// by the destination partitions' own queue-read stand-ins).
+    pub(crate) fn facts(&self) -> crate::verify::ProgramFacts {
+        use crate::dram::ChannelMode;
+        use crate::verify::{PhaseFacts, ProgramFacts, StreamFacts};
+        let k = self.part.num_partitions();
+        let channels = self.cfg.channels.max(1);
+        let window = self.cfg.window;
+        let block = self.upd_block_records();
+        let mut phases = Vec::new();
+        let waves = (k + channels - 1) / channels;
+        for wave in 0..waves {
+            let wave_parts: Vec<usize> = (0..channels)
+                .map(|c| wave * channels + c)
+                .filter(|&q| q < k)
+                .collect();
+
+            // ---- Scatter wave: prefetch -> edges -> update writes ----
+            let mut streams: Vec<StreamFacts> = Vec::new();
+            let mut pe_trees: Vec<Merge> = Vec::new();
+            for &q in &wave_parts {
+                let iv = self.part.intervals[q];
+                let m_q = self.part.edges[q].len();
+                let base = streams.len();
+                let pre_src = LineSource::seq(self.val_local[q], iv.len() as u64 * 4);
+                let npre = pre_src.len();
+                streams.push(StreamFacts {
+                    class: StreamClass::Prefetch,
+                    source: pre_src,
+                    chained_to: None,
+                    fanout: Fanout::Uniform(0),
+                    owner: Some(self.chan_of[q]),
+                    gather_domain: None,
+                    dynamic: false,
+                });
+                let edge_src = LineSource::seq(self.edge_local[q], m_q as u64 * self.edge_bytes);
+                let nedge = edge_src.len();
+                streams.push(StreamFacts {
+                    class: StreamClass::Edges,
+                    source: edge_src,
+                    chained_to: (npre > 0).then_some(base),
+                    fanout: if npre > 0 {
+                        Fanout::AfterLast(nedge as u32)
+                    } else {
+                        Fanout::Uniform(0)
+                    },
+                    owner: Some(self.chan_of[q]),
+                    gather_domain: None,
+                    dynamic: false,
+                });
+                if nedge > 0 {
+                    // Maximal crossbar output: the first and last line
+                    // of producer `q`'s block in every destination
+                    // queue (channel-local to each *destination*'s
+                    // channel, hence no single owner).
+                    let mut upd_lines: Vec<u64> = Vec::new();
+                    for j in 0..k {
+                        let first = (self.upd_local[j] + q as u64 * block * 8) / CACHE_LINE
+                            * CACHE_LINE;
+                        let last = (self.upd_local[j] + (q as u64 * block + block - 1) * 8)
+                            / CACHE_LINE
+                            * CACHE_LINE;
+                        upd_lines.push(first);
+                        if last != first {
+                            upd_lines.push(last);
+                        }
+                    }
+                    let released = upd_lines.len() as u32;
+                    streams.push(StreamFacts {
+                        class: StreamClass::Updates,
+                        source: LineSource::Explicit(upd_lines),
+                        chained_to: Some(base + 1),
+                        fanout: Fanout::AfterLast(released),
+                        owner: None,
+                        gather_domain: None,
+                        dynamic: true,
+                    });
+                    pe_trees.push(Merge::prio([base + 2, base + 1, base]));
+                } else {
+                    pe_trees.push(Merge::prio([base + 1, base]));
+                }
+            }
+            phases.push(PhaseFacts {
+                label: format!("scatter[wave {wave}]"),
+                streams,
+                merge: Merge::RoundRobin(pe_trees).into(),
+                window,
+            });
+
+            // ---- Gather wave: prefetch -> queue read -> value writes ----
+            let mut streams: Vec<StreamFacts> = Vec::new();
+            let mut pe_trees: Vec<Merge> = Vec::new();
+            for &q in &wave_parts {
+                let iv = self.part.intervals[q];
+                let base = streams.len();
+                let pre_src = LineSource::seq(self.val_local[q], iv.len() as u64 * 4);
+                let npre = pre_src.len();
+                streams.push(StreamFacts {
+                    class: StreamClass::Prefetch,
+                    source: pre_src,
+                    chained_to: None,
+                    fanout: Fanout::Uniform(0),
+                    owner: Some(self.chan_of[q]),
+                    gather_domain: None,
+                    dynamic: false,
+                });
+                // Maximal queue read: all `k` producer blocks fully
+                // used. This spans partition `q`'s entire queue region,
+                // so the footprint check sees the layout's true end.
+                let upd_src = LineSource::seq(self.upd_local[q], block * 8 * k as u64);
+                let nupd = upd_src.len();
+                streams.push(StreamFacts {
+                    class: StreamClass::Updates,
+                    source: upd_src,
+                    chained_to: (npre > 0).then_some(base),
+                    fanout: if npre > 0 {
+                        Fanout::AfterLast(nupd as u32)
+                    } else {
+                        Fanout::Uniform(0)
+                    },
+                    owner: Some(self.chan_of[q]),
+                    gather_domain: None,
+                    dynamic: true,
+                });
+                if nupd > 0 {
+                    // Maximal write-back: every vertex of the interval
+                    // changed.
+                    let wsrc = LineSource::seq(self.val_local[q], iv.len() as u64 * 4);
+                    let released = wsrc.len() as u32;
+                    streams.push(StreamFacts {
+                        class: StreamClass::Writes,
+                        source: wsrc,
+                        chained_to: Some(base + 1),
+                        fanout: Fanout::AfterLast(released),
+                        owner: Some(self.chan_of[q]),
+                        gather_domain: None,
+                        dynamic: true,
+                    });
+                    pe_trees.push(Merge::prio([base + 2, base + 1, base]));
+                } else {
+                    pe_trees.push(Merge::prio([base + 1, base]));
+                }
+            }
+            phases.push(PhaseFacts {
+                label: format!("gather[wave {wave}]"),
+                streams,
+                merge: Merge::RoundRobin(pe_trees).into(),
+                window,
+            });
+        }
+        ProgramFacts::assemble(
+            super::AcceleratorKind::HitGraph,
+            self.n,
+            self.m,
+            channels,
+            ChannelMode::Region,
+            phases,
+        )
+    }
+
     /// Global address of partition `q`'s value array (within its
     /// channel's region).
     fn val_addr(&self, mem: &MemorySystem, q: usize) -> u64 {

@@ -159,6 +159,24 @@ impl PhaseProgram {
         self.kind
     }
 
+    /// The checkable mirror of this program's structure — streams,
+    /// merge trees, release schedules, channel ownership and
+    /// per-channel layout footprints — for the static verifier (see
+    /// [`crate::verify`]). Value-dependent execute-time streams
+    /// appear as static maximal-bounds stand-ins flagged
+    /// [`crate::verify::StreamFacts::dynamic`]: their descriptors
+    /// cover the largest span execution can produce, so bounds proven
+    /// here hold for every iteration.
+    pub fn facts(&self) -> crate::verify::ProgramFacts {
+        match &self.model {
+            Model::AccuGraph(m) => m.facts(),
+            Model::ForeGraph(m) => m.facts(),
+            Model::HitGraph(m) => m.facts(),
+            Model::ThunderGp(m) => m.facts(),
+            Model::ReGraph(m) => m.facts(),
+        }
+    }
+
     /// Execute the program against a problem instance and a memory
     /// system. Value-dependent streams are built per call; the
     /// compiled skeleton is only read, so `&self` — any number of

@@ -273,6 +273,199 @@ impl ReGraphProgram {
         self.dense.len() - self.dense_count()
     }
 
+    /// The checkable mirror of this program (see [`crate::verify`]):
+    /// scatter and gather waves in the maximal case (every partition
+    /// active), in the compiled channel-local address space. The
+    /// little/big pipeline split survives: dense partitions contribute
+    /// their `Seq` prefetch, sparse ones their compiled per-edge
+    /// `Gather` (interval-local indices, domain = interval length)
+    /// with its compiled release schedule. Value-dependent streams
+    /// follow the same maximal stand-in conventions as HitGraph's
+    /// (ReGraph's crossbar + queue machinery is the same shape).
+    pub(crate) fn facts(&self) -> crate::verify::ProgramFacts {
+        use crate::dram::ChannelMode;
+        use crate::verify::{PhaseFacts, ProgramFacts, StreamFacts};
+        let k = self.part.num_partitions();
+        let channels = self.cfg.channels.max(1);
+        let window = self.cfg.window;
+        let block = self.upd_block_records();
+        let mut phases = Vec::new();
+
+        // Waves pick the w-th partition of each channel; channel-group
+        // assignment makes the owned sets irregular, so enumerate them.
+        let owned: Vec<Vec<usize>> = (0..channels)
+            .map(|c| (0..k).filter(|&q| self.chan_of[q] == c).collect())
+            .collect();
+        let waves = owned.iter().map(Vec::len).max().unwrap_or(0);
+        for wave in 0..waves {
+            let wave_parts: Vec<usize> =
+                owned.iter().filter_map(|qs| qs.get(wave).copied()).collect();
+
+            // ---- Scatter wave ----
+            let mut streams: Vec<StreamFacts> = Vec::new();
+            let mut pe_trees: Vec<Merge> = Vec::new();
+            for &q in &wave_parts {
+                let iv = self.part.intervals[q];
+                let base = streams.len();
+                let edge_src = self.edge_src[q].clone();
+                let nedge = edge_src.len();
+                let edge_stream_idx;
+                if self.dense[q] {
+                    let pre_src = self.pre_src[q].clone();
+                    let npre = pre_src.len();
+                    streams.push(StreamFacts {
+                        class: StreamClass::Prefetch,
+                        source: pre_src,
+                        chained_to: None,
+                        fanout: Fanout::Uniform(0),
+                        owner: Some(self.chan_of[q]),
+                        gather_domain: None,
+                        dynamic: false,
+                    });
+                    streams.push(StreamFacts {
+                        class: StreamClass::Edges,
+                        source: edge_src,
+                        chained_to: (npre > 0).then_some(base),
+                        fanout: if npre > 0 {
+                            Fanout::AfterLast(nedge as u32)
+                        } else {
+                            Fanout::Uniform(0)
+                        },
+                        owner: Some(self.chan_of[q]),
+                        gather_domain: None,
+                        dynamic: false,
+                    });
+                    edge_stream_idx = base + 1;
+                } else {
+                    streams.push(StreamFacts {
+                        class: StreamClass::Edges,
+                        source: edge_src,
+                        chained_to: None,
+                        fanout: Fanout::Uniform(0),
+                        owner: Some(self.chan_of[q]),
+                        gather_domain: None,
+                        dynamic: false,
+                    });
+                    streams.push(StreamFacts {
+                        class: StreamClass::Values,
+                        source: self.pre_src[q].clone(),
+                        chained_to: Some(base),
+                        fanout: self.val_fan[q].clone(),
+                        owner: Some(self.chan_of[q]),
+                        gather_domain: Some(iv.len() as u64),
+                        dynamic: false,
+                    });
+                    edge_stream_idx = base;
+                }
+                if nedge > 0 {
+                    // Maximal crossbar output: the extremal lines of
+                    // producer `q`'s block in every destination queue
+                    // (cross-channel, hence no owner — capacity is
+                    // covered by the destinations' queue-read
+                    // stand-ins below).
+                    let mut upd_lines: Vec<u64> = Vec::new();
+                    for j in 0..k {
+                        let first = (self.upd_local[j] + q as u64 * block * 8) / CACHE_LINE
+                            * CACHE_LINE;
+                        let last = (self.upd_local[j] + (q as u64 * block + block - 1) * 8)
+                            / CACHE_LINE
+                            * CACHE_LINE;
+                        upd_lines.push(first);
+                        if last != first {
+                            upd_lines.push(last);
+                        }
+                    }
+                    let released = upd_lines.len() as u32;
+                    streams.push(StreamFacts {
+                        class: StreamClass::Updates,
+                        source: LineSource::Explicit(upd_lines),
+                        chained_to: Some(edge_stream_idx),
+                        fanout: Fanout::AfterLast(released),
+                        owner: None,
+                        gather_domain: None,
+                        dynamic: true,
+                    });
+                    pe_trees.push(Merge::prio([base + 2, base + 1, base]));
+                } else {
+                    pe_trees.push(Merge::prio([base + 1, base]));
+                }
+            }
+            phases.push(PhaseFacts {
+                label: format!("scatter[wave {wave}]"),
+                streams,
+                merge: Merge::RoundRobin(pe_trees).into(),
+                window,
+            });
+
+            // ---- Gather wave ----
+            let mut streams: Vec<StreamFacts> = Vec::new();
+            let mut pe_trees: Vec<Merge> = Vec::new();
+            for &q in &wave_parts {
+                let iv = self.part.intervals[q];
+                let base = streams.len();
+                let pre_src = LineSource::seq(self.val_local[q], iv.len() as u64 * 4);
+                let npre = pre_src.len();
+                streams.push(StreamFacts {
+                    class: StreamClass::Prefetch,
+                    source: pre_src,
+                    chained_to: None,
+                    fanout: Fanout::Uniform(0),
+                    owner: Some(self.chan_of[q]),
+                    gather_domain: None,
+                    dynamic: false,
+                });
+                // Maximal queue read: all producer blocks fully used —
+                // spans the whole queue region, feeding the footprint.
+                let upd_src = LineSource::seq(self.upd_local[q], block * 8 * k as u64);
+                let nupd = upd_src.len();
+                streams.push(StreamFacts {
+                    class: StreamClass::Updates,
+                    source: upd_src,
+                    chained_to: (npre > 0).then_some(base),
+                    fanout: if npre > 0 {
+                        Fanout::AfterLast(nupd as u32)
+                    } else {
+                        Fanout::Uniform(0)
+                    },
+                    owner: Some(self.chan_of[q]),
+                    gather_domain: None,
+                    dynamic: true,
+                });
+                if nupd > 0 {
+                    // Maximal write-back: every vertex of the interval.
+                    let wsrc = LineSource::seq(self.val_local[q], iv.len() as u64 * 4);
+                    let released = wsrc.len() as u32;
+                    streams.push(StreamFacts {
+                        class: StreamClass::Writes,
+                        source: wsrc,
+                        chained_to: Some(base + 1),
+                        fanout: Fanout::AfterLast(released),
+                        owner: Some(self.chan_of[q]),
+                        gather_domain: None,
+                        dynamic: true,
+                    });
+                    pe_trees.push(Merge::prio([base + 2, base + 1, base]));
+                } else {
+                    pe_trees.push(Merge::prio([base + 1, base]));
+                }
+            }
+            phases.push(PhaseFacts {
+                label: format!("gather[wave {wave}]"),
+                streams,
+                merge: Merge::RoundRobin(pe_trees).into(),
+                window,
+            });
+        }
+        ProgramFacts::assemble(
+            super::AcceleratorKind::ReGraph,
+            self.n,
+            self.m,
+            channels,
+            ChannelMode::Region,
+            phases,
+        )
+    }
+
     fn val_addr(&self, mem: &MemorySystem, q: usize) -> u64 {
         mem.region_base(self.chan_of[q]) + self.val_local[q]
     }

@@ -149,6 +149,166 @@ impl ThunderGpProgram {
         self.part.num_partitions()
     }
 
+    /// The checkable mirror of this program (see [`crate::verify`]).
+    /// ThunderGP's request streams are entirely value-independent, so
+    /// this is the exact structure [`ThunderGpProgram::execute_onchip`]
+    /// instantiates — scatter and apply phases per partition — in the
+    /// compiled channel-relative address space (owners replace region
+    /// bases; the bounds check replays the rebase). Source-value
+    /// gathers declare the vertex count as their index domain.
+    pub(crate) fn facts(&self) -> crate::verify::ProgramFacts {
+        use crate::dram::ChannelMode;
+        use crate::verify::{PhaseFacts, ProgramFacts, StreamFacts};
+        let k = self.part.num_partitions();
+        let channels = self.cfg.channels.max(1);
+        let window = self.cfg.window;
+        let n = self.part.intervals.last().map_or(0, |iv| iv.end as usize);
+        let mut phases = Vec::with_capacity(2 * k);
+        for q in 0..k {
+            let iv = self.part.intervals[q];
+            let pe_chunks = self.pe_chunks(q, channels);
+
+            // ---- Scatter-gather: prefetch -> edges -> src gather -> updates
+            let mut streams: Vec<StreamFacts> = Vec::new();
+            let mut pe_trees: Vec<Merge> = Vec::new();
+            for (pe, &chunk_idx) in pe_chunks.iter().enumerate() {
+                let chunk_len = self.part.chunks[q][chunk_idx].len();
+                let base = streams.len();
+                let pre_src =
+                    LineSource::seq(self.val_base + iv.start as u64 * 4, iv.len() as u64 * 4);
+                let npre = pre_src.len();
+                streams.push(StreamFacts {
+                    class: StreamClass::Prefetch,
+                    source: pre_src,
+                    chained_to: None,
+                    fanout: Fanout::Uniform(0),
+                    owner: Some(pe),
+                    gather_domain: None,
+                    dynamic: false,
+                });
+                let edge_src = LineSource::seq(
+                    self.edge_base[q][chunk_idx],
+                    chunk_len as u64 * self.edge_bytes,
+                );
+                let nedge = edge_src.len();
+                streams.push(StreamFacts {
+                    class: StreamClass::Edges,
+                    source: edge_src,
+                    chained_to: (npre > 0).then_some(base),
+                    fanout: if npre > 0 {
+                        Fanout::AfterLast(nedge as u32)
+                    } else {
+                        Fanout::Uniform(0)
+                    },
+                    owner: Some(pe),
+                    gather_domain: None,
+                    dynamic: false,
+                });
+                let src_src = self.src_gather[q][chunk_idx].clone();
+                let nsrc = src_src.len();
+                streams.push(StreamFacts {
+                    class: StreamClass::Values,
+                    source: src_src,
+                    chained_to: (nedge > 0).then_some(base + 1),
+                    fanout: if nedge > 0 {
+                        self.src_fanout[q][chunk_idx].clone()
+                    } else {
+                        Fanout::Uniform(0)
+                    },
+                    owner: Some(pe),
+                    gather_domain: Some(n as u64),
+                    dynamic: false,
+                });
+                let upd_src = LineSource::seq(self.upd_base[q], iv.len() as u64 * 4);
+                let nupd = upd_src.len();
+                let (parent, plen) = if nsrc > 0 {
+                    (base + 2, nsrc)
+                } else {
+                    (base + 1, nedge)
+                };
+                if plen > 0 {
+                    streams.push(StreamFacts {
+                        class: StreamClass::Updates,
+                        source: upd_src,
+                        chained_to: Some(parent),
+                        fanout: Fanout::AfterLast(nupd as u32),
+                        owner: Some(pe),
+                        gather_domain: None,
+                        dynamic: false,
+                    });
+                    pe_trees.push(Merge::prio([base + 3, base + 2, base + 1, base]));
+                } else {
+                    streams.push(StreamFacts {
+                        class: StreamClass::Updates,
+                        source: upd_src,
+                        chained_to: None,
+                        fanout: Fanout::Uniform(0),
+                        owner: Some(pe),
+                        gather_domain: None,
+                        dynamic: false,
+                    });
+                    pe_trees.push(Merge::prio([base + 3, base]));
+                }
+            }
+            phases.push(PhaseFacts {
+                label: format!("scatter[{q}]"),
+                streams,
+                merge: Merge::RoundRobin(pe_trees).into(),
+                window,
+            });
+
+            // ---- Apply: read all channels' update sets, write all copies
+            let mut streams: Vec<StreamFacts> = Vec::new();
+            let mut reads = Vec::new();
+            for pe in 0..channels {
+                reads.push(streams.len());
+                streams.push(StreamFacts {
+                    class: StreamClass::Updates,
+                    source: LineSource::seq(self.upd_base[q], iv.len() as u64 * 4),
+                    chained_to: None,
+                    fanout: Fanout::Uniform(0),
+                    owner: Some(pe),
+                    gather_domain: None,
+                    dynamic: false,
+                });
+            }
+            let nread = LineSource::seq(self.upd_base[q], iv.len() as u64 * 4).len();
+            let mut trees: Vec<Merge> = reads.iter().map(|&i| Merge::Leaf(i)).collect();
+            if nread > 0 {
+                for pe in 0..channels {
+                    let wsrc =
+                        LineSource::seq(self.val_base + iv.start as u64 * 4, iv.len() as u64 * 4);
+                    let nw = wsrc.len();
+                    let idx = streams.len();
+                    streams.push(StreamFacts {
+                        class: StreamClass::Writes,
+                        source: wsrc,
+                        chained_to: Some(reads[pe]),
+                        fanout: Fanout::AfterLast(nw as u32),
+                        owner: Some(pe),
+                        gather_domain: None,
+                        dynamic: false,
+                    });
+                    trees.push(Merge::Leaf(idx));
+                }
+            }
+            phases.push(PhaseFacts {
+                label: format!("apply[{q}]"),
+                streams,
+                merge: Merge::RoundRobin(trees).into(),
+                window,
+            });
+        }
+        ProgramFacts::assemble(
+            super::AcceleratorKind::ThunderGp,
+            n,
+            self.m,
+            channels,
+            ChannelMode::Region,
+            phases,
+        )
+    }
+
     /// The chunk each PE (= channel) of partition `q` processes under
     /// the (possibly `Schd.`-reordered) assignment.
     fn pe_chunks(&self, q: usize, channels: usize) -> Vec<usize> {

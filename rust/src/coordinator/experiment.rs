@@ -461,7 +461,7 @@ fn mreps_by_property(
         let p = GraphProperties::compute(&g.load_shared());
         entries.push((prop(&p), g));
     }
-    entries.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    entries.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut t = Table::new(
         title,
         &[

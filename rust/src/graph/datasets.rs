@@ -294,10 +294,16 @@ pub fn dataset_weighted_shared(name: &str) -> Option<Arc<EdgeList>> {
 
 fn cached(key: &str, build: impl FnOnce() -> Option<EdgeList>) -> Option<Arc<EdgeList>> {
     use std::collections::HashMap;
-    use std::sync::{Mutex, OnceLock};
+    use std::sync::{Mutex, OnceLock, PoisonError};
     static CACHE: OnceLock<Mutex<HashMap<String, Arc<EdgeList>>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(g) = cache.lock().unwrap().get(key) {
+    // Poison recovery: the cache only ever holds fully built graphs,
+    // so a panic elsewhere cannot leave a half-written entry.
+    if let Some(g) = cache
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .get(key)
+    {
         return Some(Arc::clone(g));
     }
     // Build outside the lock (R-MAT generation can take seconds); a
@@ -307,7 +313,7 @@ fn cached(key: &str, build: impl FnOnce() -> Option<EdgeList>) -> Option<Arc<Edg
     Some(Arc::clone(
         cache
             .lock()
-            .unwrap()
+            .unwrap_or_else(PoisonError::into_inner)
             .entry(key.to_string())
             .or_insert(g),
     ))

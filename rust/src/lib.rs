@@ -1,5 +1,13 @@
 //! # graphmem
 //!
+// Library code returns typed errors; panics belong to tests. The
+// offline form of this gate is `graphmem lint --src` (see
+// `verify::srclint`), whose allowlist ratchets the grandfathered
+// sites down; clippy enforces the same rule once a toolchain runs it
+// (tests and benches are exempt via `allow-unwrap-in-tests` /
+// `allow-expect-in-tests` in clippy.toml and the cfg guard here).
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+//!
 //! Reproduction of *"Demystifying Memory Access Patterns of FPGA-Based
 //! Graph Processing Accelerators"* (Dann, Ritter, Fröning, 2021).
 //!
@@ -76,6 +84,19 @@
 //!   warm reports and failure memos survive restarts and are shared
 //!   across processes. Spec serialization also yields reproducible
 //!   sweep manifests (`graphmem sweep --manifest/--from-manifest`).
+//! * [`verify`] — static analysis: [`verify::ProgramChecker`] proves
+//!   structural invariants of a compiled [`accel::PhaseProgram`]
+//!   without executing it (Region bounds through the memory system's
+//!   own address rewrite, fanout/merge token conservation — the
+//!   compile-time form of the stall watchdog — chain acyclicity,
+//!   gather domains, per-channel footprints, on-chip capacity
+//!   consistency), each violation a typed, location-naming
+//!   [`verify::VerifyError`]. Runs on every `compile_program` in
+//!   debug builds and behind [`sim::SimSpecBuilder::verify`] in
+//!   release; [`verify::srclint`] is the dependency-free repo linter
+//!   (`graphmem lint --src`): unwrap/expect ratchet, memo-key
+//!   coverage cross-referencing `sim/spec.rs` against `persist`'s
+//!   serializer, wall-clock bans in deterministic paths.
 //! * [`serve`] — the simulator as a long-running shared service:
 //!   `graphmem serve` speaks a line-delimited TCP protocol with
 //!   bounded in-flight admission (typed `busy` back-pressure),
@@ -122,3 +143,4 @@ pub mod serve;
 pub mod sim;
 pub mod trace;
 pub mod util;
+pub mod verify;

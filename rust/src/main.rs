@@ -12,6 +12,10 @@
 //!                                recommendation (partitioning / placement / on-chip)
 //!   report --exp <id>            regenerate a figure/table (options: --scope, --csv)
 //!   verify <graph> <prob>        golden-engine cross-check (native vs XLA/PJRT)
+//!   lint <accel> <graph> <prob>  compile the spec's phase program and run the
+//!                                static verifier (options: --dram, --channels, --no-opt)
+//!   lint --src [--root DIR]      repo invariant linter: unwrap/expect ratchet,
+//!                                memo-key coverage, wall-clock bans
 //!   serve                        crash-safe simulation daemon with a durable disk
 //!                                cache (--listen, --cache-dir, --max-inflight,
 //!                                --max-cycles/--max-requests/--wall-timeout-ms, --warm)
@@ -89,6 +93,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("advise") => cmd_advise(&args[1..]),
         Some("report") => cmd_report(&args[1..]),
         Some("verify") => cmd_verify(&args[1..]),
+        Some("lint") => cmd_lint(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("submit") => cmd_submit(&args[1..]),
         Some("help") | None => {
@@ -131,6 +136,14 @@ fn print_help() {
          \x20             graphs above N edges are sampled before probing)\n  \
          graphmem report --exp <id|all> [--scope quick|standard|full] [--csv]\n  \
          graphmem verify <graph> <problem> [--max-iters N]\n  \
+         graphmem lint <accel> <graph> <problem> [--dram d] [--channels N] [--no-opt]\n  \
+         \x20            (compile the spec's phase program and statically verify it:\n  \
+         \x20             region bounds, fanout/merge token conservation, chain\n  \
+         \x20             acyclicity, gather domains, footprints, on-chip consistency)\n  \
+         graphmem lint --src [--root DIR]\n  \
+         \x20            (repo invariant linter: unwrap/expect ratchet against\n  \
+         \x20             lint-allowlist.txt, SimSpec<->persist memo-key coverage,\n  \
+         \x20             wall-clock bans in sim/ dram/ accel/)\n  \
          graphmem serve [--listen ADDR] [--cache-dir DIR] [--max-inflight N] [--retry-after-ms N]\n  \
          \x20            [--max-cycles N] [--max-requests N] [--wall-timeout-ms N] [--warm]\n  \
          \x20            (line-protocol daemon; --cache-dir makes reports and failure memos\n  \
@@ -755,6 +768,68 @@ fn cmd_verify(args: &[String]) -> Result<()> {
     }
 }
 
+fn cmd_lint(args: &[String]) -> Result<()> {
+    if has_flag(args, "--src") {
+        return cmd_lint_src(args);
+    }
+    // Program mode: compile the spec's phase program and run the
+    // static verifier, printing every typed violation.
+    let spec = spec_from_args(args, false)?;
+    let report = spec.verify_program();
+    println!("{} — {report}", spec.label());
+    for v in &report.violations {
+        println!("  {v}");
+    }
+    if report.is_ok() {
+        println!("LINT OK — program passes static verification");
+        Ok(())
+    } else {
+        bail!("{} violation(s) — see above", report.violations.len());
+    }
+}
+
+fn cmd_lint_src(args: &[String]) -> Result<()> {
+    use graphmem::verify::srclint::{find_src_root, lint_sources};
+    let start = std::path::PathBuf::from(flag_value(args, "--root").unwrap_or("."));
+    let src_root = find_src_root(&start).ok_or_else(|| {
+        anyhow!(
+            "no crate source root under {} (expected rust/src, src, or a lib.rs); \
+             point --root at the repo or crate root",
+            start.display()
+        )
+    })?;
+    // The ratchet file sits next to Cargo.toml, one level above src/.
+    let allowlist_path = src_root
+        .parent()
+        .map(|d| d.join("lint-allowlist.txt"))
+        .ok_or_else(|| anyhow!("source root {} has no parent", src_root.display()))?;
+    let allowlist = match std::fs::read_to_string(&allowlist_path) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+        Err(e) => bail!("reading {}: {e}", allowlist_path.display()),
+    };
+    let report = lint_sources(&src_root, &allowlist)?;
+    for v in &report.violations {
+        println!("{}:{}: {}", v.file, v.line, v.message);
+    }
+    for n in &report.notices {
+        println!("notice: {n}");
+    }
+    println!(
+        "{} file(s), {} grandfathered unwrap/expect site(s), {} violation(s), {} notice(s)",
+        report.files,
+        report.unwrap_sites,
+        report.violations.len(),
+        report.notices.len()
+    );
+    if report.is_ok() {
+        println!("LINT OK");
+        Ok(())
+    } else {
+        bail!("{} lint violation(s) — see above", report.violations.len());
+    }
+}
+
 /// Shared `--max-cycles` / `--max-requests` / `--wall-timeout-ms`
 /// parsing for `serve` (admission cap) and `submit` (per-spec budget).
 fn budget_from_args(args: &[String]) -> Result<Option<RunBudget>> {
@@ -886,5 +961,8 @@ fn cmd_submit(args: &[String]) -> Result<()> {
             Ok(())
         }
         SubmitOutcome::Failed(err) => bail!("simulation failed: {err}"),
+        SubmitOutcome::VerifyRejected { violations, first } => {
+            bail!("server rejected the compiled program ({violations} violation(s)): {first}")
+        }
     }
 }

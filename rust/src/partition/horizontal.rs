@@ -79,7 +79,7 @@ impl HorizontalInCsr {
                 counts[q][i + 1] += counts[q][i];
             }
             let offs = counts[q].clone();
-            let total = *offs.last().unwrap() as usize;
+            let total = offs.last().copied().unwrap_or(0) as usize;
             neighbors.push(vec![0u32; total]);
             offsets.push(offs);
         }

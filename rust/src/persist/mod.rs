@@ -160,9 +160,10 @@ pub fn esc(s: &str) -> String {
         match b {
             b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'.' | b'_' | b'-' => out.push(b as char),
             _ => {
+                const HEX: &[u8; 16] = b"0123456789abcdef";
                 out.push('%');
-                out.push(char::from_digit(u32::from(b >> 4), 16).unwrap());
-                out.push(char::from_digit(u32::from(b & 0xf), 16).unwrap());
+                out.push(HEX[usize::from(b >> 4)] as char);
+                out.push(HEX[usize::from(b & 0xf)] as char);
             }
         }
     }
@@ -307,7 +308,7 @@ pub fn spec_to_line(spec: &SimSpec) -> String {
     };
     format!(
         "accel={} graph={} problem={} mem={} channels={} patterns={} opts={} bram={} \
-         interval={} pes={} window={} xmc={} onchip={} budget={} faults={}",
+         interval={} pes={} window={} xmc={} onchip={} budget={} faults={} verify={}",
         spec.accelerator().name(),
         graph,
         spec.problem().name(),
@@ -323,6 +324,7 @@ pub fn spec_to_line(spec: &SimSpec) -> String {
         onchip_value(spec.onchip()),
         budget_value(spec.budget()),
         faults_value(spec.faults()),
+        u8::from(spec.verify_enabled()),
     )
 }
 
@@ -426,6 +428,7 @@ pub fn spec_from_line_with(
     let onchip = onchip_parse(&t.take("onchip")?)?;
     let budget = budget_parse(&t.take("budget")?)?;
     let faults = faults_parse(&t.take("faults")?)?;
+    let verify = parse_bool("verify", &t.take("verify")?)?;
     t.finish()?;
 
     SimSpec::builder()
@@ -439,6 +442,7 @@ pub fn spec_from_line_with(
         .onchip(onchip)
         .budget(budget)
         .faults(faults)
+        .verify(verify)
         .build()
         .map_err(|e| PersistError::Spec(e.to_string()))
 }

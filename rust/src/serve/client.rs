@@ -29,6 +29,10 @@ pub enum SubmitOutcome {
     Degraded(DegradedEstimate),
     /// The simulation (or the spec) failed, typed.
     Failed(SimError),
+    /// The server's static verifier rejected the compiled program at
+    /// admission (see [`crate::verify`]); no run slot was spent.
+    /// Deterministic — never retried.
+    VerifyRejected { violations: usize, first: String },
 }
 
 /// A retrying protocol client. One TCP connection per request keeps
@@ -97,6 +101,9 @@ impl Client {
             }
             Response::Degraded(est) => Ok(SubmitOutcome::Degraded(est)),
             Response::SimFailed(err) => Ok(SubmitOutcome::Failed(err)),
+            Response::VerifyRejected { violations, first } => {
+                Ok(SubmitOutcome::VerifyRejected { violations, first })
+            }
             other => Err(unexpected(&other)),
         }
     }

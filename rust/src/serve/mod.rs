@@ -97,6 +97,9 @@ pub struct ServeStats {
     pub cache_hits: usize,
     /// `RUN`s answered with an advisor estimate in degraded mode.
     pub degraded_replies: usize,
+    /// `RUN`s rejected by the static program verifier at admission
+    /// (`ERR verify`; see [`crate::verify`]). No simulation ran.
+    pub verify_rejections: usize,
 }
 
 /// In-flight permit: holding one is the right to execute a `RUN`.
@@ -121,6 +124,7 @@ pub struct Server {
     sim_failures: AtomicUsize,
     cache_hits: AtomicUsize,
     degraded_replies: AtomicUsize,
+    verify_rejections: AtomicUsize,
 }
 
 impl Server {
@@ -144,6 +148,7 @@ impl Server {
             sim_failures: AtomicUsize::new(0),
             cache_hits: AtomicUsize::new(0),
             degraded_replies: AtomicUsize::new(0),
+            verify_rejections: AtomicUsize::new(0),
         };
         if server.cfg.warm {
             server.warm();
@@ -175,6 +180,7 @@ impl Server {
             sim_failures: self.sim_failures.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             degraded_replies: self.degraded_replies.load(Ordering::Relaxed),
+            verify_rejections: self.verify_rejections.load(Ordering::Relaxed),
         }
     }
 
@@ -323,6 +329,26 @@ impl Server {
             }
         };
         let spec = self.admitted(spec);
+        // Static verification at admission: the compiled program (from
+        // the session's shared cache — at most one compile per
+        // workload) is checked before any simulation work, so a
+        // structurally broken program earns a typed `ERR verify`
+        // instead of burning a run slot on an execution the stall
+        // watchdog would have to kill.
+        let program = self.session.program_for(&spec);
+        let verdict = spec.verify_report(&program);
+        if !verdict.is_ok() {
+            self.verify_rejections.fetch_add(1, Ordering::Relaxed);
+            let first = verdict
+                .violations
+                .first()
+                .map(|v| v.to_string())
+                .unwrap_or_default();
+            return Response::VerifyRejected {
+                violations: verdict.violations.len(),
+                first,
+            };
+        }
         let warm = self.session.peek(&spec).is_some()
             || self
                 .session
@@ -399,6 +425,7 @@ impl Server {
             row("sim_failures", serve.sim_failures),
             row("cache_hits", serve.cache_hits),
             row("degraded_replies", serve.degraded_replies),
+            row("verify_rejections", serve.verify_rejections),
             row("sim_runs", session.sim_runs),
             row("memo_hits", session.memo_hits),
             row("duplicate_waits", session.duplicate_waits),

@@ -26,6 +26,10 @@
 //! OK degraded <estimate tokens>
 //! OK pong | OK stats <k=v ...> | OK shutting-down
 //! ERR sim <error line>           typed SimError (incl. spec rejects)
+//! ERR verify violations=<n> first=<escaped violation>
+//!                                static verification rejected the
+//!                                compiled program before any run
+//!                                slot was spent (see crate::verify)
 //! ERR proto <escaped message>    unparseable request
 //! BUSY retry_after_ms=<n>        admission queue full — back off
 //! ```
@@ -228,6 +232,10 @@ pub enum Response {
     Degraded(DegradedEstimate),
     /// The simulation (or the spec itself) failed, typed.
     SimFailed(SimError),
+    /// Static verification (see [`crate::verify`]) rejected the
+    /// compiled program at admission — before a run slot was spent.
+    /// Carries the violation count and the first diagnostic.
+    VerifyRejected { violations: usize, first: String },
     /// Admission queue full; retry after the hinted delay.
     Busy { retry_after_ms: u64 },
     /// The request line could not be parsed.
@@ -247,6 +255,9 @@ impl Response {
             }
             Response::Degraded(est) => format!("OK degraded {}", est.render_fields()),
             Response::SimFailed(err) => format!("ERR sim {}", error_to_line(err)),
+            Response::VerifyRejected { violations, first } => {
+                format!("ERR verify violations={violations} first={}", esc(first))
+            }
             Response::Busy { retry_after_ms } => {
                 format!("BUSY retry_after_ms={retry_after_ms}")
             }
@@ -290,6 +301,28 @@ impl Response {
         }
         if let Some(rest) = line.strip_prefix("ERR sim ") {
             return Ok(Response::SimFailed(error_from_line(rest)?));
+        }
+        if let Some(rest) = line.strip_prefix("ERR verify ") {
+            let mut violations = None;
+            let mut first = None;
+            for tok in rest.split_whitespace() {
+                let (k, v) = tok.split_once('=').ok_or_else(|| {
+                    bad(format!("verify token {tok:?} is not key=value"))
+                })?;
+                match k {
+                    "violations" => {
+                        violations = Some(
+                            v.parse::<usize>().map_err(|e| bad(format!("violations: {e}")))?,
+                        )
+                    }
+                    "first" => first = Some(unesc(v)?),
+                    other => return Err(PersistError::UnknownKey(other.to_string())),
+                }
+            }
+            return Ok(Response::VerifyRejected {
+                violations: violations.ok_or(PersistError::MissingField("violations"))?,
+                first: first.ok_or(PersistError::MissingField("first"))?,
+            });
         }
         if let Some(rest) = line.strip_prefix("ERR proto ") {
             return Ok(Response::Proto(unesc(rest.trim())?));
@@ -403,6 +436,12 @@ mod tests {
         let cases = [
             Response::Degraded(est),
             Response::SimFailed(err),
+            Response::VerifyRejected {
+                violations: 3,
+                first: "phase 0 (`scatter[wave 0]`) stream 2: owning channel 9 out of range \
+                        for 4 channels"
+                    .to_string(),
+            },
             Response::Busy { retry_after_ms: 250 },
             Response::Proto("unknown command \"FETCH\"".to_string()),
             Response::Pong,
@@ -426,6 +465,10 @@ mod tests {
             "OK report cache_hit=true",
             "BUSY retry_after_ms=soon",
             "ERR sim ",
+            "ERR verify ",
+            "ERR verify violations=lots first=x",
+            "ERR verify violations=2",
+            "ERR verify violations=2 first=x rogue=1",
             "OK degraded cycles=zz",
             "garbage with spaces",
         ] {

@@ -288,6 +288,13 @@ pub struct SimSpec {
     /// absent from [`SimSpec::program_key`]: faults perturb memory
     /// timing only, never compilation.
     faults: Option<FaultPlan>,
+    /// Statically verify the compiled program in release builds too
+    /// (debug builds always verify; see [`crate::verify`]). Part of
+    /// the spec's identity — verified and unverified builds never
+    /// alias in the memo — but, like `onchip`, absent from
+    /// [`SimSpec::program_key`]: verification proves properties of
+    /// the compiled artifact, it never changes it.
+    verify: bool,
 }
 
 impl SimSpec {
@@ -347,6 +354,12 @@ impl SimSpec {
     /// The fault-injection plan, if any.
     pub fn faults(&self) -> Option<&FaultPlan> {
         self.faults.as_ref()
+    }
+
+    /// Whether this spec statically verifies its compiled program in
+    /// release builds too (debug builds always verify).
+    pub fn verify_enabled(&self) -> bool {
+        self.verify
     }
 
     /// The same spec with a different run budget — the hook for
@@ -418,11 +431,45 @@ impl SimSpec {
     /// immutable and `Send + Sync` — share it across threads and
     /// replay it with [`SimSpec::run_with_program`].
     pub fn compile_program(&self) -> Arc<PhaseProgram> {
+        let program = self.compile_unverified();
+        if cfg!(debug_assertions) || self.verify {
+            let rep = self.verify_report(&program);
+            assert!(
+                rep.is_ok(),
+                "compiled {:?} program failed static verification ({rep}):\n{}",
+                self.accelerator,
+                rep.violations
+                    .iter()
+                    .map(|v| format!("  {v}"))
+                    .collect::<Vec<_>>()
+                    .join("\n"),
+            );
+        }
+        program
+    }
+
+    fn compile_unverified(&self) -> Arc<PhaseProgram> {
         let g = self.workload.resolve(self.problem.weighted());
         Arc::new(
             PhaseProgram::compile(self.accelerator, &g, &self.config)
                 .with_key(self.program_key()),
         )
+    }
+
+    /// Statically verify an already-compiled program against this
+    /// spec's memory system and on-chip buffer — the non-panicking
+    /// form of the [`SimSpec::compile_program`] tripwire, used by
+    /// `graphmem serve` admission and `graphmem lint`. See
+    /// [`crate::verify`] for the invariants proven.
+    pub fn verify_report(&self, program: &PhaseProgram) -> crate::verify::VerifyReport {
+        crate::verify::ProgramChecker::new(self.mem.spec(self.channels).channel_bytes)
+            .check(&program.facts(), self.onchip.as_ref())
+    }
+
+    /// Compile this spec's program and statically verify it,
+    /// returning the typed report instead of panicking.
+    pub fn verify_program(&self) -> crate::verify::VerifyReport {
+        self.verify_report(&self.compile_unverified())
     }
 
     /// Execute the simulation. Infallible: every invalid combination
@@ -629,6 +676,7 @@ pub struct SimSpecBuilder {
     onchip_default: bool,
     budget: Option<RunBudget>,
     faults: Option<FaultPlan>,
+    verify: bool,
     /// Advisor resolution flags: when any is set, `build` runs the
     /// advisor probe and folds the chosen values into the spec. The
     /// flags themselves never reach [`SimSpec`] — only the resolved
@@ -834,6 +882,16 @@ impl SimSpecBuilder {
         self
     }
 
+    /// Statically verify the compiled program (see [`crate::verify`])
+    /// in release builds too — debug builds always verify. The flag
+    /// joins the memo key (verified and unverified runs never alias)
+    /// but not [`SimSpec::program_key`]: the checker proves
+    /// properties of the compiled artifact, it never changes it.
+    pub fn verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
     /// Inject deterministic DRAM faults (see [`crate::dram::fault`])
     /// during the run: the seeded plan adds completion delay to
     /// selected serviced requests — results are invariant, cycles
@@ -930,6 +988,7 @@ impl SimSpecBuilder {
         let (auto_partition, auto_placement, auto_onchip) =
             (self.auto_partition, self.auto_placement, self.auto_onchip);
         let patterns = self.patterns;
+        let verify = self.verify;
         let base = self.build_base()?;
         if !(auto_partition || auto_placement || auto_onchip) {
             return Ok(base);
@@ -967,6 +1026,7 @@ impl SimSpecBuilder {
             .onchip(onchip)
             .budget(base.budget.clone())
             .faults(base.faults.clone())
+            .verify(verify)
             .build_base()
     }
 
@@ -1038,6 +1098,7 @@ impl SimSpecBuilder {
             onchip,
             budget: self.budget,
             faults: self.faults,
+            verify: self.verify,
         })
     }
 }
@@ -1285,6 +1346,32 @@ mod tests {
         let rearmed = plain.clone().with_faults(Some(FaultPlan::mixed(7)));
         assert_eq!(rearmed, base().faults(FaultPlan::mixed(7)).build().unwrap());
         assert_eq!(rearmed.with_faults(None), plain);
+    }
+
+    #[test]
+    fn verify_joins_the_memo_key_but_not_the_program_key() {
+        let plain = base().build().unwrap();
+        assert!(!plain.verify_enabled());
+        let verified = base().verify(true).build().unwrap();
+        assert!(verified.verify_enabled());
+        // Verified and unverified runs must never alias in the memo...
+        assert_ne!(plain, verified);
+        // ...while the compiled program is shared (verification
+        // proves properties of the artifact, it never changes it).
+        assert_eq!(plain.program_key(), verified.program_key());
+        // The advisor-resolution path preserves the flag.
+        let auto = base()
+            .accelerator(AcceleratorKind::AccuGraph)
+            .verify(true)
+            .auto_partition(true)
+            .build()
+            .unwrap();
+        assert!(auto.verify_enabled());
+        // Every builder-valid program passes its own verification —
+        // release-mode semantics of the flag, debug tripwire aside.
+        let rep = verified.verify_program();
+        assert!(rep.is_ok(), "{rep}: {:?}", rep.violations);
+        assert!(rep.phases > 0 && rep.streams > 0);
     }
 
     #[test]

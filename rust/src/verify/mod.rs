@@ -1,0 +1,892 @@
+//! Static analysis: prove structural invariants of compiled
+//! [`PhaseProgram`](crate::accel::PhaseProgram)s *without executing
+//! them*, plus a dependency-free repo source linter ([`srclint`]).
+//!
+//! The paper's premise is that accelerator memory behavior is decided
+//! by *structure* — partitioning, descriptor layout, channel mapping —
+//! yet until this module every structural invariant in the simulator
+//! (Region clamping, fanout/merge token conservation, chain-deadlock
+//! freedom) was only checked dynamically: by a `debug_assert!` firing
+//! mid-run or by the PR-8 stall watchdog diagnosing a hang after the
+//! fact. All of those properties are decidable from the compiled
+//! artifact alone, and [`ProgramChecker`] decides them:
+//!
+//! 1. **Region bounds** — in [`ChannelMode::Region`] every descriptor
+//!    is channel-local and rebased by `region_base(owner)` at execute
+//!    time. The checker replays that rebase through the *same*
+//!    [`ChannelMode::local_addr`] rewrite the memory system uses and
+//!    rejects any line that would land outside its owner's
+//!    `channel_bytes` region (the static form of
+//!    `MemorySystem::enqueue`'s Region-mode `debug_assert!`). In
+//!    [`ChannelMode::InterleaveLine`] addresses stripe over every
+//!    channel and are never bound-checked by the memory system, so the
+//!    check is vacuous there by design.
+//! 2. **Fanout conservation** — a chained stream deadlocks if its
+//!    parents release fewer tokens than it has requests, and leaks
+//!    tokens if they release more. Statically: for every chained
+//!    stream, `fanout.total(parent_len) == len`, and `PerParent`
+//!    schedules must have exactly `parent_len` entries. This is the
+//!    compile-time form of the PR-8 no-forward-progress watchdog.
+//! 3. **Chain shape** — every `chained_to` parent exists, no stream
+//!    chains to itself, and parent links are acyclic.
+//! 4. **Merge coverage** — the arbiter tree references only real
+//!    streams, references no stream twice, and covers every stream
+//!    (an uncovered stream can never issue: a silent no-op; a
+//!    duplicated one double-issues).
+//! 5. **Gather domains** — every `Gather` index stays below its
+//!    declared domain (graph vertex count, or interval length for
+//!    interval-local gathers).
+//! 6. **Footprints & on-chip capacity** — per-channel layout
+//!    footprints fit in `channel_bytes`, and a declared
+//!    [`OnChipConfig`] passes its own validation and can hold at
+//!    least one cache line when given a non-zero budget.
+//!
+//! Each violation is a typed [`VerifyError`] naming the offending
+//! phase/stream/descriptor. The checker runs on [`ProgramFacts`], a
+//! public mirror of the compiled program's structure produced by
+//! `PhaseProgram::facts()` — public so test suites can inject defects
+//! field-by-field. Execute-time value-dependent streams (AccuGraph's
+//! write-backs, HitGraph's update queues, …) appear as static
+//! maximal-bounds stand-ins flagged [`StreamFacts::dynamic`].
+//!
+//! Wiring: [`crate::sim::SimSpec::compile_program`] verifies every
+//! program in debug builds, and in release builds when the spec opted
+//! in via `SimSpecBuilder::verify(true)` (the flag joins the memo
+//! key); `graphmem serve` verifies at admission and answers
+//! `ERR verify` without burning a run slot; `graphmem lint` exposes
+//! both passes on the command line.
+//!
+//! Future per-accelerator structural rules (e.g. "ReGraph dense
+//! partitions only ever gather interval-locally") belong here, as
+//! extra passes over [`ProgramFacts`].
+
+pub mod srclint;
+
+use crate::accel::stream::{Fanout, LineSource, LineStream, Merge, Phase, StreamClass};
+use crate::accel::AcceleratorKind;
+use crate::dram::{ChannelMode, CACHE_LINE};
+use crate::onchip::OnChipConfig;
+use std::fmt;
+use std::sync::Arc;
+
+/// One stream of a compiled phase, in checkable form.
+///
+/// Addressing convention matches the compiled program: in
+/// [`ChannelMode::Region`] the `source` is *channel-local* (the
+/// program rebases it by `region_base(owner)` when assembling the
+/// execute-time phase) and [`StreamFacts::owner`] names the owning
+/// channel; in [`ChannelMode::InterleaveLine`] addresses are global
+/// and `owner` is `None`.
+#[derive(Clone, Debug)]
+pub struct StreamFacts {
+    pub class: StreamClass,
+    pub source: LineSource,
+    /// Index of the parent stream whose completions release this
+    /// stream's requests; `None` for independent streams.
+    pub chained_to: Option<usize>,
+    pub fanout: Fanout,
+    /// Owning channel in Region mode; `None` when interleaved.
+    pub owner: Option<usize>,
+    /// For [`LineSource::Gather`] sources: the exclusive upper bound
+    /// every index must stay below (vertex count for global gathers,
+    /// interval length for interval-local ones).
+    pub gather_domain: Option<u64>,
+    /// True when the execute-time stream is value-dependent and this
+    /// entry is a static maximal-bounds stand-in built at compile
+    /// time.
+    pub dynamic: bool,
+}
+
+impl StreamFacts {
+    /// Facts of a compiled stream, verbatim: a static stream with no
+    /// gather domain, owned by `owner` in Region mode. Builders set
+    /// [`StreamFacts::gather_domain`] / [`StreamFacts::dynamic`] on
+    /// the result where they apply.
+    pub fn of(stream: &LineStream, owner: Option<usize>) -> StreamFacts {
+        StreamFacts {
+            class: stream.class,
+            source: stream.source.clone(),
+            chained_to: stream.chained_to,
+            fanout: stream.fanout.clone(),
+            owner,
+            gather_domain: None,
+            dynamic: false,
+        }
+    }
+
+    /// Exclusive end (last line address + line size) of this
+    /// stream's descriptor span, or 0 when empty.
+    fn extent(&self) -> u64 {
+        let len = self.source.len();
+        if len == 0 {
+            return 0;
+        }
+        match &self.source {
+            // Closed-form descriptors are monotone in `i`.
+            LineSource::Seq { .. } | LineSource::Strided { .. } => {
+                self.source.line(len - 1) + CACHE_LINE
+            }
+            LineSource::Gather { .. } | LineSource::Explicit(_) => (0..len)
+                .map(|i| self.source.line(i) + CACHE_LINE)
+                .max()
+                .unwrap_or(0),
+        }
+    }
+}
+
+/// One phase of a compiled program, in checkable form.
+#[derive(Clone, Debug)]
+pub struct PhaseFacts {
+    /// Human-readable origin, e.g. `"scatter[3]"` — quoted verbatim
+    /// in diagnostics.
+    pub label: String,
+    pub streams: Vec<StreamFacts>,
+    pub merge: Arc<Merge>,
+    pub window: usize,
+}
+
+impl PhaseFacts {
+    /// Facts of a compiled phase, verbatim: every stream via
+    /// [`StreamFacts::of`] with a uniform `owner`, sharing the
+    /// phase's merge tree by reference.
+    pub fn of(label: impl Into<String>, phase: &Phase, owner: Option<usize>) -> PhaseFacts {
+        PhaseFacts {
+            label: label.into(),
+            streams: phase.streams.iter().map(|s| StreamFacts::of(s, owner)).collect(),
+            merge: Arc::clone(&phase.merge),
+            window: phase.window,
+        }
+    }
+}
+
+/// The checkable mirror of a compiled [`crate::accel::PhaseProgram`]:
+/// everything the static verifier needs, nothing it doesn't. Produced
+/// by `PhaseProgram::facts()`; fully public so property suites can
+/// hand-mutate a legitimate program into each defect class and assert
+/// the checker rejects it.
+#[derive(Clone, Debug)]
+pub struct ProgramFacts {
+    pub accelerator: AcceleratorKind,
+    pub vertices: usize,
+    pub edges: usize,
+    pub channels: usize,
+    pub mode: ChannelMode,
+    /// Bytes the compile-time layout placed on each channel (indexed
+    /// by channel in Region mode). In interleave mode a single entry
+    /// holds the global layout extent; it stripes over all channels
+    /// and is not capacity-checked (see module docs).
+    pub footprint: Vec<u64>,
+    pub phases: Vec<PhaseFacts>,
+}
+
+impl ProgramFacts {
+    /// Assemble facts, deriving per-channel footprints from the
+    /// extremal line of every stream. Maximal dynamic stand-ins make
+    /// the stream extents cover the compile-time layout, so this is
+    /// the layout footprint the capacity check needs. Region mode
+    /// gets one slot per channel (unowned streams land on channel
+    /// 0); interleave mode gets a single global slot.
+    pub fn assemble(
+        accelerator: AcceleratorKind,
+        vertices: usize,
+        edges: usize,
+        channels: usize,
+        mode: ChannelMode,
+        phases: Vec<PhaseFacts>,
+    ) -> ProgramFacts {
+        let slots = match mode {
+            ChannelMode::Region => channels.max(1),
+            ChannelMode::InterleaveLine => 1,
+        };
+        let mut footprint = vec![0u64; slots];
+        for phase in &phases {
+            for s in &phase.streams {
+                let slot = s.owner.unwrap_or(0).min(slots - 1);
+                footprint[slot] = footprint[slot].max(s.extent());
+            }
+        }
+        ProgramFacts { accelerator, vertices, edges, channels, mode, footprint, phases }
+    }
+}
+
+/// Where a violation was found: phase index + label, and the stream
+/// index within it when one is implicated.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Site {
+    pub phase: usize,
+    pub label: String,
+    pub stream: Option<usize>,
+}
+
+impl Site {
+    fn new(phase: usize, label: &str, stream: Option<usize>) -> Site {
+        Site { phase, label: label.to_string(), stream }
+    }
+}
+
+impl fmt::Display for Site {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "phase {} (`{}`)", self.phase, self.label)?;
+        if let Some(s) = self.stream {
+            write!(f, " stream {s}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A structural invariant violation in a compiled program. Every
+/// variant names its [`Site`] (or channel), so a diagnostic always
+/// points at the offending phase/stream/descriptor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VerifyError {
+    /// A descriptor line, rebased onto its owner's region, lands
+    /// outside that channel's `channel_bytes` (Region mode).
+    RegionOverflow { at: Site, index: usize, local: u64, limit: u64, channel: usize },
+    /// A stream's declared owner is not a valid channel index.
+    ChannelOutOfRange { at: Site, channel: usize, channels: usize },
+    /// A channel's compile-time layout exceeds its capacity.
+    FootprintOverflow { channel: usize, bytes: u64, limit: u64 },
+    /// A chained stream's release schedule does not conserve tokens:
+    /// parents release `released` requests, the stream has `len`.
+    FanoutMismatch { at: Site, len: usize, released: u64 },
+    /// A `PerParent` schedule whose length differs from the parent
+    /// stream's length.
+    FanoutArity { at: Site, parent_len: usize, schedule_len: usize },
+    /// `chained_to` names a stream that does not exist.
+    BadParent { at: Site, parent: usize, streams: usize },
+    /// Following `chained_to` links revisits a stream.
+    ChainCycle { at: Site },
+    /// A non-empty phase whose merge tree has no leaves.
+    EmptyMerge { at: Site },
+    /// A merge-tree leaf referencing a stream that does not exist.
+    MergeUnknownStream { at: Site, leaf: usize },
+    /// A merge-tree leaf referenced more than once (double-issue).
+    MergeDuplicateStream { at: Site, leaf: usize },
+    /// A stream no merge-tree leaf covers (it could never issue).
+    OrphanStream { at: Site },
+    /// A `Gather` index at position `index` with value `value`
+    /// escaping its declared domain.
+    GatherOutOfRange { at: Site, index: usize, value: u64, domain: u64 },
+    /// A non-empty phase with a zero outstanding-request window.
+    ZeroWindow { at: Site },
+    /// A declared on-chip buffer that cannot work as configured.
+    OnChipInconsistent { detail: String },
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::RegionOverflow { at, index, local, limit, channel } => write!(
+                f,
+                "{at}: line {index} at channel-local address {local:#x} exceeds channel \
+                 {channel}'s region of {limit} bytes"
+            ),
+            VerifyError::ChannelOutOfRange { at, channel, channels } => write!(
+                f,
+                "{at}: owning channel {channel} out of range for {channels} channels"
+            ),
+            VerifyError::FootprintOverflow { channel, bytes, limit } => write!(
+                f,
+                "layout places {bytes} bytes on channel {channel}, exceeding its {limit}-byte \
+                 region"
+            ),
+            VerifyError::FanoutMismatch { at, len, released } => write!(
+                f,
+                "{at}: fanout releases {released} tokens for {len} requests — the stream would \
+                 {}",
+                if (*released as u128) < (*len as u128) { "deadlock" } else { "leak tokens" }
+            ),
+            VerifyError::FanoutArity { at, parent_len, schedule_len } => write!(
+                f,
+                "{at}: per-parent release schedule has {schedule_len} entries for a parent of \
+                 length {parent_len}"
+            ),
+            VerifyError::BadParent { at, parent, streams } => write!(
+                f,
+                "{at}: chained to stream {parent}, but the phase has {streams} streams"
+            ),
+            VerifyError::ChainCycle { at } => {
+                write!(f, "{at}: chained-release links form a cycle")
+            }
+            VerifyError::EmptyMerge { at } => {
+                write!(f, "{at}: non-empty phase with an empty merge tree")
+            }
+            VerifyError::MergeUnknownStream { at, leaf } => {
+                write!(f, "{at}: merge tree references unknown stream {leaf}")
+            }
+            VerifyError::MergeDuplicateStream { at, leaf } => {
+                write!(f, "{at}: merge tree references stream {leaf} more than once")
+            }
+            VerifyError::OrphanStream { at } => {
+                write!(f, "{at}: no merge-tree leaf covers this stream — it can never issue")
+            }
+            VerifyError::GatherOutOfRange { at, index, value, domain } => write!(
+                f,
+                "{at}: gather index [{index}] = {value} escapes its domain of {domain}"
+            ),
+            VerifyError::ZeroWindow { at } => {
+                write!(f, "{at}: non-empty phase with a zero-request window")
+            }
+            VerifyError::OnChipInconsistent { detail } => {
+                write!(f, "on-chip buffer config inconsistent: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Outcome of one verification run: the violations (empty ⇒ the
+/// program is structurally sound) plus coverage counters, so callers
+/// can report *how much* was proven, not just that nothing failed.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub violations: Vec<VerifyError>,
+    /// Phases examined.
+    pub phases: usize,
+    /// Streams examined across all phases.
+    pub streams: usize,
+    /// Descriptor lines bound-checked (closed-form descriptors are
+    /// proven by their extremal lines and count 2).
+    pub lines: u64,
+}
+
+impl VerifyReport {
+    pub fn is_ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+impl fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} violation(s) over {} phase(s), {} stream(s), {} line(s)",
+            self.violations.len(),
+            self.phases,
+            self.streams,
+            self.lines
+        )
+    }
+}
+
+/// The static program verifier. Holds the one piece of context a
+/// compiled program does not know about itself: the per-channel
+/// capacity of the memory technology it will run against.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgramChecker {
+    channel_bytes: u64,
+}
+
+impl ProgramChecker {
+    /// A checker for a memory system with `channel_bytes` bytes per
+    /// channel (see `DramSpec::channel_bytes`).
+    pub fn new(channel_bytes: u64) -> ProgramChecker {
+        ProgramChecker { channel_bytes }
+    }
+
+    /// Verify a program; `onchip` additionally checks a declared
+    /// buffer configuration for consistency.
+    pub fn check(&self, facts: &ProgramFacts, onchip: Option<&OnChipConfig>) -> VerifyReport {
+        let mut rep = VerifyReport::default();
+        for (pi, phase) in facts.phases.iter().enumerate() {
+            rep.phases += 1;
+            rep.streams += phase.streams.len();
+            self.check_window(pi, phase, &mut rep);
+            self.check_chains(pi, phase, &mut rep);
+            self.check_merge(pi, phase, &mut rep);
+            self.check_bounds(facts, pi, phase, &mut rep);
+        }
+        self.check_footprint(facts, &mut rep);
+        if let Some(cfg) = onchip {
+            self.check_onchip(cfg, &mut rep);
+        }
+        rep
+    }
+
+    fn check_window(&self, pi: usize, phase: &PhaseFacts, rep: &mut VerifyReport) {
+        if phase.window == 0 && !phase.streams.is_empty() {
+            rep.violations
+                .push(VerifyError::ZeroWindow { at: Site::new(pi, &phase.label, None) });
+        }
+    }
+
+    /// Chain shape + fanout token conservation (checks 2 and 3).
+    fn check_chains(&self, pi: usize, phase: &PhaseFacts, rep: &mut VerifyReport) {
+        let n = phase.streams.len();
+        for (si, s) in phase.streams.iter().enumerate() {
+            let Some(parent) = s.chained_to else { continue };
+            let at = Site::new(pi, &phase.label, Some(si));
+            if parent >= n || parent == si {
+                rep.violations.push(VerifyError::BadParent { at, parent, streams: n });
+                continue;
+            }
+            // Walk the parent links; more than `n` hops means a cycle
+            // (each hop visits a distinct stream in an acyclic chain).
+            let mut cursor = parent;
+            let mut hops = 1usize;
+            while let Some(next) = phase.streams[cursor].chained_to {
+                if next >= n || next == cursor {
+                    break; // reported at its own stream
+                }
+                cursor = next;
+                hops += 1;
+                if hops > n {
+                    rep.violations.push(VerifyError::ChainCycle { at: at.clone() });
+                    break;
+                }
+            }
+            if hops > n {
+                continue;
+            }
+            // Token conservation against the parent's length.
+            let parent_len = phase.streams[parent].source.len();
+            if let Fanout::PerParent(v) = &s.fanout {
+                if v.len() != parent_len {
+                    rep.violations.push(VerifyError::FanoutArity {
+                        at: at.clone(),
+                        parent_len,
+                        schedule_len: v.len(),
+                    });
+                    continue;
+                }
+            }
+            let released = s.fanout.total(parent_len);
+            let len = s.source.len();
+            if released != len as u64 {
+                rep.violations.push(VerifyError::FanoutMismatch { at, len, released });
+            }
+        }
+    }
+
+    /// Merge-tree coverage (check 4): every stream exactly once.
+    fn check_merge(&self, pi: usize, phase: &PhaseFacts, rep: &mut VerifyReport) {
+        let n = phase.streams.len();
+        let mut leaves = Vec::new();
+        collect_leaves(&phase.merge, &mut leaves);
+        if leaves.is_empty() {
+            if n > 0 {
+                rep.violations
+                    .push(VerifyError::EmptyMerge { at: Site::new(pi, &phase.label, None) });
+            }
+            return;
+        }
+        let mut covered = vec![false; n];
+        for &leaf in &leaves {
+            if leaf >= n {
+                rep.violations.push(VerifyError::MergeUnknownStream {
+                    at: Site::new(pi, &phase.label, None),
+                    leaf,
+                });
+            } else if covered[leaf] {
+                rep.violations.push(VerifyError::MergeDuplicateStream {
+                    at: Site::new(pi, &phase.label, Some(leaf)),
+                    leaf,
+                });
+            } else {
+                covered[leaf] = true;
+            }
+        }
+        for (si, seen) in covered.iter().enumerate() {
+            if !seen {
+                rep.violations
+                    .push(VerifyError::OrphanStream { at: Site::new(pi, &phase.label, Some(si)) });
+            }
+        }
+    }
+
+    /// Region bounds + gather domains (checks 1 and 5). Bounds are
+    /// proven through the same [`ChannelMode::local_addr`] rewrite the
+    /// memory system applies at enqueue, so static acceptance implies
+    /// the Region-mode `debug_assert!` can never fire for this stream.
+    fn check_bounds(
+        &self,
+        facts: &ProgramFacts,
+        pi: usize,
+        phase: &PhaseFacts,
+        rep: &mut VerifyReport,
+    ) {
+        for (si, s) in phase.streams.iter().enumerate() {
+            // Gather-domain check applies in every channel mode.
+            if let (LineSource::Gather { indices, .. }, Some(domain)) =
+                (&s.source, s.gather_domain)
+            {
+                for (i, &idx) in indices.iter().enumerate() {
+                    rep.lines += 1;
+                    if u64::from(idx) >= domain {
+                        rep.violations.push(VerifyError::GatherOutOfRange {
+                            at: Site::new(pi, &phase.label, Some(si)),
+                            index: i,
+                            value: u64::from(idx),
+                            domain,
+                        });
+                        break; // one witness per stream is enough
+                    }
+                }
+            }
+            // Region bounds only bind in Region mode: interleaved
+            // addresses stripe over all channels by construction.
+            if facts.mode != ChannelMode::Region {
+                continue;
+            }
+            let Some(owner) = s.owner else { continue };
+            let at = Site::new(pi, &phase.label, Some(si));
+            if owner >= facts.channels {
+                rep.violations.push(VerifyError::ChannelOutOfRange {
+                    at,
+                    channel: owner,
+                    channels: facts.channels,
+                });
+                continue;
+            }
+            let mut check_line = |i: usize, rep: &mut VerifyReport| -> bool {
+                let local = s.source.line(i);
+                rep.lines += 1;
+                // Rebase exactly as the execute path does, then prove
+                // the memory system's rewrite routes the line back to
+                // its owner at the same local address.
+                let global = owner as u64 * self.channel_bytes + local;
+                let routed = (global / self.channel_bytes).min(facts.channels as u64 - 1);
+                let rewritten =
+                    facts.mode.local_addr(global, facts.channels, self.channel_bytes);
+                if local + CACHE_LINE > self.channel_bytes
+                    || routed != owner as u64
+                    || rewritten != local
+                {
+                    rep.violations.push(VerifyError::RegionOverflow {
+                        at: Site::new(pi, &phase.label, Some(si)),
+                        index: i,
+                        local,
+                        limit: self.channel_bytes,
+                        channel: owner,
+                    });
+                    return false;
+                }
+                true
+            };
+            let len = s.source.len();
+            if len == 0 {
+                continue;
+            }
+            match &s.source {
+                // Closed-form descriptors are monotone in `i`: the
+                // extremal lines prove the whole span.
+                LineSource::Seq { .. } | LineSource::Strided { .. } => {
+                    if check_line(0, rep) {
+                        check_line(len - 1, rep);
+                    }
+                }
+                LineSource::Gather { .. } | LineSource::Explicit(_) => {
+                    for i in 0..len {
+                        if !check_line(i, rep) {
+                            break; // one witness per stream
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-channel layout capacity (check 6a).
+    fn check_footprint(&self, facts: &ProgramFacts, rep: &mut VerifyReport) {
+        if facts.mode != ChannelMode::Region {
+            return;
+        }
+        for (channel, &bytes) in facts.footprint.iter().enumerate() {
+            if bytes > self.channel_bytes {
+                rep.violations.push(VerifyError::FootprintOverflow {
+                    channel,
+                    bytes,
+                    limit: self.channel_bytes,
+                });
+            }
+        }
+    }
+
+    /// Declared on-chip buffer consistency (check 6b).
+    fn check_onchip(&self, cfg: &OnChipConfig, rep: &mut VerifyReport) {
+        if let Err(detail) = cfg.validate() {
+            rep.violations.push(VerifyError::OnChipInconsistent { detail: detail.to_string() });
+            return;
+        }
+        if cfg.capacity_bytes() > 0 && cfg.capacity_lines() == 0 {
+            rep.violations.push(VerifyError::OnChipInconsistent {
+                detail: format!(
+                    "a {}-byte budget holds zero {CACHE_LINE}-byte lines",
+                    cfg.capacity_bytes()
+                ),
+            });
+        }
+    }
+}
+
+fn collect_leaves(m: &Merge, out: &mut Vec<usize>) {
+    match m {
+        Merge::Leaf(s) => out.push(*s),
+        Merge::RoundRobin(children) | Merge::Priority(children) => {
+            for c in children {
+                collect_leaves(c, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::stream::LineStream;
+    use crate::dram::MemKind;
+    use crate::onchip::Geometry;
+
+    const CB: u64 = 1 << 20; // 1 MiB channels keep the arithmetic readable
+
+    fn phase(streams: Vec<StreamFacts>, merge: Merge) -> PhaseFacts {
+        PhaseFacts { label: "t[0]".into(), streams, merge: Arc::new(merge), window: 16 }
+    }
+
+    fn stream(source: LineSource) -> StreamFacts {
+        StreamFacts {
+            class: StreamClass::Edges,
+            source,
+            chained_to: None,
+            fanout: Fanout::Uniform(0),
+            owner: Some(0),
+            gather_domain: None,
+            dynamic: false,
+        }
+    }
+
+    fn facts(phases: Vec<PhaseFacts>) -> ProgramFacts {
+        ProgramFacts {
+            accelerator: AcceleratorKind::HitGraph,
+            vertices: 64,
+            edges: 256,
+            channels: 4,
+            mode: ChannelMode::Region,
+            footprint: vec![0; 4],
+            phases,
+        }
+    }
+
+    fn check(f: &ProgramFacts) -> VerifyReport {
+        ProgramChecker::new(CB).check(f, None)
+    }
+
+    #[test]
+    fn a_well_formed_phase_passes() {
+        let f = facts(vec![phase(
+            vec![stream(LineSource::seq(0, 4096))],
+            Merge::Leaf(0),
+        )]);
+        let rep = check(&f);
+        assert!(rep.is_ok(), "{rep}: {:?}", rep.violations);
+        assert_eq!(rep.phases, 1);
+        assert_eq!(rep.streams, 1);
+        assert!(rep.lines >= 2, "both extremal lines proven");
+    }
+
+    #[test]
+    fn seq_straddling_its_region_is_rejected_via_the_shared_rewrite() {
+        // Last line of the span lands at local CB → routed to owner+1.
+        let f = facts(vec![phase(
+            vec![stream(LineSource::seq(CB - 64, 128))],
+            Merge::Leaf(0),
+        )]);
+        let rep = check(&f);
+        assert!(matches!(
+            rep.violations.as_slice(),
+            [VerifyError::RegionOverflow { local, channel: 0, .. }] if *local == CB
+        ));
+    }
+
+    #[test]
+    fn last_channel_clamping_does_not_hide_overflow() {
+        // Region routing clamps to the last channel, so an overflow on
+        // channel C-1 still *routes* "correctly" — the rewrite check
+        // alone would miss it; the explicit limit check must not.
+        let mut f = facts(vec![phase(
+            vec![stream(LineSource::seq(CB, 64))],
+            Merge::Leaf(0),
+        )]);
+        f.phases[0].streams[0].owner = Some(3);
+        let rep = check(&f);
+        assert!(matches!(
+            rep.violations.as_slice(),
+            [VerifyError::RegionOverflow { channel: 3, .. }]
+        ));
+    }
+
+    #[test]
+    fn gather_index_outside_its_domain_is_rejected() {
+        let mut s = stream(LineSource::gather(0, 4, [3u64, 64, 2]));
+        s.gather_domain = Some(64);
+        let f = facts(vec![phase(vec![s], Merge::Leaf(0))]);
+        let rep = check(&f);
+        assert!(matches!(
+            rep.violations.as_slice(),
+            [VerifyError::GatherOutOfRange { index: 1, value: 64, domain: 64, .. }]
+        ));
+    }
+
+    #[test]
+    fn fanout_over_and_under_release_are_both_rejected() {
+        for (k, expect_ok) in [(1u32, true), (2, false), (0, false)] {
+            let parent = stream(LineSource::seq(0, 4 * 64));
+            let mut child = stream(LineSource::seq(4096, 4 * 64));
+            child.chained_to = Some(0);
+            child.fanout = Fanout::Uniform(k);
+            let f = facts(vec![phase(vec![parent, child], Merge::prio([1, 0]))]);
+            let rep = check(&f);
+            assert_eq!(rep.is_ok(), expect_ok, "uniform fanout {k}");
+            if !expect_ok {
+                assert!(matches!(
+                    rep.violations.as_slice(),
+                    [VerifyError::FanoutMismatch { len: 4, .. }]
+                ));
+            }
+        }
+    }
+
+    #[test]
+    fn per_parent_arity_mismatch_is_rejected() {
+        let parent = stream(LineSource::seq(0, 4 * 64));
+        let mut child = stream(LineSource::seq(4096, 64));
+        child.chained_to = Some(0);
+        child.fanout = Fanout::PerParent(vec![1u32].into()); // parent has 4 lines
+        let f = facts(vec![phase(vec![parent, child], Merge::prio([1, 0]))]);
+        assert!(matches!(
+            check(&f).violations.as_slice(),
+            [VerifyError::FanoutArity { parent_len: 4, schedule_len: 1, .. }]
+        ));
+    }
+
+    #[test]
+    fn bad_parent_and_chain_cycle_are_rejected() {
+        let mut a = stream(LineSource::seq(0, 64));
+        a.chained_to = Some(7);
+        let f = facts(vec![phase(vec![a], Merge::Leaf(0))]);
+        assert!(matches!(
+            check(&f).violations.as_slice(),
+            [VerifyError::BadParent { parent: 7, streams: 1, .. }]
+        ));
+
+        let mut a = stream(LineSource::seq(0, 64));
+        a.chained_to = Some(1);
+        a.fanout = Fanout::Uniform(1);
+        let mut b = stream(LineSource::seq(64, 64));
+        b.chained_to = Some(0);
+        b.fanout = Fanout::Uniform(1);
+        let f = facts(vec![phase(vec![a, b], Merge::rr([0, 1]))]);
+        assert!(
+            check(&f)
+                .violations
+                .iter()
+                .any(|v| matches!(v, VerifyError::ChainCycle { .. })),
+            "mutual chain is a cycle"
+        );
+    }
+
+    #[test]
+    fn merge_orphan_duplicate_unknown_and_empty_are_rejected() {
+        let two = || vec![stream(LineSource::seq(0, 64)), stream(LineSource::seq(64, 64))];
+        let orphan = facts(vec![phase(two(), Merge::Leaf(0))]);
+        assert!(matches!(
+            check(&orphan).violations.as_slice(),
+            [VerifyError::OrphanStream { at }] if at.stream == Some(1)
+        ));
+
+        let dup = facts(vec![phase(two(), Merge::rr([0, 1, 0]))]);
+        assert!(matches!(
+            check(&dup).violations.as_slice(),
+            [VerifyError::MergeDuplicateStream { leaf: 0, .. }]
+        ));
+
+        let unknown = facts(vec![phase(two(), Merge::rr([0, 1, 9]))]);
+        assert!(matches!(
+            check(&unknown).violations.as_slice(),
+            [VerifyError::MergeUnknownStream { leaf: 9, .. }]
+        ));
+
+        let empty = facts(vec![phase(two(), Merge::RoundRobin(Vec::new()))]);
+        assert!(matches!(
+            check(&empty).violations.as_slice(),
+            [VerifyError::EmptyMerge { .. }]
+        ));
+    }
+
+    #[test]
+    fn footprint_overflow_and_zero_window_are_rejected() {
+        let mut f = facts(vec![phase(vec![stream(LineSource::seq(0, 64))], Merge::Leaf(0))]);
+        f.footprint[2] = CB + 1;
+        f.phases[0].window = 0;
+        let rep = check(&f);
+        assert!(rep.violations.iter().any(
+            |v| matches!(v, VerifyError::FootprintOverflow { channel: 2, .. })
+        ));
+        assert!(rep.violations.iter().any(|v| matches!(v, VerifyError::ZeroWindow { .. })));
+    }
+
+    #[test]
+    fn interleave_mode_skips_region_checks_but_not_gather_domains() {
+        let mut s = stream(LineSource::seq(100 * CB, 4096)); // far past one channel
+        s.owner = None;
+        let mut g = stream(LineSource::gather(0, 4, [999u64]));
+        g.gather_domain = Some(10);
+        let mut f = facts(vec![phase(vec![s, g], Merge::rr([0, 1]))]);
+        f.mode = ChannelMode::InterleaveLine;
+        f.footprint = vec![100 * CB];
+        let rep = check(&f);
+        assert!(matches!(
+            rep.violations.as_slice(),
+            [VerifyError::GatherOutOfRange { .. }]
+        ));
+    }
+
+    #[test]
+    fn onchip_inconsistencies_are_rejected() {
+        let f = facts(Vec::new());
+        let checker = ProgramChecker::new(CB);
+        // Sub-line budget: validates, but holds zero lines.
+        let tiny = OnChipConfig::vertex_cache(32);
+        assert!(matches!(
+            checker.check(&f, Some(&tiny)).violations.as_slice(),
+            [VerifyError::OnChipInconsistent { .. }]
+        ));
+        // Zero-way set-associative geometry fails validate().
+        let zero_ways = OnChipConfig::new(
+            1 << 14,
+            Geometry::SetAssociative { ways: 0 },
+            [crate::trace::Region::Vertices],
+        );
+        assert!(matches!(
+            checker.check(&f, Some(&zero_ways)).violations.as_slice(),
+            [VerifyError::OnChipInconsistent { .. }]
+        ));
+        // A healthy buffer passes.
+        assert!(checker.check(&f, Some(&OnChipConfig::vertex_cache(1 << 14))).is_ok());
+    }
+
+    #[test]
+    fn real_streams_convert_to_facts_shape() {
+        // The facts builders clone compiled LineStreams; mirror that
+        // here to pin the field mapping.
+        let ls = LineStream::chained(
+            StreamClass::Values,
+            MemKind::Read,
+            LineSource::seq(0, 256),
+            0,
+            Fanout::AfterLast(4),
+        );
+        let sf = StreamFacts {
+            class: ls.class,
+            source: ls.source.clone(),
+            chained_to: ls.chained_to,
+            fanout: ls.fanout.clone(),
+            owner: None,
+            gather_domain: None,
+            dynamic: false,
+        };
+        assert_eq!(sf.chained_to, Some(0));
+        assert_eq!(sf.source.len(), 4);
+    }
+}

@@ -1,0 +1,587 @@
+//! Hand-rolled, dependency-free repo invariant linter
+//! (`graphmem lint --src`).
+//!
+//! Three passes over `rust/src/`, all pure text — no syn, no regex
+//! crate, nothing the container doesn't already have:
+//!
+//! 1. **Panic hygiene.** No `.unwrap()` / `.expect(` in library code.
+//!    Test modules (everything after a `#[cfg(test)]`-attributed
+//!    `mod`) are exempt, matching the crate-level
+//!    `#![warn(clippy::unwrap_used, clippy::expect_used)]` gate.
+//!    Grandfathered sites live in `lint-allowlist.txt` next to
+//!    `Cargo.toml`; the recorded count is a **ratchet** — a file may
+//!    only ever go down. Exceeding its entry (or appearing without
+//!    one) fails the lint; dropping below it prints a tighten notice.
+//! 2. **Memo-key coverage.** Every field of `sim::SimSpec` *is* the
+//!    memo key (the struct derives `Hash`/`Eq`), and `persist`
+//!    serializes it for the disk cache. PR 1 fixed a stale-cache bug
+//!    caused by exactly this invariant rotting; this pass
+//!    cross-references the `SimSpec` struct fields in `sim/spec.rs`
+//!    against both the `spec_to_line` format keys and the
+//!    `spec_from_line_with` parser keys in `persist/mod.rs`, through
+//!    the field↔key table [`FIELD_KEYS`]. Adding a spec field without
+//!    updating the table, the serializer, *and* the parser is a lint
+//!    failure — in CI, not in a user's stale cache.
+//! 3. **Determinism.** No `Instant::now` / `SystemTime` in the
+//!    deterministic simulation paths (`sim/`, `dram/`, `accel/`):
+//!    bit-identical replay (heap/scan equivalence, trace-vs-live,
+//!    disk-cache round trips) forbids wall-clock reads there.
+//!    Wall-clock use belongs in `robust/` (budget deadlines) and the
+//!    CLI.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The `SimSpec` field ↔ serializer key table pass 2 checks both
+/// sides against. A new `SimSpec` field must be added here *and* to
+/// `persist`'s serializer + parser; a new serializer key must trace
+/// back to a field. (`config` fans out into its per-field keys.)
+pub const FIELD_KEYS: &[(&str, &[&str])] = &[
+    ("accelerator", &["accel"]),
+    ("workload", &["graph"]),
+    ("problem", &["problem"]),
+    ("mem", &["mem"]),
+    ("channels", &["channels"]),
+    ("patterns", &["patterns"]),
+    ("config", &["opts", "bram", "interval", "pes", "window", "xmc"]),
+    ("onchip", &["onchip"]),
+    ("budget", &["budget"]),
+    ("faults", &["faults"]),
+    ("verify", &["verify"]),
+];
+
+/// Directories whose files must never read the wall clock.
+pub const DETERMINISTIC_DIRS: &[&str] = &["sim", "dram", "accel"];
+
+// Spelled via concat! so the linter does not flag (or mode-flip on)
+// its own pattern literals when scanning this file.
+const UNWRAP_PAT: &str = concat!(".unw", "rap()");
+const EXPECT_PAT: &str = concat!(".exp", "ect(");
+const CFG_TEST_PAT: &str = concat!("#[cfg(te", "st)]");
+const INSTANT_PAT: &str = concat!("Instant::", "now");
+const SYSTIME_PAT: &str = concat!("System", "Time");
+
+/// One lint violation, with enough location to act on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LintViolation {
+    /// Path relative to the source root, forward slashes.
+    pub file: String,
+    /// 1-based line, or 0 for whole-file findings.
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for LintViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "{}:{}: {}", self.file, self.line, self.message)
+        } else {
+            write!(f, "{}: {}", self.file, self.message)
+        }
+    }
+}
+
+/// Outcome of a source lint run. `violations` empty ⇒ pass;
+/// `notices` are non-fatal (ratchet-tightening opportunities).
+#[derive(Clone, Debug, Default)]
+pub struct SrcLintReport {
+    pub violations: Vec<LintViolation>,
+    pub notices: Vec<String>,
+    /// `.rs` files scanned.
+    pub files: usize,
+    /// Non-test unwrap/expect sites found (allowlisted or not).
+    pub unwrap_sites: usize,
+}
+
+impl SrcLintReport {
+    pub fn is_ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Per-file scan result of pass 1 + pass 3 (pure text, unit-testable
+/// without a filesystem).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FileScan {
+    /// 1-based lines of non-test `.unwrap()` / `.expect(` sites
+    /// (one entry per occurrence).
+    pub unwraps: Vec<usize>,
+    /// 1-based lines of wall-clock reads (reported only for files
+    /// under [`DETERMINISTIC_DIRS`]).
+    pub timing: Vec<usize>,
+}
+
+/// Scan one file's text. Comment text (`//` to end of line) is
+/// ignored; everything after a `#[cfg(test)]`-attributed `mod` is
+/// treated as test code and exempt from the unwrap pass (the repo
+/// convention is one test module at the end of each file).
+pub fn scan_file(text: &str) -> FileScan {
+    let mut scan = FileScan::default();
+    let mut pending_cfg_test = false;
+    let mut in_test = false;
+    for (i, raw) in text.lines().enumerate() {
+        let line = match raw.find("//") {
+            Some(p) => &raw[..p],
+            None => raw,
+        };
+        if !in_test {
+            if line.contains(CFG_TEST_PAT) {
+                pending_cfg_test = true;
+            } else if pending_cfg_test && contains_mod(line) {
+                in_test = true;
+            }
+        }
+        if !in_test {
+            let hits = line.matches(UNWRAP_PAT).count() + line.matches(EXPECT_PAT).count();
+            for _ in 0..hits {
+                scan.unwraps.push(i + 1);
+            }
+        }
+        if line.contains(INSTANT_PAT) || line.contains(SYSTIME_PAT) {
+            scan.timing.push(i + 1);
+        }
+    }
+    scan
+}
+
+fn contains_mod(line: &str) -> bool {
+    line.split_whitespace().any(|w| w == "mod")
+}
+
+/// Parse an allowlist: one `path count` pair per line, `#` comments
+/// and blank lines ignored. Malformed lines are reported as
+/// violations (a corrupt ratchet must not silently allow anything).
+pub fn parse_allowlist(text: &str) -> (Vec<(String, usize)>, Vec<LintViolation>) {
+    let mut entries = Vec::new();
+    let mut bad = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match (it.next(), it.next().map(str::parse::<usize>), it.next()) {
+            (Some(path), Some(Ok(count)), None) => entries.push((path.to_string(), count)),
+            _ => bad.push(LintViolation {
+                file: "lint-allowlist.txt".to_string(),
+                line: i + 1,
+                message: format!("malformed allowlist entry {line:?} (want `path count`)"),
+            }),
+        }
+    }
+    (entries, bad)
+}
+
+/// Pass 2: cross-reference the `SimSpec` struct fields (text of
+/// `sim/spec.rs`) against `persist`'s serializer format keys and
+/// parser keys (text of `persist/mod.rs`) through [`FIELD_KEYS`].
+pub fn memo_key_coverage(spec_text: &str, persist_text: &str) -> Vec<LintViolation> {
+    let mut out = Vec::new();
+    let at = |file: &str, msg: String| LintViolation {
+        file: file.to_string(),
+        line: 0,
+        message: msg,
+    };
+
+    let fields = struct_fields(spec_text, "pub struct SimSpec");
+    if fields.is_empty() {
+        out.push(at("sim/spec.rs", "could not locate `pub struct SimSpec` fields".into()));
+        return out;
+    }
+    // Struct ↔ table, both directions.
+    for f in &fields {
+        if !FIELD_KEYS.iter().any(|(name, _)| name == f) {
+            out.push(at(
+                "sim/spec.rs",
+                format!(
+                    "SimSpec field `{f}` (part of the memo key) has no serializer keys in \
+                     verify::srclint::FIELD_KEYS — add it there and to persist's \
+                     spec_to_line/spec_from_line_with"
+                ),
+            ));
+        }
+    }
+    for (name, _) in FIELD_KEYS {
+        if !fields.iter().any(|f| f == name) {
+            out.push(at(
+                "sim/spec.rs",
+                format!("FIELD_KEYS names `{name}`, which is not a SimSpec field"),
+            ));
+        }
+    }
+
+    // Table ↔ serializer format string ↔ parser takes, as sets.
+    let ser = format_keys(body_of(persist_text, "fn spec_to_line"));
+    let par = take_keys(body_of(persist_text, "fn spec_from_line_with"));
+    if ser.is_empty() {
+        out.push(at("persist/mod.rs", "could not locate spec_to_line format keys".into()));
+        return out;
+    }
+    if par.is_empty() {
+        out.push(at("persist/mod.rs", "could not locate spec_from_line_with keys".into()));
+        return out;
+    }
+    for (field, keys) in FIELD_KEYS {
+        for key in *keys {
+            if !ser.iter().any(|k| k == key) {
+                out.push(at(
+                    "persist/mod.rs",
+                    format!("field `{field}`: key `{key}` missing from spec_to_line"),
+                ));
+            }
+            if !par.iter().any(|k| k == key) {
+                out.push(at(
+                    "persist/mod.rs",
+                    format!("field `{field}`: key `{key}` missing from spec_from_line_with"),
+                ));
+            }
+        }
+    }
+    let known = |k: &String| FIELD_KEYS.iter().any(|(_, keys)| keys.contains(&k.as_str()));
+    for k in ser.iter().filter(|k| !known(k)) {
+        out.push(at(
+            "persist/mod.rs",
+            format!("spec_to_line key `{k}` maps to no SimSpec field in FIELD_KEYS"),
+        ));
+    }
+    for k in par.iter().filter(|k| !known(k)) {
+        out.push(at(
+            "persist/mod.rs",
+            format!("spec_from_line_with key `{k}` maps to no SimSpec field in FIELD_KEYS"),
+        ));
+    }
+    out
+}
+
+/// Field names of the struct declared by `decl` (e.g.
+/// `"pub struct SimSpec"`): identifiers of `name: Type,` lines
+/// between the opening brace and the first `}` at declaration depth.
+fn struct_fields(text: &str, decl: &str) -> Vec<String> {
+    let Some(start) = text.find(decl) else { return Vec::new() };
+    let body = &text[start..];
+    let Some(open) = body.find('{') else { return Vec::new() };
+    let mut fields = Vec::new();
+    for line in body[open + 1..].lines() {
+        let line = match line.find("//") {
+            Some(p) => &line[..p],
+            None => line,
+        };
+        let t = line.trim();
+        if t.starts_with('}') {
+            break;
+        }
+        if t.starts_with('#') {
+            continue; // attribute
+        }
+        let t = t.strip_prefix("pub ").unwrap_or(t);
+        if let Some((name, _ty)) = t.split_once(':') {
+            let name = name.trim();
+            if !name.is_empty()
+                && name.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+            {
+                fields.push(name.to_string());
+            }
+        }
+    }
+    fields
+}
+
+/// The body of the function whose signature contains `sig`: text
+/// from the match to the next top-level `fn` declaration (good
+/// enough for key extraction; both persist functions are top-level).
+fn body_of<'t>(text: &'t str, sig: &str) -> &'t str {
+    let Some(start) = text.find(sig) else { return "" };
+    let rest = &text[start + sig.len()..];
+    let end = ["\npub fn ", "\nfn "]
+        .iter()
+        .filter_map(|pat| rest.find(pat))
+        .min()
+        .unwrap_or(rest.len());
+    &rest[..end]
+}
+
+/// `key={}` tokens of a format string: for every `={}` occurrence,
+/// the identifier immediately before it.
+fn format_keys(body: &str) -> Vec<String> {
+    let bytes = body.as_bytes();
+    let mut keys = Vec::new();
+    let mut from = 0;
+    while let Some(p) = body[from..].find("={}") {
+        let at = from + p;
+        let mut s = at;
+        while s > 0 && (bytes[s - 1].is_ascii_alphanumeric() || bytes[s - 1] == b'_') {
+            s -= 1;
+        }
+        if s < at {
+            keys.push(body[s..at].to_string());
+        }
+        from = at + 3;
+    }
+    keys
+}
+
+/// String arguments of `.take("…")` calls.
+fn take_keys(body: &str) -> Vec<String> {
+    let mut keys = Vec::new();
+    let mut from = 0;
+    while let Some(p) = body[from..].find(".take(\"") {
+        let at = from + p + ".take(\"".len();
+        if let Some(q) = body[at..].find('"') {
+            keys.push(body[at..at + q].to_string());
+            from = at + q;
+        } else {
+            break;
+        }
+    }
+    keys
+}
+
+/// Walk `src_root` (a crate `src/` directory) and run all three
+/// passes; `allowlist_text` is the content of `lint-allowlist.txt`
+/// (empty string ⇒ nothing grandfathered). Only I/O errors are `Err`;
+/// lint findings are data in the report.
+pub fn lint_sources(src_root: &Path, allowlist_text: &str) -> io::Result<SrcLintReport> {
+    let mut rep = SrcLintReport::default();
+    let (allow, bad) = parse_allowlist(allowlist_text);
+    rep.violations.extend(bad);
+
+    let mut files = Vec::new();
+    collect_rs_files(src_root, src_root, &mut files)?;
+    files.sort();
+
+    let mut spec_text = None;
+    let mut persist_text = None;
+    for rel in &files {
+        rep.files += 1;
+        let text = fs::read_to_string(src_root.join(rel))?;
+        let scan = scan_file(&text);
+        rep.unwrap_sites += scan.unwraps.len();
+
+        let allowed = allow
+            .iter()
+            .find(|(p, _)| p == rel)
+            .map(|&(_, n)| n)
+            .unwrap_or(0);
+        let found = scan.unwraps.len();
+        if found > allowed {
+            let first_new = scan.unwraps.get(allowed).copied().unwrap_or(0);
+            rep.violations.push(LintViolation {
+                file: rel.clone(),
+                line: first_new,
+                message: format!(
+                    "{found} non-test unwrap/expect site(s), allowlist grants {allowed} — \
+                     return a typed error instead (the allowlist only ratchets down)"
+                ),
+            });
+        } else if found < allowed {
+            rep.notices.push(format!(
+                "{rel}: allowlist grants {allowed} unwrap/expect site(s) but only {found} \
+                 remain — tighten lint-allowlist.txt"
+            ));
+        }
+
+        if DETERMINISTIC_DIRS.iter().any(|d| rel.starts_with(&format!("{d}/"))) {
+            for line in &scan.timing {
+                rep.violations.push(LintViolation {
+                    file: rel.clone(),
+                    line: *line,
+                    message: "wall-clock read in a deterministic sim path (move timing to \
+                              robust/ or the CLI)"
+                        .to_string(),
+                });
+            }
+        }
+
+        if rel == "sim/spec.rs" {
+            spec_text = Some(text);
+        } else if rel == "persist/mod.rs" {
+            persist_text = Some(text);
+        }
+    }
+
+    for (path, _) in &allow {
+        if !files.iter().any(|f| f == path) {
+            rep.violations.push(LintViolation {
+                file: path.clone(),
+                line: 0,
+                message: "allowlisted file does not exist — remove its entry".to_string(),
+            });
+        }
+    }
+
+    match (spec_text, persist_text) {
+        (Some(spec), Some(persist)) => {
+            rep.violations.extend(memo_key_coverage(&spec, &persist));
+        }
+        _ => rep.violations.push(LintViolation {
+            file: "sim/spec.rs".to_string(),
+            line: 0,
+            message: "memo-key coverage pass needs sim/spec.rs and persist/mod.rs under the \
+                      source root"
+                .to_string(),
+        }),
+    }
+
+    Ok(rep)
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            if let Ok(rel) = path.strip_prefix(root) {
+                let rel: Vec<String> = rel
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect();
+                out.push(rel.join("/"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Locate the crate source root (`…/rust/src`) from a starting
+/// directory: accepts the repo root, the crate root, or `src` itself.
+pub fn find_src_root(start: &Path) -> Option<PathBuf> {
+    for candidate in [start.join("rust/src"), start.join("src"), start.to_path_buf()] {
+        if candidate.join("lib.rs").is_file() {
+            return Some(candidate);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Assembled so this file's own scan never sees the patterns.
+    fn uw(recv: &str) -> String {
+        format!("let x = {recv}{};\n", concat!(".unw", "rap()"))
+    }
+
+    #[test]
+    fn scan_counts_non_test_unwraps_and_skips_comments_and_tests() {
+        let mut text = String::new();
+        text.push_str(&uw("a")); // line 1: counted
+        text.push_str(&format!("// {}", uw("c"))); // comment: skipped
+        text.push_str("fn f() {}\n");
+        text.push_str(concat!("#[cfg(te", "st)]\n"));
+        text.push_str("mod tests {\n");
+        text.push_str(&uw("b")); // in tests: skipped
+        text.push_str("}\n");
+        let scan = scan_file(&text);
+        assert_eq!(scan.unwraps, vec![1]);
+    }
+
+    #[test]
+    fn expect_calls_count_but_unwrap_or_variants_do_not() {
+        let text = format!(
+            "a{}\"m\");\nb.unwrap_or(0);\nc.unwrap_or_else(d);\n",
+            concat!(".exp", "ect(")
+        );
+        assert_eq!(scan_file(&text).unwraps, vec![1]);
+    }
+
+    #[test]
+    fn timing_reads_are_flagged_with_lines() {
+        let text = format!("fn f() {{\nlet t = {};\n}}\n", concat!("Instant::", "now()"));
+        assert_eq!(scan_file(&text).timing, vec![2]);
+    }
+
+    #[test]
+    fn allowlist_parses_and_rejects_malformed_lines() {
+        let (entries, bad) = parse_allowlist("# c\n\ngraph/io.rs 6\nbad line here\n");
+        assert_eq!(entries, vec![("graph/io.rs".to_string(), 6)]);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].line, 4);
+    }
+
+    const SPEC_OK: &str = "
+pub struct SimSpec {
+    accelerator: AcceleratorKind,
+    workload: Workload,
+    problem: ProblemKind,
+    mem: MemTech,
+    channels: usize,
+    patterns: bool,
+    config: AcceleratorConfig,
+    onchip: Option<OnChipConfig>,
+    budget: Option<RunBudget>,
+    faults: Option<FaultPlan>,
+    verify: bool,
+}
+";
+
+    fn persist_ok() -> String {
+        let keys = "accel={} graph={} problem={} mem={} channels={} patterns={} opts={} \
+                    bram={} interval={} pes={} window={} xmc={} onchip={} budget={} \
+                    faults={} verify={}";
+        let takes: String = [
+            "accel", "graph", "problem", "mem", "channels", "patterns", "opts", "bram",
+            "interval", "pes", "window", "xmc", "onchip", "budget", "faults", "verify",
+        ]
+        .iter()
+        .map(|k| format!("    let _ = t.take(\"{k}\")?;\n"))
+        .collect();
+        format!("pub fn spec_to_line() {{ \"{keys}\" }}\npub fn spec_from_line_with() {{\n{takes}}}\n")
+    }
+
+    #[test]
+    fn memo_key_coverage_accepts_a_consistent_pair() {
+        let v = memo_key_coverage(SPEC_OK, &persist_ok());
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn a_new_spec_field_without_serializer_keys_fails() {
+        let spec = SPEC_OK.replace("    verify: bool,", "    verify: bool,\n    shiny: u32,");
+        let v = memo_key_coverage(&spec, &persist_ok());
+        assert!(v.iter().any(|x| x.message.contains("`shiny`")), "{v:?}");
+    }
+
+    #[test]
+    fn a_serializer_key_missing_from_the_parser_fails() {
+        let persist = persist_ok().replace("    let _ = t.take(\"verify\")?;\n", "");
+        let v = memo_key_coverage(SPEC_OK, &persist);
+        assert!(
+            v.iter().any(|x| x.message.contains("missing from spec_from_line_with")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn a_format_key_absent_from_the_table_fails() {
+        let persist = persist_ok().replace("faults={} verify={}", "faults={} verify={} rogue={}");
+        let v = memo_key_coverage(SPEC_OK, &persist);
+        assert!(v.iter().any(|x| x.message.contains("`rogue`")), "{v:?}");
+    }
+
+    #[test]
+    fn the_live_repo_sources_pass_the_linter() {
+        // The real check CI runs via `graphmem lint --src`, kept as a
+        // unit test so `cargo test` catches regressions first.
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+        let allow = fs::read_to_string(
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("lint-allowlist.txt"),
+        )
+        .unwrap_or_default();
+        let rep = lint_sources(&root, &allow).expect("source tree is readable");
+        assert!(
+            rep.is_ok(),
+            "source lint violations:\n{}",
+            rep.violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        assert!(rep.files > 20, "walked the real tree ({} files)", rep.files);
+    }
+}

@@ -36,8 +36,8 @@ fn base(kind: AcceleratorKind) -> SimSpec {
 
 /// One spec per axis the line format serializes: accelerator, graph
 /// kind (named + custom), problem, memory technology, channel count,
-/// patterns toggle, optimization set, on-chip buffer, run budget, and
-/// fault plan.
+/// patterns toggle, optimization set, on-chip buffer, run budget,
+/// fault plan, and verify toggle.
 fn every_axis_specs() -> Vec<SimSpec> {
     let mut specs: Vec<SimSpec> = AcceleratorKind::all().iter().map(|&k| base(k)).collect();
     // Memory technologies and channel counts (Tab. 3 bounds).
@@ -97,6 +97,16 @@ fn every_axis_specs() -> Vec<SimSpec> {
         degrade: Some(ChannelDegrade { every: 1_000, window: 50, extra_cycles: 8 }),
         retries: Some(TransientRetries { every: 211, max_retries: 3, backoff_cycles: 12 }),
     })));
+    // Release-build static verification enabled.
+    specs.push(
+        SimSpec::builder()
+            .accelerator(AcceleratorKind::ThunderGp)
+            .graph(DatasetId::Sd)
+            .problem(ProblemKind::Bfs)
+            .verify(true)
+            .build()
+            .unwrap(),
+    );
     // Custom synthetic workloads, both digest variants.
     specs.push(
         SimSpec::builder()
@@ -235,6 +245,7 @@ fn prop_no_parser_panics_on_fuzzed_bytes() {
         b"RUN ".to_vec(),
         b"OK report cache_hit=true ".to_vec(),
         b"ERR sim ".to_vec(),
+        b"ERR verify violations=2 first=".to_vec(),
         b"BUSY retry_after_ms=9".to_vec(),
     ];
     let frag_refs: Vec<&[u8]> = fragments.iter().map(|f| f.as_slice()).collect();

@@ -1,0 +1,393 @@
+//! Property suite for the static program verifier (`crate::verify`):
+//! every legitimately compiled program across the accelerator ×
+//! problem × channel matrix must verify clean, and a legitimate
+//! program hand-mutated into each defect class must be rejected with
+//! the expected [`VerifyError`] variant — not a panic, not a pass,
+//! not some unrelated diagnostic.
+
+use graphmem::accel::stream::{Fanout, LineSource, Merge};
+use graphmem::accel::{AcceleratorConfig, AcceleratorKind};
+use graphmem::algo::problem::ProblemKind;
+use graphmem::dram::MemTech;
+use graphmem::graph::DatasetId;
+use graphmem::onchip::{Geometry, OnChipConfig};
+use graphmem::sim::SimSpec;
+use graphmem::trace::Region;
+use graphmem::verify::{ProgramChecker, ProgramFacts, StreamFacts, VerifyError};
+use std::sync::Arc;
+
+fn spec(kind: AcceleratorKind, problem: ProblemKind, channels: usize, mem: MemTech) -> SimSpec {
+    SimSpec::builder()
+        .accelerator(kind)
+        .graph(DatasetId::Sd)
+        .problem(problem)
+        .mem(mem)
+        .channels(channels)
+        .config(AcceleratorConfig::all_optimizations())
+        .build()
+        .expect("valid spec")
+}
+
+/// A Region-mode fixture (HitGraph on 8 HBM pseudo-channels) plus its
+/// per-channel capacity — the canvas most mutations draw on.
+fn region_fixture() -> (ProgramFacts, u64) {
+    let s = spec(AcceleratorKind::HitGraph, ProblemKind::Bfs, 8, MemTech::Hbm);
+    let cb = s.mem().spec(s.channels()).channel_bytes;
+    (s.compile_program().facts(), cb)
+}
+
+/// A fixture guaranteed to contain a `Gather` stream with a declared
+/// domain (ThunderGP's source-value gathers).
+fn gather_fixture() -> (ProgramFacts, u64) {
+    let s = spec(AcceleratorKind::ThunderGp, ProblemKind::Bfs, 8, MemTech::Hbm);
+    let cb = s.mem().spec(s.channels()).channel_bytes;
+    (s.compile_program().facts(), cb)
+}
+
+/// First (phase, stream) satisfying `pred`; panics with `what` if the
+/// fixture unexpectedly lacks one.
+fn find_stream(
+    facts: &ProgramFacts,
+    what: &str,
+    pred: impl Fn(&StreamFacts) -> bool,
+) -> (usize, usize) {
+    for (pi, phase) in facts.phases.iter().enumerate() {
+        for (si, s) in phase.streams.iter().enumerate() {
+            if pred(s) {
+                return (pi, si);
+            }
+        }
+    }
+    panic!("fixture has no {what}");
+}
+
+fn check(facts: &ProgramFacts, cb: u64) -> graphmem::verify::VerifyReport {
+    ProgramChecker::new(cb).check(facts, None)
+}
+
+// ---------------------------------------------------------------------------
+// Legitimate programs verify clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_legitimate_program_verifies() {
+    for kind in AcceleratorKind::all() {
+        for problem in [ProblemKind::Bfs, ProblemKind::PageRank, ProblemKind::Sssp] {
+            if problem.weighted() && !kind.supports_weighted() {
+                continue;
+            }
+            for channels in [1usize, 8, 32] {
+                if channels > 1 && !kind.multi_channel() {
+                    continue;
+                }
+                let mem = match channels {
+                    1 => MemTech::Ddr4,
+                    8 => MemTech::Hbm,
+                    _ => MemTech::Hbm2,
+                };
+                let s = spec(kind, problem, channels, mem);
+                let rep = s.verify_program();
+                assert!(
+                    rep.is_ok(),
+                    "{}: {rep}\n{}",
+                    s.label(),
+                    rep.violations
+                        .iter()
+                        .map(|v| format!("  {v}"))
+                        .collect::<Vec<_>>()
+                        .join("\n")
+                );
+                // Coverage counters prove the checker actually looked.
+                assert!(rep.phases > 0, "{}: no phases examined", s.label());
+                assert!(rep.streams > 0, "{}: no streams examined", s.label());
+                // Line-level proofs only arise from Region-mode bounds
+                // and gather-domain scans; interleaved all-Seq
+                // programs legitimately have none.
+                if kind.multi_channel() {
+                    assert!(rep.lines > 0, "{}: no lines bound-checked", s.label());
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hand-mutated defects are rejected with the expected variant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_region_straddling_seq_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let (pi, si) = find_stream(&facts, "owned Seq stream", |s| {
+        s.owner.is_some() && matches!(s.source, LineSource::Seq { .. })
+    });
+    // One line whose channel-local address sits exactly at the region
+    // boundary: the rebased global routes to the next channel.
+    facts.phases[pi].streams[si].source = LineSource::seq(cb, 64);
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::RegionOverflow { .. })),
+        "expected RegionOverflow, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_gather_index_escaping_domain_is_rejected() {
+    let (mut facts, cb) = gather_fixture();
+    let (pi, si) = find_stream(&facts, "non-empty Gather stream with a domain", |s| {
+        s.gather_domain.is_some()
+            && matches!(&s.source, LineSource::Gather { indices, .. } if !indices.is_empty())
+    });
+    // Shrink the declared domain to zero: every index now escapes.
+    facts.phases[pi].streams[si].gather_domain = Some(0);
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::GatherOutOfRange { domain: 0, .. })),
+        "expected GatherOutOfRange, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_fanout_over_release_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let (pi, si) = find_stream(&facts, "chained non-empty stream", |s| {
+        s.chained_to.is_some() && s.source.len() > 0
+    });
+    // Zero releases for a non-empty chained stream: guaranteed
+    // deadlock, and `total()` can never equal `len`.
+    facts.phases[pi].streams[si].fanout = Fanout::Uniform(0);
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::FanoutMismatch { released: 0, .. })),
+        "expected FanoutMismatch, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_per_parent_schedule_of_wrong_arity_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let (pi, si) = find_stream(&facts, "chained stream under a non-empty parent", |s| {
+        s.chained_to.is_some()
+    });
+    let parent = facts.phases[pi].streams[si].chained_to.expect("chained");
+    let parent_len = facts.phases[pi].streams[parent].source.len();
+    // A per-parent schedule one entry too long can never line up.
+    facts.phases[pi].streams[si].fanout =
+        Fanout::PerParent(vec![1u32; parent_len + 1].into());
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::FanoutArity { .. })),
+        "expected FanoutArity, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_orphaned_stream_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let pi = facts
+        .phases
+        .iter()
+        .position(|p| p.streams.len() >= 2)
+        .expect("fixture has a multi-stream phase");
+    // Collapse the merge tree to a single leaf: every other stream in
+    // the phase can never issue.
+    facts.phases[pi].merge = Arc::new(Merge::Leaf(0));
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::OrphanStream { .. })),
+        "expected OrphanStream, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_merge_referencing_unknown_stream_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let pi = facts
+        .phases
+        .iter()
+        .position(|p| !p.streams.is_empty())
+        .expect("fixture has a non-empty phase");
+    let n = facts.phases[pi].streams.len();
+    // A leaf one past the end, alongside full coverage of the real
+    // streams, isolates the unknown-stream diagnostic.
+    facts.phases[pi].merge = Arc::new(Merge::prio((0..=n).collect::<Vec<_>>()));
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::MergeUnknownStream { leaf, .. } if *leaf == n)),
+        "expected MergeUnknownStream, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_duplicated_merge_leaf_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let pi = facts
+        .phases
+        .iter()
+        .position(|p| !p.streams.is_empty())
+        .expect("fixture has a non-empty phase");
+    let n = facts.phases[pi].streams.len();
+    let mut leaves: Vec<usize> = (0..n).collect();
+    leaves.push(0); // stream 0 issued twice
+    facts.phases[pi].merge = Arc::new(Merge::rr(leaves));
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::MergeDuplicateStream { leaf: 0, .. })),
+        "expected MergeDuplicateStream, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_chain_cycle_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let pi = facts
+        .phases
+        .iter()
+        .position(|p| p.streams.len() >= 2)
+        .expect("fixture has a multi-stream phase");
+    facts.phases[pi].streams[0].chained_to = Some(1);
+    facts.phases[pi].streams[1].chained_to = Some(0);
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::ChainCycle { .. })),
+        "expected ChainCycle, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_dangling_parent_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let (pi, si) = find_stream(&facts, "any stream", |_| true);
+    facts.phases[pi].streams[si].chained_to = Some(usize::MAX);
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::BadParent { .. })),
+        "expected BadParent, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_owner_beyond_channel_count_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let (pi, si) = find_stream(&facts, "owned stream", |s| s.owner.is_some());
+    facts.phases[pi].streams[si].owner = Some(facts.channels + 7);
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::ChannelOutOfRange { .. })),
+        "expected ChannelOutOfRange, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_zero_window_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    let pi = facts
+        .phases
+        .iter()
+        .position(|p| !p.streams.is_empty())
+        .expect("fixture has a non-empty phase");
+    facts.phases[pi].window = 0;
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::ZeroWindow { .. })),
+        "expected ZeroWindow, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_footprint_beyond_capacity_is_rejected() {
+    let (mut facts, cb) = region_fixture();
+    facts.footprint[0] = cb + 1;
+    let rep = check(&facts, cb);
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::FootprintOverflow { channel: 0, .. })),
+        "expected FootprintOverflow, got {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn mutation_impossible_onchip_config_is_rejected() {
+    let (facts, cb) = region_fixture();
+    // Zero-way set-associativity can't store a single line.
+    let bad = OnChipConfig::new(
+        64 * 1024,
+        Geometry::SetAssociative { ways: 0 },
+        [Region::Vertices],
+    );
+    let rep = ProgramChecker::new(cb).check(&facts, Some(&bad));
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::OnChipInconsistent { .. })),
+        "expected OnChipInconsistent, got {:?}",
+        rep.violations
+    );
+    // The same program with a sane buffer stays clean.
+    let good = OnChipConfig::vertex_cache(64 * 1024);
+    assert!(ProgramChecker::new(cb).check(&facts, Some(&good)).is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// Diagnostics carry their site
+// ---------------------------------------------------------------------------
+
+#[test]
+fn diagnostics_name_the_offending_phase_and_stream() {
+    let (mut facts, cb) = region_fixture();
+    let (pi, si) = find_stream(&facts, "owned Seq stream", |s| {
+        s.owner.is_some() && matches!(s.source, LineSource::Seq { .. })
+    });
+    let label = facts.phases[pi].label.clone();
+    facts.phases[pi].streams[si].source = LineSource::seq(cb, 64);
+    let rep = check(&facts, cb);
+    let msg = rep
+        .violations
+        .iter()
+        .find(|v| matches!(v, VerifyError::RegionOverflow { .. }))
+        .expect("RegionOverflow present")
+        .to_string();
+    assert!(
+        msg.contains(&format!("phase {pi}")) && msg.contains(&label),
+        "diagnostic {msg:?} does not name phase {pi} (`{label}`)"
+    );
+    assert!(
+        msg.contains(&format!("stream {si}")),
+        "diagnostic {msg:?} does not name stream {si}"
+    );
+}
